@@ -1,0 +1,126 @@
+//! Coordinator hot-path microbenchmarks (systems deliverable, not a paper
+//! figure): batcher throughput, literal marshalling cost, end-to-end
+//! serving latency/throughput across flush deadlines, and the overhead of
+//! the coordinator relative to raw model execution.
+//!
+//! Run: cargo bench --bench coordinator_hot_path
+
+use std::time::{Duration, Instant};
+
+use flare::bench::{quick_mode, save_results, Bench, Table};
+use flare::config::Manifest;
+use flare::coordinator::{Batcher, Server, ServerConfig};
+use flare::model::init_params;
+use flare::runtime::literal::{lit_f32, to_vec_f32};
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let mut all = Vec::new();
+    let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
+
+    // 1. batcher logic throughput (pure data structure)
+    let m1 = bench.run("batcher_push_pop_10k", || {
+        let mut b: Batcher<u64> = Batcher::new(8, Duration::from_millis(1));
+        for i in 0..10_000u64 {
+            b.push(if i % 3 == 0 { "a" } else { "b" }, i);
+            if i % 64 == 0 {
+                while b.pop_ready(Instant::now()).is_some() {}
+            }
+        }
+        let _ = b.drain_all();
+    });
+    println!(
+        "batcher: {:.2} ms / 10k requests ({:.0} Mreq/s)",
+        m1.mean_ms(),
+        10.0 / m1.mean_ms()
+    );
+    all.push(m1);
+
+    // 2. literal marshalling (the host <-> device copy on the hot path)
+    let data = vec![0.5f32; 1024 * 3 * 2];
+    let m2 = bench.run("literal_marshal_roundtrip", || {
+        let l = lit_f32(&data, &[2, 1024, 3]).unwrap();
+        let _ = to_vec_f32(&l).unwrap();
+    });
+    println!(
+        "literal round-trip (2x1024x3 f32): {:.3} ms ({:.1} GB/s)",
+        m2.mean_ms(),
+        2.0 * data.len() as f64 * 4.0 / (m2.mean_ms() / 1e3) / 1e9
+    );
+    all.push(m2);
+
+    // 3. end-to-end serving vs raw execution (coordinator overhead)
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    if manifest.cases.iter().any(|c| c.name == "core_darcy_flare") {
+        let case = manifest.case("core_darcy_flare")?.clone();
+        let x = vec![0.25f32; case.model.n * case.model.d_in];
+
+        // raw: direct PJRT execution of a full batch
+        let rt = Runtime::cpu()?;
+        let exe = rt.load("fwd", manifest.artifact_path(&case, "fwd")?)?;
+        let params = init_params(&case.params, case.param_count, manifest.seed);
+        let p = lit_f32(&params, &[case.param_count as i64])?;
+        let mut xb = x.clone();
+        xb.resize(case.batch * case.model.n * case.model.d_in, 0.25);
+        let xl = lit_f32(
+            &xb,
+            &[case.batch as i64, case.model.n as i64, case.model.d_in as i64],
+        )?;
+        let m3 = bench.run("raw_forward_batch", || {
+            let _ = rt.run_ref(&exe, &[&p, &xl]).unwrap();
+        });
+        let raw_per_req = m3.mean_ms() / case.batch as f64;
+        println!(
+            "raw execute: {:.2} ms/batch ({raw_per_req:.2} ms/request)",
+            m3.mean_ms()
+        );
+        all.push(m3);
+        drop(rt);
+
+        // served: through router + batcher + channels, saturating clients
+        let mut table = Table::new(&["max_wait ms", "req/s", "p50 ms", "p95 ms", "overhead %"]);
+        for wait_ms in [1u64, 5, 20] {
+            let server = Server::start(
+                manifest.dir.clone(),
+                ServerConfig {
+                    cases: vec![case.name.clone()],
+                    max_wait: Duration::from_millis(wait_ms),
+                    params: vec![],
+                },
+            )?;
+            let requests: usize = if quick_mode() { 16 } else { 64 };
+            let clients = 4;
+            let t = Instant::now();
+            std::thread::scope(|scope| {
+                for _ in 0..clients {
+                    let server = &server;
+                    let x = &x;
+                    let n = case.model.n;
+                    scope.spawn(move || {
+                        for _ in 0..requests / clients {
+                            let _ = server.infer(x.clone(), n).unwrap();
+                        }
+                    });
+                }
+            });
+            let wall = t.elapsed().as_secs_f64();
+            let lat = server.metrics.summary("latency_ms").unwrap();
+            let served = (requests / clients) * clients;
+            let per_req_served = wall * 1e3 / served as f64;
+            table.row(vec![
+                wait_ms.to_string(),
+                format!("{:.1}", served as f64 / wall),
+                format!("{:.2}", lat.p50),
+                format!("{:.2}", lat.p95),
+                format!("{:.0}", (per_req_served / raw_per_req - 1.0) * 100.0),
+            ]);
+            server.shutdown()?;
+        }
+        println!("\nserving engine vs flush deadline:");
+        table.print();
+    }
+
+    let path = save_results("coordinator_hot_path", &all)?;
+    println!("\nresults written to {path:?}");
+    Ok(())
+}

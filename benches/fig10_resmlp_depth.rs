@@ -1,0 +1,67 @@
+//! Figure 10 reproduction: effect of ResMLP depth in (left) the key/value
+//! projections and (right) the per-block feedforward on Elasticity error.
+//!
+//! Paper claim: deeper residual K/V projections matter because FLARE's
+//! latent queries are input-independent — expressivity must come from the
+//! key/value side; deeper FFN helps mildly.
+//!
+//! Run: cargo bench --bench fig10_resmlp_depth
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(150);
+    let cases = manifest.cases_in_group("fig10");
+    anyhow::ensure!(!cases.is_empty(), "fig10 artifacts missing");
+
+    println!("=== Figure 10: ResMLP depth ablations, steps = {steps} ===\n");
+    let mut all = Vec::new();
+    let mut kv_rows = Vec::new();
+    let mut ffn_rows = Vec::new();
+    let total = cases.len();
+    for (i, case) in cases.iter().enumerate() {
+        let rt = Runtime::cpu()?;
+        eprintln!("[{}/{total}] {}", i + 1, case.name);
+        let m = train_measurement(&rt, &manifest, case, steps)?;
+        let err = m.extra("rel_l2").unwrap_or(f64::NAN);
+        if case.name.contains("kv") {
+            kv_rows.push((case.model.kv_layers, err, case.param_count));
+        } else {
+            ffn_rows.push((case.model.ffn_layers, err, case.param_count));
+        }
+        all.push(m);
+    }
+    kv_rows.sort_by_key(|r| r.0);
+    ffn_rows.sort_by_key(|r| r.0);
+
+    println!("\n(left) K/V projection depth:");
+    let mut t = Table::new(&["kv layers", "rel-L2", "params"]);
+    for (l, e, p) in &kv_rows {
+        t.row(vec![l.to_string(), format!("{e:.4}"), format!("{}k", p / 1000)]);
+    }
+    t.print();
+
+    println!("\n(right) feedforward block depth:");
+    let mut t = Table::new(&["ffn layers", "rel-L2", "params"]);
+    for (l, e, p) in &ffn_rows {
+        t.row(vec![l.to_string(), format!("{e:.4}"), format!("{}k", p / 1000)]);
+    }
+    t.print();
+
+    if let (Some(first), Some(last)) = (kv_rows.first(), kv_rows.last()) {
+        println!(
+            "\nK/V depth {} -> {}: rel-L2 {:.4} -> {:.4} ({})",
+            first.0,
+            last.0,
+            first.1,
+            last.1,
+            if last.1 < first.1 { "deeper is better, as in paper" } else { "flat at this budget" }
+        );
+    }
+    let path = save_results("fig10_resmlp_depth", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Figure 11 reproduction: the Perceiver/LNO <-> FLARE continuum — vary
+//! the number of latent self-attention blocks (L_B) against the number of
+//! FLARE encode-decode blocks (B); each cell reports rel-L2, parameter
+//! count and time per step.
+//!
+//! Paper claim: the optimum sits at the top-right corner — many
+//! encode-decode blocks, ZERO latent-space blocks; adding latent SA only
+//! costs parameters and time.
+//!
+//! Run: cargo bench --bench fig11_latent_blocks
+
+use std::collections::BTreeMap;
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(150);
+    let cases = manifest.cases_in_group("fig11");
+    anyhow::ensure!(!cases.is_empty(), "fig11 artifacts missing");
+
+    println!("=== Figure 11: latent-SA blocks vs FLARE blocks, steps = {steps} ===\n");
+    let mut all = Vec::new();
+    let mut grid: BTreeMap<(usize, usize), (f64, usize, f64)> = BTreeMap::new();
+    let total = cases.len();
+    for (i, case) in cases.iter().enumerate() {
+        let rt = Runtime::cpu()?;
+        eprintln!("[{}/{total}] {}", i + 1, case.name);
+        let m = train_measurement(&rt, &manifest, case, steps)?;
+        grid.insert(
+            (case.model.blocks, case.model.latent_sa_blocks),
+            (
+                m.extra("rel_l2").unwrap_or(f64::NAN),
+                case.param_count,
+                m.extra("ms_per_step").unwrap_or(0.0),
+            ),
+        );
+        all.push(m);
+    }
+
+    let bs: Vec<usize> = {
+        let mut v: Vec<usize> = grid.keys().map(|(b, _)| *b).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let lbs: Vec<usize> = {
+        let mut v: Vec<usize> = grid.keys().map(|(_, l)| *l).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let mut headers: Vec<String> = vec!["L_B \\ B".into()];
+    headers.extend(bs.iter().map(|b| b.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+    for lb in &lbs {
+        let mut row = vec![lb.to_string()];
+        for b in &bs {
+            row.push(
+                grid.get(&(*b, *lb))
+                    .map(|(e, p, ms)| format!("{e:.4}/{}k/{ms:.0}ms", p / 1000))
+                    .unwrap_or_default(),
+            );
+        }
+        table.row(row);
+    }
+    println!("cells: rel-L2 / params / ms-per-step");
+    table.print();
+
+    // paper's claim: best cell has L_B = 0 at the largest B
+    let best = grid
+        .iter()
+        .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+        .unwrap();
+    println!(
+        "\nbest cell: B={} L_B={} rel-L2 {:.4} (paper: optimum at L_B=0, max B)",
+        best.0 .0, best.0 .1, best.1 .0
+    );
+    let path = save_results("fig11_latent_blocks", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Figure 12 reproduction: shared vs independent per-head latent tokens —
+//! eigenvalue spectra of the head-specific mixing operators W_h plus the
+//! test-error table.
+//!
+//! Paper claims: with shared latents all heads exhibit nearly identical
+//! spectra (diversity collapses) and error is higher; independent latent
+//! slices yield visibly different decay profiles per head and lower error.
+//!
+//! Run: cargo bench --bench fig12_shared_latents
+
+use flare::bench::{save_results, sweep_steps, Measurement, Table};
+use flare::config::Manifest;
+use flare::data;
+use flare::model::{find_entry, param_slice};
+use flare::runtime::literal::{lit_f32, to_vec_f32};
+use flare::runtime::Runtime;
+use flare::spectral::{eig_lowrank, spectra_diversity, HeadSpectrum};
+use flare::train::{train_case, TrainOpts};
+use flare::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(200);
+    let cases = manifest.cases_in_group("fig12");
+    anyhow::ensure!(!cases.is_empty(), "fig12 artifacts missing");
+
+    println!("=== Figure 12: shared vs independent latents, steps = {steps} ===\n");
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut table = Table::new(&["B", "latents", "rel-L2", "params", "spectral diversity"]);
+
+    for case in &cases {
+        let rt = Runtime::cpu()?;
+        eprintln!("running {}", case.name);
+        let out = train_case(
+            &rt,
+            &manifest,
+            case,
+            &TrainOpts {
+                steps: Some(steps),
+                ..Default::default()
+            },
+        )?;
+
+        // spectra of every head in every block at a test sample
+        let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
+        let qk = rt.load(
+            &format!("{}_qk", case.name),
+            manifest.artifact_path(case, "qk")?,
+        )?;
+        let params_lit = lit_f32(&out.params, &[case.param_count as i64])?;
+        let x = lit_f32(
+            &ds.test_fields[0].x,
+            &[case.model.n as i64, case.model.d_in as i64],
+        )?;
+        let ks = rt.run_ref(&qk, &[&params_lit, &x])?;
+        let (h, m, d, n) = (
+            case.model.heads,
+            case.model.m,
+            case.model.head_dim(),
+            case.model.n,
+        );
+        let mut diversities = Vec::new();
+        for (b, klit) in ks.iter().enumerate() {
+            let kvals = to_vec_f32(klit)?;
+            let latents = find_entry(&case.params, &format!("blk{b}.mix.latents"))?;
+            let q_all = param_slice(&out.params, latents);
+            let spectra: Vec<HeadSpectrum> = (0..h)
+                .map(|head| {
+                    let q = if case.model.shared_latents {
+                        q_all.to_vec()
+                    } else {
+                        q_all[head * m * d..(head + 1) * m * d].to_vec()
+                    };
+                    let eig = eig_lowrank(&q, &kvals[head * n * d..(head + 1) * n * d], m, n, d);
+                    HeadSpectrum {
+                        block: b,
+                        head,
+                        eigenvalues: eig.eigenvalues,
+                    }
+                })
+                .collect();
+            diversities.push(spectra_diversity(&spectra));
+        }
+        let div = diversities.iter().sum::<f64>() / diversities.len() as f64;
+        let tag = if case.model.shared_latents { "shared" } else { "independent" };
+        table.row(vec![
+            case.model.blocks.to_string(),
+            tag.into(),
+            format!("{:.4}", out.final_metric),
+            format!("{}k", case.param_count / 1000),
+            format!("{div:.4}"),
+        ]);
+        all.push(Measurement {
+            name: case.name.clone(),
+            iters: out.steps,
+            total_s: out.wall_s,
+            per_iter: Summary::of(&[out.step_ms.mean]),
+            extras: vec![
+                ("rel_l2".into(), out.final_metric),
+                ("diversity".into(), div),
+                (
+                    "shared".into(),
+                    if case.model.shared_latents { 1.0 } else { 0.0 },
+                ),
+                ("blocks".into(), case.model.blocks as f64),
+            ],
+        });
+    }
+    table.print();
+
+    // claim check per depth: independent beats shared AND has higher diversity
+    for b in [2.0, 4.0] {
+        let get = |shared: f64, key: &str| {
+            all.iter()
+                .find(|x| x.extra("blocks") == Some(b) && x.extra("shared") == Some(shared))
+                .and_then(|x| x.extra(key))
+        };
+        if let (Some(es), Some(ei), Some(ds_), Some(di)) = (
+            get(1.0, "rel_l2"),
+            get(0.0, "rel_l2"),
+            get(1.0, "diversity"),
+            get(0.0, "diversity"),
+        ) {
+            println!(
+                "B={b}: error shared {es:.4} vs indep {ei:.4}; \
+                 diversity shared {ds_:.4} vs indep {di:.4}"
+            );
+        }
+    }
+    let path = save_results("fig12_shared_latents", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

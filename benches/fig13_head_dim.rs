@@ -1,0 +1,56 @@
+//! Figure 13 reproduction: effect of head dimension D (with total width C
+//! fixed) on Elasticity test error.
+//!
+//! Paper claim: FLARE works best with MANY SMALL heads (D = 4-8) — the
+//! reverse of vanilla-transformer practice — because each head is an
+//! independent low-rank projection-reconstruction pathway and more parallel
+//! pathways approximate richer attention than fewer, wider ones.
+//!
+//! Run: cargo bench --bench fig13_head_dim
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(150);
+    let mut cases = manifest.cases_in_group("fig13");
+    anyhow::ensure!(!cases.is_empty(), "fig13 artifacts missing");
+    cases.sort_by_key(|c| c.model.heads);
+
+    println!("=== Figure 13: head dimension sweep, steps = {steps} ===\n");
+    let mut all = Vec::new();
+    let mut table = Table::new(&["heads H", "head dim D", "rel-L2", "params"]);
+    for case in &cases {
+        let rt = Runtime::cpu()?;
+        eprintln!("running {}", case.name);
+        let mut m = train_measurement(&rt, &manifest, case, steps)?;
+        m.extras.push(("head_dim".into(), case.model.head_dim() as f64));
+        table.row(vec![
+            case.model.heads.to_string(),
+            case.model.head_dim().to_string(),
+            format!("{:.4}", m.extra("rel_l2").unwrap_or(f64::NAN)),
+            format!("{}k", case.param_count / 1000),
+        ]);
+        all.push(m);
+    }
+    table.print();
+
+    let best = all
+        .iter()
+        .min_by(|a, b| {
+            a.extra("rel_l2")
+                .unwrap_or(f64::INFINITY)
+                .partial_cmp(&b.extra("rel_l2").unwrap_or(f64::INFINITY))
+                .unwrap()
+        })
+        .unwrap();
+    println!(
+        "\nbest head dim: D={} (paper: D in {{4, 8}} optimal)",
+        best.extra("head_dim").unwrap_or(f64::NAN)
+    );
+    let path = save_results("fig13_head_dim", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

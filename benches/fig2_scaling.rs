@@ -1,0 +1,99 @@
+//! Figure 2 reproduction: time and memory of a forward token-mixing pass vs
+//! sequence length, vanilla attention vs FLARE (M in {64, 256}).
+//!
+//! The paper's claim: vanilla is O(N^2) and blows past practical budgets by
+//! N ~ 1e5 while FLARE stays O(NM) with near-flat memory, reaching 1e6
+//! tokens; the FLARE curves for different M nearly overlap.  On CPU the
+//! absolute times differ from an H100 but the slopes and the crossover
+//! survive.
+//!
+//! Run: cargo bench --bench fig2_scaling
+
+use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::literal::lit_f32;
+use flare::runtime::Runtime;
+use flare::util::rng::Rng;
+use flare::util::stats::current_rss_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    anyhow::ensure!(!manifest.mixers.is_empty(), "fig2 artifacts missing");
+    let max_n = if quick_mode() { 16384 } else { 1_048_576 };
+
+    println!("=== Figure 2: mixer forward time/memory vs N ===\n");
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut table = Table::new(&["mixer", "N", "M", "ms/fwd", "MB delta", "ns/token"]);
+
+    for mx in &manifest.mixers {
+        if mx.n > max_n {
+            continue;
+        }
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(&mx.name, manifest.dir.join(&mx.file))?;
+        let (h, d, n, m) = (mx.heads, mx.head_dim, mx.n, mx.m);
+        let mut rng = Rng::new(7);
+        let mut fill = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let args = if mx.kind == "vanilla_sdpa" {
+            vec![
+                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
+                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
+                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
+            ]
+        } else {
+            vec![
+                lit_f32(&fill(h * m * d), &[h as i64, m as i64, d as i64])?,
+                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
+                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
+            ]
+        };
+
+        let rss_before = current_rss_bytes().unwrap_or(0);
+        let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
+        let mut meas = bench.run(&mx.name, || {
+            let _ = rt.run_ref(&exe, &args.iter().collect::<Vec<_>>()).unwrap();
+        });
+        let rss_after = current_rss_bytes().unwrap_or(rss_before);
+        let mb = (rss_after.saturating_sub(rss_before)) as f64 / 1e6;
+        meas.extras.push(("n".into(), n as f64));
+        meas.extras.push(("m".into(), m as f64));
+        meas.extras.push(("rss_delta_mb".into(), mb));
+        table.row(vec![
+            mx.kind.clone(),
+            n.to_string(),
+            if m > 0 { m.to_string() } else { "-".into() },
+            format!("{:.2}", meas.mean_ms()),
+            format!("{mb:.0}"),
+            format!("{:.1}", meas.mean_ms() * 1e6 / n as f64),
+        ]);
+        all.push(meas);
+    }
+    table.print();
+
+    // slope check: vanilla should scale ~quadratically, FLARE ~linearly
+    let slope = |kind: &str| -> Option<f64> {
+        let pts: Vec<(f64, f64)> = all
+            .iter()
+            .filter(|m| m.name.contains(kind))
+            // hold M fixed (64) so the slope isolates the N dependence
+            .filter(|m| m.extra("m").map(|v| v == 64.0 || v == 0.0).unwrap_or(true))
+            .filter_map(|m| Some((m.extra("n")?, m.mean_ms())))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let (n0, t0) = pts[0];
+        let (n1, t1) = pts[pts.len() - 1];
+        Some((t1 / t0).ln() / (n1 / n0).ln())
+    };
+    if let (Some(sv), Some(sf)) = (slope("vanilla"), slope("flare")) {
+        println!(
+            "\nlog-log slope: vanilla {sv:.2} (paper: ~2), FLARE {sf:.2} (paper: ~1)"
+        );
+    }
+    let path = save_results("fig2_scaling", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figure 5 reproduction (CPU-scaled): large-N DrivAer-like training sweep
+//! over (B, M) reporting test rel-L2, time per step and peak memory — the
+//! paper's three panels for its 1M-point single-GPU study.
+//!
+//! CPU scaling: N = 16,384 points/geometry (paper: 1e6 on an H100 80GB).
+//! Claims under test: error falls monotonically with B; time grows with B
+//! and M; memory is dominated by N (nearly flat in M).
+//!
+//! Run: cargo bench --bench fig5_million
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+use flare::util::stats::peak_rss_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(40);
+    let cases = manifest.cases_in_group("fig5");
+    anyhow::ensure!(!cases.is_empty(), "fig5 artifacts missing");
+
+    println!("=== Figure 5: large-N sweep over (B, M), steps = {steps} ===\n");
+    let mut all = Vec::new();
+    let mut table = Table::new(&["B", "M", "rel-L2", "s/step", "peak RSS GB"]);
+    for case in &cases {
+        let rt = Runtime::cpu()?;
+        eprintln!("running {}", case.name);
+        let mut m = train_measurement(&rt, &manifest, case, steps)?;
+        let rss = peak_rss_bytes().unwrap_or(0) as f64 / 1e9;
+        m.extras.push(("blocks".into(), case.model.blocks as f64));
+        m.extras.push(("latents".into(), case.model.m as f64));
+        m.extras.push(("peak_rss_gb".into(), rss));
+        table.row(vec![
+            case.model.blocks.to_string(),
+            case.model.m.to_string(),
+            format!("{:.4}", m.extra("rel_l2").unwrap_or(f64::NAN)),
+            format!("{:.2}", m.extra("ms_per_step").unwrap_or(0.0) / 1e3),
+            format!("{rss:.2}"),
+        ]);
+        all.push(m);
+    }
+    table.print();
+
+    // trend check: error at B=4 below error at B=1 for each M
+    for m_latents in [32.0, 128.0] {
+        let err_at = |b: f64| {
+            all.iter()
+                .find(|x| {
+                    x.extra("blocks") == Some(b) && x.extra("latents") == Some(m_latents)
+                })
+                .and_then(|x| x.extra("rel_l2"))
+        };
+        if let (Some(e1), Some(e4)) = (err_at(1.0), err_at(4.0)) {
+            println!(
+                "M={m_latents}: rel-L2 B=1 {e1:.4} -> B=4 {e4:.4} ({})",
+                if e4 < e1 { "improves, as in paper" } else { "no improvement at this budget" }
+            );
+        }
+    }
+    let path = save_results("fig5_million", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

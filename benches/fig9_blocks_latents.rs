@@ -1,0 +1,83 @@
+//! Figure 9 reproduction: test rel-L2 vs number of FLARE blocks (B) and
+//! latent tokens (M) on the Elasticity and Darcy benchmarks.
+//!
+//! Paper claims: error falls consistently with B on both problems;
+//! Elasticity saturates quickly in M (inherently low-rank) while Darcy
+//! keeps improving with M (rank-limited).
+//!
+//! Run: cargo bench --bench fig9_blocks_latents
+
+use std::collections::BTreeMap;
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(150);
+    let cases = manifest.cases_in_group("fig9");
+    anyhow::ensure!(!cases.is_empty(), "fig9 artifacts missing");
+
+    println!("=== Figure 9: rel-L2 vs (B, M), steps = {steps} ===\n");
+    let mut all = Vec::new();
+    // results[dataset][(B, M)] = rel_l2
+    let mut grid: BTreeMap<String, BTreeMap<(usize, usize), f64>> = BTreeMap::new();
+    let total = cases.len();
+    for (i, case) in cases.iter().enumerate() {
+        let rt = Runtime::cpu()?;
+        eprintln!("[{}/{total}] {}", i + 1, case.name);
+        let m = train_measurement(&rt, &manifest, case, steps)?;
+        grid.entry(case.dataset.clone()).or_default().insert(
+            (case.model.blocks, case.model.m),
+            m.extra("rel_l2").unwrap_or(f64::NAN),
+        );
+        all.push(m);
+    }
+
+    for (ds, per) in &grid {
+        println!("\n{ds}:");
+        let ms: Vec<usize> = {
+            let mut v: Vec<usize> = per.keys().map(|(_, m)| *m).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let bs: Vec<usize> = {
+            let mut v: Vec<usize> = per.keys().map(|(b, _)| *b).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let mut headers: Vec<String> = vec!["B \\ M".into()];
+        headers.extend(ms.iter().map(|m| m.to_string()));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&hdr_refs);
+        for b in &bs {
+            let mut row = vec![b.to_string()];
+            for m in &ms {
+                row.push(
+                    per.get(&(*b, *m))
+                        .map(|e| format!("{e:.4}"))
+                        .unwrap_or_default(),
+                );
+            }
+            table.row(row);
+        }
+        table.print();
+        // trend: deepest model at max M should beat shallowest at max M
+        let mmax = *ms.last().unwrap();
+        if let (Some(e_shallow), Some(e_deep)) =
+            (per.get(&(bs[0], mmax)), per.get(&(*bs.last().unwrap(), mmax)))
+        {
+            println!(
+                "  depth effect at M={mmax}: B={} err {e_shallow:.4} -> B={} err {e_deep:.4}",
+                bs[0],
+                bs.last().unwrap()
+            );
+        }
+    }
+    let path = save_results("fig9_blocks_latents", &all)?;
+    println!("\nresults written to {path:?}");
+    Ok(())
+}

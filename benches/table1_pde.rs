@@ -1,0 +1,80 @@
+//! Table 1 reproduction: relative L2 error (x1e-3 in the paper) and
+//! parameter counts across PDE benchmarks for FLARE and every baseline.
+//!
+//! CPU scaling: simulator datasets, C=32/B=2 models, 200 training steps
+//! (the paper: real datasets, C=64/B=8, 500 epochs on GPUs).  The claim
+//! under test is the *ordering* — FLARE at or near the best error with the
+//! smallest parameter count — not absolute values.
+//!
+//! Run: cargo bench --bench table1_pde     (FLARE_BENCH_QUICK=1 to smoke)
+
+use std::collections::BTreeMap;
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(200);
+    let cases = manifest.cases_in_group("table1");
+    anyhow::ensure!(!cases.is_empty(), "table1 artifacts missing");
+
+    println!("=== Table 1: PDE surrogate rel-L2 (steps = {steps}) ===\n");
+    // results[model][dataset] = (rel_l2, params)
+    let mut results: BTreeMap<String, BTreeMap<String, (f64, usize)>> = BTreeMap::new();
+    let mut all = Vec::new();
+    let total = cases.len();
+    for (i, case) in cases.iter().enumerate() {
+        let rt = Runtime::cpu()?; // fresh runtime per case bounds memory
+        eprintln!("[{}/{total}] {}", i + 1, case.name);
+        let m = train_measurement(&rt, &manifest, case, steps)?;
+        results
+            .entry(case.model.mixer.clone())
+            .or_default()
+            .insert(
+                case.dataset.clone(),
+                (m.extra("rel_l2").unwrap_or(f64::NAN), case.param_count),
+            );
+        all.push(m);
+    }
+
+    let datasets = ["elasticity", "darcy", "airfoil", "pipe", "drivaer", "lpbf"];
+    let mut table = Table::new(&[
+        "model", "elasticity", "darcy", "airfoil", "pipe", "drivaer", "lpbf", "params",
+    ]);
+    for (model, per_ds) in &results {
+        let mut row = vec![model.clone()];
+        for ds in &datasets {
+            row.push(
+                per_ds
+                    .get(*ds)
+                    .map(|(e, _)| format!("{:.4}", e))
+                    .unwrap_or_else(|| "~".into()),
+            );
+        }
+        let params = per_ds.values().next().map(|(_, p)| *p).unwrap_or(0);
+        row.push(format!("{}k", params / 1000));
+        table.row(row);
+    }
+    table.print();
+
+    // headline check: FLARE wins (or ties) most datasets
+    let flare = &results["flare"];
+    let mut wins = 0;
+    for ds in &datasets {
+        let Some((fe, _)) = flare.get(*ds) else { continue };
+        let best_other = results
+            .iter()
+            .filter(|(m, _)| m.as_str() != "flare")
+            .filter_map(|(_, per)| per.get(*ds).map(|(e, _)| *e))
+            .fold(f64::INFINITY, f64::min);
+        if *fe <= best_other * 1.05 {
+            wins += 1;
+        }
+    }
+    println!("\nFLARE best-or-within-5% on {wins}/{} datasets", datasets.len());
+    let path = save_results("table1_pde", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Table 2 reproduction: accuracy (%) on LRA-style long-context tasks for
+//! FLARE vs efficient-attention baselines (vanilla, linear attention,
+//! Linformer, Performer).
+//!
+//! CPU scaling: generator-based tasks (exact labels), N=512-1024, small
+//! models, 150 steps.  The claim under test: FLARE is competitive with and
+//! on average better than the general-purpose efficient-attention methods.
+//!
+//! Run: cargo bench --bench table2_lra
+
+use std::collections::BTreeMap;
+
+use flare::bench::{save_results, sweep_steps, train_measurement, Table};
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let steps = sweep_steps(150);
+    let cases = manifest.cases_in_group("table2");
+    anyhow::ensure!(!cases.is_empty(), "table2 artifacts missing");
+
+    println!("=== Table 2: LRA-style accuracy %% (steps = {steps}) ===\n");
+    let mut results: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    let mut all = Vec::new();
+    let total = cases.len();
+    for (i, case) in cases.iter().enumerate() {
+        let rt = Runtime::cpu()?;
+        eprintln!("[{}/{total}] {}", i + 1, case.name);
+        let m = train_measurement(&rt, &manifest, case, steps)?;
+        results
+            .entry(case.model.mixer.clone())
+            .or_default()
+            .insert(case.dataset.clone(), m.extra("accuracy").unwrap_or(0.0));
+        all.push(m);
+    }
+
+    let tasks = ["listops", "text", "retrieval", "image", "pathfinder"];
+    let mut table = Table::new(&[
+        "model", "listops", "text", "retrieval", "image", "pathfinder", "avg",
+    ]);
+    let mut avgs: BTreeMap<String, f64> = BTreeMap::new();
+    for (model, per) in &results {
+        let mut row = vec![model.clone()];
+        let mut sum = 0.0;
+        for t in &tasks {
+            let acc = per.get(*t).copied().unwrap_or(0.0) * 100.0;
+            row.push(format!("{acc:.1}"));
+            sum += acc;
+        }
+        let avg = sum / tasks.len() as f64;
+        avgs.insert(model.clone(), avg);
+        row.push(format!("{avg:.1}"));
+        table.row(row);
+    }
+    table.print();
+
+    let flare_avg = avgs.get("flare").copied().unwrap_or(0.0);
+    let best_other = avgs
+        .iter()
+        .filter(|(m, _)| m.as_str() != "flare")
+        .map(|(_, v)| *v)
+        .fold(0.0, f64::max);
+    println!(
+        "\nFLARE avg {flare_avg:.1} vs best baseline {best_other:.1} \
+         (paper: FLARE highest average)"
+    );
+    let path = save_results("table2_lra", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the minimal end-to-end path through the public API.
+//!
+//! Loads the artifact manifest, generates a small Darcy-flow dataset with
+//! the built-in simulator, trains the FLARE surrogate for a handful of
+//! steps, and runs one prediction — all from Rust, with Python nowhere on
+//! the hot path.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use flare::config::Manifest;
+use flare::data;
+use flare::metrics::rel_l2;
+use flare::runtime::literal::{lit_f32, to_vec_f32};
+use flare::runtime::Runtime;
+use flare::train::{train_case, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    // 1. manifest: every AOT-lowered model + its parameter packing spec
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let case = manifest.case("core_darcy_flare")?;
+    println!(
+        "case {}: {} FLARE blocks, M={} latents/head, {} params",
+        case.name, case.model.blocks, case.model.m, case.param_count
+    );
+
+    // 2. PJRT CPU runtime + training (one XLA execution per optimizer step)
+    let rt = Runtime::cpu()?;
+    let out = train_case(
+        &rt,
+        &manifest,
+        case,
+        &TrainOpts {
+            steps: Some(60),
+            log_every: 20,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "trained 60 steps in {:.1}s; loss {:.3} -> {:.3}; test rel-L2 {:.4}",
+        out.wall_s,
+        out.losses.first().unwrap(),
+        out.losses.last().unwrap(),
+        out.final_metric
+    );
+
+    // 3. one-off prediction with the trained parameters
+    let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
+    let sample = &ds.test_fields[0];
+    let fwd = rt.load("fwd", manifest.artifact_path(case, "fwd")?)?;
+    let mut xb = sample.x.clone();
+    xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
+    let outs = rt.run(
+        &fwd,
+        &[
+            lit_f32(&out.params, &[case.param_count as i64])?,
+            lit_f32(
+                &xb,
+                &[
+                    case.batch as i64,
+                    case.model.n as i64,
+                    case.model.d_in as i64,
+                ],
+            )?,
+        ],
+    )?;
+    let pred = to_vec_f32(&outs[0])?;
+    let err = rel_l2(&pred[..sample.y.len()], &sample.y);
+    println!("single-sample prediction rel-L2: {err:.4}");
+    Ok(())
+}

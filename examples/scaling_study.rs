@@ -1,0 +1,54 @@
+//! Scaling study (paper Figure 5, CPU-scaled): sweep FLARE depth B and
+//! latent count M on the large-N DrivAer-like dataset, reporting test
+//! rel-L2, time per step and peak memory — the same three axes the paper
+//! plots for its million-point study.
+//!
+//! Run with:  cargo run --release --example scaling_study [steps]
+
+use flare::config::Manifest;
+use flare::runtime::Runtime;
+use flare::train::{train_case, TrainOpts};
+use flare::util::stats::peak_rss_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let cases: Vec<_> = manifest.cases_in_group("fig5");
+    anyhow::ensure!(!cases.is_empty(), "fig5 artifacts missing");
+
+    println!(
+        "Figure-5-style sweep on {} points/geometry ({} steps each):\n",
+        cases[0].model.n, steps
+    );
+    println!(
+        "{:<14} {:>3} {:>5} {:>10} {:>12} {:>12}",
+        "case", "B", "M", "rel-L2", "ms/step", "peak RSS MB"
+    );
+    for case in cases {
+        let rt = Runtime::cpu()?;
+        let out = train_case(
+            &rt,
+            &manifest,
+            case,
+            &TrainOpts {
+                steps: Some(steps),
+                ..Default::default()
+            },
+        )?;
+        let rss = peak_rss_bytes().unwrap_or(0) as f64 / 1e6;
+        println!(
+            "{:<14} {:>3} {:>5} {:>10.4} {:>12.1} {:>12.0}",
+            case.name, case.model.blocks, case.model.m, out.final_metric,
+            out.step_ms.mean, rss
+        );
+    }
+    println!(
+        "\nexpected trends (paper Fig. 5): error falls with B; time grows \
+         with B and M; memory stays nearly flat in M (O(NM) compute but \
+         activations dominated by N)."
+    );
+    Ok(())
+}

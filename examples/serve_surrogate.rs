@@ -1,0 +1,84 @@
+//! Serving example: train a surrogate, hand its weights to the coordinator,
+//! and drive it with concurrent clients — the "deploy" half of the paper's
+//! motivating use case (multi-query design optimization needs thousands of
+//! cheap surrogate evaluations).
+//!
+//! Run with:  cargo run --release --example serve_surrogate
+
+use std::time::Duration;
+
+use flare::config::Manifest;
+use flare::coordinator::{Server, ServerConfig};
+use flare::data;
+use flare::metrics::rel_l2;
+use flare::runtime::Runtime;
+use flare::train::{train_case, TrainOpts};
+use flare::util::stats::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let case = manifest.case("core_darcy_flare")?.clone();
+
+    // 1. train briefly so the served model is meaningful
+    println!("training surrogate (120 steps)...");
+    let rt = Runtime::cpu()?;
+    let trained = train_case(
+        &rt,
+        &manifest,
+        &case,
+        &TrainOpts {
+            steps: Some(120),
+            ..Default::default()
+        },
+    )?;
+    println!("trained to test rel-L2 {:.4}", trained.final_metric);
+    drop(rt); // the server brings its own runtime on its executor thread
+
+    // 2. start the coordinator with the trained weights
+    let server = Server::start(
+        manifest.dir.clone(),
+        ServerConfig {
+            cases: vec![case.name.clone()],
+            max_wait: Duration::from_millis(8),
+            params: vec![(case.name.clone(), trained.params.clone())],
+        },
+    )?;
+
+    // 3. concurrent clients issuing queries from the test split
+    let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
+    let clients = 4;
+    let per_client = 8;
+    let t = Timer::start();
+    let errs: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = &server;
+                let ds = &ds;
+                let case = &case;
+                scope.spawn(move || {
+                    let mut errs = Vec::new();
+                    for i in 0..per_client {
+                        let s = &ds.test_fields[(c * per_client + i) % ds.test_len()];
+                        let resp = server.infer(s.x.clone(), case.model.n).expect("infer");
+                        errs.push(rel_l2(&resp.y, &s.y));
+                    }
+                    errs
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t.elapsed_s();
+
+    let total = clients * per_client;
+    let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+    println!(
+        "\nserved {total} requests from {clients} clients in {wall:.2}s \
+         ({:.1} req/s)",
+        total as f64 / wall
+    );
+    println!("mean served rel-L2 vs simulator ground truth: {mean_err:.4}");
+    println!("\ncoordinator metrics:\n{}", server.metrics.report());
+    server.shutdown()?;
+    Ok(())
+}

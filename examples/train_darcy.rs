@@ -1,0 +1,109 @@
+//! End-to-end training driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Trains the FLARE Darcy surrogate for several hundred optimizer steps on
+//! simulator-generated data, logging the loss curve, periodic test rel-L2,
+//! step-time statistics, and writing the curve to `results/e2e_darcy.json`
+//! plus a checkpoint — the full lifecycle a downstream user would run.
+//!
+//! Run with:  cargo run --release --example train_darcy [steps]
+
+use flare::config::Manifest;
+use flare::model::{save_checkpoint, Checkpoint};
+use flare::runtime::Runtime;
+use flare::train::{train_case, TrainOpts};
+use flare::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let case = manifest.case("core_darcy_flare")?;
+    let rt = Runtime::cpu()?;
+
+    println!("=== FLARE end-to-end training: Darcy flow surrogate ===");
+    println!(
+        "model: mixer={} C={} H={} M={} B={} | params {} | N={} batch={}",
+        case.model.mixer,
+        case.model.c,
+        case.model.heads,
+        case.model.m,
+        case.model.blocks,
+        case.param_count,
+        case.model.n,
+        case.batch
+    );
+    println!(
+        "data: {} train / {} test simulator-generated Darcy solves",
+        case.dataset_meta.get("train").as_usize().unwrap_or(0),
+        case.dataset_meta.get("test").as_usize().unwrap_or(0)
+    );
+
+    let out = train_case(
+        &rt,
+        &manifest,
+        case,
+        &TrainOpts {
+            steps: Some(steps),
+            eval_every: (steps / 6).max(1),
+            log_every: (steps / 12).max(1),
+            ..Default::default()
+        },
+    )?;
+
+    println!("\nloss curve (every {} steps):", (steps / 15).max(1));
+    for (i, loss) in out.losses.iter().enumerate() {
+        if i % (steps / 15).max(1) == 0 || i + 1 == out.losses.len() {
+            println!("  step {i:>5}  loss {loss:.4}");
+        }
+    }
+    println!("\neval history (test rel-L2):");
+    for (step, metric) in &out.evals {
+        println!("  step {step:>5}  rel-L2 {metric:.4}");
+    }
+    println!(
+        "\ntotals: {:.1}s wall, {:.1} ms/step (p50 {:.1}, p95 {:.1})",
+        out.wall_s, out.step_ms.mean, out.step_ms.p50, out.step_ms.p95
+    );
+    println!("final test rel-L2: {:.4}", out.final_metric);
+
+    // persist results + checkpoint
+    let results_dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&results_dir)?;
+    let record = Json::obj(vec![
+        ("case", Json::str(&out.case)),
+        ("steps", Json::num(out.steps as f64)),
+        ("losses", Json::arr_f64(&out.losses)),
+        (
+            "evals",
+            Json::Arr(
+                out.evals
+                    .iter()
+                    .map(|(s, m)| Json::arr_f64(&[*s as f64, *m]))
+                    .collect(),
+            ),
+        ),
+        ("final_rel_l2", Json::num(out.final_metric)),
+        ("wall_s", Json::num(out.wall_s)),
+        ("step_ms_mean", Json::num(out.step_ms.mean)),
+    ]);
+    std::fs::write(results_dir.join("e2e_darcy.json"), record.to_string())?;
+    save_checkpoint(
+        results_dir.join("e2e_darcy.ckpt"),
+        &Checkpoint {
+            case: out.case.clone(),
+            step: out.steps,
+            params: out.params.clone(),
+            m: vec![],
+            v: vec![],
+            train_loss: *out.losses.last().unwrap(),
+        },
+    )?;
+    println!("\nwrote results/e2e_darcy.json and results/e2e_darcy.ckpt");
+    anyhow::ensure!(
+        out.losses.last().unwrap() < &(out.losses[0] * 0.5),
+        "training failed to reduce loss by 2x"
+    );
+    Ok(())
+}

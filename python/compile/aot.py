@@ -1,0 +1,233 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+Run once via ``make artifacts``; Rust loads the results through
+``HloModuleProto::from_text_file`` (text, *not* serialized protos — the
+image's xla_extension 0.5.1 rejects jax>=0.5 64-bit instruction ids; the
+text parser reassigns ids and round-trips cleanly).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--group core,table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cases as cases_mod
+from . import models, train
+from .cases import DATASETS, SEED, Case, LayerArtifact, MixerArtifact
+from .kernels import flare_mixer as fm
+from .models import ModelCfg
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return fname
+
+
+# ---------------------------------------------------------------------------
+# Case lowering
+# ---------------------------------------------------------------------------
+
+def lower_case(case: Case, out_dir: str) -> dict:
+    cfg = case.model
+    spec = models.build_spec(cfg)
+    p = spec.total
+    ds = DATASETS[case.dataset]
+
+    if cfg.task == "classification":
+        x_sds = _sds((case.batch, cfg.n), jnp.int32)
+        y_sds = _sds((case.batch,), jnp.int32)
+    else:
+        x_sds = _sds((case.batch, cfg.n, cfg.d_in))
+        y_sds = _sds((case.batch, cfg.n, cfg.d_out))
+
+    artifacts = {}
+    for kind in case.kinds:
+        if kind == "step":
+            fn = train.make_train_step(cfg, spec, case.opt)
+            args = (_sds((p,)), _sds((p,)), _sds((p,)), _sds(()), _sds(()),
+                    x_sds, y_sds)
+            # §Perf L2 note: buffer donation (donate_argnums=(0,1,2)) was
+            # tried and REVERTED — with host-literal inputs on the CPU PJRT
+            # path the measured step time was neutral-to-slightly-worse
+            # (p50 73-78ms vs 65-73ms), because every step already pays the
+            # host->device copy and aliasing adds no win.  See EXPERIMENTS.md
+            # §Perf.
+        elif kind == "eval":
+            fn = train.make_eval_fn(cfg, spec)
+            args = (_sds((p,)), x_sds, y_sds)
+        elif kind == "fwd":
+            fn = train.make_forward_fn(cfg, spec)
+            args = (_sds((p,)), x_sds)
+        elif kind == "qk":
+            fn = lambda flat, x: models.qk_forward(cfg, spec, flat, x)
+            args = (_sds((p,)), _sds((cfg.n, cfg.d_in)))
+        else:
+            raise ValueError(f"unknown artifact kind {kind}")
+        lowered = jax.jit(fn).lower(*args)
+        artifacts[kind] = _write(out_dir, f"{case.name}_{kind}", to_hlo_text(lowered))
+
+    # golden outputs for Rust<->Python parity tests: run the forward pass on
+    # a deterministic input with the seeded init and record a fingerprint
+    if case.group == "core" and "fwd" in case.kinds and cfg.task == "regression":
+        import numpy as np
+
+        from . import rnginit
+
+        params = jnp.asarray(spec.init_flat(SEED))
+        count = case.batch * cfg.n * cfg.d_in
+        xs = rnginit.u01(1234, np.arange(count, dtype=np.uint64)) * 2.0 - 1.0
+        x = jnp.asarray(xs.reshape(case.batch, cfg.n, cfg.d_in), jnp.float32)
+        y = np.asarray(train.make_forward_fn(cfg, spec)(params, x))
+        golden = {
+            "head": [float(v) for v in y.reshape(-1)[:16]],
+            "l2": float(np.sqrt((y.astype(np.float64) ** 2).sum())),
+        }
+        with open(os.path.join(out_dir, f"{case.name}_golden.json"), "w") as f:
+            json.dump(golden, f)
+
+    entry = {
+        "name": case.name,
+        "group": case.group,
+        "dataset": case.dataset,
+        "dataset_meta": ds,
+        "batch": case.batch,
+        "train_steps": case.train_steps,
+        "lr": case.lr,
+        "model": dataclasses.asdict(cfg),
+        "opt": dataclasses.asdict(case.opt),
+        "param_count": p,
+        "artifacts": artifacts,
+        "params": spec.to_manifest(),
+    }
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Bare mixer artifacts (Figure 2)
+# ---------------------------------------------------------------------------
+
+def lower_mixer(art: MixerArtifact, out_dir: str) -> dict:
+    h, d, n, m = art.heads, art.head_dim, art.n, art.m
+    if art.kind == "vanilla_sdpa":
+        def fn(q, k, v):
+            s = jnp.einsum("hqd,hkd->hqk", q, k) / (d ** 0.5)
+            return jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, axis=-1), v)
+        args = (_sds((h, n, d)),) * 3
+    else:
+        if art.kind == "flare_chunked":
+            # §Perf: chunk=4096 measured best at N in [4k, 262k] (16384
+            # chunks showed no gain and cost memory at 1M tokens)
+            fn = lambda q, k, v: fm.flare_mixer_chunked(q, k, v, 1.0, chunk=4096)
+        elif art.kind == "flare_pallas":
+            fn = lambda q, k, v: fm.flare_mixer_pallas(q, k, v, 1.0)
+        else:
+            fn = lambda q, k, v: fm.flare_mixer_sdpa(q, k, v, 1.0)
+        args = (_sds((h, m, d)), _sds((h, n, d)), _sds((h, n, d)))
+    lowered = jax.jit(fn).lower(*args)
+    fname = _write(out_dir, art.name, to_hlo_text(lowered))
+    return {**dataclasses.asdict(art), "file": fname}
+
+
+def lower_layer(art: LayerArtifact, out_dir: str) -> dict:
+    cfg = ModelCfg(mixer=art.mixer, n=art.n, d_in=art.c, d_out=art.c,
+                   c=art.c, heads=art.heads, m=art.m, blocks=1)
+    spec = models.build_layer_spec(cfg)
+    fn = lambda flat, x: models.layer_forward(cfg, spec, flat, x)
+    lowered = jax.jit(fn).lower(_sds((spec.total,)), _sds((art.n, art.c)))
+    fname = _write(out_dir, art.name, to_hlo_text(lowered))
+    return {**dataclasses.asdict(art), "file": fname,
+            "param_count": spec.total, "params": spec.to_manifest()}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--group", default="all",
+                    help="comma-separated groups (default: all)")
+    args = ap.parse_args()
+    groups = None if args.group == "all" else set(args.group.split(","))
+    os.makedirs(args.out, exist_ok=True)
+
+    t_start = time.time()
+    manifest = {"version": 1, "seed": SEED, "datasets": DATASETS,
+                "cases": [], "mixers": [], "layers": []}
+    # partial regeneration (--group=...) merges into the existing manifest
+    prior = {}
+    mpath = os.path.join(args.out, "manifest.json")
+    if groups and os.path.exists(mpath):
+        with open(mpath) as f:
+            prior = json.load(f)
+
+    all_cases = cases_mod.build_cases()
+    for i, case in enumerate(all_cases):
+        if groups and case.group not in groups:
+            continue
+        t0 = time.time()
+        manifest["cases"].append(lower_case(case, args.out))
+        print(f"[{i + 1}/{len(all_cases)}] {case.name}: "
+              f"{time.time() - t0:.1f}s", flush=True)
+
+    for art in cases_mod.build_mixer_artifacts():
+        if groups and art.group not in groups:
+            continue
+        t0 = time.time()
+        manifest["mixers"].append(lower_mixer(art, args.out))
+        print(f"[mixer] {art.name}: {time.time() - t0:.1f}s", flush=True)
+
+    for art in cases_mod.build_layer_artifacts():
+        if groups and art.group not in groups:
+            continue
+        t0 = time.time()
+        manifest["layers"].append(lower_layer(art, args.out))
+        print(f"[layer] {art.name}: {time.time() - t0:.1f}s", flush=True)
+
+    if prior:
+        fresh_cases = {c["name"] for c in manifest["cases"]}
+        manifest["cases"].extend(
+            c for c in prior.get("cases", []) if c["name"] not in fresh_cases)
+        fresh_mx = {m["name"] for m in manifest["mixers"]}
+        manifest["mixers"].extend(
+            m for m in prior.get("mixers", []) if m["name"] not in fresh_mx)
+        fresh_ly = {l["name"] for l in manifest["layers"]}
+        manifest["layers"].extend(
+            l for l in prior.get("layers", []) if l["name"] not in fresh_ly)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_art = sum(len(c["artifacts"]) for c in manifest["cases"]) + \
+        len(manifest["mixers"]) + len(manifest["layers"])
+    print(f"wrote {n_art} artifacts + manifest.json in "
+          f"{time.time() - t_start:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

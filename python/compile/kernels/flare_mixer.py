@@ -1,0 +1,201 @@
+"""Layer-1 Pallas kernel: the FLARE encode-decode token mixer.
+
+The paper's hot spot is two SDPA calls per head:
+
+    Z_h = SDPA(Q_h, K_h, V_h, s=1)      # encode [M,D] x [N,D] -> [M,D]
+    Y_h = SDPA(K_h, Q_h, Z_h, s=1)      # decode [N,D] x [M,D] -> [N,D]
+
+TPU adaptation (DESIGN.md section "Hardware-Adaptation"): instead of porting a
+CUDA FlashAttention schedule, the latent state is the resident operand.  For
+each (head) program the latent accumulators — running max ``m [M]``, softmax
+denominator ``den [M]`` and weighted sum ``acc [M,D]`` — live in VMEM scratch
+for the whole kernel while ``K``/``V`` stream through in N-tiles:
+
+  pass 0 (encode): online-softmax accumulation of exp(Q K_t^T) V_t,
+  pass 1 (decode): re-stream K tiles, full-row softmax over the (small,
+                   fully-resident) M latent axis, write Y tiles.
+
+Grid is ``(H, 2, N/tile)``; Pallas executes the grid sequentially per core so
+scratch carries encode state into the decode pass.  VMEM footprint per
+program is O(M*D + tile*D), independent of N.
+
+``interpret=True`` is mandatory here: the CPU PJRT client cannot execute
+Mosaic custom-calls, and this repo validates numerics through the interpret
+path (pytest vs :mod:`compile.kernels.ref`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flare_kernel(q_ref, k_ref, v_ref, y_ref, m_ref, den_ref, acc_ref, *,
+                  scale: float, n_actual: int, tile: int):
+    """Kernel body for one (head, pass, tile) grid step."""
+    p = pl.program_id(1)      # 0 = encode accumulation, 1 = decode
+    i = pl.program_id(2)      # tile index along N
+
+    q = q_ref[0]                                # [M, D]
+    k = k_ref[0]                                # [tile, D]
+
+    # mask for ragged final tile (static N, static tile)
+    col = i * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    valid = col < n_actual                      # [tile]
+
+    @pl.when(jnp.logical_and(p == 0, i == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p == 0)
+    def _encode():
+        v = v_ref[0]                            # [tile, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [M, tile]
+        s = jnp.where(valid[None, :], s, _NEG_INF)
+        m_old = m_ref[...]                      # [M]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+        corr = jnp.exp(m_old - m_new)           # rescale old accumulators
+        e = jnp.exp(s - m_new[:, None])         # [M, tile]
+        e = jnp.where(valid[None, :], e, 0.0)
+        den_ref[...] = den_ref[...] * corr + jnp.sum(e, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            e, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == 1)
+    def _decode():
+        z = acc_ref[...] / den_ref[...][:, None]            # [M, D]
+        logits = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale  # [tile, M]
+        # full M axis resident: ordinary row softmax, no streaming needed
+        logits = logits - jnp.max(logits, axis=1, keepdims=True)
+        w = jnp.exp(logits)
+        w = w / jnp.sum(w, axis=1, keepdims=True)
+        y_ref[0] = jnp.dot(w, z, preferred_element_type=jnp.float32)
+
+
+def flare_mixer_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       scale: float = 1.0, tile: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Multi-head FLARE mixer as a two-pass streaming Pallas kernel.
+
+    Args:
+      q: ``[H, M, D]`` latent queries.
+      k, v: ``[H, N, D]`` per-head keys/values.
+      scale: SDPA scale; the paper uses 1.0.
+      tile: N-tile size streamed through VMEM.
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot run).
+
+    Returns:
+      ``[H, N, D]`` mixed outputs, numerically matching
+      :func:`compile.kernels.ref.flare_mixer_ref` to f32 tolerance.
+    """
+    h, m, d = q.shape
+    hk, n, dk = k.shape
+    if (hk, dk) != (h, d) or v.shape != k.shape:
+        raise ValueError(f"shape mismatch q={q.shape} k={k.shape} v={v.shape}")
+    tile = min(tile, max(n, 1))
+    n_tiles = -(-n // tile)
+    n_pad = n_tiles * tile
+    if n_pad != n:
+        pad = [(0, 0), (0, n_pad - n), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    kernel = functools.partial(_flare_kernel, scale=scale, n_actual=n, tile=tile)
+    y = pl.pallas_call(
+        kernel,
+        grid=(h, 2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, m, d), lambda hh, p, i: (hh, 0, 0)),
+            pl.BlockSpec((1, tile, d), lambda hh, p, i: (hh, i, 0)),
+            pl.BlockSpec((1, tile, d), lambda hh, p, i: (hh, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, d), lambda hh, p, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n_pad, d), jnp.float32),
+        scratch_shapes=[
+            # VMEM-resident latent state (interpret mode emulates this)
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return y[:, :n, :]
+
+
+def flare_mixer_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        scale: float = 1.0, chunk: int = 4096) -> jnp.ndarray:
+    """O(NM) mixer with bounded memory, pure jnp (XLA-fusable fallback).
+
+    Streams N in ``chunk`` blocks with an online softmax for the encode pass
+    (same math as the Pallas kernel) and a scanned decode.  Used by Layer-2
+    model artifacts at very large N where materializing ``[H, M, N]`` scores
+    at once would exceed host memory.
+    """
+    h, m, d = q.shape
+    _, n, _ = k.shape
+    n_chunks = -(-n // chunk)
+    n_pad = n_chunks * chunk
+    if n_pad != n:
+        k = jnp.pad(k, [(0, 0), (0, n_pad - n), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, n_pad - n), (0, 0)])
+    kc = k.reshape(h, n_chunks, chunk, d)
+    vc = v.reshape(h, n_chunks, chunk, d)
+    base = jnp.arange(n_chunks) * chunk
+    col = jnp.arange(chunk)
+
+    def encode_step(carry, xs):
+        m_run, den, acc = carry
+        kt, vt, b = xs
+        s = jnp.einsum("hmd,hcd->hmc", q, kt) * scale
+        mask = (b + col)[None, None, :] < n
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=2))
+        corr = jnp.exp(m_run - m_new)
+        e = jnp.where(mask, jnp.exp(s - m_new[:, :, None]), 0.0)
+        den = den * corr + jnp.sum(e, axis=2)
+        acc = acc * corr[:, :, None] + jnp.einsum("hmc,hcd->hmd", e, vt)
+        return (m_new, den, acc), None
+
+    init = (jnp.full((h, m), _NEG_INF), jnp.zeros((h, m)), jnp.zeros((h, m, d)))
+    (_, den, acc), _ = jax.lax.scan(
+        encode_step, init, (kc.transpose(1, 0, 2, 3), vc.transpose(1, 0, 2, 3), base))
+    z = acc / den[:, :, None]                              # [H, M, D]
+
+    def decode_step(_, kt):
+        logits = jnp.einsum("hcd,hmd->hcm", kt, q) * scale
+        w = jax.nn.softmax(logits, axis=-1)
+        return None, jnp.einsum("hcm,hmd->hcd", w, z)
+
+    _, yc = jax.lax.scan(decode_step, None, kc.transpose(1, 0, 2, 3))
+    y = yc.transpose(1, 0, 2, 3).reshape(h, n_pad, d)
+    return y[:, :n, :]
+
+
+def flare_mixer_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     scale: float = 1.0) -> jnp.ndarray:
+    """Dense jnp mixer (two softmax matmul chains) — the Layer-2 default.
+
+    XLA fuses the [M,N] score materialization; fine for the moderate-N
+    training artifacts.  Identical math to :func:`ref.flare_mixer_ref` but
+    kept here so model code depends only on this module.
+    """
+    s = jnp.einsum("hmd,hnd->hmn", q, k) * scale
+    z = jnp.einsum("hmn,hnd->hmd", jax.nn.softmax(s, axis=-1), v)
+    w = jax.nn.softmax(jnp.swapaxes(s, 1, 2), axis=-1)     # [H, N, M]
+    return jnp.einsum("hnm,hmd->hnd", w, z)
+
+
+IMPLEMENTATIONS = {
+    "pallas": flare_mixer_pallas,
+    "chunked": flare_mixer_chunked,
+    "sdpa": flare_mixer_sdpa,
+}

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the FLARE token mixer (paper Figure 7).
+
+These materialize the M x N encode and N x M decode score matrices
+explicitly, exactly as the paper's "no fused kernel" pseudocode does.  They
+are the correctness reference for both the Pallas kernel
+(:mod:`compile.kernels.flare_mixer`) and the chunked SDPA implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flare_mixer_head_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         scale: float = 1.0) -> jnp.ndarray:
+    """Single-head FLARE mixer, dense reference.
+
+    Args:
+      q: latent queries ``[M, D]`` (learned, input independent).
+      k: keys ``[N, D]``.
+      v: values ``[N, D]``.
+      scale: SDPA scale (paper uses 1.0).
+
+    Returns:
+      ``[N, D]`` mixed output ``Y = softmax(K Q^T) softmax(Q K^T) V``.
+    """
+    s = jnp.matmul(q, k.T) * scale                      # [M, N]
+    w_enc = jax.nn.softmax(s, axis=-1)                  # rows over N
+    z = jnp.matmul(w_enc, v)                            # [M, D]
+    w_dec = jax.nn.softmax(jnp.matmul(k, q.T) * scale, axis=-1)  # [N, M]
+    return jnp.matmul(w_dec, z)                         # [N, D]
+
+
+def flare_mixer_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    scale: float = 1.0) -> jnp.ndarray:
+    """Multi-head FLARE mixer, dense reference.
+
+    Args:
+      q: ``[H, M, D]`` latent queries (head-wise independent slices).
+      k, v: ``[H, N, D]`` per-head keys / values.
+
+    Returns:
+      ``[H, N, D]``.
+    """
+    return jax.vmap(flare_mixer_head_ref, in_axes=(0, 0, 0, None))(q, k, v, scale)
+
+
+def mixing_matrix_ref(q: jnp.ndarray, k: jnp.ndarray,
+                      scale: float = 1.0) -> jnp.ndarray:
+    """The induced rank-<=M input-input operator ``W_h`` (paper Eq. 9).
+
+    Args:
+      q: ``[M, D]``, k: ``[N, D]``.
+    Returns:
+      ``W = W_dec @ W_enc`` of shape ``[N, N]``.
+    """
+    w_enc = jax.nn.softmax(jnp.matmul(q, k.T) * scale, axis=-1)   # [M, N]
+    w_dec = jax.nn.softmax(jnp.matmul(k, q.T) * scale, axis=-1)   # [N, M]
+    return jnp.matmul(w_dec, w_enc)
+
+
+def eig_lowrank_ref(q: jnp.ndarray, k: jnp.ndarray, scale: float = 1.0):
+    """Paper Algorithm 1: eigendecomposition of W in O(M^3 + M^2 N).
+
+    Returns ``(eigvals [M], eigvecs [N, M])`` with eigenvalues sorted
+    descending.  Used to cross-check the Rust implementation in
+    ``rust/src/spectral/``.
+    """
+    s = jnp.matmul(q, k.T) * scale                       # [M, N]
+    # A global scalar shift keeps exp() finite; W is invariant to it because
+    # both row and column normalizations absorb the common factor.
+    s = s - jnp.max(s)
+    a = jnp.exp(s)                                       # [M, N]
+    # clamp the normalizers: with extreme scores whole columns can
+    # underflow to zero after the global shift
+    lam_m = 1.0 / jnp.maximum(jnp.sum(a, axis=1), 1e-30)  # [M]
+    lam_n = 1.0 / jnp.maximum(jnp.sum(a, axis=0), 1e-30)  # [N]
+    j = jnp.sqrt(lam_m)[:, None] * a * jnp.sqrt(lam_n)[None, :]   # [M, N]
+    jjt = jnp.matmul(j, j.T)                             # [M, M]
+    evals, u = jnp.linalg.eigh(jjt)                      # ascending
+    evals = evals[::-1]
+    u = u[:, ::-1]
+    # eigvecs of W: Lambda_N^{1/2} J^T U Sigma^{-1}
+    sigma = jnp.sqrt(jnp.maximum(evals, 1e-30))
+    vecs = jnp.sqrt(lam_n)[:, None] * jnp.matmul(j.T, u) / sigma[None, :]
+    return evals, vecs

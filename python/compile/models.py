@@ -1,0 +1,497 @@
+"""Layer-2 JAX models: FLARE and every baseline evaluated by the paper.
+
+All models share the same input/output projections (paper Section D.3:
+"the input and output projections ... are held consistent to facilitate an
+equitable comparison of their point-to-point communication schemes") so that
+Table 1 / Table 2 comparisons isolate the token-mixing operator.
+
+Mixer families (``ModelCfg.mixer``):
+
+* ``flare``       — the paper's contribution: two-SDPA encode/decode low-rank
+                    routing, head-wise independent latent slices, deep ResMLP
+                    K/V projections, no latent self-attention.  Supports the
+                    Figure 11 hybrid (``latent_sa_blocks > 0``) and the
+                    Figure 12 shared-latent ablation (``shared_latents``).
+* ``vanilla``     — standard multi-head self-attention (O(N^2)).
+* ``linformer``   — learned [M, N] projections of K/V (fixed token ordering).
+* ``transolver``  — physics attention: soft slice assignment shared across
+                    heads, self-attention over slices, de-slicing.
+* ``perceiver``   — PerceiverIO-style encode -> latent self-attention stack
+                    -> decode (latents as computational workspace).
+* ``lno``         — LNO-style single encode/decode around a latent
+                    transformer stack.
+
+Every model is a pure function of a flat ``f32[P]`` parameter vector (see
+:mod:`compile.packing`), which is what crosses the PJRT boundary to Rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flare_mixer as fm
+from .packing import ParamSpec
+from .resmlp import (apply_layernorm, apply_linear, apply_resmlp,
+                     declare_layernorm, declare_linear, declare_resmlp)
+
+MIXERS = ("flare", "vanilla", "linformer", "transolver", "perceiver", "lno",
+          "linatt", "performer", "gnot")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Static configuration of one model artifact (shapes baked into HLO)."""
+
+    mixer: str = "flare"
+    n: int = 1024            #: tokens per sample (static)
+    d_in: int = 2
+    d_out: int = 1
+    c: int = 32              #: feature width C
+    heads: int = 4           #: H; head dim D = C/H
+    m: int = 32              #: latent tokens per head (FLARE) / latents (others)
+    blocks: int = 2          #: B encode-decode (or SA) blocks
+    kv_layers: int = 3       #: ResMLP depth for K/V projections (FLARE)
+    ffn_layers: int = 3      #: ResMLP depth of the per-block feedforward
+    io_layers: int = 2       #: ResMLP depth of input/output projections
+    latent_sa_blocks: int = 0    #: L_B latent self-attention blocks (Fig 11)
+    shared_latents: bool = False  #: share latent slice across heads (Fig 12)
+    scale: float = 1.0       #: SDPA scale; paper uses 1.0 for FLARE
+    mixer_impl: str = "sdpa"     #: sdpa | chunked | pallas
+    task: str = "regression"     #: regression | classification
+    vocab: int = 0
+    num_classes: int = 0
+
+    def __post_init__(self):
+        if self.mixer not in MIXERS:
+            raise ValueError(f"unknown mixer {self.mixer!r}")
+        if self.c % self.heads:
+            raise ValueError(f"C={self.c} not divisible by H={self.heads}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.c // self.heads
+
+
+def _split_heads(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """[N, C] -> [H, N, D]."""
+    n, c = x.shape
+    return x.reshape(n, h, c // h).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[H, N, D] -> [N, C]."""
+    h, n, d = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * d)
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Plain SDPA over leading head axis: [H, Nq, D] x [H, Nk, D]."""
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    return jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, axis=-1), v)
+
+
+# ---------------------------------------------------------------------------
+# FLARE token mixer
+# ---------------------------------------------------------------------------
+
+def declare_flare_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    c, h, m, d = cfg.c, cfg.heads, cfg.m, cfg.head_dim
+    declare_resmlp(spec, f"{p}.kproj", c, c, c, cfg.kv_layers)
+    declare_resmlp(spec, f"{p}.vproj", c, c, c, cfg.kv_layers)
+    if cfg.shared_latents:
+        spec.add(f"{p}.latents", (m, d), "latent")
+    else:
+        spec.add(f"{p}.latents", (h, m, d), "latent")
+    declare_linear(spec, f"{p}.out", c, c)
+    for j in range(cfg.latent_sa_blocks):
+        declare_layernorm(spec, f"{p}.lsa{j}.ln1", c)
+        declare_linear(spec, f"{p}.lsa{j}.qkv", c, 3 * c)
+        declare_linear(spec, f"{p}.lsa{j}.out", c, c)
+        declare_layernorm(spec, f"{p}.lsa{j}.ln2", c)
+        declare_resmlp(spec, f"{p}.lsa{j}.ffn", c, c, c, 1)
+
+
+def apply_flare_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                      x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """FLARE token mixing on ``x [N, C]``."""
+    c, h, m, d = cfg.c, cfg.heads, cfg.m, cfg.head_dim
+    k = apply_resmlp(spec, flat, f"{p}.kproj", x, c, c, c, cfg.kv_layers)
+    v = apply_resmlp(spec, flat, f"{p}.vproj", x, c, c, c, cfg.kv_layers)
+    kh, vh = _split_heads(k, h), _split_heads(v, h)          # [H, N, D]
+    q = spec.get(flat, f"{p}.latents")
+    if cfg.shared_latents:
+        q = jnp.broadcast_to(q[None], (h, m, d))
+
+    if cfg.latent_sa_blocks == 0:
+        mixer = fm.IMPLEMENTATIONS[cfg.mixer_impl]
+        yh = mixer(q, kh, vh, cfg.scale)
+    else:
+        # Figure 11 hybrid: explicit encode -> latent SA stack -> decode.
+        s = jnp.einsum("hmd,hnd->hmn", q, kh) * cfg.scale
+        z = jnp.einsum("hmn,hnd->hmd", jax.nn.softmax(s, axis=-1), vh)
+        zc = _merge_heads(z)                                  # [M, C]
+        for j in range(cfg.latent_sa_blocks):
+            pj = f"{p}.lsa{j}"
+            zn = apply_layernorm(spec, flat, f"{pj}.ln1", zc)
+            qkv = apply_linear(spec, flat, f"{pj}.qkv", zn)
+            qq, kk, vv = jnp.split(qkv, 3, axis=-1)
+            att = _sdpa(_split_heads(qq, h), _split_heads(kk, h),
+                        _split_heads(vv, h), 1.0 / math.sqrt(d))
+            zc = zc + apply_linear(spec, flat, f"{pj}.out", _merge_heads(att))
+            zn = apply_layernorm(spec, flat, f"{pj}.ln2", zc)
+            zc = zc + apply_resmlp(spec, flat, f"{pj}.ffn", zn, c, c, c, 1)
+        z = _split_heads(zc, h)
+        w = jax.nn.softmax(jnp.einsum("hnd,hmd->hnm", kh, q) * cfg.scale, axis=-1)
+        yh = jnp.einsum("hnm,hmd->hnd", w, z)
+
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(yh))
+
+
+# ---------------------------------------------------------------------------
+# Vanilla self-attention
+# ---------------------------------------------------------------------------
+
+def declare_vanilla_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_vanilla_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                        x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    qkv = apply_linear(spec, flat, f"{p}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    y = _sdpa(_split_heads(q, cfg.heads), _split_heads(k, cfg.heads),
+              _split_heads(v, cfg.heads), 1.0 / math.sqrt(cfg.head_dim))
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+# ---------------------------------------------------------------------------
+# Linformer
+# ---------------------------------------------------------------------------
+
+def declare_linformer_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    # learned [M, N] projections — the O(NM) parameter cost the paper calls out
+    spec.add(f"{p}.ek", (cfg.m, cfg.n), "uniform_fanin", fan_in=cfg.n)
+    spec.add(f"{p}.ev", (cfg.m, cfg.n), "uniform_fanin", fan_in=cfg.n)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_linformer_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                          x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    qkv = apply_linear(spec, flat, f"{p}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    k = spec.get(flat, f"{p}.ek") @ k           # [M, C]
+    v = spec.get(flat, f"{p}.ev") @ v           # [M, C]
+    y = _sdpa(_split_heads(q, cfg.heads), _split_heads(k, cfg.heads),
+              _split_heads(v, cfg.heads), 1.0 / math.sqrt(cfg.head_dim))
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+# ---------------------------------------------------------------------------
+# Transolver-style physics attention (w/o conv)
+# ---------------------------------------------------------------------------
+
+def declare_transolver_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    d = cfg.head_dim
+    declare_linear(spec, f"{p}.xproj", cfg.c, cfg.c)
+    # slice projection shared across heads (paper Fig. 6 footnote)
+    spec.add(f"{p}.wslice", (d, cfg.m), "uniform_fanin", fan_in=d)
+    declare_linear(spec, f"{p}.q", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.k", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.v", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_transolver_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                           x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    h, d, m = cfg.heads, cfg.head_dim, cfg.m
+    xh = _split_heads(apply_linear(spec, flat, f"{p}.xproj", x), h)  # [H, N, D]
+    ws = spec.get(flat, f"{p}.wslice")                               # [D, M]
+    w = jax.nn.softmax(jnp.einsum("hnd,dm->hnm", xh, ws), axis=-1)   # [H, N, M]
+    denom = jnp.sum(w, axis=1, keepdims=True)                        # [H, 1, M]
+    z = jnp.einsum("hnm,hnd->hmd", w, xh) / denom.transpose(0, 2, 1)  # [H, M, D]
+    zc = _merge_heads(z)                                             # [M, C]
+    q = _split_heads(apply_linear(spec, flat, f"{p}.q", zc), h)
+    k = _split_heads(apply_linear(spec, flat, f"{p}.k", zc), h)
+    v = _split_heads(apply_linear(spec, flat, f"{p}.v", zc), h)
+    z2 = _sdpa(q, k, v, 1.0 / math.sqrt(d))                          # [H, M, D]
+    y = jnp.einsum("hnm,hmd->hnd", w, z2)                            # de-slice
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+# ---------------------------------------------------------------------------
+# Linear attention (Katharopoulos-style, Table 2 baseline)
+# ---------------------------------------------------------------------------
+
+def declare_linatt_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_linatt_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                       x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """O(N) attention with feature map phi = elu + 1 (non-causal)."""
+    qkv = apply_linear(spec, flat, f"{p}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh = jax.nn.elu(_split_heads(q, cfg.heads)) + 1.0       # [H, N, D]
+    kh = jax.nn.elu(_split_heads(k, cfg.heads)) + 1.0
+    vh = _split_heads(v, cfg.heads)
+    kv = jnp.einsum("hnd,hne->hde", kh, vh)                  # [H, D, D]
+    ksum = jnp.sum(kh, axis=1)                               # [H, D]
+    num = jnp.einsum("hnd,hde->hne", qh, kv)
+    den = jnp.einsum("hnd,hd->hn", qh, ksum) + 1e-6
+    y = num / den[:, :, None]
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+# ---------------------------------------------------------------------------
+# Performer (FAVOR+-style positive random features, Table 2 baseline)
+# ---------------------------------------------------------------------------
+
+def declare_performer_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    # random-feature projection; drawn from the init stream and trained
+    # (orthogonal redraw omitted — documented substitution in DESIGN.md)
+    spec.add(f"{p}.omega", (cfg.head_dim, cfg.m), "uniform_fanin", fan_in=cfg.head_dim)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_performer_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                          x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    qkv = apply_linear(spec, flat, f"{p}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    d = cfg.head_dim
+    qh = _split_heads(q, cfg.heads) / (d ** 0.25)
+    kh = _split_heads(k, cfg.heads) / (d ** 0.25)
+    vh = _split_heads(v, cfg.heads)
+    omega = spec.get(flat, f"{p}.omega")                      # [D, R]
+
+    def phi(u):
+        proj = jnp.einsum("hnd,dr->hnr", u, omega)
+        sq = 0.5 * jnp.sum(jnp.square(u), axis=-1, keepdims=True)
+        return jnp.exp(proj - sq - jnp.max(proj, axis=-1, keepdims=True)) + 1e-6
+
+    qf, kf = phi(qh), phi(kh)                                 # [H, N, R]
+    kv = jnp.einsum("hnr,hnd->hrd", kf, vh)
+    ksum = jnp.sum(kf, axis=1)                                # [H, R]
+    num = jnp.einsum("hnr,hrd->hnd", qf, kv)
+    den = jnp.einsum("hnr,hr->hn", qf, ksum) + 1e-6
+    y = num / den[:, :, None]
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+# ---------------------------------------------------------------------------
+# GNOT-style normalized linear attention with gating (Table 1 baseline)
+# ---------------------------------------------------------------------------
+
+def declare_gnot_layer(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    declare_linear(spec, f"{p}.gate1", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.gate2", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_gnot_layer(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                     x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """Heterogeneous *normalized* attention: softmax applied separately to
+    queries and keys, giving an O(N) two-stage aggregation, gated by a
+    geometry MLP (simplified single-expert GNOT)."""
+    qkv = apply_linear(spec, flat, f"{p}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh = jax.nn.softmax(_split_heads(q, cfg.heads), axis=-1)  # over D
+    kh = jax.nn.softmax(_split_heads(k, cfg.heads), axis=1)   # over N
+    vh = _split_heads(v, cfg.heads)
+    kv = jnp.einsum("hnd,hne->hde", kh, vh)
+    y = jnp.einsum("hnd,hde->hne", qh, kv)
+    gate = jax.nn.sigmoid(apply_linear(
+        spec, flat, f"{p}.gate2",
+        jax.nn.gelu(apply_linear(spec, flat, f"{p}.gate1", x))))
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y)) * gate
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (Perceiver / LNO skeleton)
+# ---------------------------------------------------------------------------
+
+def declare_cross_attn(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_linear(spec, f"{p}.q", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.k", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.v", cfg.c, cfg.c)
+    declare_linear(spec, f"{p}.out", cfg.c, cfg.c)
+
+
+def apply_cross_attn(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                     xq: jnp.ndarray, xkv: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    h, d = cfg.heads, cfg.head_dim
+    q = _split_heads(apply_linear(spec, flat, f"{p}.q", xq), h)
+    k = _split_heads(apply_linear(spec, flat, f"{p}.k", xkv), h)
+    v = _split_heads(apply_linear(spec, flat, f"{p}.v", xkv), h)
+    y = _sdpa(q, k, v, 1.0 / math.sqrt(d))
+    return apply_linear(spec, flat, f"{p}.out", _merge_heads(y))
+
+
+def declare_sa_block(spec: ParamSpec, p: str, cfg: ModelCfg) -> None:
+    declare_layernorm(spec, f"{p}.ln1", cfg.c)
+    declare_linear(spec, f"{p}.qkv", cfg.c, 3 * cfg.c)
+    declare_linear(spec, f"{p}.att_out", cfg.c, cfg.c)
+    declare_layernorm(spec, f"{p}.ln2", cfg.c)
+    declare_resmlp(spec, f"{p}.ffn", cfg.c, cfg.c, cfg.c, cfg.ffn_layers)
+
+
+def apply_sa_block(spec: ParamSpec, flat: jnp.ndarray, p: str,
+                   x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    xn = apply_layernorm(spec, flat, f"{p}.ln1", x)
+    qkv = apply_linear(spec, flat, f"{p}.qkv", xn)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    att = _sdpa(_split_heads(q, cfg.heads), _split_heads(k, cfg.heads),
+                _split_heads(v, cfg.heads), 1.0 / math.sqrt(cfg.head_dim))
+    x = x + apply_linear(spec, flat, f"{p}.att_out", _merge_heads(att))
+    xn = apply_layernorm(spec, flat, f"{p}.ln2", x)
+    return x + apply_resmlp(spec, flat, f"{p}.ffn", xn, cfg.c, cfg.c, cfg.c,
+                            cfg.ffn_layers)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model declaration / forward
+# ---------------------------------------------------------------------------
+
+_PER_BLOCK = {
+    "flare": (declare_flare_layer, apply_flare_layer),
+    "vanilla": (declare_vanilla_layer, apply_vanilla_layer),
+    "linformer": (declare_linformer_layer, apply_linformer_layer),
+    "transolver": (declare_transolver_layer, apply_transolver_layer),
+    "linatt": (declare_linatt_layer, apply_linatt_layer),
+    "performer": (declare_performer_layer, apply_performer_layer),
+    "gnot": (declare_gnot_layer, apply_gnot_layer),
+}
+
+
+def build_layer_spec(cfg: ModelCfg) -> ParamSpec:
+    """Spec for a *single bare mixing layer* (Figure 8 benchmarks)."""
+    if cfg.mixer not in _PER_BLOCK:
+        raise ValueError(f"{cfg.mixer} has no bare-layer form")
+    spec = ParamSpec()
+    _PER_BLOCK[cfg.mixer][0](spec, "layer", cfg)
+    return spec
+
+
+def layer_forward(cfg: ModelCfg, spec: ParamSpec, flat: jnp.ndarray,
+                  x: jnp.ndarray) -> jnp.ndarray:
+    """Forward of a single bare mixing layer on ``x [N, C]``."""
+    return _PER_BLOCK[cfg.mixer][1](spec, flat, "layer", x, cfg)
+
+
+def qk_forward(cfg: ModelCfg, spec: ParamSpec, flat: jnp.ndarray,
+               x: jnp.ndarray):
+    """Extract per-block head keys for the spectral analysis (Figure 12).
+
+    Returns a tuple with one ``[H, N, D]`` key tensor per FLARE block,
+    evaluated at the block's actual input activations.  The latent queries
+    are parameters; Rust reads them from the flat vector via the manifest.
+    """
+    if cfg.mixer != "flare":
+        raise ValueError("qk extraction only defined for FLARE")
+    c = cfg.c
+    h = apply_resmlp(spec, flat, "in_proj", x, cfg.d_in, c, c, cfg.io_layers)
+    ks = []
+    for b in range(cfg.blocks):
+        hn = apply_layernorm(spec, flat, f"blk{b}.ln1", h)
+        k = apply_resmlp(spec, flat, f"blk{b}.mix.kproj", hn, c, c, c, cfg.kv_layers)
+        ks.append(_split_heads(k, cfg.heads))
+        h = h + apply_flare_layer(spec, flat, f"blk{b}.mix", hn, cfg)
+        hn = apply_layernorm(spec, flat, f"blk{b}.ln2", h)
+        h = h + apply_resmlp(spec, flat, f"blk{b}.ffn", hn, c, c, c, cfg.ffn_layers)
+    return tuple(ks)
+
+
+def build_spec(cfg: ModelCfg) -> ParamSpec:
+    """Declare every parameter of the model described by ``cfg``."""
+    spec = ParamSpec()
+    c = cfg.c
+
+    # input projection (or embedding for token tasks)
+    if cfg.task == "classification":
+        spec.add("embed", (cfg.vocab, c), "embedding")
+    else:
+        declare_resmlp(spec, "in_proj", cfg.d_in, c, c, cfg.io_layers)
+
+    if cfg.mixer in _PER_BLOCK:
+        declare = _PER_BLOCK[cfg.mixer][0]
+        for b in range(cfg.blocks):
+            declare_layernorm(spec, f"blk{b}.ln1", c)
+            declare(spec, f"blk{b}.mix", cfg)
+            declare_layernorm(spec, f"blk{b}.ln2", c)
+            declare_resmlp(spec, f"blk{b}.ffn", c, c, c, cfg.ffn_layers)
+    else:  # perceiver / lno: encode -> latent stack -> decode
+        spec.add("latent_array", (cfg.m, c), "latent")
+        declare_cross_attn(spec, "encode", cfg)
+        declare_layernorm(spec, "encode.ln", c)
+        n_latent = cfg.latent_sa_blocks if cfg.latent_sa_blocks else cfg.blocks
+        for b in range(n_latent):
+            declare_sa_block(spec, f"lat{b}", cfg)
+        declare_cross_attn(spec, "decode", cfg)
+        declare_layernorm(spec, "decode.ln", c)
+
+    declare_layernorm(spec, "out_ln", c)
+    if cfg.task == "classification":
+        declare_linear(spec, "cls_head", c, cfg.num_classes)
+    else:
+        declare_resmlp(spec, "out_proj", c, c, cfg.d_out, cfg.io_layers)
+    return spec
+
+
+def forward(cfg: ModelCfg, spec: ParamSpec, flat: jnp.ndarray,
+            x: jnp.ndarray) -> jnp.ndarray:
+    """Single-sample forward.
+
+    Regression: ``x [N, d_in] -> [N, d_out]``.
+    Classification: ``x int32 [N] -> logits [num_classes]``.
+    """
+    c = cfg.c
+    if cfg.task == "classification":
+        h = jnp.take(spec.get(flat, "embed"), x, axis=0)      # [N, C]
+    else:
+        h = apply_resmlp(spec, flat, "in_proj", x, cfg.d_in, c, c, cfg.io_layers)
+
+    if cfg.mixer in _PER_BLOCK:
+        apply = _PER_BLOCK[cfg.mixer][1]
+        for b in range(cfg.blocks):
+            hn = apply_layernorm(spec, flat, f"blk{b}.ln1", h)
+            h = h + apply(spec, flat, f"blk{b}.mix", hn, cfg)
+            hn = apply_layernorm(spec, flat, f"blk{b}.ln2", h)
+            h = h + apply_resmlp(spec, flat, f"blk{b}.ffn", hn, c, c, c,
+                                 cfg.ffn_layers)
+    else:
+        lat = jnp.broadcast_to(spec.get(flat, "latent_array"), (cfg.m, c))
+        lat = lat + apply_cross_attn(
+            spec, flat, "encode",
+            apply_layernorm(spec, flat, "encode.ln", lat), h, cfg)
+        n_latent = cfg.latent_sa_blocks if cfg.latent_sa_blocks else cfg.blocks
+        for b in range(n_latent):
+            lat = apply_sa_block(spec, flat, f"lat{b}", lat, cfg)
+        h = h + apply_cross_attn(
+            spec, flat, "decode",
+            apply_layernorm(spec, flat, "decode.ln", h), lat, cfg)
+
+    h = apply_layernorm(spec, flat, "out_ln", h)
+    if cfg.task == "classification":
+        pooled = jnp.mean(h, axis=0)
+        return apply_linear(spec, flat, "cls_head", pooled)
+    return apply_resmlp(spec, flat, "out_proj", h, c, c, cfg.d_out,
+                        cfg.io_layers)
+
+
+def forward_batched(cfg: ModelCfg, spec: ParamSpec, flat: jnp.ndarray,
+                    x: jnp.ndarray) -> jnp.ndarray:
+    """vmap of :func:`forward` over the leading batch axis."""
+    return jax.vmap(lambda xi: forward(cfg, spec, flat, xi))(x)
+
+
+def param_count(cfg: ModelCfg) -> int:
+    return build_spec(cfg).total

@@ -1,0 +1,127 @@
+"""Flat-parameter packing: one f32 vector crosses the Rust<->XLA boundary.
+
+Every model variant declares an ordered list of named tensors.  The packing
+spec assigns each a contiguous slice of a single flat ``f32[P]`` vector; the
+offsets are static Python ints, so ``unpack`` lowers to static slices inside
+the jitted graph (no gather, no dynamic shapes).
+
+The same spec is serialized into ``artifacts/manifest.json`` and re-parsed by
+``rust/src/model/spec.rs``; Rust reproduces the initialization bit-for-bit
+(see :mod:`compile.rnginit`), which lets integration tests compare Rust-side
+and Python-side numerics on fixed seeds.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import rnginit
+
+
+@dataclass(frozen=True)
+class ParamEntry:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    #: initialization kind: uniform_fanin | zeros | ones | latent | embedding
+    init: str
+    #: fan-in used by uniform_fanin (ignored otherwise)
+    fan_in: int = 0
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+class ParamSpec:
+    """Ordered collection of :class:`ParamEntry` with pack/unpack helpers."""
+
+    def __init__(self) -> None:
+        self.entries: List[ParamEntry] = []
+        self._by_name: Dict[str, ParamEntry] = {}
+        self.total: int = 0
+
+    def add(self, name: str, shape: Sequence[int], init: str, fan_in: int = 0) -> ParamEntry:
+        if name in self._by_name:
+            raise ValueError(f"duplicate parameter name: {name}")
+        entry = ParamEntry(name=name, shape=tuple(int(s) for s in shape),
+                           offset=self.total, init=init, fan_in=int(fan_in))
+        self.entries.append(entry)
+        self._by_name[name] = entry
+        self.total += entry.size
+        return entry
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def entry(self, name: str) -> ParamEntry:
+        return self._by_name[name]
+
+    # -- pack / unpack ----------------------------------------------------
+    def get(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        """Static slice of ``flat`` reshaped to the entry's shape."""
+        e = self._by_name[name]
+        return jnp.reshape(flat[e.offset:e.offset + e.size], e.shape)
+
+    def unpack(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return {e.name: self.get(flat, e.name) for e in self.entries}
+
+    def pack_numpy(self, tree: Dict[str, np.ndarray]) -> np.ndarray:
+        out = np.zeros((self.total,), dtype=np.float32)
+        for e in self.entries:
+            arr = np.asarray(tree[e.name], dtype=np.float32)
+            if arr.shape != e.shape:
+                raise ValueError(f"{e.name}: expected {e.shape}, got {arr.shape}")
+            out[e.offset:e.offset + e.size] = arr.reshape(-1)
+        return out
+
+    # -- initialization ----------------------------------------------------
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Deterministic init of the whole flat vector.
+
+        Mirrored exactly by ``rust/src/model/init.rs``: each element ``j`` of
+        entry ``e`` draws ``u = u01(seed, e.offset + j)`` from the SplitMix64
+        counter stream and maps it according to ``e.init``.
+        """
+        out = np.zeros((self.total,), dtype=np.float32)
+        for e in self.entries:
+            idx = e.offset + np.arange(e.size, dtype=np.uint64)
+            if e.init == "zeros":
+                vals = np.zeros(e.size, dtype=np.float32)
+            elif e.init == "ones":
+                vals = np.ones(e.size, dtype=np.float32)
+            else:
+                u = rnginit.u01(seed, idx)          # f64 in [0,1)
+                if e.init == "uniform_fanin":
+                    a = 1.0 / math.sqrt(max(e.fan_in, 1))
+                    vals = ((2.0 * u - 1.0) * a).astype(np.float32)
+                elif e.init == "latent":
+                    # latent query tokens: small uniform, paper-style 0.02 scale
+                    vals = ((2.0 * u - 1.0) * 0.02).astype(np.float32)
+                elif e.init == "embedding":
+                    vals = ((2.0 * u - 1.0) * 0.02).astype(np.float32)
+                else:
+                    raise ValueError(f"unknown init kind {e.init!r}")
+            out[e.offset:e.offset + e.size] = vals
+        return out
+
+    # -- manifest ----------------------------------------------------------
+    def to_manifest(self) -> List[dict]:
+        return [
+            {
+                "name": e.name,
+                "shape": list(e.shape),
+                "offset": e.offset,
+                "size": e.size,
+                "init": e.init,
+                "fan_in": e.fan_in,
+            }
+            for e in self.entries
+        ]

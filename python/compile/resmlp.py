@@ -1,0 +1,71 @@
+"""Residual MLP building block (paper Appendix B).
+
+Structure for ``ResMLP(C_i, C_h, C_o, L)``:
+
+  1. linear ``C_i -> C_h``; input residual added when ``C_i == C_h``;
+  2. ``L`` residual layers, each ``h = h + GELU(h W + b)``;
+  3. linear ``C_h -> C_o``; output residual added when ``C_h == C_o``.
+
+These are the only pointwise nonlinearities in the model.  Parameters are
+registered on a :class:`compile.packing.ParamSpec` under a name prefix so the
+flat-vector layout is reproducible from the manifest alone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .packing import ParamSpec
+
+
+def declare_resmlp(spec: ParamSpec, prefix: str, c_in: int, c_hidden: int,
+                   c_out: int, layers: int) -> None:
+    """Register ResMLP parameters on ``spec`` under ``prefix``."""
+    spec.add(f"{prefix}.win", (c_in, c_hidden), "uniform_fanin", fan_in=c_in)
+    spec.add(f"{prefix}.bin", (c_hidden,), "zeros")
+    for l in range(layers):
+        spec.add(f"{prefix}.w{l}", (c_hidden, c_hidden), "uniform_fanin", fan_in=c_hidden)
+        spec.add(f"{prefix}.b{l}", (c_hidden,), "zeros")
+    spec.add(f"{prefix}.wout", (c_hidden, c_out), "uniform_fanin", fan_in=c_hidden)
+    spec.add(f"{prefix}.bout", (c_out,), "zeros")
+
+
+def apply_resmlp(spec: ParamSpec, flat: jnp.ndarray, prefix: str,
+                 x: jnp.ndarray, c_in: int, c_hidden: int, c_out: int,
+                 layers: int) -> jnp.ndarray:
+    """Apply the ResMLP to ``x [..., C_i]`` -> ``[..., C_o]``."""
+    h = x @ spec.get(flat, f"{prefix}.win") + spec.get(flat, f"{prefix}.bin")
+    if c_in == c_hidden:
+        h = h + x
+    for l in range(layers):
+        w = spec.get(flat, f"{prefix}.w{l}")
+        b = spec.get(flat, f"{prefix}.b{l}")
+        h = h + jax.nn.gelu(h @ w + b)
+    y = h @ spec.get(flat, f"{prefix}.wout") + spec.get(flat, f"{prefix}.bout")
+    if c_hidden == c_out:
+        y = y + h
+    return y
+
+
+def declare_layernorm(spec: ParamSpec, prefix: str, c: int) -> None:
+    spec.add(f"{prefix}.gamma", (c,), "ones")
+    spec.add(f"{prefix}.beta", (c,), "zeros")
+
+
+def apply_layernorm(spec: ParamSpec, flat: jnp.ndarray, prefix: str,
+                    x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xn * spec.get(flat, f"{prefix}.gamma") + spec.get(flat, f"{prefix}.beta")
+
+
+def declare_linear(spec: ParamSpec, prefix: str, c_in: int, c_out: int) -> None:
+    spec.add(f"{prefix}.w", (c_in, c_out), "uniform_fanin", fan_in=c_in)
+    spec.add(f"{prefix}.b", (c_out,), "zeros")
+
+
+def apply_linear(spec: ParamSpec, flat: jnp.ndarray, prefix: str,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    return x @ spec.get(flat, f"{prefix}.w") + spec.get(flat, f"{prefix}.b")

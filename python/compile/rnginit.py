@@ -1,0 +1,35 @@
+"""Counter-based SplitMix64 stream shared bit-for-bit with Rust.
+
+``u01(seed, counter)`` must agree exactly with ``flare::util::rng::u01`` on
+the Rust side: both compute ``splitmix64(seed ^ GOLDEN*counter)`` and take the
+top 24 bits as a dyadic rational in [0, 1).  All arithmetic is mod 2^64.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 finalizer over uint64 arrays."""
+    with np.errstate(over="ignore"):
+        z = (x + _GOLDEN).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(30))) * _M1).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * _M2).astype(np.uint64)
+        return (z ^ (z >> np.uint64(31))).astype(np.uint64)
+
+
+def u01(seed: int, counter: np.ndarray) -> np.ndarray:
+    """Uniform [0,1) doubles from (seed, counter) pairs.
+
+    24-bit mantissa so the f64 -> f32 cast downstream is exact.
+    """
+    counter = np.asarray(counter, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        key = (np.uint64(seed) ^ (counter * _GOLDEN)).astype(np.uint64)
+    bits = splitmix64(key) >> np.uint64(40)  # top 24 bits
+    return bits.astype(np.float64) / float(1 << 24)

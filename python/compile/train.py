@@ -1,0 +1,98 @@
+"""Training-step construction: loss, AdamW, and the fused step function.
+
+The whole optimizer lives inside one jitted function so Rust drives training
+with a single ``execute`` per step:
+
+    (params, m, v, step, lr, x, y) -> (params', m', v', loss)
+
+All optimizer state is flat ``f32[P]``; the learning rate is an input so the
+OneCycle schedule (paper Section D.3) is computed by the Rust Layer-3
+coordinator (``rust/src/train/schedule.rs``) — python stays off the training
+hot path entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import models
+from .models import ModelCfg
+from .packing import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    """AdamW hyperparameters (paper Section D.3 defaults)."""
+
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-5
+    grad_clip: float = 1.0   #: global-norm clip; paper uses max_norm = 1.0
+
+
+def rel_l2_loss(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Relative L2 (paper Eq. 21/22), averaged over the batch axis."""
+    axes = tuple(range(1, pred.ndim))
+    num = jnp.sqrt(jnp.sum(jnp.square(pred - target), axis=axes))
+    den = jnp.sqrt(jnp.sum(jnp.square(target), axis=axes)) + 1e-12
+    return jnp.mean(num / den)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Softmax cross entropy; ``logits [B, K]``, ``labels int32 [B]``."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_loss_fn(cfg: ModelCfg, spec: ParamSpec) -> Callable:
+    def loss_fn(flat, x, y):
+        pred = models.forward_batched(cfg, spec, flat, x)
+        if cfg.task == "classification":
+            return cross_entropy_loss(pred, y)
+        return rel_l2_loss(pred, y)
+    return loss_fn
+
+
+def make_forward_fn(cfg: ModelCfg, spec: ParamSpec) -> Callable:
+    def fwd(flat, x):
+        return models.forward_batched(cfg, spec, flat, x)
+    return fwd
+
+
+def make_train_step(cfg: ModelCfg, spec: ParamSpec, opt: OptCfg) -> Callable:
+    """Build the fused AdamW train step (donatable flat buffers)."""
+    loss_fn = make_loss_fn(cfg, spec)
+
+    def train_step(params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                   step: jnp.ndarray, lr: jnp.ndarray,
+                   x: jnp.ndarray, y: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        # global-norm gradient clipping
+        gnorm = jnp.sqrt(jnp.sum(jnp.square(g)))
+        g = g * jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-12))
+        m = opt.beta1 * m + (1.0 - opt.beta1) * g
+        v = opt.beta2 * v + (1.0 - opt.beta2) * jnp.square(g)
+        t = step + 1.0
+        mhat = m / (1.0 - opt.beta1 ** t)
+        vhat = v / (1.0 - opt.beta2 ** t)
+        update = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * params
+        params = params - lr * update
+        return params, m, v, loss
+
+    return train_step
+
+
+def make_eval_fn(cfg: ModelCfg, spec: ParamSpec) -> Callable:
+    """Evaluation: returns per-batch mean metric (rel-L2 or accuracy)."""
+    def eval_fn(flat, x, y):
+        pred = models.forward_batched(cfg, spec, flat, x)
+        if cfg.task == "classification":
+            return jnp.mean((jnp.argmax(pred, axis=-1) == y).astype(jnp.float32))
+        return rel_l2_loss(pred, y)
+    return eval_fn

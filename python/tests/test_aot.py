@@ -1,0 +1,112 @@
+"""AOT pipeline tests: manifest consistency and HLO round-trip shape."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, cases, models, train
+from compile.cases import DATASETS
+from compile.models import ModelCfg
+from compile.train import OptCfg
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestCaseTable:
+    def test_unique_names(self):
+        cs = cases.build_cases()
+        names = [c.name for c in cs]
+        assert len(names) == len(set(names))
+
+    def test_every_case_dataset_exists(self):
+        for c in cases.build_cases():
+            assert c.dataset in DATASETS
+
+    def test_groups_known(self):
+        for c in cases.build_cases():
+            assert c.group in cases.GROUPS
+
+    def test_classification_cases_have_vocab(self):
+        for c in cases.build_cases():
+            if c.model.task == "classification":
+                assert c.model.vocab > 1
+                assert c.model.num_classes > 1
+
+    def test_table1_covers_models_and_datasets(self):
+        t1 = [c for c in cases.build_cases() if c.group == "table1"]
+        mixers = {c.model.mixer for c in t1}
+        assert mixers == set(cases.TABLE1_MODELS)
+        dsets = {c.dataset for c in t1}
+        assert dsets == set(cases.PDE_SETS)
+
+    def test_table2_covers_lra(self):
+        t2 = [c for c in cases.build_cases() if c.group == "table2"]
+        assert {c.dataset for c in t2} == set(cases.LRA_TASKS)
+        assert {c.model.mixer for c in t2} == set(cases.TABLE2_MODELS)
+
+    def test_fig12_has_shared_and_indep(self):
+        f12 = [c for c in cases.build_cases() if c.group == "fig12"]
+        assert any(c.model.shared_latents for c in f12)
+        assert any(not c.model.shared_latents for c in f12)
+        assert all("qk" in c.kinds for c in f12)
+
+
+class TestHloText:
+    def test_lowering_produces_parseable_hlo(self):
+        cfg = ModelCfg(n=32, d_in=2, d_out=1, c=8, heads=2, m=4, blocks=1)
+        spec = models.build_spec(cfg)
+        fwd = train.make_forward_fn(cfg, spec)
+        lowered = jax.jit(fwd).lower(
+            jax.ShapeDtypeStruct((spec.total,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 32, 2), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_hlo_text_reparses(self):
+        # the text must round-trip through XLA's HLO parser — this is the
+        # exact path the Rust runtime uses (HloModuleProto::from_text_file);
+        # end-to-end numerics vs python are covered by rust/tests/.
+        from jax._src.lib import xla_client as xc
+        cfg = ModelCfg(n=16, d_in=2, d_out=1, c=8, heads=2, m=4, blocks=1)
+        spec = models.build_spec(cfg)
+        fwd = train.make_forward_fn(cfg, spec)
+        lowered = jax.jit(fwd).lower(
+            jax.ShapeDtypeStruct((spec.total,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 16, 2), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod is not None
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, manifest):
+        for case in manifest["cases"]:
+            for kind, fname in case["artifacts"].items():
+                assert os.path.exists(os.path.join(ART, fname)), fname
+        for m in manifest["mixers"] + manifest["layers"]:
+            assert os.path.exists(os.path.join(ART, m["file"]))
+
+    def test_param_counts_match_spec(self, manifest):
+        for case in manifest["cases"][:10]:
+            cfg = ModelCfg(**case["model"])
+            assert models.build_spec(cfg).total == case["param_count"]
+
+    def test_param_entries_cover_vector(self, manifest):
+        for case in manifest["cases"][:10]:
+            total = case["param_count"]
+            covered = sum(e["size"] for e in case["params"])
+            assert covered == total
+            offs = sorted(e["offset"] for e in case["params"])
+            assert offs[0] == 0

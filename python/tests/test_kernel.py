@@ -1,0 +1,190 @@
+"""L1 correctness: the Pallas FLARE kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: every mixer
+implementation (pallas two-pass streaming, chunked-scan, dense sdpa) must
+agree with the materialized reference from the paper's Figure 7 pseudocode.
+Hypothesis sweeps shapes, dtypes-ish ranges, scales and tile sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flare_mixer as fm
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def _qkv(h, m, n, d, seed=0, scale=1.0):
+    return (_rand((h, m, d), seed, scale),
+            _rand((h, n, d), seed + 1, scale),
+            _rand((h, n, d), seed + 2, scale))
+
+
+class TestPallasKernel:
+    def test_matches_ref_basic(self):
+        q, k, v = _qkv(4, 16, 256, 8)
+        y = fm.flare_mixer_pallas(q, k, v, tile=64)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_ragged_tail_tile(self):
+        # N not divisible by tile exercises the in-kernel mask
+        q, k, v = _qkv(2, 8, 100, 4)
+        y = fm.flare_mixer_pallas(q, k, v, tile=32)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_single_tile(self):
+        q, k, v = _qkv(2, 8, 48, 4)
+        y = fm.flare_mixer_pallas(q, k, v, tile=64)  # tile > N
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_one_latent(self):
+        # M=1: rank-1 mixing; decode softmax over a single latent == 1
+        q, k, v = _qkv(2, 1, 64, 4)
+        y = fm.flare_mixer_pallas(q, k, v, tile=32)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_one_head(self):
+        q, k, v = _qkv(1, 8, 64, 16)
+        y = fm.flare_mixer_pallas(q, k, v, tile=16)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_extreme_logits_stable(self):
+        # large-magnitude scores: online softmax must not overflow
+        q, k, v = _qkv(2, 8, 128, 8, scale=10.0)
+        y = fm.flare_mixer_pallas(q, k, v, tile=32)
+        assert np.isfinite(np.asarray(y)).all()
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_scale_parameter(self):
+        q, k, v = _qkv(2, 8, 96, 8)
+        for s in (0.25, 1.0, 2.0):
+            y = fm.flare_mixer_pallas(q, k, v, scale=s, tile=32)
+            np.testing.assert_allclose(
+                np.asarray(y), np.asarray(ref.flare_mixer_ref(q, k, v, s)),
+                atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(h=st.integers(1, 4), m=st.integers(1, 32),
+           n=st.integers(2, 200), d=st.sampled_from([2, 4, 8, 16]),
+           tile=st.sampled_from([16, 32, 64, 128]),
+           seed=st.integers(0, 1000))
+    def test_hypothesis_sweep(self, h, m, n, d, tile, seed):
+        q, k, v = _qkv(h, m, n, d, seed=seed)
+        y = fm.flare_mixer_pallas(q, k, v, tile=tile)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestChunkedMixer:
+    @settings(max_examples=20, deadline=None)
+    @given(h=st.integers(1, 4), m=st.integers(1, 16),
+           n=st.integers(2, 300), chunk=st.sampled_from([16, 64, 128]),
+           seed=st.integers(0, 1000))
+    def test_hypothesis_sweep(self, h, m, n, chunk, seed):
+        q, k, v = _qkv(h, m, n, 4, seed=seed)
+        y = fm.flare_mixer_chunked(q, k, v, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_chunk_larger_than_n(self):
+        q, k, v = _qkv(2, 8, 40, 4)
+        y = fm.flare_mixer_chunked(q, k, v, chunk=4096)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestSdpaMixer:
+    def test_matches_ref(self):
+        q, k, v = _qkv(4, 16, 128, 8)
+        y = fm.flare_mixer_sdpa(q, k, v)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.flare_mixer_ref(q, k, v)),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestMixerMath:
+    """Structural invariants of the FLARE operator itself."""
+
+    def test_rank_at_most_m(self):
+        q, k, _ = _qkv(1, 4, 64, 8)
+        w = np.asarray(ref.mixing_matrix_ref(q[0], k[0]))
+        rank = np.linalg.matrix_rank(w, tol=1e-6)
+        assert rank <= 4
+
+    def test_rows_sum_to_one(self):
+        # W = W_dec W_enc is a product of row-stochastic matrices
+        q, k, _ = _qkv(1, 8, 64, 8)
+        w = np.asarray(ref.mixing_matrix_ref(q[0], k[0]))
+        np.testing.assert_allclose(w.sum(axis=1), np.ones(64), atol=1e-5)
+        assert (w >= -1e-7).all()
+
+    def test_permutation_equivariance(self):
+        # FLARE is permutation equivariant: mixer(P x) = P mixer(x)
+        q, k, v = _qkv(2, 8, 64, 4)
+        perm = np.random.default_rng(3).permutation(64)
+        y = np.asarray(fm.flare_mixer_sdpa(q, k, v))
+        yp = np.asarray(fm.flare_mixer_sdpa(q, k[:, perm], v[:, perm]))
+        np.testing.assert_allclose(yp, y[:, perm], atol=1e-5, rtol=1e-5)
+
+    def test_constant_value_fixed_point(self):
+        # if V is constant across tokens, Y equals that constant
+        q, k, _ = _qkv(2, 8, 64, 4)
+        v = jnp.ones((2, 64, 4)) * 3.5
+        y = np.asarray(fm.flare_mixer_sdpa(q, k, v))
+        np.testing.assert_allclose(y, 3.5 * np.ones_like(y), atol=1e-5)
+
+
+class TestEigLowRank:
+    """Paper Algorithm 1 vs dense eigendecomposition."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(2, 12), n=st.integers(16, 80),
+           seed=st.integers(0, 100))
+    def test_eigenvalues_match_dense(self, m, n, seed):
+        q = _rand((m, 8), seed)
+        k = _rand((n, 8), seed + 1)
+        evals, _ = ref.eig_lowrank_ref(q, k)
+        w = np.asarray(ref.mixing_matrix_ref(q, k), np.float64)
+        dense = np.sort(np.abs(np.linalg.eigvals(w)))[::-1][:m]
+        np.testing.assert_allclose(np.sort(np.asarray(evals))[::-1], dense,
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_eigenvectors_satisfy_definition(self):
+        q = _rand((6, 8), 0)
+        k = _rand((40, 8), 1)
+        evals, vecs = ref.eig_lowrank_ref(q, k)
+        w = np.asarray(ref.mixing_matrix_ref(q, k), np.float64)
+        v = np.asarray(vecs, np.float64)
+        lam = np.asarray(evals, np.float64)
+        np.testing.assert_allclose(w @ v, v * lam[None, :], atol=1e-4)
+
+    def test_spectrum_bounded_by_one(self):
+        # W is a product of row-stochastic matrices: spectral radius <= 1
+        q = _rand((8, 4), 5)
+        k = _rand((50, 4), 6)
+        evals, _ = ref.eig_lowrank_ref(q, k)
+        assert np.asarray(evals).max() <= 1.0 + 1e-5

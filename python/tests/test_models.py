@@ -1,0 +1,261 @@
+"""L2 model tests: packing, shapes, gradients, train-step behaviour."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import models, train
+from compile.models import ModelCfg
+from compile.packing import ParamSpec
+from compile.train import OptCfg
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = dict(n=64, d_in=2, d_out=1, c=16, heads=2, m=8, blocks=2)
+
+
+def _x(cfg, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.task == "classification":
+        return jnp.asarray(rng.integers(0, cfg.vocab, size=(batch, cfg.n)),
+                           jnp.int32)
+    return jnp.asarray(rng.normal(size=(batch, cfg.n, cfg.d_in)), jnp.float32)
+
+
+def _y(cfg, batch=2, seed=1):
+    rng = np.random.default_rng(seed)
+    if cfg.task == "classification":
+        return jnp.asarray(rng.integers(0, cfg.num_classes, size=(batch,)),
+                           jnp.int32)
+    return jnp.asarray(rng.normal(size=(batch, cfg.n, cfg.d_out)), jnp.float32)
+
+
+class TestPacking:
+    def test_offsets_contiguous(self):
+        spec = models.build_spec(ModelCfg(**SMALL))
+        off = 0
+        for e in spec.entries:
+            assert e.offset == off
+            off += e.size
+        assert spec.total == off
+
+    def test_pack_unpack_roundtrip(self):
+        spec = models.build_spec(ModelCfg(**SMALL))
+        flat = jnp.asarray(spec.init_flat(7))
+        tree = spec.unpack(flat)
+        repacked = spec.pack_numpy({k: np.asarray(v) for k, v in tree.items()})
+        np.testing.assert_array_equal(repacked, np.asarray(flat))
+
+    def test_init_deterministic(self):
+        spec = models.build_spec(ModelCfg(**SMALL))
+        np.testing.assert_array_equal(spec.init_flat(42), spec.init_flat(42))
+        assert not np.array_equal(spec.init_flat(42), spec.init_flat(43))
+
+    def test_init_kinds(self):
+        spec = models.build_spec(ModelCfg(**SMALL))
+        flat = spec.init_flat(42)
+        for e in spec.entries:
+            seg = flat[e.offset:e.offset + e.size]
+            if e.init == "zeros":
+                assert (seg == 0).all()
+            elif e.init == "ones":
+                assert (seg == 1).all()
+            elif e.init == "uniform_fanin":
+                a = 1.0 / np.sqrt(max(e.fan_in, 1))
+                assert np.abs(seg).max() <= a + 1e-7
+                assert seg.std() > 0
+            elif e.init == "latent":
+                assert np.abs(seg).max() <= 0.02 + 1e-7
+
+    def test_duplicate_name_rejected(self):
+        spec = ParamSpec()
+        spec.add("a", (2, 2), "zeros")
+        with pytest.raises(ValueError):
+            spec.add("a", (2,), "zeros")
+
+
+ALL_MIXERS = ["flare", "vanilla", "linformer", "transolver", "perceiver",
+              "lno", "linatt", "performer", "gnot"]
+
+
+class TestForward:
+    @pytest.mark.parametrize("mixer", ALL_MIXERS)
+    def test_shapes_regression(self, mixer):
+        cfg = ModelCfg(mixer=mixer, **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        y = models.forward_batched(cfg, spec, flat, _x(cfg))
+        assert y.shape == (2, cfg.n, cfg.d_out)
+        assert np.isfinite(np.asarray(y)).all()
+
+    @pytest.mark.parametrize("mixer", ["flare", "vanilla", "linformer"])
+    def test_shapes_classification(self, mixer):
+        cfg = ModelCfg(mixer=mixer, task="classification", vocab=16,
+                       num_classes=5, **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        y = models.forward_batched(cfg, spec, flat, _x(cfg, batch=3))
+        assert y.shape == (3, 5)
+
+    def test_flare_permutation_equivariance(self):
+        cfg = ModelCfg(mixer="flare", **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        x = _x(cfg, batch=1)
+        perm = np.random.default_rng(0).permutation(cfg.n)
+        y = np.asarray(models.forward_batched(cfg, spec, flat, x))
+        yp = np.asarray(models.forward_batched(cfg, spec, flat, x[:, perm]))
+        np.testing.assert_allclose(yp, y[:, perm], atol=2e-5, rtol=2e-5)
+
+    def test_vanilla_not_equivariant_check_is_meaningful(self):
+        # sanity for the test above: outputs actually depend on inputs
+        cfg = ModelCfg(mixer="flare", **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        y1 = models.forward_batched(cfg, spec, flat, _x(cfg, seed=0))
+        y2 = models.forward_batched(cfg, spec, flat, _x(cfg, seed=9))
+        assert np.abs(np.asarray(y1 - y2)).max() > 1e-6
+
+    def test_shared_latents_param_shape(self):
+        cfg = ModelCfg(mixer="flare", shared_latents=True, **SMALL)
+        spec = models.build_spec(cfg)
+        e = spec.entry("blk0.mix.latents")
+        assert e.shape == (cfg.m, cfg.c // cfg.heads)
+        indep = models.build_spec(ModelCfg(mixer="flare", **SMALL))
+        assert indep.entry("blk0.mix.latents").shape == \
+            (cfg.heads, cfg.m, cfg.c // cfg.heads)
+        assert spec.total < indep.total
+
+    def test_hybrid_latent_sa_runs(self):
+        cfg = ModelCfg(mixer="flare", latent_sa_blocks=2, **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        y = models.forward_batched(cfg, spec, flat, _x(cfg))
+        assert y.shape == (2, cfg.n, 1)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_hybrid_lb0_matches_plain(self):
+        # L_B = 0 hybrid path must equal the fused mixer path
+        cfg0 = ModelCfg(mixer="flare", **SMALL)
+        spec = models.build_spec(cfg0)
+        flat = jnp.asarray(spec.init_flat(0))
+        x = _x(cfg0)
+        y_sdpa = models.forward_batched(cfg0, spec, flat, x)
+        cfg_c = dataclasses.replace(cfg0, mixer_impl="chunked")
+        y_chunk = models.forward_batched(cfg_c, spec, flat, x)
+        np.testing.assert_allclose(np.asarray(y_sdpa), np.asarray(y_chunk),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_param_counts_ordered_like_paper(self):
+        # paper Table 1: FLARE uses fewer params than perceiver-style models
+        flare = models.param_count(ModelCfg(mixer="flare", **SMALL))
+        perceiver = models.param_count(
+            ModelCfg(mixer="perceiver", **{**SMALL, "c": 32}))
+        assert flare < perceiver
+
+    def test_qk_forward_shapes(self):
+        cfg = ModelCfg(mixer="flare", **SMALL)
+        spec = models.build_spec(cfg)
+        flat = jnp.asarray(spec.init_flat(0))
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(cfg.n, cfg.d_in)), jnp.float32)
+        ks = models.qk_forward(cfg, spec, flat, x)
+        assert len(ks) == cfg.blocks
+        for k in ks:
+            assert k.shape == (cfg.heads, cfg.n, cfg.head_dim)
+
+
+class TestTrainStep:
+    def _setup(self, mixer="flare", task="regression"):
+        kw = dict(SMALL)
+        if task == "classification":
+            cfg = ModelCfg(mixer=mixer, task=task, vocab=16, num_classes=4,
+                           **kw)
+        else:
+            cfg = ModelCfg(mixer=mixer, **kw)
+        spec = models.build_spec(cfg)
+        step = jax.jit(train.make_train_step(cfg, spec, OptCfg()))
+        flat = jnp.asarray(spec.init_flat(3))
+        z = jnp.zeros_like(flat)
+        return cfg, spec, step, flat, z
+
+    @pytest.mark.parametrize("mixer", ["flare", "vanilla", "transolver"])
+    def test_loss_decreases(self, mixer):
+        cfg, spec, step, p, z = self._setup(mixer)
+        x, y = _x(cfg), _y(cfg)
+        m, v = z, z
+        losses = []
+        for t in range(30):
+            p, m, v, loss = step(p, m, v, float(t), 3e-3, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_loss_decreases_classification(self):
+        cfg, spec, step, p, z = self._setup("flare", "classification")
+        x, y = _x(cfg, batch=4), _y(cfg, batch=4)
+        m, v = z, z
+        losses = []
+        for t in range(30):
+            p, m, v, loss = step(p, m, v, float(t), 3e-3, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_grad_clip_bounds_update(self):
+        cfg, spec, step, p, z = self._setup()
+        x = _x(cfg)
+        y = _y(cfg) * 1e6  # huge targets -> huge raw grads
+        p2, m, v, loss = step(p, z, z, 0.0, 1e-3, x, y)
+        assert np.isfinite(np.asarray(p2)).all()
+        # after clip to norm 1, first Adam step magnitude is bounded by
+        # lr * (1/sqrt(1e-3 * g^2 / ...)) — just check no explosion:
+        assert np.abs(np.asarray(p2 - p)).max() < 1.0
+
+    def test_gradients_match_finite_difference(self):
+        cfg = ModelCfg(mixer="flare", n=16, d_in=2, d_out=1, c=8, heads=2,
+                       m=4, blocks=1, kv_layers=1, ffn_layers=1, io_layers=1)
+        spec = models.build_spec(cfg)
+        loss_fn = train.make_loss_fn(cfg, spec)
+        flat = jnp.asarray(spec.init_flat(0), jnp.float32)
+        x, y = _x(cfg, batch=1), _y(cfg, batch=1)
+        g = np.asarray(jax.grad(loss_fn)(flat, x, y), np.float64)
+        rng = np.random.default_rng(0)
+        idxs = rng.choice(spec.total, size=12, replace=False)
+        eps = 1e-3
+        for i in idxs:
+            fp = np.asarray(flat).copy()
+            fm_ = np.asarray(flat).copy()
+            fp[i] += eps
+            fm_[i] -= eps
+            num = (float(loss_fn(jnp.asarray(fp), x, y)) -
+                   float(loss_fn(jnp.asarray(fm_), x, y))) / (2 * eps)
+            assert abs(num - g[i]) < 5e-3 + 0.05 * abs(num), \
+                f"param {i}: fd={num} ad={g[i]}"
+
+    def test_rel_l2_loss_values(self):
+        y = jnp.ones((2, 8, 1))
+        assert float(train.rel_l2_loss(y, y)) < 1e-6
+        assert abs(float(train.rel_l2_loss(jnp.zeros_like(y), y)) - 1.0) < 1e-6
+
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.asarray([0, 3, 7, 9], jnp.int32)
+        assert abs(float(train.cross_entropy_loss(logits, labels)) -
+                   np.log(10)) < 1e-5
+
+
+class TestWeightDecayAndSchedule:
+    def test_weight_decay_shrinks_params(self):
+        cfg = ModelCfg(mixer="flare", **SMALL)
+        spec = models.build_spec(cfg)
+        step_wd = jax.jit(train.make_train_step(cfg, spec, OptCfg(weight_decay=0.5)))
+        step_no = jax.jit(train.make_train_step(cfg, spec, OptCfg(weight_decay=0.0)))
+        p = jnp.asarray(spec.init_flat(3))
+        z = jnp.zeros_like(p)
+        x, y = _x(cfg), _y(cfg)
+        p_wd, *_ = step_wd(p, z, z, 0.0, 1e-2, x, y)
+        p_no, *_ = step_no(p, z, z, 0.0, 1e-2, x, y)
+        assert float(jnp.sum(p_wd ** 2)) < float(jnp.sum(p_no ** 2))

@@ -1,0 +1,290 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + timed iterations with summary statistics, a result
+//! table printer that mirrors the paper's tables, and JSON result dumps
+//! under `results/` so EXPERIMENTS.md numbers are regenerable.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::{Summary, Timer};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub total_s: f64,
+    pub per_iter: Summary,
+    /// optional free-form metrics (throughput, rel-L2, memory, ...)
+    pub extras: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.per_iter.mean
+    }
+    pub fn extra(&self, key: &str) -> Option<f64> {
+        self.extras
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("total_s", Json::num(self.total_s)),
+            ("mean_ms", Json::num(self.per_iter.mean)),
+            ("p50_ms", Json::num(self.per_iter.p50)),
+            ("p95_ms", Json::num(self.per_iter.p95)),
+            ("min_ms", Json::num(self.per_iter.min)),
+            ("max_ms", Json::num(self.per_iter.max)),
+            (
+                "extras",
+                Json::Obj(
+                    self.extras
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Benchmark runner with time/iteration budgets.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 30,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: 1,
+            min_iters: 2,
+            max_iters: 10,
+            max_time: Duration::from_secs(5),
+        }
+    }
+
+    /// Time `f` until budgets are exhausted; returns the measurement.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let budget = Timer::start();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && budget.elapsed() < self.max_time)
+        {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed_ms());
+        }
+        Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            total_s: budget.elapsed_s(),
+            per_iter: Summary::of(&samples),
+            extras: vec![],
+        }
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Write bench results as JSON under `results/<file>.json`.
+pub fn save_results(file: &str, results: &[Measurement]) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("FLARE_RESULTS").unwrap_or_else(|_| "results".into()),
+    );
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{file}.json"));
+    let arr = Json::Arr(results.iter().map(|m| m.to_json()).collect());
+    std::fs::write(&path, arr.to_string())?;
+    Ok(path)
+}
+
+/// Are we running in quick mode (`FLARE_BENCH_QUICK=1`)? Benches use this to
+/// shrink sweeps for smoke runs while `cargo bench` defaults to full scale.
+pub fn quick_mode() -> bool {
+    std::env::var("FLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Step budget for training sweeps: `FLARE_BENCH_STEPS` overrides; quick
+/// mode divides by 10 (min 5).
+pub fn sweep_steps(full: usize) -> usize {
+    if let Ok(v) = std::env::var("FLARE_BENCH_STEPS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    if quick_mode() {
+        (full / 10).max(5)
+    } else {
+        full
+    }
+}
+
+/// Train one case and wrap the outcome as a [`Measurement`] with
+/// `rel_l2`/`accuracy`, `params`, and `ms_per_step` extras — the shared
+/// path for every table/figure training sweep.
+pub fn train_measurement(
+    rt: &crate::runtime::Runtime,
+    manifest: &crate::config::Manifest,
+    case: &crate::config::CaseCfg,
+    steps: usize,
+) -> anyhow::Result<Measurement> {
+    let out = crate::train::train_case(
+        rt,
+        manifest,
+        case,
+        &crate::train::TrainOpts {
+            steps: Some(steps),
+            ..Default::default()
+        },
+    )?;
+    let metric_name = if case.model.is_classification() {
+        "accuracy"
+    } else {
+        "rel_l2"
+    };
+    Ok(Measurement {
+        name: case.name.clone(),
+        iters: out.steps,
+        total_s: out.wall_s,
+        per_iter: out.step_ms.clone(),
+        extras: vec![
+            (metric_name.into(), out.final_metric),
+            ("params".into(), case.param_count as f64),
+            ("ms_per_step".into(), out.step_ms.mean),
+            (
+                "final_loss".into(),
+                out.losses.last().copied().unwrap_or(f64::NAN),
+            ),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let b = Bench {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 5,
+            max_time: Duration::from_secs(1),
+        };
+        let mut count = 0;
+        let m = b.run("t", || {
+            count += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(m.iters >= 3);
+        assert_eq!(count, m.iters + 1); // warmup
+        assert!(m.per_iter.mean >= 1.0);
+    }
+
+    #[test]
+    fn measurement_json() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 2,
+            total_s: 1.0,
+            per_iter: Summary::of(&[1.0, 2.0]),
+            extras: vec![("tput".into(), 3.5)],
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("name").as_str(), Some("x"));
+        assert_eq!(j.get("extras").get("tput").as_f64(), Some(3.5));
+        assert_eq!(m.extra("tput"), Some(3.5));
+        assert_eq!(m.extra("none"), None);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    fn save_results_writes_json() {
+        let dir = std::env::temp_dir().join("flare_bench_test");
+        std::env::set_var("FLARE_RESULTS", &dir);
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            total_s: 0.1,
+            per_iter: Summary::of(&[0.1]),
+            extras: vec![],
+        };
+        let path = save_results("unit", &[m]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
+        std::env::remove_var("FLARE_RESULTS");
+    }
+}

@@ -1,0 +1,130 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `flare <subcommand> [--key value]... [--flag]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exe name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                anyhow::bail!("unexpected positional argument {arg:?}");
+            }
+        }
+        Ok(Args {
+            subcommand,
+            options,
+            flags,
+        })
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}"))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}"))
+            })
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse(&["train", "--case", "x", "--steps", "10", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("case"), Some("x"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(10));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["bench", "--case=y", "--lr=0.5"]);
+        assert_eq!(a.get("case"), Some("y"));
+        assert_eq!(a.get_f64("lr").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--quiet"]);
+        assert!(a.has_flag("fast"));
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--steps", "abc"]);
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["x".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,320 @@
+//! Typed run configuration: manifest loading plus CLI-facing run configs.
+//!
+//! The manifest (`artifacts/manifest.json`) is the single source of truth
+//! emitted by `python/compile/aot.py`; this module parses it into typed
+//! structures consumed by the runtime, trainer and benches.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// One parameter entry of a model's flat vector (mirrors
+/// `compile.packing.ParamEntry`).
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+    pub fan_in: usize,
+}
+
+impl ParamEntry {
+    fn from_json(j: &Json) -> anyhow::Result<ParamEntry> {
+        Ok(ParamEntry {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            offset: j.req_usize("offset")?,
+            size: j.req_usize("size")?,
+            init: j.req_str("init")?.to_string(),
+            fan_in: j.get("fan_in").as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// Model hyperparameters (mirrors `compile.models.ModelCfg`).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub mixer: String,
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub c: usize,
+    pub heads: usize,
+    pub m: usize,
+    pub blocks: usize,
+    pub kv_layers: usize,
+    pub ffn_layers: usize,
+    pub latent_sa_blocks: usize,
+    pub shared_latents: bool,
+    pub task: String,
+    pub vocab: usize,
+    pub num_classes: usize,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> anyhow::Result<ModelCfg> {
+        Ok(ModelCfg {
+            mixer: j.req_str("mixer")?.to_string(),
+            n: j.req_usize("n")?,
+            d_in: j.get("d_in").as_usize().unwrap_or(0),
+            d_out: j.get("d_out").as_usize().unwrap_or(0),
+            c: j.req_usize("c")?,
+            heads: j.req_usize("heads")?,
+            m: j.req_usize("m")?,
+            blocks: j.req_usize("blocks")?,
+            kv_layers: j.get("kv_layers").as_usize().unwrap_or(3),
+            ffn_layers: j.get("ffn_layers").as_usize().unwrap_or(3),
+            latent_sa_blocks: j.get("latent_sa_blocks").as_usize().unwrap_or(0),
+            shared_latents: j.get("shared_latents").as_bool().unwrap_or(false),
+            task: j
+                .get("task")
+                .as_str()
+                .unwrap_or("regression")
+                .to_string(),
+            vocab: j.get("vocab").as_usize().unwrap_or(0),
+            num_classes: j.get("num_classes").as_usize().unwrap_or(0),
+        })
+    }
+    pub fn head_dim(&self) -> usize {
+        self.c / self.heads
+    }
+    pub fn is_classification(&self) -> bool {
+        self.task == "classification"
+    }
+}
+
+/// One case: a model bound to a dataset shape with its artifact files.
+#[derive(Debug, Clone)]
+pub struct CaseCfg {
+    pub name: String,
+    pub group: String,
+    pub dataset: String,
+    pub dataset_meta: Json,
+    pub batch: usize,
+    pub train_steps: usize,
+    pub lr: f64,
+    pub model: ModelCfg,
+    pub param_count: usize,
+    pub artifacts: BTreeMap<String, String>,
+    pub params: Vec<ParamEntry>,
+}
+
+/// A standalone mixer artifact (Figure 2).
+#[derive(Debug, Clone)]
+pub struct MixerCfg {
+    pub name: String,
+    pub kind: String,
+    pub n: usize,
+    pub m: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub file: String,
+}
+
+/// A bare-layer artifact (Figure 8).
+#[derive(Debug, Clone)]
+pub struct LayerCfg {
+    pub name: String,
+    pub mixer: String,
+    pub n: usize,
+    pub c: usize,
+    pub file: String,
+    pub param_count: usize,
+    pub params: Vec<ParamEntry>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub dir: PathBuf,
+    pub cases: Vec<CaseCfg>,
+    pub mixers: Vec<MixerCfg>,
+    pub layers: Vec<LayerCfg>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {dir:?}: {e}"))?;
+        let j = parse(&text)?;
+        let seed = j.get("seed").as_usize().unwrap_or(42) as u64;
+
+        let mut cases = Vec::new();
+        for c in j.get("cases").as_arr().unwrap_or(&[]) {
+            let mut artifacts = BTreeMap::new();
+            if let Some(obj) = c.get("artifacts").as_obj() {
+                for (k, v) in obj {
+                    artifacts.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+                }
+            }
+            let params = c
+                .get("params")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(ParamEntry::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            cases.push(CaseCfg {
+                name: c.req_str("name")?.to_string(),
+                group: c.req_str("group")?.to_string(),
+                dataset: c.req_str("dataset")?.to_string(),
+                dataset_meta: c.get("dataset_meta").clone(),
+                batch: c.req_usize("batch")?,
+                train_steps: c.get("train_steps").as_usize().unwrap_or(100),
+                lr: c.get("lr").as_f64().unwrap_or(1e-3),
+                model: ModelCfg::from_json(c.get("model"))?,
+                param_count: c.req_usize("param_count")?,
+                artifacts,
+                params,
+            });
+        }
+
+        let mut mixers = Vec::new();
+        for m in j.get("mixers").as_arr().unwrap_or(&[]) {
+            mixers.push(MixerCfg {
+                name: m.req_str("name")?.to_string(),
+                kind: m.req_str("kind")?.to_string(),
+                n: m.req_usize("n")?,
+                m: m.get("m").as_usize().unwrap_or(0),
+                heads: m.get("heads").as_usize().unwrap_or(8),
+                head_dim: m.get("head_dim").as_usize().unwrap_or(8),
+                file: m.req_str("file")?.to_string(),
+            });
+        }
+
+        let mut layers = Vec::new();
+        for l in j.get("layers").as_arr().unwrap_or(&[]) {
+            layers.push(LayerCfg {
+                name: l.req_str("name")?.to_string(),
+                mixer: l.req_str("mixer")?.to_string(),
+                n: l.req_usize("n")?,
+                c: l.get("c").as_usize().unwrap_or(32),
+                file: l.req_str("file")?.to_string(),
+                param_count: l.req_usize("param_count")?,
+                params: l
+                    .get("params")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(ParamEntry::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            });
+        }
+
+        Ok(Manifest {
+            seed,
+            dir,
+            cases,
+            mixers,
+            layers,
+        })
+    }
+
+    pub fn case(&self, name: &str) -> anyhow::Result<&CaseCfg> {
+        self.cases
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no case {name:?} in manifest"))
+    }
+
+    pub fn cases_in_group(&self, group: &str) -> Vec<&CaseCfg> {
+        self.cases.iter().filter(|c| c.group == group).collect()
+    }
+
+    /// Absolute path of a case artifact.
+    pub fn artifact_path(&self, case: &CaseCfg, kind: &str) -> anyhow::Result<PathBuf> {
+        let f = case
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("case {} has no {kind} artifact", case.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Default artifacts directory: `$FLARE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLARE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "version": 1, "seed": 7,
+          "datasets": {},
+          "cases": [{
+            "name": "t", "group": "core", "dataset": "darcy",
+            "dataset_meta": {"kind": "darcy", "n": 16, "grid": 4,
+                             "train": 1, "test": 1},
+            "batch": 2, "train_steps": 10, "lr": 0.001,
+            "model": {"mixer": "flare", "n": 16, "d_in": 3, "d_out": 1,
+                      "c": 8, "heads": 2, "m": 4, "blocks": 1,
+                      "kv_layers": 1, "ffn_layers": 1, "io_layers": 1,
+                      "latent_sa_blocks": 0, "shared_latents": false,
+                      "scale": 1.0, "mixer_impl": "sdpa",
+                      "task": "regression", "vocab": 0, "num_classes": 0},
+            "opt": {}, "param_count": 10,
+            "artifacts": {"fwd": "t_fwd.hlo.txt"},
+            "params": [{"name": "a", "shape": [2, 5], "offset": 0,
+                        "size": 10, "init": "zeros", "fan_in": 0}]
+          }],
+          "mixers": [{"name": "mx", "kind": "flare_sdpa", "n": 64, "m": 8,
+                      "heads": 2, "head_dim": 4, "group": "fig2",
+                      "file": "mx.hlo.txt"}],
+          "layers": []
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_tiny_manifest() {
+        let dir = std::env::temp_dir().join("flare_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 7);
+        assert_eq!(m.cases.len(), 1);
+        let c = m.case("t").unwrap();
+        assert_eq!(c.model.mixer, "flare");
+        assert_eq!(c.model.head_dim(), 4);
+        assert_eq!(c.params[0].shape, vec![2, 5]);
+        assert_eq!(m.mixers[0].n, 64);
+        assert!(m.case("missing").is_err());
+        assert_eq!(m.cases_in_group("core").len(), 1);
+        assert!(m
+            .artifact_path(c, "fwd")
+            .unwrap()
+            .ends_with("t_fwd.hlo.txt"));
+        assert!(m.artifact_path(c, "step").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.cases.is_empty());
+            // every case's params must tile the flat vector exactly
+            for c in &m.cases {
+                let covered: usize = c.params.iter().map(|p| p.size).sum();
+                assert_eq!(covered, c.param_count, "case {}", c.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Shape-bucketed dynamic batcher (pure logic; no runtime dependency).
+//!
+//! Requests are routed into buckets (one per compiled artifact shape); a
+//! bucket flushes when it reaches `max_batch` or when its oldest request has
+//! waited `max_wait`.  Invariants (property-tested below):
+//!
+//! * a batch never mixes buckets,
+//! * a batch never exceeds `max_batch`,
+//! * requests flush in FIFO order within a bucket,
+//! * every submitted request is eventually flushed (conservation).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One queued request.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A flushed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub bucket: String,
+    pub items: Vec<Pending<T>>,
+}
+
+/// Dynamic batcher over named shape buckets.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queues: BTreeMap<String, Vec<Pending<T>>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    next_id: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher<T> {
+        Batcher {
+            queues: BTreeMap::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn push(&mut self, bucket: &str, payload: T) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queues.entry(bucket.to_string()).or_default().push(Pending {
+            id,
+            payload,
+            enqueued: Instant::now(),
+        });
+        id
+    }
+
+    /// Total queued requests.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Queue depth of one bucket.
+    pub fn depth(&self, bucket: &str) -> usize {
+        self.queues.get(bucket).map_or(0, |q| q.len())
+    }
+
+    /// Pop the next ready batch: any bucket at `max_batch`, or any bucket
+    /// whose oldest entry exceeded `max_wait`.  `now` injected for tests.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
+        let bucket = self
+            .queues
+            .iter()
+            .find(|(_, q)| {
+                q.len() >= self.max_batch
+                    || q.first()
+                        .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
+                        .unwrap_or(false)
+            })
+            .map(|(k, _)| k.clone())?;
+        let q = self.queues.get_mut(&bucket).unwrap();
+        let take = q.len().min(self.max_batch);
+        let items: Vec<Pending<T>> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.queues.remove(&bucket);
+        }
+        Some(Batch { bucket, items })
+    }
+
+    /// Drain everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        let buckets: Vec<String> = self.queues.keys().cloned().collect();
+        for bucket in buckets {
+            let mut q = self.queues.remove(&bucket).unwrap();
+            while !q.is_empty() {
+                let take = q.len().min(self.max_batch);
+                out.push(Batch {
+                    bucket: bucket.clone(),
+                    items: q.drain(..take).collect(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_secs(100));
+        b.push("a", 1);
+        b.push("a", 2);
+        assert!(b.pop_ready(Instant::now()).is_none());
+        b.push("a", 3);
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(batch.bucket, "a");
+        assert_eq!(batch.items.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5));
+        b.push("a", 1);
+        assert!(b.pop_ready(Instant::now()).is_none());
+        let later = Instant::now() + Duration::from_millis(10);
+        let batch = b.pop_ready(later).unwrap();
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn never_mixes_buckets() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(100));
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("a", 3);
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(batch.bucket, "a");
+        assert_eq!(
+            batch.items.iter().map(|p| p.payload).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+    }
+
+    #[test]
+    fn fifo_within_bucket() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_secs(0));
+        for i in 0..4 {
+            b.push("a", i);
+        }
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.items.iter().map(|p| p.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn property_conservation_under_random_traffic() {
+        // every pushed request appears in exactly one flushed batch
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let mut b: Batcher<u64> = Batcher::new(1 + rng.below(5), Duration::from_secs(100));
+            let mut pushed = Vec::new();
+            let mut flushed = Vec::new();
+            for i in 0..200u64 {
+                let bucket = format!("b{}", rng.below(4));
+                let id = b.push(&bucket, i);
+                pushed.push(id);
+                if rng.f64() < 0.3 {
+                    while let Some(batch) = b.pop_ready(Instant::now()) {
+                        // batch size invariant
+                        assert!(batch.items.len() <= b.max_batch);
+                        flushed.extend(batch.items.iter().map(|p| p.id));
+                    }
+                }
+            }
+            for batch in b.drain_all() {
+                flushed.extend(batch.items.iter().map(|p| p.id));
+            }
+            pushed.sort_unstable();
+            flushed.sort_unstable();
+            assert_eq!(pushed, flushed, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn drain_respects_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(100));
+        for i in 0..5 {
+            b.push("a", i);
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|bt| bt.items.len() <= 2));
+        let total: usize = batches.iter().map(|bt| bt.items.len()).sum();
+        assert_eq!(total, 5);
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordination: request routing, shape-bucketed dynamic batching,
+//! and the channel-fed executor thread that owns the PJRT runtime.
+//!
+//! Architecture (vLLM-router-style, adapted to shape-specialized XLA
+//! executables):
+//!
+//! ```text
+//!   clients ──mpsc──▶ executor thread
+//!                      ├─ Router: pick (case, N) bucket, pad input
+//!                      ├─ Batcher: per-bucket queues, size/deadline flush
+//!                      ├─ Runtime: cached PJRT executables, one execute
+//!                      │           per flushed batch
+//!                      └─ reply channels + metrics Registry
+//! ```
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, Pending};
+pub use router::{Bucket, Router};
+pub use server::{Response, Server, ServerConfig};

@@ -1,0 +1,130 @@
+//! Request router: picks the compiled shape bucket for an incoming point
+//! cloud and handles padding to the bucket's static sequence length.
+//!
+//! XLA executables are shape-specialized, so the router maintains the set of
+//! available `(case, N)` buckets and maps each request to the smallest
+//! bucket with `bucket.n >= request.n`; the input is padded by repeating its
+//! last point (point clouds are unordered, and FLARE is permutation
+//! equivariant, so repeated points only reweight attention mass slightly —
+//! the padded outputs are discarded).
+
+/// One available serving bucket.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub case: String,
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+/// Router over available buckets.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    buckets: Vec<Bucket>,
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<Bucket>) -> Router {
+        buckets.sort_by_key(|b| b.n);
+        Router { buckets }
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket that fits `n` points (None if the request is too big).
+    pub fn route(&self, n: usize) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.n >= n)
+    }
+
+    /// Pad `x [n, d_in]` to `bucket.n` points by repeating the final point.
+    pub fn pad_input(&self, bucket: &Bucket, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * bucket.d_in, "input length mismatch");
+        assert!(n > 0 && n <= bucket.n);
+        let mut out = Vec::with_capacity(bucket.n * bucket.d_in);
+        out.extend_from_slice(x);
+        let last = &x[(n - 1) * bucket.d_in..];
+        for _ in n..bucket.n {
+            out.extend_from_slice(last);
+        }
+        out
+    }
+
+    /// Truncate a padded output `[bucket.n, d_out]` back to `n` points.
+    pub fn trim_output(&self, bucket: &Bucket, y: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(y.len(), bucket.n * bucket.d_out);
+        y[..n * bucket.d_out].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_router() -> Router {
+        Router::new(vec![
+            Bucket {
+                case: "big".into(),
+                n: 2048,
+                d_in: 3,
+                d_out: 1,
+                batch: 1,
+            },
+            Bucket {
+                case: "small".into(),
+                n: 1024,
+                d_in: 3,
+                d_out: 1,
+                batch: 2,
+            },
+        ])
+    }
+
+    #[test]
+    fn routes_to_smallest_fit() {
+        let r = mk_router();
+        assert_eq!(r.route(500).unwrap().case, "small");
+        assert_eq!(r.route(1024).unwrap().case, "small");
+        assert_eq!(r.route(1025).unwrap().case, "big");
+        assert!(r.route(4096).is_none());
+    }
+
+    #[test]
+    fn pad_repeats_last_point() {
+        let r = mk_router();
+        let b = Bucket {
+            case: "t".into(),
+            n: 4,
+            d_in: 2,
+            d_out: 1,
+            batch: 1,
+        };
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // two points
+        let padded = r.pad_input(&b, &x, 2);
+        assert_eq!(padded, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn trim_inverts_pad_length() {
+        let r = mk_router();
+        let b = Bucket {
+            case: "t".into(),
+            n: 4,
+            d_in: 2,
+            d_out: 1,
+            batch: 1,
+        };
+        let y = vec![9.0, 8.0, 7.0, 6.0];
+        assert_eq!(r.trim_output(&b, &y, 2), vec![9.0, 8.0]);
+    }
+
+    #[test]
+    fn exact_size_needs_no_padding() {
+        let r = mk_router();
+        let b = r.route(1024).unwrap().clone();
+        let x = vec![0.5; 1024 * 3];
+        assert_eq!(r.pad_input(&b, &x, 1024).len(), 1024 * 3);
+    }
+}

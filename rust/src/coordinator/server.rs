@@ -1,0 +1,288 @@
+//! The serving engine: a dedicated executor thread owns the (non-`Send`)
+//! PJRT runtime; clients talk to it through channels.
+//!
+//!   client threads -> mpsc -> [executor thread: router -> batcher ->
+//!                              PJRT execute -> reply channels]
+//!
+//! Batches flush when full (`bucket.batch`) or when the oldest request has
+//! waited `max_wait` (latency/throughput knob).  All latency, batch-size and
+//! queue-depth series land in a `metrics::Registry`.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::Manifest;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::router::{Bucket, Router};
+use crate::metrics::Registry;
+use crate::model::init_params;
+use crate::runtime::literal::{lit_f32, to_vec_f32};
+use crate::runtime::Runtime;
+
+/// A completed inference.
+#[derive(Debug)]
+pub struct Response {
+    pub y: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+    pub bucket: String,
+}
+
+struct Submit {
+    n: usize,
+    x: Vec<f32>,
+    reply: mpsc::Sender<anyhow::Result<Response>>,
+}
+
+enum Msg {
+    Submit(Submit),
+    Shutdown,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// cases (by name) to serve; each must have a `fwd` artifact
+    pub cases: Vec<String>,
+    /// flush deadline for partially filled batches
+    pub max_wait: Duration,
+    /// optional trained parameters per case (defaults to seeded init)
+    pub params: Vec<(String, Vec<f32>)>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            cases: vec!["core_darcy_flare".into()],
+            max_wait: Duration::from_millis(20),
+            params: vec![],
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<anyhow::Result<()>>>,
+    pub metrics: Arc<Registry>,
+}
+
+impl Server {
+    /// Start the executor thread; compiles every served artifact up front.
+    pub fn start(manifest_dir: std::path::PathBuf, cfg: ServerConfig) -> anyhow::Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Registry::new());
+        let metrics_thread = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name("flare-executor".into())
+            .spawn(move || executor_main(manifest_dir, cfg, rx, ready_tx, metrics_thread))?;
+
+        // wait for compilation to finish (or fail) before returning
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
+        Ok(Server {
+            tx,
+            join: Some(join),
+            metrics,
+        })
+    }
+
+    /// Submit asynchronously; returns the reply channel.
+    pub fn submit(&self, x: Vec<f32>, n: usize) -> mpsc::Receiver<anyhow::Result<Response>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Submit(Submit { n, x, reply }));
+        rx
+    }
+
+    /// Blocking inference convenience.
+    pub fn infer(&self, x: Vec<f32>, n: usize) -> anyhow::Result<Response> {
+        self.submit(x, n)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Graceful shutdown: drains queues, joins the executor.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct BucketState {
+    bucket: Bucket,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    params: xla::Literal,
+}
+
+fn executor_main(
+    manifest_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<anyhow::Result<()>>,
+    metrics: Arc<Registry>,
+) -> anyhow::Result<()> {
+    // ---- startup: manifest, runtime, compile every served case ----------
+    let setup = (|| -> anyhow::Result<(Runtime, Vec<BucketState>)> {
+        let manifest = Manifest::load(&manifest_dir)?;
+        let rt = Runtime::cpu()?;
+        let mut states = Vec::new();
+        for name in &cfg.cases {
+            let case = manifest.case(name)?;
+            anyhow::ensure!(
+                !case.model.is_classification(),
+                "serving supports field models"
+            );
+            let exe = rt.load(
+                &format!("{}_fwd", case.name),
+                manifest.artifact_path(case, "fwd")?,
+            )?;
+            let p = cfg
+                .params
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, p)| p.clone())
+                .unwrap_or_else(|| init_params(&case.params, case.param_count, manifest.seed));
+            anyhow::ensure!(p.len() == case.param_count, "params length mismatch");
+            let params = lit_f32(&p, &[case.param_count as i64])?;
+            states.push(BucketState {
+                bucket: Bucket {
+                    case: case.name.clone(),
+                    n: case.model.n,
+                    d_in: case.model.d_in,
+                    d_out: case.model.d_out,
+                    batch: case.batch,
+                },
+                exe,
+                params,
+            });
+        }
+        Ok((rt, states))
+    })();
+
+    let (rt, states) = match setup {
+        Ok(v) => {
+            let _ = ready_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Ok(());
+        }
+    };
+    let router = Router::new(states.iter().map(|s| s.bucket.clone()).collect());
+    let max_batch = states.iter().map(|s| s.bucket.batch).max().unwrap_or(1);
+    let mut batcher: Batcher<Submit> = Batcher::new(max_batch, cfg.max_wait);
+    // per-bucket max batch differs; track it
+    let state_of = |case: &str| states.iter().find(|s| s.bucket.case == case).unwrap();
+
+    let mut shutting_down = false;
+    loop {
+        // 1. ingest messages (bounded wait so deadlines stay responsive)
+        let timeout = if batcher.queued() > 0 {
+            Duration::from_millis(1)
+        } else {
+            Duration::from_millis(50)
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit(s)) => match router.route(s.n) {
+                Some(b) => {
+                    let padded = router.pad_input(b, &s.x, s.n);
+                    let bucket_name = b.case.clone();
+                    batcher.push(
+                        &bucket_name,
+                        Submit {
+                            n: s.n,
+                            x: padded,
+                            reply: s.reply,
+                        },
+                    );
+                    metrics.record("queue_depth", batcher.queued() as f64);
+                }
+                None => {
+                    let _ = s
+                        .reply
+                        .send(Err(anyhow::anyhow!("no bucket fits n={}", s.n)));
+                }
+            },
+            Ok(Msg::Shutdown) => shutting_down = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+
+        // 2. flush ready batches (everything on shutdown)
+        let ready = if shutting_down {
+            batcher.drain_all()
+        } else {
+            let mut v = Vec::new();
+            while let Some(b) = batcher.pop_ready(Instant::now()) {
+                v.push(b);
+            }
+            v
+        };
+        for batch in ready {
+            let st = state_of(&batch.bucket);
+            let b = st.bucket.clone();
+            // split oversized batches down to the bucket's compiled size
+            for chunk in batch.items.chunks(b.batch) {
+                let exec_t = Instant::now();
+                let real = chunk.len();
+                let mut x = Vec::with_capacity(b.batch * b.n * b.d_in);
+                for item in chunk {
+                    x.extend_from_slice(&item.payload.x);
+                }
+                // pad the batch dimension with zeros
+                x.resize(b.batch * b.n * b.d_in, 0.0);
+                let result = lit_f32(&x, &[b.batch as i64, b.n as i64, b.d_in as i64])
+                    .and_then(|xl| rt.run_ref(&st.exe, &[&st.params, &xl]))
+                    .and_then(|outs| to_vec_f32(&outs[0]));
+                match result {
+                    Ok(y) => {
+                        let per = b.n * b.d_out;
+                        for (i, item) in chunk.iter().enumerate() {
+                            let yi = router.trim_output(&b, &y[i * per..(i + 1) * per], item.payload.n);
+                            let latency = item.enqueued.elapsed();
+                            metrics.record("latency_ms", latency.as_secs_f64() * 1e3);
+                            metrics.record("batch_size", real as f64);
+                            let _ = item.payload.reply.send(Ok(Response {
+                                y: yi,
+                                latency,
+                                batch_size: real,
+                                bucket: b.case.clone(),
+                            }));
+                        }
+                        metrics.record("exec_ms", exec_t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Err(e) => {
+                        for item in chunk {
+                            let _ = item
+                                .payload
+                                .reply
+                                .send(Err(anyhow::anyhow!("execute failed: {e}")));
+                        }
+                    }
+                }
+            }
+        }
+
+        if shutting_down && batcher.queued() == 0 {
+            return Ok(());
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Airfoil simulator (paper benchmark "Airfoil").
+//!
+//! Task: structured curvilinear mesh around a randomized Joukowski airfoil
+//! -> Mach-number proxy field.  Potential flow around a cylinder (with
+//! circulation fixed by the Kutta condition) is mapped through the Joukowski
+//! transform; the local speed gives an incompressible "Mach" proxy
+//! `M = |v| * M_inf`, which reproduces the benchmark's structure: stagnation
+//! point at the leading edge, suction peak on the upper surface, smooth
+//! decay into the far field.
+//!
+//! Model input per point: (x, y); output: Mach proxy.
+
+use super::FieldSample;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+struct Cx {
+    re: f64,
+    im: f64,
+}
+
+impl Cx {
+    fn new(re: f64, im: f64) -> Cx {
+        Cx { re, im }
+    }
+    fn add(self, o: Cx) -> Cx {
+        Cx::new(self.re + o.re, self.im + o.im)
+    }
+    fn sub(self, o: Cx) -> Cx {
+        Cx::new(self.re - o.re, self.im - o.im)
+    }
+    fn mul(self, o: Cx) -> Cx {
+        Cx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+    fn div(self, o: Cx) -> Cx {
+        let d = o.re * o.re + o.im * o.im;
+        Cx::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+    fn abs(self) -> f64 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+    fn scale(self, s: f64) -> Cx {
+        Cx::new(self.re * s, self.im * s)
+    }
+}
+
+/// Complex velocity around a unit cylinder at angle-of-attack `alpha` with
+/// circulation `gamma`, evaluated at zeta (|zeta| >= R).
+fn cylinder_velocity(zeta: Cx, r: f64, alpha: f64, gamma: f64) -> Cx {
+    // w(zeta) = U (e^{-ia} - R^2 e^{ia} / zeta^2) + i gamma / (2 pi zeta)
+    let e_m = Cx::new(alpha.cos(), -alpha.sin());
+    let e_p = Cx::new(alpha.cos(), alpha.sin());
+    let z2 = zeta.mul(zeta);
+    let term2 = e_p.scale(r * r).div(z2);
+    let circ = Cx::new(0.0, gamma / (2.0 * std::f64::consts::PI)).div(zeta);
+    e_m.sub(term2).add(circ)
+}
+
+/// Generate one airfoil sample on an `ni x nj` body-fitted mesh.
+pub fn sample(ni: usize, nj: usize, rng: &mut Rng) -> FieldSample {
+    // Joukowski parameters: cylinder center offset controls thickness/camber
+    let ex = -rng.range(0.04, 0.12); // thickness
+    let ey = rng.range(0.0, 0.08); // camber
+    let alpha = rng.range(-0.12, 0.18); // angle of attack (rad)
+    let c = 1.0; // transform constant
+    let center = Cx::new(ex, ey);
+    let r = ((c - ex).powi(2) + ey * ey).sqrt(); // pass through zeta = c
+
+    // Kutta condition: rear stagnation point at zeta = c
+    let beta = (ey / (c - ex)).atan();
+    let gamma = -4.0 * std::f64::consts::PI * r * (alpha + beta).sin();
+
+    let n = ni * nj;
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    let m_inf = 0.4; // free-stream Mach scaling
+
+    for j in 0..nj {
+        // radial shells from the surface outward (geometric stretching)
+        let rr = r * (1.0 + 0.08 * (1.25f64.powi(j as i32) - 1.0));
+        for i in 0..ni {
+            let th = 2.0 * std::f64::consts::PI * i as f64 / ni as f64;
+            let zeta = center.add(Cx::new(rr * th.cos(), rr * th.sin()));
+            // Joukowski map z = zeta + c^2 / zeta
+            let z = zeta.add(Cx::new(c * c, 0.0).div(zeta));
+            // velocity in the physical plane: w_zeta / (dz/dzeta)
+            let w = cylinder_velocity(zeta.sub(center), r, alpha, gamma);
+            let dz = Cx::new(1.0, 0.0).sub(Cx::new(c * c, 0.0).div(zeta.mul(zeta)));
+            let speed = if dz.abs() < 1e-6 {
+                0.0 // trailing-edge singular point
+            } else {
+                w.div(dz).abs()
+            };
+            x.push(z.re as f32);
+            x.push(z.im as f32);
+            y.push((speed * m_inf) as f32);
+        }
+    }
+    FieldSample { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(0);
+        let s = sample(64, 16, &mut rng);
+        assert_eq!(s.x.len(), 64 * 16 * 2);
+        assert_eq!(s.y.len(), 64 * 16);
+        assert!(s.y.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn far_field_approaches_free_stream() {
+        let mut rng = Rng::new(1);
+        let nj = 16;
+        let ni = 64;
+        let s = sample(ni, nj, &mut rng);
+        // outermost shell: speed should be near the free stream (M=0.4)
+        let outer: Vec<f32> = (0..ni).map(|i| s.y[(nj - 1) * ni + i]).collect();
+        let mean = outer.iter().sum::<f32>() / ni as f32;
+        assert!((mean - 0.4).abs() < 0.08, "outer mean {mean}");
+    }
+
+    #[test]
+    fn surface_has_stagnation_and_suction() {
+        let mut rng = Rng::new(2);
+        let ni = 64;
+        let s = sample(ni, 16, &mut rng);
+        let surface: Vec<f32> = s.y[..ni].to_vec();
+        let min = surface.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = surface.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(min < 0.1, "stagnation missing: min {min}");
+        assert!(max > 0.45, "suction peak missing: max {max}");
+    }
+
+    #[test]
+    fn cylinder_velocity_far_field() {
+        let w = cylinder_velocity(Cx::new(1000.0, 0.0), 1.0, 0.0, 0.0);
+        assert!((w.re - 1.0).abs() < 1e-4);
+        assert!(w.im.abs() < 1e-4);
+    }
+
+    #[test]
+    fn deterministic_per_rng() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        assert_eq!(sample(32, 8, &mut r1).y, sample(32, 8, &mut r2).y);
+    }
+}

@@ -1,0 +1,183 @@
+//! Darcy flow simulator (paper benchmark "Darcy").
+//!
+//! Task: permeability field a(x) on a structured grid -> pressure field u(x)
+//! solving the Darcy equation
+//!
+//! ```text
+//! -div( a(x) grad u(x) ) = f,   u = 0 on the boundary,  f = 1.
+//! ```
+//!
+//! Generation mirrors the FNO dataset recipe: a Gaussian random field with
+//! Matérn-like spectrum is thresholded into a two-phase coefficient
+//! (a in {3, 12}), and the PDE is solved with a 5-point finite-difference
+//! stencil (harmonic-mean face coefficients) + conjugate gradients.
+//!
+//! Model input per point: (x, y, a) — 3 features; output: u — 1 feature.
+
+use super::FieldSample;
+use crate::linalg::cg::conjugate_gradient;
+use crate::linalg::fft::gaussian_random_field;
+use crate::util::rng::Rng;
+
+/// Threshold levels of the two-phase permeability, as in the FNO dataset.
+pub const A_LOW: f64 = 3.0;
+pub const A_HIGH: f64 = 12.0;
+
+/// Generate one Darcy sample on an `s x s` grid (`s` must be a power of 2
+/// for the GRF synthesis; n = s*s points).
+pub fn sample(s: usize, rng: &mut Rng) -> FieldSample {
+    let field = gaussian_random_field(s, 2.5, 7.0, rng);
+    let a: Vec<f64> = field
+        .iter()
+        .map(|&v| if v >= 0.0 { A_HIGH } else { A_LOW })
+        .collect();
+    let u = solve_darcy(&a, s);
+
+    let n = s * s;
+    let mut x = Vec::with_capacity(n * 3);
+    let mut y = Vec::with_capacity(n);
+    let h = 1.0 / (s - 1) as f64;
+    for i in 0..s {
+        for j in 0..s {
+            x.push((i as f64 * h) as f32);
+            x.push((j as f64 * h) as f32);
+            // normalize a to ~[0,1] scale for the network input
+            x.push(((a[i * s + j] - A_LOW) / (A_HIGH - A_LOW)) as f32);
+            // scale u so targets are O(1)
+            y.push((u[i * s + j] * 100.0) as f32);
+        }
+    }
+    FieldSample { x, y }
+}
+
+/// Solve -div(a grad u) = 1 with homogeneous Dirichlet BCs via CG.
+///
+/// Face coefficients use harmonic means, giving an SPD operator.
+pub fn solve_darcy(a: &[f64], s: usize) -> Vec<f64> {
+    assert_eq!(a.len(), s * s);
+    let h = 1.0 / (s - 1) as f64;
+    let h2 = h * h;
+    let harm = |p: f64, q: f64| 2.0 * p * q / (p + q);
+
+    // interior unknowns only ((s-2)^2), boundary u = 0
+    let si = s - 2;
+    let idx = |i: usize, j: usize| (i - 1) * si + (j - 1);
+
+    let apply = |v: &[f64], out: &mut [f64]| {
+        for i in 1..s - 1 {
+            for j in 1..s - 1 {
+                let c = a[i * s + j];
+                let aw = harm(c, a[i * s + j - 1]);
+                let ae = harm(c, a[i * s + j + 1]);
+                let an = harm(c, a[(i - 1) * s + j]);
+                let asf = harm(c, a[(i + 1) * s + j]);
+                let center = (aw + ae + an + asf) * v[idx(i, j)];
+                let mut nb = 0.0;
+                if j > 1 {
+                    nb += aw * v[idx(i, j - 1)];
+                }
+                if j < s - 2 {
+                    nb += ae * v[idx(i, j + 1)];
+                }
+                if i > 1 {
+                    nb += an * v[idx(i - 1, j)];
+                }
+                if i < s - 2 {
+                    nb += asf * v[idx(i + 1, j)];
+                }
+                out[idx(i, j)] = (center - nb) / h2;
+            }
+        }
+    };
+
+    let b = vec![1.0; si * si];
+    let mut u_int = vec![0.0; si * si];
+    let res = conjugate_gradient(apply, &b, &mut u_int, 4 * s * s, 1e-8);
+    debug_assert!(res.converged, "darcy CG did not converge: {res:?}");
+
+    let mut u = vec![0.0; s * s];
+    for i in 1..s - 1 {
+        for j in 1..s - 1 {
+            u[i * s + j] = u_int[idx(i, j)];
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solution_positive_interior() {
+        // max principle: with f = 1 > 0 and u = 0 on the boundary, u > 0 inside
+        let mut rng = Rng::new(0);
+        let s = 16;
+        let smp = sample(s, &mut rng);
+        let interior_min = (1..s - 1)
+            .flat_map(|i| (1..s - 1).map(move |j| (i, j)))
+            .map(|(i, j)| smp.y[i * s + j])
+            .fold(f32::INFINITY, f32::min);
+        assert!(interior_min > 0.0);
+    }
+
+    #[test]
+    fn boundary_is_zero() {
+        let mut rng = Rng::new(1);
+        let s = 16;
+        let smp = sample(s, &mut rng);
+        for j in 0..s {
+            assert_eq!(smp.y[j], 0.0); // top row
+            assert_eq!(smp.y[(s - 1) * s + j], 0.0); // bottom row
+            assert_eq!(smp.y[j * s], 0.0); // left col
+            assert_eq!(smp.y[j * s + s - 1], 0.0); // right col
+        }
+    }
+
+    #[test]
+    fn uniform_coefficient_matches_poisson_scale() {
+        // constant a: -a lap u = 1; center value of unit-square Poisson with
+        // f=1/a is ~0.0737/a (known constant)
+        let s = 32;
+        let a = vec![1.0; s * s];
+        let u = solve_darcy(&a, s);
+        let center = u[(s / 2) * s + s / 2];
+        assert!((center - 0.0737).abs() < 0.01, "center {center}");
+        // linearity in 1/a:
+        let a4 = vec![4.0; s * s];
+        let u4 = solve_darcy(&a4, s);
+        let center4 = u4[(s / 2) * s + s / 2];
+        assert!((center4 * 4.0 - center).abs() < 1e-6);
+    }
+
+    #[test]
+    fn higher_permeability_lowers_pressure() {
+        // all-high a drains faster than all-low a
+        let s = 16;
+        let lo = solve_darcy(&vec![A_LOW; s * s], s);
+        let hi = solve_darcy(&vec![A_HIGH; s * s], s);
+        let sum_lo: f64 = lo.iter().sum();
+        let sum_hi: f64 = hi.iter().sum();
+        assert!(sum_hi < sum_lo);
+    }
+
+    #[test]
+    fn coefficient_is_two_phase() {
+        let mut rng = Rng::new(2);
+        let smp = sample(16, &mut rng);
+        for p in 0..16 * 16 {
+            let a = smp.x[p * 3 + 2];
+            assert!(a == 0.0 || a == 1.0, "normalized coeff {a}");
+        }
+    }
+
+    #[test]
+    fn coordinates_span_unit_square() {
+        let mut rng = Rng::new(3);
+        let s = 16;
+        let smp = sample(s, &mut rng);
+        let xs: Vec<f32> = (0..s * s).map(|p| smp.x[p * 3]).collect();
+        assert_eq!(xs[0], 0.0);
+        assert!((xs[s * s - 1] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,182 @@
+//! DrivAerML-like simulator (paper benchmarks "DrivAerML-40k" and the
+//! Figure 5 million-point study).
+//!
+//! Task: 3-D surface point cloud of a parametrically morphed car body ->
+//! surface pressure coefficient.  Geometry is a superellipsoid body with a
+//! cabin bump and wheel cutout modulation; pressure combines a
+//! potential-flow-like stagnation/suction distribution with geometric
+//! curvature effects — enough structure that a surrogate must use 3-D
+//! geometry to predict it.
+//!
+//! Model input per point: (x, y, z); output: cp (pressure coefficient).
+
+use super::FieldSample;
+use crate::util::rng::Rng;
+
+/// Parameters of one morphed car body.
+#[derive(Debug, Clone)]
+pub struct CarParams {
+    pub length: f64,
+    pub width: f64,
+    pub height: f64,
+    pub nose_sharp: f64,
+    pub cabin_height: f64,
+    pub cabin_pos: f64,
+}
+
+impl CarParams {
+    pub fn random(rng: &mut Rng) -> CarParams {
+        CarParams {
+            length: rng.range(3.6, 4.8),
+            width: rng.range(1.6, 2.0),
+            height: rng.range(1.1, 1.5),
+            nose_sharp: rng.range(1.6, 3.0),
+            cabin_height: rng.range(0.25, 0.5),
+            cabin_pos: rng.range(0.35, 0.55),
+        }
+    }
+}
+
+/// Sample a point on the body surface (u in [0,1] streamwise, v in [0, 2pi)
+/// around), returning position + outward-ish normal proxy.
+fn surface_point(p: &CarParams, u: f64, v: f64) -> ([f64; 3], f64) {
+    // superellipse cross-section that tapers nose/tail
+    let taper = (std::f64::consts::PI * u).sin().powf(1.0 / p.nose_sharp);
+    let half_w = 0.5 * p.width * taper;
+    let half_h = 0.5 * p.height * taper;
+    // cabin bump on the top
+    let cabin = p.cabin_height
+        * (-((u - p.cabin_pos) / 0.16).powi(2)).exp();
+    let x = p.length * (u - 0.5);
+    let e = 2.6; // superellipse exponent (boxy car section)
+    let cy = sgn_pow(v.cos(), 2.0 / e);
+    let sz = sgn_pow(v.sin(), 2.0 / e);
+    let y = half_w * cy;
+    let mut z = half_h * sz;
+    if z > 0.0 {
+        z += cabin * taper;
+    }
+    z += 0.5 * p.height; // wheels-on-ground frame: z >= 0
+    // streamwise slope of the taper -> crude surface slope proxy
+    let du = 1e-4;
+    let u2 = (u + du).min(1.0);
+    let taper2 = (std::f64::consts::PI * u2)
+        .sin()
+        .max(0.0)
+        .powf(1.0 / p.nose_sharp);
+    let slope = (taper2 - taper) / du;
+    ([x, y, z], slope)
+}
+
+fn sgn_pow(x: f64, e: f64) -> f64 {
+    x.signum() * x.abs().powf(e)
+}
+
+/// Pressure-coefficient model: stagnation at the nose, suction over the
+/// cabin, pressure recovery at the tail, modulated by local slope.
+fn pressure(p: &CarParams, u: f64, v: f64, slope: f64) -> f64 {
+    let stag = (-((u) / 0.06).powi(2)).exp(); // nose stagnation cp ~ +1
+    let tail = 0.35 * (-(((1.0 - u)) / 0.08).powi(2)).exp(); // base pressure
+    let top = v.sin().max(0.0); // upper surface
+    let suction = -1.1
+        * top
+        * (-((u - p.cabin_pos - 0.08) / 0.2).powi(2)).exp()
+        * (p.cabin_height / 0.5 + 0.4);
+    let slope_term = -0.25 * slope * top;
+    stag + tail + suction + slope_term
+}
+
+/// Generate one DrivAer-like sample with `n` surface points.
+pub fn sample(n: usize, rng: &mut Rng) -> FieldSample {
+    let p = CarParams::random(rng);
+    let mut x = Vec::with_capacity(n * 3);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.f64();
+        let v = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let (pos, slope) = surface_point(&p, u, v);
+        let cp = pressure(&p, u, v, slope);
+        x.push(pos[0] as f32);
+        x.push(pos[1] as f32);
+        x.push(pos[2] as f32);
+        y.push(cp as f32);
+    }
+    FieldSample { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let mut rng = Rng::new(0);
+        let s = sample(2048, &mut rng);
+        assert_eq!(s.x.len(), 2048 * 3);
+        assert_eq!(s.y.len(), 2048);
+        assert!(s.x.iter().all(|v| v.is_finite()));
+        assert!(s.y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn body_inside_bounding_box() {
+        let mut rng = Rng::new(1);
+        let s = sample(4096, &mut rng);
+        for i in 0..4096 {
+            let (px, py, pz) = (s.x[i * 3], s.x[i * 3 + 1], s.x[i * 3 + 2]);
+            assert!(px.abs() <= 2.5);
+            assert!(py.abs() <= 1.1);
+            assert!((-0.01..=2.5).contains(&pz));
+        }
+    }
+
+    #[test]
+    fn stagnation_pressure_at_nose() {
+        let p = CarParams {
+            length: 4.0,
+            width: 1.8,
+            height: 1.3,
+            nose_sharp: 2.0,
+            cabin_height: 0.4,
+            cabin_pos: 0.45,
+        };
+        let cp_nose = pressure(&p, 0.0, 0.0, 0.0);
+        let cp_mid = pressure(&p, 0.5, 0.0, 0.0);
+        assert!(cp_nose > 0.9);
+        assert!(cp_nose > cp_mid);
+    }
+
+    #[test]
+    fn suction_peak_on_roof() {
+        let p = CarParams {
+            length: 4.0,
+            width: 1.8,
+            height: 1.3,
+            nose_sharp: 2.0,
+            cabin_height: 0.4,
+            cabin_pos: 0.45,
+        };
+        // over-cabin upper surface should see negative cp
+        let cp_roof = pressure(&p, p.cabin_pos + 0.08, std::f64::consts::FRAC_PI_2, 0.0);
+        assert!(cp_roof < 0.0, "roof cp {cp_roof}");
+    }
+
+    #[test]
+    fn taller_cabin_stronger_suction() {
+        let base = CarParams {
+            length: 4.0,
+            width: 1.8,
+            height: 1.3,
+            nose_sharp: 2.0,
+            cabin_height: 0.25,
+            cabin_pos: 0.45,
+        };
+        let tall = CarParams {
+            cabin_height: 0.5,
+            ..base.clone()
+        };
+        let u = base.cabin_pos + 0.08;
+        let v = std::f64::consts::FRAC_PI_2;
+        assert!(pressure(&tall, u, v, 0.0) < pressure(&base, u, v, 0.0));
+    }
+}

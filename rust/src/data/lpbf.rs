@@ -1,0 +1,514 @@
+//! LPBF additive-manufacturing simulator (paper Section 4 / Appendix H).
+//!
+//! The paper releases a benchmark of NetFabb thermo-mechanical simulations:
+//! geometry (hex-mesh nodes) -> final vertical (Z) residual displacement.
+//! NetFabb is proprietary, so this module implements a layer-lumped
+//! *inherent-strain* simulator — the same modelling family NetFabb uses
+//! (Denlinger et al. 2014; Liang et al. 2019, both cited by the paper):
+//!
+//!  1. generate a random part from composite primitives (boxes, cylinders,
+//!     L-brackets with overhangs) inside the scaled build volume;
+//!  2. voxelize to an axis-aligned hex grid (the paper's meshes are
+//!     axis-aligned hexahedral after NetFabb re-meshing);
+//!  3. deposit lumped layers bottom-up; each layer applies a thermal
+//!     contraction whose local magnitude grows with the *unsupported
+//!     overhang run* beneath the voxel (cantilever effect) and with build
+//!     height (accumulated thermal cycles);
+//!  4. relax the displacement field with Gauss–Seidel elastic smoothing
+//!     over the solid's voxel adjacency (stress equilibrium surrogate);
+//!  5. report Z-displacement at every node.
+//!
+//! The resulting fields reproduce the qualitative behaviour documented in
+//! the paper's Table 6 / Figure 16: displacement grows with part height,
+//! concentrates at overhang edges, and spans a wide dynamic range across
+//! geometries.
+
+use super::FieldSample;
+use crate::util::rng::Rng;
+
+/// Build volume in mm after the paper's scaling: [-30,30]^2 x [0,60].
+pub const BUILD_XY: f64 = 30.0;
+pub const BUILD_Z: f64 = 60.0;
+/// Lumped layer thickness used by the paper's NetFabb runs (mm).
+pub const LUMPED_LAYER_MM: f64 = 2.5;
+
+/// One solid primitive.
+#[derive(Debug, Clone)]
+enum Prim {
+    /// axis-aligned box: center (x,y), z range, half-extents
+    Box {
+        cx: f64,
+        cy: f64,
+        z0: f64,
+        z1: f64,
+        hx: f64,
+        hy: f64,
+    },
+    /// vertical cylinder
+    Cyl {
+        cx: f64,
+        cy: f64,
+        z0: f64,
+        z1: f64,
+        r: f64,
+    },
+}
+
+impl Prim {
+    fn contains(&self, x: f64, y: f64, z: f64) -> bool {
+        match *self {
+            Prim::Box {
+                cx,
+                cy,
+                z0,
+                z1,
+                hx,
+                hy,
+            } => (x - cx).abs() <= hx && (y - cy).abs() <= hy && z >= z0 && z <= z1,
+            Prim::Cyl { cx, cy, z0, z1, r } => {
+                let d2 = (x - cx).powi(2) + (y - cy).powi(2);
+                d2 <= r * r && z >= z0 && z <= z1
+            }
+        }
+    }
+}
+
+/// A generated part: voxel occupancy plus grid geometry.
+#[derive(Debug, Clone)]
+pub struct Part {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub voxel_mm: f64,
+    pub occ: Vec<bool>,
+}
+
+impl Part {
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        (k * self.ny + j) * self.nx + i
+    }
+    #[inline]
+    pub fn occupied(&self, i: usize, j: usize, k: usize) -> bool {
+        self.occ[self.idx(i, j, k)]
+    }
+    pub fn solid_count(&self) -> usize {
+        self.occ.iter().filter(|&&o| o).count()
+    }
+    /// Number of face-adjacent voxel pairs (edge count proxy for Table 6).
+    pub fn edge_count(&self) -> usize {
+        let mut edges = 0;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                for i in 0..self.nx {
+                    if !self.occupied(i, j, k) {
+                        continue;
+                    }
+                    if i + 1 < self.nx && self.occupied(i + 1, j, k) {
+                        edges += 1;
+                    }
+                    if j + 1 < self.ny && self.occupied(i, j + 1, k) {
+                        edges += 1;
+                    }
+                    if k + 1 < self.nz && self.occupied(i, j, k + 1) {
+                        edges += 1;
+                    }
+                }
+            }
+        }
+        edges
+    }
+    /// Max occupied height in mm.
+    pub fn max_height_mm(&self) -> f64 {
+        for k in (0..self.nz).rev() {
+            for j in 0..self.ny {
+                for i in 0..self.nx {
+                    if self.occupied(i, j, k) {
+                        return (k + 1) as f64 * self.voxel_mm;
+                    }
+                }
+            }
+        }
+        0.0
+    }
+}
+
+/// Generate a random part with `target_voxels`-ish solid voxels.
+pub fn generate_part(rng: &mut Rng, target_voxels: usize) -> Part {
+    // choose resolution so a typical part hits the voxel budget
+    let voxel_mm = ((BUILD_XY * 2.0 * BUILD_XY * 2.0 * BUILD_Z) * 0.08
+        / target_voxels as f64)
+        .cbrt()
+        .clamp(1.5, 6.0);
+    let nx = (2.0 * BUILD_XY / voxel_mm) as usize;
+    let ny = nx;
+    let nz = (BUILD_Z / voxel_mm) as usize;
+
+    // composite geometry: a base plate-contact footprint plus 2–5 features,
+    // some raised (creating overhangs)
+    let n_prims = 2 + rng.below(4);
+    let mut prims: Vec<Prim> = Vec::new();
+    let base_h = rng.range(4.0, 18.0);
+    prims.push(Prim::Box {
+        cx: rng.range(-8.0, 8.0),
+        cy: rng.range(-8.0, 8.0),
+        z0: 0.0,
+        z1: base_h,
+        hx: rng.range(8.0, 22.0),
+        hy: rng.range(8.0, 22.0),
+    });
+    for _ in 0..n_prims {
+        let raised = rng.f64() < 0.45;
+        let z0 = if raised {
+            rng.range(base_h * 0.5, base_h + 12.0)
+        } else {
+            0.0
+        };
+        let z1 = z0 + rng.range(5.0, 35.0);
+        if rng.f64() < 0.5 {
+            prims.push(Prim::Box {
+                cx: rng.range(-15.0, 15.0),
+                cy: rng.range(-15.0, 15.0),
+                z0,
+                z1: z1.min(BUILD_Z),
+                hx: rng.range(3.0, 14.0),
+                hy: rng.range(3.0, 14.0),
+            });
+        } else {
+            prims.push(Prim::Cyl {
+                cx: rng.range(-15.0, 15.0),
+                cy: rng.range(-15.0, 15.0),
+                z0,
+                z1: z1.min(BUILD_Z),
+                r: rng.range(3.0, 10.0),
+            });
+        }
+    }
+
+    let mut occ = vec![false; nx * ny * nz];
+    for k in 0..nz {
+        let z = (k as f64 + 0.5) * voxel_mm;
+        for j in 0..ny {
+            let y = (j as f64 + 0.5) * voxel_mm - BUILD_XY;
+            for i in 0..nx {
+                let x = (i as f64 + 0.5) * voxel_mm - BUILD_XY;
+                if prims.iter().any(|p| p.contains(x, y, z)) {
+                    occ[(k * ny + j) * nx + i] = true;
+                }
+            }
+        }
+    }
+    Part {
+        nx,
+        ny,
+        nz,
+        voxel_mm,
+        occ,
+    }
+}
+
+/// Layer-lumped inherent-strain displacement solve. Returns Z-displacement
+/// per voxel (mm), zero outside the solid.
+pub fn solve_displacement(part: &Part) -> Vec<f64> {
+    let (nx, ny, nz) = (part.nx, part.ny, part.nz);
+    let mut disp = vec![0.0f64; nx * ny * nz];
+    // per-lumped-layer shrink strain (mm per layer, Ti-6Al-4V-ish scale)
+    let eps0 = 0.004 * LUMPED_LAYER_MM;
+    let layers_per_lump = (LUMPED_LAYER_MM / part.voxel_mm).max(1.0);
+
+    // pass 1: deposit layers bottom-up.  Within each layer, supported
+    // voxels (material or plate directly beneath) inherit the column's
+    // accumulated contraction; unsupported voxels form cantilevers whose
+    // deflection accumulates with the in-layer BFS distance from the
+    // nearest supported voxel (bending grows superlinearly along the arm).
+    let mut queue: std::collections::VecDeque<(usize, usize, usize)> =
+        std::collections::VecDeque::new();
+    for k in 0..nz {
+        let height_fac = 1.0 + 0.015 * k as f64 * part.voxel_mm;
+        let dl = eps0 / layers_per_lump * height_fac;
+        // seeds: supported voxels of this layer
+        let mut dist = vec![usize::MAX; nx * ny];
+        queue.clear();
+        for j in 0..ny {
+            for i in 0..nx {
+                let id = part.idx(i, j, k);
+                if !part.occ[id] {
+                    continue;
+                }
+                let supported = k == 0 || part.occ[part.idx(i, j, k - 1)];
+                if supported {
+                    let below = if k == 0 { 0.0 } else { disp[part.idx(i, j, k - 1)] };
+                    disp[id] = below - dl;
+                    dist[j * nx + i] = 0;
+                    queue.push_back((i, j, 0));
+                }
+            }
+        }
+        // BFS over the layer's occupied cells: each unsupported cell hangs
+        // off its BFS parent with an extra distance-weighted deflection
+        while let Some((i, j, d)) = queue.pop_front() {
+            let parent_disp = disp[part.idx(i, j, k)];
+            let neighbors = [
+                (i.wrapping_sub(1), j),
+                (i + 1, j),
+                (i, j.wrapping_sub(1)),
+                (i, j + 1),
+            ];
+            for (ni, nj) in neighbors {
+                if ni >= nx || nj >= ny {
+                    continue;
+                }
+                let nid = part.idx(ni, nj, k);
+                if !part.occ[nid] || dist[nj * nx + ni] != usize::MAX {
+                    continue;
+                }
+                let nd = d + 1;
+                dist[nj * nx + ni] = nd;
+                // cantilever: deflection increment grows with arm length
+                disp[nid] = parent_disp - dl * (1.0 + 1.5 * nd as f64);
+                queue.push_back((ni, nj, nd));
+            }
+        }
+        // floating islands (no support anywhere in the layer): rare with
+        // our generator; treat as heavily deformed free material
+        for j in 0..ny {
+            for i in 0..nx {
+                let id = part.idx(i, j, k);
+                if part.occ[id] && dist[j * nx + i] == usize::MAX {
+                    let below = if k == 0 { 0.0 } else { disp[part.idx(i, j, k - 1)] };
+                    disp[id] = below - dl * 8.0;
+                }
+            }
+        }
+    }
+
+    // pass 2: Gauss–Seidel elastic smoothing over the solid adjacency
+    // (anchored at plate-contact voxels), a cheap stress-equilibrium proxy
+    for _sweep in 0..6 {
+        for k in 0..nz {
+            for j in 0..ny {
+                for i in 0..nx {
+                    let id = part.idx(i, j, k);
+                    if !part.occ[id] {
+                        continue;
+                    }
+                    if k == 0 {
+                        continue; // plate anchor
+                    }
+                    let mut acc = disp[id] * 2.0; // inertia toward solve value
+                    let mut cnt = 2.0;
+                    let visit = |ii: i64, jj: i64, kk: i64, acc: &mut f64, cnt: &mut f64| {
+                        if ii < 0 || jj < 0 || kk < 0 {
+                            return;
+                        }
+                        let (ii, jj, kk) = (ii as usize, jj as usize, kk as usize);
+                        if ii >= nx || jj >= ny || kk >= nz {
+                            return;
+                        }
+                        let nid = (kk * ny + jj) * nx + ii;
+                        if part.occ[nid] {
+                            *acc += disp[nid];
+                            *cnt += 1.0;
+                        }
+                    };
+                    let (fi, fj, fk) = (i as i64, j as i64, k as i64);
+                    visit(fi - 1, fj, fk, &mut acc, &mut cnt);
+                    visit(fi + 1, fj, fk, &mut acc, &mut cnt);
+                    visit(fi, fj - 1, fk, &mut acc, &mut cnt);
+                    visit(fi, fj + 1, fk, &mut acc, &mut cnt);
+                    visit(fi, fj, fk - 1, &mut acc, &mut cnt);
+                    visit(fi, fj, fk + 1, &mut acc, &mut cnt);
+                    disp[id] = acc / cnt;
+                }
+            }
+        }
+    }
+    disp
+}
+
+/// Table-6-style summary statistics of one generated part.
+#[derive(Debug, Clone)]
+pub struct PartStats {
+    pub points: usize,
+    pub edges: usize,
+    pub max_height_mm: f64,
+    pub max_displacement: f64,
+}
+
+/// Generate one LPBF sample with exactly `n` node points.
+pub fn sample(n: usize, rng: &mut Rng) -> FieldSample {
+    let (part, disp) = loop {
+        let part = generate_part(rng, n * 2);
+        if part.solid_count() >= n {
+            let disp = solve_displacement(&part);
+            break (part, disp);
+        }
+    };
+    // gather solid voxel centers, then pick n of them deterministically
+    let mut ids: Vec<usize> = Vec::with_capacity(part.solid_count());
+    for k in 0..part.nz {
+        for j in 0..part.ny {
+            for i in 0..part.nx {
+                if part.occupied(i, j, k) {
+                    ids.push(part.idx(i, j, k));
+                }
+            }
+        }
+    }
+    let chosen = rng.choose_indices(ids.len(), n);
+    let mut x = Vec::with_capacity(n * 3);
+    let mut y = Vec::with_capacity(n);
+    for &c in &chosen {
+        let id = ids[c];
+        let i = id % part.nx;
+        let j = (id / part.nx) % part.ny;
+        let k = id / (part.nx * part.ny);
+        // normalized coordinates
+        x.push((((i as f64 + 0.5) * part.voxel_mm - BUILD_XY) / BUILD_XY) as f32);
+        x.push((((j as f64 + 0.5) * part.voxel_mm - BUILD_XY) / BUILD_XY) as f32);
+        x.push((((k as f64 + 0.5) * part.voxel_mm) / BUILD_Z) as f32);
+        // displacement in ~O(1) units (mm)
+        y.push(disp[id] as f32);
+    }
+    FieldSample { x, y }
+}
+
+/// Generate a part and report its Table-6 statistics.
+pub fn stats(rng: &mut Rng, target_voxels: usize) -> PartStats {
+    let part = generate_part(rng, target_voxels);
+    let disp = solve_displacement(&part);
+    let max_disp = disp.iter().fold(0.0f64, |a, &d| a.max(d.abs()));
+    PartStats {
+        points: part.solid_count(),
+        edges: part.edge_count(),
+        max_height_mm: part.max_height_mm(),
+        max_displacement: max_disp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn part_generation_budget() {
+        let mut rng = Rng::new(0);
+        let part = generate_part(&mut rng, 4096);
+        assert!(part.solid_count() > 500, "{}", part.solid_count());
+        assert!(part.nx > 4 && part.nz > 4);
+    }
+
+    #[test]
+    fn plate_contact_anchored() {
+        let mut rng = Rng::new(1);
+        let part = generate_part(&mut rng, 2048);
+        let disp = solve_displacement(&part);
+        // bottom-layer voxels are anchored: |disp| small (only smoothing via
+        // k=0 skip keeps them at their deposited value which is -eps level)
+        for j in 0..part.ny {
+            for i in 0..part.nx {
+                if part.occupied(i, j, 0) {
+                    assert!(disp[part.idx(i, j, 0)].abs() < 0.2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn displacement_grows_with_height() {
+        let mut rng = Rng::new(2);
+        let part = generate_part(&mut rng, 4096);
+        let disp = solve_displacement(&part);
+        // mean |disp| in the top half exceeds the bottom half
+        let (mut lo, mut nlo, mut hi, mut nhi) = (0.0, 0, 0.0, 0);
+        for k in 0..part.nz {
+            for j in 0..part.ny {
+                for i in 0..part.nx {
+                    if !part.occupied(i, j, k) {
+                        continue;
+                    }
+                    let d = disp[part.idx(i, j, k)].abs();
+                    if k < part.nz / 4 {
+                        lo += d;
+                        nlo += 1;
+                    } else if k > part.nz / 3 {
+                        hi += d;
+                        nhi += 1;
+                    }
+                }
+            }
+        }
+        if nlo > 0 && nhi > 0 {
+            assert!(hi / nhi as f64 > lo / nlo as f64);
+        }
+    }
+
+    #[test]
+    fn overhang_increases_displacement() {
+        // two hand-built parts: a solid column vs a T with a cantilever
+        let mk = |with_overhang: bool| {
+            let nx = 12;
+            let ny = 12;
+            let nz = 12;
+            let mut occ = vec![false; nx * ny * nz];
+            for k in 0..nz {
+                for j in 5..7 {
+                    for i in 5..7 {
+                        occ[(k * ny + j) * nx + i] = true;
+                    }
+                }
+            }
+            if with_overhang {
+                // cantilever arm at k = 8 hanging over empty space
+                for j in 5..7 {
+                    for i in 7..12 {
+                        occ[(8 * ny + j) * nx + i] = true;
+                    }
+                }
+            }
+            Part {
+                nx,
+                ny,
+                nz,
+                voxel_mm: 2.0,
+                occ,
+            }
+        };
+        let plain = mk(false);
+        let over = mk(true);
+        let d_plain = solve_displacement(&plain);
+        let d_over = solve_displacement(&over);
+        let max_plain = d_plain.iter().fold(0.0f64, |a, &d| a.max(d.abs()));
+        let max_over = d_over.iter().fold(0.0f64, |a, &d| a.max(d.abs()));
+        assert!(
+            max_over > max_plain * 1.5,
+            "overhang {max_over} vs plain {max_plain}"
+        );
+    }
+
+    #[test]
+    fn sample_shapes() {
+        let mut rng = Rng::new(3);
+        let s = sample(512, &mut rng);
+        assert_eq!(s.x.len(), 512 * 3);
+        assert_eq!(s.y.len(), 512);
+        assert!(s.x.iter().all(|v| v.is_finite()));
+        assert!(s.y.iter().all(|v| v.is_finite()));
+        // normalized coords in [-1, 1] x [-1, 1] x [0, 1]
+        for p in 0..512 {
+            assert!(s.x[p * 3].abs() <= 1.0);
+            assert!(s.x[p * 3 + 1].abs() <= 1.0);
+            assert!((0.0..=1.0).contains(&s.x[p * 3 + 2]));
+        }
+    }
+
+    #[test]
+    fn stats_reasonable() {
+        let mut rng = Rng::new(4);
+        let st = stats(&mut rng, 4096);
+        assert!(st.points > 100);
+        assert!(st.edges > st.points); // connected solid
+        assert!(st.max_height_mm > 4.0 && st.max_height_mm <= BUILD_Z + 6.0);
+        assert!(st.max_displacement > 0.0);
+    }
+}

@@ -1,0 +1,455 @@
+//! Long-Range-Arena-style task generators (paper Table 2).
+//!
+//! The real LRA datasets are external downloads; these generators produce
+//! the same *task shapes* — long token sequences with classification labels
+//! whose answer depends on long-range structure — with exact labels:
+//!
+//! * `listops`    — bracketed MAX/MIN/MED/SUM-MOD expression trees over
+//!                  digits, evaluated exactly (10 classes).
+//! * `text`       — byte-ish token documents; label = which of two sentiment
+//!                  token families dominates (2 classes).
+//! * `retrieval`  — two documents separated by SEP; label = whether their
+//!                  topic tokens match (2 classes).
+//! * `image`      — 32x32 quantized grayscale renderings of 10 shape
+//!                  classes, flattened in raster order.
+//! * `pathfinder` — 32x32 grid; label = whether the two endpoint markers are
+//!                  connected by a drawn path (2 classes).
+
+use super::TokenSample;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Dispatch on the dataset kind.
+pub fn sample(kind: &str, meta: &Json, rng: &mut Rng) -> TokenSample {
+    let n = meta.get("n").as_usize().unwrap_or(512);
+    match kind {
+        "listops" => listops(n, rng),
+        "text" => text(n, meta.get("vocab").as_usize().unwrap_or(64), rng),
+        "retrieval" => retrieval(n, meta.get("vocab").as_usize().unwrap_or(64), rng),
+        "image" => image(n, rng),
+        "pathfinder" => pathfinder(n, rng),
+        other => panic!("unknown LRA kind {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ListOps
+// ---------------------------------------------------------------------------
+
+/// Token ids: 0..=9 digits, 10=[MAX, 11=[MIN, 12=[MED, 13=[SM, 14=']', 15=PAD.
+pub const LISTOPS_PAD: i32 = 15;
+
+#[derive(Debug)]
+enum LNode {
+    Leaf(i32),
+    Op(u8, Vec<LNode>),
+}
+
+fn gen_tree(depth: usize, budget: &mut usize, rng: &mut Rng) -> LNode {
+    if depth == 0 || *budget < 4 || rng.f64() < 0.35 {
+        *budget = budget.saturating_sub(1);
+        return LNode::Leaf(rng.below(10) as i32);
+    }
+    let op = rng.below(4) as u8;
+    *budget = budget.saturating_sub(2); // open + close tokens
+    let arity = 2 + rng.below(3);
+    let kids = (0..arity)
+        .map(|_| gen_tree(depth - 1, budget, rng))
+        .collect();
+    LNode::Op(op, kids)
+}
+
+fn eval_tree(node: &LNode) -> i32 {
+    match node {
+        LNode::Leaf(v) => *v,
+        LNode::Op(op, kids) => {
+            let vals: Vec<i32> = kids.iter().map(eval_tree).collect();
+            match op {
+                0 => *vals.iter().max().unwrap(),
+                1 => *vals.iter().min().unwrap(),
+                2 => {
+                    let mut s = vals.clone();
+                    s.sort_unstable();
+                    s[s.len() / 2]
+                }
+                _ => vals.iter().sum::<i32>() % 10,
+            }
+        }
+    }
+}
+
+fn write_tokens(node: &LNode, out: &mut Vec<i32>) {
+    match node {
+        LNode::Leaf(v) => out.push(*v),
+        LNode::Op(op, kids) => {
+            out.push(10 + *op as i32);
+            for k in kids {
+                write_tokens(k, out);
+            }
+            out.push(14);
+        }
+    }
+}
+
+/// Generate a ListOps sample of at most `n` tokens (padded to exactly `n`).
+pub fn listops(n: usize, rng: &mut Rng) -> TokenSample {
+    let mut budget = n.saturating_sub(2);
+    let tree = LNode::Op(rng.below(4) as u8, {
+        let arity = 2 + rng.below(3);
+        (0..arity)
+            .map(|_| gen_tree(4, &mut budget, rng))
+            .collect()
+    });
+    let label = eval_tree(&tree);
+    let mut tokens = Vec::with_capacity(n);
+    write_tokens(&tree, &mut tokens);
+    tokens.truncate(n);
+    while tokens.len() < n {
+        tokens.push(LISTOPS_PAD);
+    }
+    TokenSample { tokens, label }
+}
+
+// ---------------------------------------------------------------------------
+// Text classification
+// ---------------------------------------------------------------------------
+
+/// Two token families (ids 1..8 "positive", 9..16 "negative") scattered in
+/// filler; label = which family occurs more often.
+pub fn text(n: usize, vocab: usize, rng: &mut Rng) -> TokenSample {
+    assert!(vocab >= 20);
+    let bias = rng.f64() < 0.5;
+    let mut tokens = Vec::with_capacity(n);
+    let mut pos = 0i64;
+    let mut neg = 0i64;
+    for _ in 0..n {
+        let r = rng.f64();
+        if r < 0.12 {
+            // sentiment-bearing token, biased toward the chosen class
+            let from_pos = if bias { rng.f64() < 0.7 } else { rng.f64() < 0.3 };
+            if from_pos {
+                tokens.push(1 + rng.below(8) as i32);
+                pos += 1;
+            } else {
+                tokens.push(9 + rng.below(8) as i32);
+                neg += 1;
+            }
+        } else {
+            tokens.push(17 + rng.below(vocab - 17) as i32);
+        }
+    }
+    let label = i32::from(pos > neg);
+    TokenSample { tokens, label }
+}
+
+// ---------------------------------------------------------------------------
+// Retrieval (document matching)
+// ---------------------------------------------------------------------------
+
+/// Two halves separated by SEP (id 0); each half carries a "topic token"
+/// repeated at random positions.  Label = topics equal.
+pub fn retrieval(n: usize, vocab: usize, rng: &mut Rng) -> TokenSample {
+    assert!(vocab >= 24);
+    let n_topics = 8;
+    let topic_a = 1 + rng.below(n_topics) as i32;
+    let matched = rng.f64() < 0.5;
+    let topic_b = if matched {
+        topic_a
+    } else {
+        // pick a different topic
+        let mut t = 1 + rng.below(n_topics) as i32;
+        while t == topic_a {
+            t = 1 + rng.below(n_topics) as i32;
+        }
+        t
+    };
+    let half = (n - 1) / 2;
+    let mut tokens = Vec::with_capacity(n);
+    let emit_doc = |topic: i32, len: usize, tokens: &mut Vec<i32>, rng: &mut Rng| {
+        for _ in 0..len {
+            if rng.f64() < 0.15 {
+                tokens.push(topic);
+            } else {
+                tokens.push(1 + n_topics as i32 + rng.below(vocab - n_topics - 1) as i32);
+            }
+        }
+    };
+    emit_doc(topic_a, half, &mut tokens, rng);
+    tokens.push(0); // SEP
+    emit_doc(topic_b, n - 1 - half, &mut tokens, rng);
+    TokenSample {
+        tokens,
+        label: i32::from(matched),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Image classification
+// ---------------------------------------------------------------------------
+
+/// 10 shape classes rendered on a sqrt(n) x sqrt(n) grid, intensities
+/// quantized to 256 levels with additive noise.
+pub fn image(n: usize, rng: &mut Rng) -> TokenSample {
+    let s = (n as f64).sqrt() as usize;
+    assert_eq!(s * s, n, "image task needs square n");
+    let class = rng.below(10) as i32;
+    let cx = rng.range(0.35, 0.65);
+    let cy = rng.range(0.35, 0.65);
+    let size = rng.range(0.18, 0.3);
+    let mut tokens = Vec::with_capacity(n);
+    for i in 0..s {
+        for j in 0..s {
+            let x = j as f64 / (s - 1) as f64 - cx;
+            let y = i as f64 / (s - 1) as f64 - cy;
+            let r = (x * x + y * y).sqrt();
+            let th = y.atan2(x);
+            // class-dependent intensity field
+            let v: f64 = match class {
+                0 => f64::from(r < size),                               // disk
+                1 => f64::from(r < size && r > size * 0.55),            // ring
+                2 => f64::from(x.abs() < size * 0.25),                  // v-bar
+                3 => f64::from(y.abs() < size * 0.25),                  // h-bar
+                4 => f64::from(x.abs() < size && y.abs() < size),       // square
+                5 => f64::from((x + y).abs() < size * 0.35),            // diag
+                6 => f64::from((x - y).abs() < size * 0.35),            // anti-diag
+                7 => ((6.0 * th).cos() > 0.0 && r < size) as i32 as f64, // star
+                8 => f64::from(r < size && x > 0.0),                    // half-disk
+                _ => f64::from(x.abs() < size && y.abs() < size
+                        && !(x.abs() < size * 0.5 && y.abs() < size * 0.5)), // frame
+            };
+            let noise = rng.f64() * 0.2;
+            let level = ((v * 0.8 + noise) * 255.0).clamp(0.0, 255.0) as i32;
+            tokens.push(level);
+        }
+    }
+    TokenSample {
+        tokens,
+        label: class,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pathfinder
+// ---------------------------------------------------------------------------
+
+/// Grid tokens: 0 empty, 1 path pixel, 2 endpoint marker, 3 distractor.
+/// Label = 1 iff the two endpoints are joined by the drawn path.
+pub fn pathfinder(n: usize, rng: &mut Rng) -> TokenSample {
+    let s = (n as f64).sqrt() as usize;
+    assert_eq!(s * s, n);
+    let mut grid = vec![0i32; n];
+    let connected = rng.f64() < 0.5;
+
+    // random walk confined to columns [x_lo, x_hi); marks path pixels and
+    // returns (start, end) coordinates
+    fn walk(
+        grid: &mut [i32],
+        s: usize,
+        x_lo: usize,
+        x_hi: usize,
+        steps: usize,
+        rng: &mut Rng,
+    ) -> ((usize, usize), (usize, usize)) {
+        let mut x = x_lo + 1 + rng.below(x_hi.saturating_sub(x_lo + 2).max(1));
+        let mut y = 2 + rng.below(s - 4);
+        let start = (x, y);
+        for _ in 0..steps {
+            grid[y * s + x] = 1;
+            match rng.below(4) {
+                0 if x + 1 < x_hi => x += 1,
+                1 if x > x_lo + 1 => x -= 1,
+                2 if y + 1 < s - 1 => y += 1,
+                _ if y > 1 => y -= 1,
+                _ => {}
+            }
+        }
+        grid[y * s + x] = 1;
+        (start, (x, y))
+    }
+
+    let steps = s * 2;
+    if connected {
+        // one path; endpoints at its two ends
+        let (a, b) = walk(&mut grid, s, 0, s - 1, steps, rng);
+        grid[a.1 * s + a.0] = 2;
+        grid[b.1 * s + b.0] = 2;
+    } else {
+        // two walks in disjoint halves (cut column stays empty), one
+        // endpoint on each component
+        let cut = s / 2;
+        let (a, _) = walk(&mut grid, s, 0, cut, steps / 2, rng);
+        let (c, _) = walk(&mut grid, s, cut + 1, s - 1, steps / 2, rng);
+        grid[a.1 * s + a.0] = 2;
+        grid[c.1 * s + c.0] = 2;
+        for yy in 0..s {
+            grid[yy * s + cut] = 0;
+        }
+    }
+    // distractor specks
+    for _ in 0..s {
+        let p = rng.below(n);
+        if grid[p] == 0 {
+            grid[p] = 3;
+        }
+    }
+    TokenSample {
+        tokens: grid,
+        label: i32::from(connected),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listops_tokens_in_vocab() {
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let s = listops(128, &mut rng);
+            assert_eq!(s.tokens.len(), 128);
+            assert!(s.tokens.iter().all(|&t| (0..=15).contains(&t)));
+            assert!((0..=9).contains(&s.label));
+        }
+    }
+
+    #[test]
+    fn listops_label_matches_reeval() {
+        // parse the token stream back and re-evaluate; must agree
+        fn parse(tokens: &[i32], pos: &mut usize) -> Option<LNode> {
+            if *pos >= tokens.len() {
+                return None;
+            }
+            let t = tokens[*pos];
+            *pos += 1;
+            if (0..=9).contains(&t) {
+                return Some(LNode::Leaf(t));
+            }
+            if (10..=13).contains(&t) {
+                let mut kids = Vec::new();
+                while *pos < tokens.len() && tokens[*pos] != 14 {
+                    kids.push(parse(tokens, pos)?);
+                }
+                *pos += 1; // consume ']'
+                return Some(LNode::Op((t - 10) as u8, kids));
+            }
+            None
+        }
+        let mut rng = Rng::new(7);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let s = listops(256, &mut rng);
+            // only check sequences that were not truncated (no PAD cut-off
+            // mid-expression): last non-pad token must be ']'
+            let last = s.tokens.iter().rev().find(|&&t| t != LISTOPS_PAD);
+            if last != Some(&14) {
+                continue;
+            }
+            let mut pos = 0;
+            if let Some(tree) = parse(&s.tokens, &mut pos) {
+                assert_eq!(eval_tree(&tree), s.label);
+                checked += 1;
+            }
+        }
+        assert!(checked > 10, "too few parseable samples: {checked}");
+    }
+
+    #[test]
+    fn text_label_consistent() {
+        let mut rng = Rng::new(1);
+        for _ in 0..30 {
+            let s = text(256, 64, &mut rng);
+            let pos = s.tokens.iter().filter(|&&t| (1..=8).contains(&t)).count();
+            let neg = s.tokens.iter().filter(|&&t| (9..=16).contains(&t)).count();
+            assert_eq!(s.label, i32::from(pos > neg));
+        }
+    }
+
+    #[test]
+    fn text_classes_balanced() {
+        let mut rng = Rng::new(2);
+        let labels: Vec<i32> = (0..200).map(|_| text(256, 64, &mut rng).label).collect();
+        let ones = labels.iter().filter(|&&l| l == 1).count();
+        assert!(ones > 50 && ones < 150, "ones = {ones}");
+    }
+
+    #[test]
+    fn retrieval_label_consistent() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let s = retrieval(256, 64, &mut rng);
+            let sep = s.tokens.iter().position(|&t| t == 0).unwrap();
+            let count_topic = |slice: &[i32]| {
+                let mut counts = [0usize; 9];
+                for &t in slice {
+                    if (1..=8).contains(&t) {
+                        counts[t as usize] += 1;
+                    }
+                }
+                counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
+            let ta = count_topic(&s.tokens[..sep]);
+            let tb = count_topic(&s.tokens[sep + 1..]);
+            assert_eq!(s.label, i32::from(ta == tb));
+        }
+    }
+
+    #[test]
+    fn image_shapes_and_classes() {
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..100 {
+            let s = image(1024, &mut rng);
+            assert_eq!(s.tokens.len(), 1024);
+            assert!(s.tokens.iter().all(|&t| (0..256).contains(&t)));
+            seen[s.label as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&b| b).count() >= 8);
+    }
+
+    #[test]
+    fn pathfinder_connected_components() {
+        // when label = 1, a BFS over path+endpoint pixels joins the markers
+        let mut rng = Rng::new(5);
+        let mut pos_checked = 0;
+        for _ in 0..40 {
+            let s = pathfinder(1024, &mut rng);
+            let sgrid = 32;
+            let endpoints: Vec<usize> = s
+                .tokens
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t == 2)
+                .map(|(i, _)| i)
+                .collect();
+            if s.label == 1 && endpoints.len() == 2 {
+                // BFS
+                let mut seen = vec![false; 1024];
+                let mut queue = vec![endpoints[0]];
+                seen[endpoints[0]] = true;
+                while let Some(p) = queue.pop() {
+                    let (py, px) = (p / sgrid, p % sgrid);
+                    for (dy, dx) in [(0i64, 1i64), (0, -1), (1, 0), (-1, 0)] {
+                        let (ny, nx) = (py as i64 + dy, px as i64 + dx);
+                        if ny < 0 || nx < 0 || ny >= sgrid as i64 || nx >= sgrid as i64 {
+                            continue;
+                        }
+                        let np = ny as usize * sgrid + nx as usize;
+                        if !seen[np] && (s.tokens[np] == 1 || s.tokens[np] == 2) {
+                            seen[np] = true;
+                            queue.push(np);
+                        }
+                    }
+                }
+                assert!(seen[endpoints[1]], "connected sample not connected");
+                pos_checked += 1;
+            }
+        }
+        assert!(pos_checked > 5);
+    }
+}

@@ -1,0 +1,141 @@
+//! Pipe-flow simulator (paper benchmark "Pipe").
+//!
+//! Task: structured mesh of a pipe with a randomized smooth centerline ->
+//! horizontal velocity at each mesh point.  The velocity combines a
+//! Poiseuille parabolic profile across the pipe with mass-conservation
+//! speedup where the pipe narrows and a curvature-induced skew — the same
+//! qualitative structure as the original incompressible Navier–Stokes
+//! dataset, generated in closed form.
+//!
+//! Model input per point: (x, y) mesh position; output: u (horizontal
+//! velocity).
+
+use super::FieldSample;
+use crate::util::rng::Rng;
+
+/// Random smooth curve on [0,1] from a low-order cosine series.
+struct SmoothCurve {
+    coeffs: Vec<(f64, f64)>, // (amplitude, frequency)
+}
+
+impl SmoothCurve {
+    fn random(rng: &mut Rng, scale: f64) -> SmoothCurve {
+        let coeffs = (1..=3)
+            .map(|k| (rng.range(-scale, scale) / k as f64, k as f64))
+            .collect();
+        SmoothCurve { coeffs }
+    }
+    fn eval(&self, t: f64) -> f64 {
+        self.coeffs
+            .iter()
+            .map(|(a, k)| a * (std::f64::consts::PI * k * t).sin())
+            .sum()
+    }
+    fn deriv(&self, t: f64) -> f64 {
+        self.coeffs
+            .iter()
+            .map(|(a, k)| a * std::f64::consts::PI * k * (std::f64::consts::PI * k * t).cos())
+            .sum()
+    }
+}
+
+/// Generate one pipe sample on an `s x s` mesh.
+pub fn sample(s: usize, rng: &mut Rng) -> FieldSample {
+    let center = SmoothCurve::random(rng, 0.25);
+    let width_mod = SmoothCurve::random(rng, 0.18);
+    let base_half_width = 0.5;
+
+    let n = s * s;
+    let mut xs = Vec::with_capacity(n * 2);
+    let mut ys = Vec::with_capacity(n);
+
+    for i in 0..s {
+        // i indexes the cross-stream direction (eta in [-1, 1])
+        let eta = 2.0 * i as f64 / (s - 1) as f64 - 1.0;
+        for j in 0..s {
+            let t = j as f64 / (s - 1) as f64; // streamwise coordinate
+            let cy = center.eval(t);
+            let hw = base_half_width * (1.0 + width_mod.eval(t)).max(0.35);
+            let px = 4.0 * t; // pipe length 4
+            let py = cy + eta * hw;
+            // Poiseuille profile u = U (1 - eta^2); conservation: U ~ 1/hw
+            let u_base = (1.0 - eta * eta) * (base_half_width / hw);
+            // curvature skew: tilt profile slightly along the slope
+            let skew = 1.0 - 0.3 * center.deriv(t) * eta;
+            xs.push(px as f32);
+            xs.push(py as f32);
+            ys.push((u_base * skew).max(0.0) as f32);
+        }
+    }
+    FieldSample { x: xs, y: ys }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(0);
+        let s = sample(33, &mut rng);
+        assert_eq!(s.x.len(), 33 * 33 * 2);
+        assert_eq!(s.y.len(), 33 * 33);
+    }
+
+    #[test]
+    fn no_slip_walls() {
+        // first and last cross-stream rows are walls: u = 0
+        let mut rng = Rng::new(1);
+        let s_grid = 33;
+        let s = sample(s_grid, &mut rng);
+        for j in 0..s_grid {
+            assert!(s.y[j].abs() < 1e-6); // i = 0 wall
+            assert!(s.y[(s_grid - 1) * s_grid + j].abs() < 1e-6); // i = last wall
+        }
+    }
+
+    #[test]
+    fn centerline_fastest() {
+        let mut rng = Rng::new(2);
+        let sg = 33;
+        let s = sample(sg, &mut rng);
+        let mid = sg / 2;
+        for j in [0, sg / 2, sg - 1] {
+            let u_mid = s.y[mid * sg + j];
+            let u_quarter = s.y[(sg / 4) * sg + j];
+            assert!(u_mid >= u_quarter * 0.99, "profile not peaked at center");
+        }
+    }
+
+    #[test]
+    fn narrow_sections_speed_up() {
+        // find the narrowest and widest stations and compare centerline speed
+        let mut rng = Rng::new(3);
+        let sg = 33;
+        let s = sample(sg, &mut rng);
+        let mid = sg / 2;
+        let width_at = |j: usize| {
+            let top = s.x[((sg - 1) * sg + j) * 2 + 1];
+            let bot = s.x[(j) * 2 + 1];
+            (top - bot).abs()
+        };
+        let mut jw = 0;
+        let mut jn = 0;
+        for j in 0..sg {
+            if width_at(j) > width_at(jw) {
+                jw = j;
+            }
+            if width_at(j) < width_at(jn) {
+                jn = j;
+            }
+        }
+        assert!(s.y[mid * sg + jn] > s.y[mid * sg + jw]);
+    }
+
+    #[test]
+    fn velocities_nonnegative_and_finite() {
+        let mut rng = Rng::new(4);
+        let s = sample(33, &mut rng);
+        assert!(s.y.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+}

@@ -1,0 +1,32 @@
+//! # FLARE: Fast Low-rank Attention Routing Engine — Rust coordinator
+//!
+//! Reproduction of "FLARE: Fast Low-rank Attention Routing Engine" as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — the FLARE encode-decode token
+//!   mixer as a streaming Pallas kernel, validated against a pure-jnp oracle.
+//! * **Layer 2** (`python/compile/`) — JAX models (FLARE + every baseline
+//!   the paper evaluates), AOT-lowered once to HLO text artifacts.
+//! * **Layer 3** (this crate) — everything at runtime: PJRT execution,
+//!   dataset simulators, the training orchestrator, the batched inference
+//!   coordinator, the spectral-analysis engine, and the benchmark harness
+//!   that regenerates every table and figure in the paper.
+//!
+//! Python never runs on the training/serving hot path; after
+//! `make artifacts` the `flare` binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod spectral;
+pub mod train;
+pub mod util;

@@ -1,0 +1,245 @@
+//! Radix-2 FFT and Gaussian random field synthesis.
+//!
+//! The Darcy simulator draws log-permeability fields from a Gaussian random
+//! field with a power-law spectrum, synthesized spectrally: sample complex
+//! Gaussian amplitudes, shape them with a decay filter, inverse-FFT.  This
+//! mirrors how the original FNO Darcy dataset was generated.
+
+use crate::util::rng::Rng;
+
+/// In-place iterative radix-2 Cooley–Tukey FFT.
+///
+/// `re`/`im` length must be a power of two.  `inverse` applies the 1/n
+/// normalization.
+pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cwr, mut cwi) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cwr - vi0 * cwi;
+                let vi = vr0 * cwi + vi0 * cwr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let nwr = cwr * wr - cwi * wi;
+                cwi = cwr * wi + cwi * wr;
+                cwr = nwr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for x in re.iter_mut() {
+            *x *= inv;
+        }
+        for x in im.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// 2-D FFT on row-major `s x s` grids (s power of two).
+pub fn fft2(re: &mut [f64], im: &mut [f64], s: usize, inverse: bool) {
+    assert_eq!(re.len(), s * s);
+    // rows
+    for r in 0..s {
+        fft(&mut re[r * s..(r + 1) * s], &mut im[r * s..(r + 1) * s], inverse);
+    }
+    // columns (via transpose, fft, transpose back)
+    let mut tre = vec![0.0; s * s];
+    let mut tim = vec![0.0; s * s];
+    for i in 0..s {
+        for j in 0..s {
+            tre[j * s + i] = re[i * s + j];
+            tim[j * s + i] = im[i * s + j];
+        }
+    }
+    for r in 0..s {
+        fft(&mut tre[r * s..(r + 1) * s], &mut tim[r * s..(r + 1) * s], inverse);
+    }
+    for i in 0..s {
+        for j in 0..s {
+            re[i * s + j] = tre[j * s + i];
+            im[i * s + j] = tim[j * s + i];
+        }
+    }
+}
+
+/// Sample a mean-zero Gaussian random field on an `s x s` periodic grid with
+/// spectral density `(|k|^2 + tau^2)^(-alpha)` (Matérn-like, as in the FNO
+/// Darcy generator).  Returns `s*s` real values normalized to unit std.
+pub fn gaussian_random_field(s: usize, alpha: f64, tau: f64, rng: &mut Rng) -> Vec<f64> {
+    assert!(s.is_power_of_two());
+    let n = s * s;
+    let mut re = vec![0.0f64; n];
+    let mut im = vec![0.0f64; n];
+    for idx in 0..n {
+        let i = idx / s;
+        let j = idx % s;
+        // symmetric integer frequencies
+        let ki = if i <= s / 2 { i as f64 } else { i as f64 - s as f64 };
+        let kj = if j <= s / 2 { j as f64 } else { j as f64 - s as f64 };
+        let k2 = ki * ki + kj * kj;
+        let amp = (k2 + tau * tau).powf(-alpha / 2.0);
+        re[idx] = rng.normal() * amp;
+        im[idx] = rng.normal() * amp;
+    }
+    // zero the mean mode
+    re[0] = 0.0;
+    im[0] = 0.0;
+    fft2(&mut re, &mut im, s, true);
+    // take the real part; normalize to unit variance
+    let mean = re.iter().sum::<f64>() / n as f64;
+    let var = re.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let scale = 1.0 / var.sqrt().max(1e-12);
+    re.iter().map(|x| (x - mean) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(0);
+        let n = 64;
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0; n];
+        fft(&mut re, &mut im, false);
+        fft(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        for x in im {
+            assert!(x.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0.0; n];
+        re[0] = 1.0;
+        let mut im = vec![0.0; n];
+        fft(&mut re, &mut im, false);
+        for k in 0..n {
+            assert!((re[k] - 1.0).abs() < 1e-12);
+            assert!(im[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let mut rng = Rng::new(1);
+        let n = 128;
+        let sig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut re = sig.clone();
+        let mut im = vec![0.0; n];
+        fft(&mut re, &mut im, false);
+        let t: f64 = sig.iter().map(|x| x * x).sum();
+        let f: f64 = re
+            .iter()
+            .zip(&im)
+            .map(|(r, i)| r * r + i * i)
+            .sum::<f64>()
+            / n as f64;
+        assert!((t - f).abs() < 1e-8 * t.max(1.0));
+    }
+
+    #[test]
+    fn fft_matches_dft_small() {
+        let sig = [1.0, 2.0, -1.0, 0.5];
+        let mut re = sig.to_vec();
+        let mut im = vec![0.0; 4];
+        fft(&mut re, &mut im, false);
+        for k in 0..4 {
+            let mut dr = 0.0;
+            let mut di = 0.0;
+            for (t, &x) in sig.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / 4.0;
+                dr += x * ang.cos();
+                di += x * ang.sin();
+            }
+            assert!((re[k] - dr).abs() < 1e-12);
+            assert!((im[k] - di).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        let mut rng = Rng::new(2);
+        let s = 16;
+        let orig: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0; s * s];
+        fft2(&mut re, &mut im, s, false);
+        fft2(&mut re, &mut im, s, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grf_statistics() {
+        let mut rng = Rng::new(3);
+        let f = gaussian_random_field(32, 2.5, 3.0, &mut rng);
+        let n = f.len() as f64;
+        let mean = f.iter().sum::<f64>() / n;
+        let var = f.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!(mean.abs() < 1e-9);
+        assert!((var - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grf_smoothness_increases_with_alpha() {
+        // higher alpha => smoother field => smaller mean-square gradient
+        let grad2 = |f: &[f64], s: usize| {
+            let mut g = 0.0;
+            for i in 0..s {
+                for j in 0..s - 1 {
+                    let d = f[i * s + j + 1] - f[i * s + j];
+                    g += d * d;
+                }
+            }
+            g
+        };
+        let mut rng1 = Rng::new(4);
+        let mut rng2 = Rng::new(4);
+        let s = 32;
+        let rough = gaussian_random_field(s, 1.5, 3.0, &mut rng1);
+        let smooth = gaussian_random_field(s, 4.0, 3.0, &mut rng2);
+        assert!(grad2(&smooth, s) < grad2(&rough, s));
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense/sparse linear-algebra substrate: matrices, Jacobi symmetric
+//! eigendecomposition, conjugate gradients, FFT and Gaussian random fields.
+//!
+//! Everything here is written from scratch (no BLAS/LAPACK in the offline
+//! vendor set) and sized for the repo's needs: the largest dense eigenproblem
+//! is `M x M` with `M <= 256` (spectral analysis) and the largest CG solve is
+//! a 2-D stencil with ~7k unknowns (Darcy simulator).
+
+pub mod cg;
+pub mod eig;
+pub mod fft;
+pub mod matrix;
+
+pub use cg::{conjugate_gradient, CgResult};
+pub use eig::{sym_eig, sym_eig_default, SymEig};
+pub use fft::{fft, fft2, gaussian_random_field};
+pub use matrix::{axpy, dot, norm, Matrix};

@@ -1,0 +1,340 @@
+//! `flare` — CLI entrypoint for the FLARE reproduction.
+//!
+//! Subcommands:
+//!   info                         manifest + artifact summary
+//!   gen-data   --dataset <name>  run a simulator, print dataset statistics
+//!   train      --case <name>     train a case end-to-end, report metrics
+//!   serve      --case <name>     start the serving engine, drive demo load
+//!   spectra    --case <name>     Algorithm-1 eigenanalysis of a trained model
+//!
+//! Global options: --artifacts <dir> (default ./artifacts or $FLARE_ARTIFACTS)
+
+use flare::cli::Args;
+use flare::config::Manifest;
+use flare::coordinator::{Server, ServerConfig};
+use flare::data;
+use flare::model::{find_entry, init_params, param_slice};
+use flare::runtime::literal::{lit_f32, to_vec_f32};
+use flare::runtime::Runtime;
+use flare::spectral::{eig_lowrank, spectra_diversity, HeadSpectrum};
+use flare::train::{train_case, TrainOpts};
+use flare::util::stats::Timer;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn manifest_dir(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir)
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_str() {
+        "info" => cmd_info(args),
+        "gen-data" => cmd_gen_data(args),
+        "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "spectra" => cmd_spectra(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "flare — FLARE: Fast Low-rank Attention Routing Engine (reproduction)\n\
+         \n\
+         USAGE: flare <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+           info                        manifest + artifact summary\n\
+           gen-data --dataset <name>   run a simulator, print statistics\n\
+                    [--count K] [--stats]\n\
+           train    --case <name>      train end-to-end\n\
+                    [--steps N] [--eval-every K] [--ckpt FILE] [--quiet]\n\
+           serve    --case <name>      serving engine + demo load\n\
+                    [--requests K] [--concurrency C]\n\
+           spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
+                    [--steps N]\n\
+         \n\
+         GLOBAL: --artifacts <dir>     artifacts directory\n"
+    );
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(manifest_dir(args))?;
+    println!("artifacts dir : {:?}", m.dir);
+    println!("seed          : {}", m.seed);
+    println!("cases         : {}", m.cases.len());
+    println!("mixer artifacts: {}", m.mixers.len());
+    println!("layer artifacts: {}", m.layers.len());
+    let mut groups: std::collections::BTreeMap<&str, usize> = Default::default();
+    for c in &m.cases {
+        *groups.entry(c.group.as_str()).or_default() += 1;
+    }
+    for (g, n) in groups {
+        println!("  group {g:<8} {n} cases");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(manifest_dir(args))?;
+    let name = args.get_or("dataset", "darcy").to_string();
+    let count = args.get_usize("count")?.unwrap_or(4);
+    // find a case that uses this dataset to get its metadata
+    let case = m
+        .cases
+        .iter()
+        .find(|c| c.dataset == name)
+        .ok_or_else(|| anyhow::anyhow!("no case uses dataset {name:?}"))?;
+    let mut meta = case.dataset_meta.clone();
+    if let flare::util::json::Json::Obj(ref mut o) = meta {
+        o.insert("train".into(), flare::util::json::Json::num(count as f64));
+        o.insert("test".into(), flare::util::json::Json::num(1.0));
+    }
+    let t = Timer::start();
+    let ds = data::build(&name, &meta, m.seed)?;
+    println!(
+        "generated {} train + {} test samples of {:?} in {:.2}s",
+        ds.train_len(),
+        ds.test_len(),
+        name,
+        t.elapsed_s()
+    );
+    if ds.is_classification() {
+        let mut counts = std::collections::BTreeMap::new();
+        for s in &ds.train_tokens {
+            *counts.entry(s.label).or_insert(0usize) += 1;
+        }
+        println!("n = {} tokens/sample, label histogram: {counts:?}", ds.n);
+    } else {
+        println!("n = {} points, d_in = {}, d_out = {}", ds.n, ds.d_in, ds.d_out);
+        let ys: Vec<f64> = ds
+            .train_fields
+            .iter()
+            .flat_map(|s| s.y.iter().map(|&v| v as f64))
+            .collect();
+        let stats = flare::util::stats::Summary::of(&ys);
+        println!(
+            "target field: mean {:.4} std {:.4} min {:.4} max {:.4}",
+            stats.mean, stats.std, stats.min, stats.max
+        );
+    }
+    if args.has_flag("stats") && name == "lpbf" {
+        // Table-6-style part statistics
+        println!("\nLPBF part statistics (Table 6 analogue, 10 parts):");
+        let mut rng = flare::util::rng::Rng::new(m.seed);
+        println!(
+            "{:>8} {:>8} {:>12} {:>14}",
+            "points", "edges", "height(mm)", "max |disp|"
+        );
+        for _ in 0..10 {
+            let st = data::lpbf::stats(&mut rng, 4096);
+            println!(
+                "{:>8} {:>8} {:>12.1} {:>14.4}",
+                st.points, st.edges, st.max_height_mm, st.max_displacement
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(manifest_dir(args))?;
+    let name = args
+        .get("case")
+        .ok_or_else(|| anyhow::anyhow!("--case required"))?;
+    let case = m.case(name)?;
+    let rt = Runtime::cpu()?;
+    let opts = TrainOpts {
+        steps: args.get_usize("steps")?,
+        eval_every: args.get_usize("eval-every")?.unwrap_or(0),
+        sample_seed: 0x5EED,
+        log_every: if args.has_flag("quiet") { 0 } else { 25 },
+    };
+    println!(
+        "training {name}: {} params, dataset {}, batch {}",
+        case.param_count, case.dataset, case.batch
+    );
+    let out = train_case(&rt, &m, case, &opts)?;
+    println!(
+        "done: {} steps in {:.1}s ({:.1} ms/step p50 {:.1})",
+        out.steps, out.wall_s, out.step_ms.mean, out.step_ms.p50
+    );
+    println!(
+        "first/last loss: {:.4} -> {:.4}; final test metric: {:.5}",
+        out.losses.first().copied().unwrap_or(f64::NAN),
+        out.losses.last().copied().unwrap_or(f64::NAN),
+        out.final_metric
+    );
+    if let Some(path) = args.get("ckpt") {
+        flare::model::save_checkpoint(
+            path,
+            &flare::model::Checkpoint {
+                case: out.case.clone(),
+                step: out.steps,
+                params: out.params.clone(),
+                m: vec![],
+                v: vec![],
+                train_loss: out.losses.last().copied().unwrap_or(0.0),
+            },
+        )?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = manifest_dir(args);
+    let m = Manifest::load(&dir)?;
+    let name = args.get_or("case", "core_darcy_flare").to_string();
+    let case = m.case(&name)?.clone();
+    let requests = args.get_usize("requests")?.unwrap_or(16);
+    let concurrency = args.get_usize("concurrency")?.unwrap_or(4).max(1);
+
+    println!(
+        "starting server for {name} (n={}, batch={})",
+        case.model.n, case.batch
+    );
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            cases: vec![name.clone()],
+            max_wait: std::time::Duration::from_millis(10),
+            params: vec![],
+        },
+    )?;
+    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed)?;
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for w in 0..concurrency {
+            let server = &server;
+            let ds = &ds;
+            let case = &case;
+            scope.spawn(move || {
+                for i in 0..requests / concurrency {
+                    let s = &ds.test_fields[(w + i) % ds.test_len()];
+                    let resp = server.infer(s.x.clone(), case.model.n).expect("infer");
+                    assert_eq!(resp.y.len(), case.model.n * case.model.d_out);
+                }
+            });
+        }
+    });
+    let wall = t.elapsed_s();
+    let served = (requests / concurrency) * concurrency;
+    println!(
+        "served {served} requests in {wall:.2}s ({:.1} req/s)",
+        served as f64 / wall
+    );
+    println!("{}", server.metrics.report());
+    server.shutdown()?;
+    Ok(())
+}
+
+fn cmd_spectra(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(manifest_dir(args))?;
+    let name = args.get_or("case", "core_elas_flare").to_string();
+    let case = m.case(&name)?;
+    anyhow::ensure!(
+        case.artifacts.contains_key("qk"),
+        "case {name} has no qk artifact"
+    );
+    let rt = Runtime::cpu()?;
+
+    // optionally train first so the spectra reflect learned routing
+    let steps = args.get_usize("steps")?.unwrap_or(100);
+    let params_host = if steps > 0 {
+        println!("training {steps} steps first...");
+        let out = train_case(
+            &rt,
+            &m,
+            case,
+            &TrainOpts {
+                steps: Some(steps),
+                ..Default::default()
+            },
+        )?;
+        println!("trained to rel-L2 {:.4}", out.final_metric);
+        out.params
+    } else {
+        init_params(&case.params, case.param_count, m.seed)
+    };
+
+    // evaluate per-block keys at a test sample via the qk artifact
+    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed)?;
+    let sample = &ds.test_fields[0];
+    let qk_exe = rt.load(&format!("{name}_qk"), m.artifact_path(case, "qk")?)?;
+    let params_lit = lit_f32(&params_host, &[case.param_count as i64])?;
+    let x = lit_f32(&sample.x, &[case.model.n as i64, case.model.d_in as i64])?;
+    let ks = rt.run_ref(&qk_exe, &[&params_lit, &x])?;
+
+    let (h, mm, d, n) = (
+        case.model.heads,
+        case.model.m,
+        case.model.head_dim(),
+        case.model.n,
+    );
+    println!(
+        "\nSpectra (paper Fig. 12): blocks={} heads={h} M={mm} D={d} N={n}",
+        case.model.blocks
+    );
+    for (b, klit) in ks.iter().enumerate() {
+        let kvals = to_vec_f32(klit)?; // [H, N, D]
+        let latents = find_entry(&case.params, &format!("blk{b}.mix.latents"))?;
+        let q_all = param_slice(&params_host, latents); // [H, M, D] or [M, D]
+        let mut spectra = Vec::new();
+        for head in 0..h {
+            let q = if case.model.shared_latents {
+                q_all.to_vec()
+            } else {
+                q_all[head * mm * d..(head + 1) * mm * d].to_vec()
+            };
+            let k = &kvals[head * n * d..(head + 1) * n * d];
+            let eig = eig_lowrank(&q, k, mm, n, d);
+            let sp = HeadSpectrum {
+                block: b,
+                head,
+                eigenvalues: eig.eigenvalues,
+            };
+            let top: Vec<String> = sp.eigenvalues[..4.min(mm)]
+                .iter()
+                .map(|l| format!("{l:.3}"))
+                .collect();
+            println!(
+                "  block {b} head {head}: top l [{}] eff-rank {} entropy {:.3}",
+                top.join(", "),
+                sp.effective_rank(1e-3),
+                sp.spectral_entropy()
+            );
+            spectra.push(sp);
+        }
+        println!(
+            "  block {b} spectral diversity across heads: {:.4}",
+            spectra_diversity(&spectra)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Evaluation metrics (paper Section D.1) and a process-wide metrics
+//! registry used by the serving coordinator.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+/// Relative L2 error (paper Eq. 21/22) for one sample.
+pub fn rel_l2(pred: &[f32], truth: &[f32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (p, t) in pred.iter().zip(truth) {
+        num += (*p as f64 - *t as f64).powi(2);
+        den += (*t as f64).powi(2);
+    }
+    (num.sqrt()) / (den.sqrt() + 1e-12)
+}
+
+/// Mean relative L2 over samples laid out contiguously (`chunk` values each).
+pub fn mean_rel_l2(pred: &[f32], truth: &[f32], chunk: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(chunk > 0 && pred.len() % chunk == 0);
+    let n = pred.len() / chunk;
+    (0..n)
+        .map(|i| rel_l2(&pred[i * chunk..(i + 1) * chunk], &truth[i * chunk..(i + 1) * chunk]))
+        .sum::<f64>()
+        / n as f64
+}
+
+/// Classification accuracy from logits `[batch, k]` and labels `[batch]`.
+pub fn accuracy(logits: &[f32], labels: &[i32], k: usize) -> f64 {
+    assert!(k > 0 && logits.len() % k == 0);
+    let b = logits.len() / k;
+    assert_eq!(labels.len(), b);
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut arg = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = j;
+            }
+        }
+        if arg as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+/// Named-series metrics registry (thread-safe); the serving coordinator
+/// records queue depths, batch sizes and latencies here.
+#[derive(Default)]
+pub struct Registry {
+    series: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+    pub fn record(&self, name: &str, value: f64) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(value);
+    }
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.series
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|v| Summary::of(v))
+    }
+    pub fn names(&self) -> Vec<String> {
+        self.series.lock().unwrap().keys().cloned().collect()
+    }
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for name in self.names() {
+            if let Some(s) = self.summary(&name) {
+                out.push_str(&format!(
+                    "{name}: n={} mean={:.4} p50={:.4} p95={:.4} max={:.4}\n",
+                    s.count, s.mean, s.p50, s.p95, s.max
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_zero_for_exact() {
+        let y = [1.0f32, -2.0, 3.0];
+        assert!(rel_l2(&y, &y) < 1e-9);
+    }
+
+    #[test]
+    fn rel_l2_one_for_zero_prediction() {
+        let y = [1.0f32, -2.0, 3.0];
+        let p = [0.0f32; 3];
+        assert!((rel_l2(&p, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_l2_scale_invariant() {
+        let y = [1.0f32, 2.0, -1.0, 4.0];
+        let p = [1.1f32, 2.2, -1.1, 4.4];
+        let y2: Vec<f32> = y.iter().map(|v| v * 7.0).collect();
+        let p2: Vec<f32> = p.iter().map(|v| v * 7.0).collect();
+        assert!((rel_l2(&p, &y) - rel_l2(&p2, &y2)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mean_rel_l2_averages() {
+        let truth = [1.0f32, 1.0, 2.0, 2.0];
+        let pred = [1.0f32, 1.0, 0.0, 0.0]; // first sample exact, second zero
+        let m = mean_rel_l2(&pred, &truth, 2);
+        assert!((m - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = [0.1f32, 0.9, 0.8, 0.2]; // argmax: 1, 0
+        assert!((accuracy(&logits, &[1, 0], 2) - 1.0).abs() < 1e-12);
+        assert!((accuracy(&logits, &[0, 0], 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_summary() {
+        let r = Registry::new();
+        for i in 0..10 {
+            r.record("latency", i as f64);
+        }
+        let s = r.summary("latency").unwrap();
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 4.5).abs() < 1e-12);
+        assert!(r.summary("missing").is_none());
+        assert!(r.report().contains("latency"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Checkpoints: flat f32 parameters + optimizer state + a JSON header.
+//!
+//! Format: `<header json>\n` followed by raw little-endian f32 payloads for
+//! params, m and v (lengths recorded in the header).  Self-describing and
+//! versioned; no external serialization crates needed.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::{parse, Json};
+
+/// In-memory checkpoint contents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub case: String,
+    pub step: usize,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub train_loss: f64,
+}
+
+const MAGIC: &str = "flare-ckpt-v1";
+
+/// Write a checkpoint to `path`.
+pub fn save_checkpoint(path: impl AsRef<Path>, ckpt: &Checkpoint) -> anyhow::Result<()> {
+    let header = Json::obj(vec![
+        ("magic", Json::str(MAGIC)),
+        ("case", Json::str(&ckpt.case)),
+        ("step", Json::num(ckpt.step as f64)),
+        ("params_len", Json::num(ckpt.params.len() as f64)),
+        ("m_len", Json::num(ckpt.m.len() as f64)),
+        ("v_len", Json::num(ckpt.v.len() as f64)),
+        ("train_loss", Json::num(ckpt.train_loss)),
+    ]);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{header}")?;
+    for arr in [&ckpt.params, &ckpt.m, &ckpt.v] {
+        for v in arr.iter() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a checkpoint from `path`.
+pub fn load_checkpoint(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut all = Vec::new();
+    f.read_to_end(&mut all)?;
+    let nl = all
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| anyhow::anyhow!("missing checkpoint header"))?;
+    let header = parse(std::str::from_utf8(&all[..nl])?)?;
+    if header.get("magic").as_str() != Some(MAGIC) {
+        anyhow::bail!("bad checkpoint magic");
+    }
+    let p_len = header.req_usize("params_len")?;
+    let m_len = header.req_usize("m_len")?;
+    let v_len = header.req_usize("v_len")?;
+    let payload = &all[nl + 1..];
+    let need = (p_len + m_len + v_len) * 4;
+    if payload.len() != need {
+        anyhow::bail!("payload size {} != expected {need}", payload.len());
+    }
+    let read_f32s = |bytes: &[u8]| -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    let params = read_f32s(&payload[..p_len * 4]);
+    let m = read_f32s(&payload[p_len * 4..(p_len + m_len) * 4]);
+    let v = read_f32s(&payload[(p_len + m_len) * 4..]);
+    Ok(Checkpoint {
+        case: header.req_str("case")?.to_string(),
+        step: header.req_usize("step")?,
+        params,
+        m,
+        v,
+        train_loss: header.get("train_loss").as_f64().unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ckpt = Checkpoint {
+            case: "core_darcy_flare".into(),
+            step: 123,
+            params: vec![1.0, -2.5, 3.25],
+            m: vec![0.5, 0.5, 0.5],
+            v: vec![0.1, 0.2, 0.3],
+            train_loss: 0.042,
+        };
+        let path = std::env::temp_dir().join("flare_ckpt_test.bin");
+        save_checkpoint(&path, &ckpt).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded, ckpt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_rejected() {
+        let ckpt = Checkpoint {
+            case: "x".into(),
+            step: 1,
+            params: vec![1.0; 8],
+            m: vec![0.0; 8],
+            v: vec![0.0; 8],
+            train_loss: 0.0,
+        };
+        let path = std::env::temp_dir().join("flare_ckpt_corrupt.bin");
+        save_checkpoint(&path, &ckpt).unwrap();
+        // truncate
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 4]).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = std::env::temp_dir().join("flare_ckpt_magic.bin");
+        std::fs::write(&path, b"{\"magic\":\"nope\"}\n").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,91 @@
+//! Parameter initialization, bit-identical to `compile.packing.init_flat`.
+//!
+//! Each element `j` of entry `e` draws `u = u01(seed, e.offset + j)` from
+//! the counter-based SplitMix64 stream and maps it by init kind.  Both sides
+//! compute in f64 and cast to f32 with a 24-bit-mantissa uniform, so the
+//! results agree exactly; `rust/tests/runtime_integration.rs` asserts this
+//! against python-lowered artifacts.
+
+use crate::config::ParamEntry;
+use crate::util::rng::u01;
+
+/// Initialize a flat parameter vector from manifest entries.
+pub fn init_params(entries: &[ParamEntry], total: usize, seed: u64) -> Vec<f32> {
+    let mut out = vec![0.0f32; total];
+    for e in entries {
+        let seg = &mut out[e.offset..e.offset + e.size];
+        match e.init.as_str() {
+            "zeros" => {}
+            "ones" => seg.fill(1.0),
+            "uniform_fanin" => {
+                let a = 1.0 / (e.fan_in.max(1) as f64).sqrt();
+                for (j, v) in seg.iter_mut().enumerate() {
+                    let u = u01(seed, (e.offset + j) as u64);
+                    *v = ((2.0 * u - 1.0) * a) as f32;
+                }
+            }
+            "latent" | "embedding" => {
+                for (j, v) in seg.iter_mut().enumerate() {
+                    let u = u01(seed, (e.offset + j) as u64);
+                    *v = ((2.0 * u - 1.0) * 0.02) as f32;
+                }
+            }
+            other => panic!("unknown init kind {other:?}"),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(init: &str, offset: usize, size: usize, fan_in: usize) -> ParamEntry {
+        ParamEntry {
+            name: format!("{init}@{offset}"),
+            shape: vec![size],
+            offset,
+            size,
+            init: init.into(),
+            fan_in,
+        }
+    }
+
+    #[test]
+    fn kinds_respected() {
+        let entries = vec![
+            entry("zeros", 0, 3, 0),
+            entry("ones", 3, 2, 0),
+            entry("uniform_fanin", 5, 100, 16),
+            entry("latent", 105, 50, 0),
+        ];
+        let p = init_params(&entries, 155, 42);
+        assert!(p[0..3].iter().all(|&v| v == 0.0));
+        assert!(p[3..5].iter().all(|&v| v == 1.0));
+        let bound = 1.0 / 4.0;
+        assert!(p[5..105].iter().all(|&v| v.abs() <= bound + 1e-7));
+        assert!(p[5..105].iter().any(|&v| v != 0.0));
+        assert!(p[105..155].iter().all(|&v| v.abs() <= 0.02 + 1e-7));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let entries = vec![entry("uniform_fanin", 0, 64, 8)];
+        let a = init_params(&entries, 64, 1);
+        let b = init_params(&entries, 64, 1);
+        let c = init_params(&entries, 64, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn offset_addressing_not_order_dependent() {
+        // initializing entries in any order yields the same vector because
+        // the stream is counter-based on absolute offsets
+        let e1 = entry("uniform_fanin", 0, 10, 4);
+        let e2 = entry("uniform_fanin", 10, 10, 4);
+        let fwd = init_params(&[e1.clone(), e2.clone()], 20, 9);
+        let rev = init_params(&[e2, e1], 20, 9);
+        assert_eq!(fwd, rev);
+    }
+}

@@ -1,0 +1,53 @@
+//! Rust-side model state: parameter initialization (bit-identical to
+//! python), flat-vector views, and checkpoint save/load.
+
+pub mod checkpoint;
+pub mod init;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use init::init_params;
+
+use crate::config::ParamEntry;
+
+/// View a named parameter's slice of the flat vector.
+pub fn param_slice<'a>(flat: &'a [f32], entry: &ParamEntry) -> &'a [f32] {
+    &flat[entry.offset..entry.offset + entry.size]
+}
+
+/// Find a parameter entry by name.
+pub fn find_entry<'a>(params: &'a [ParamEntry], name: &str) -> anyhow::Result<&'a ParamEntry> {
+    params
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| anyhow::anyhow!("no parameter named {name:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, offset: usize, size: usize) -> ParamEntry {
+        ParamEntry {
+            name: name.into(),
+            shape: vec![size],
+            offset,
+            size,
+            init: "zeros".into(),
+            fan_in: 0,
+        }
+    }
+
+    #[test]
+    fn slice_views() {
+        let flat = vec![0.0f32, 1.0, 2.0, 3.0, 4.0];
+        let e = entry("x", 1, 3);
+        assert_eq!(param_slice(&flat, &e), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn find_entry_works() {
+        let entries = vec![entry("a", 0, 2), entry("b", 2, 2)];
+        assert_eq!(find_entry(&entries, "b").unwrap().offset, 2);
+        assert!(find_entry(&entries, "c").is_err());
+    }
+}

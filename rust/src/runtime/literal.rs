@@ -1,0 +1,76 @@
+//! Literal marshalling: `Vec<f32>`/`Vec<i32>` <-> `xla::Literal`.
+
+/// Build an f32 literal with the given dimensions.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        anyhow::bail!("lit_f32: {} elements but dims {:?}", data.len(), dims);
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal with the given dimensions.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        anyhow::bail!("lit_i32: {} elements but dims {:?}", data.len(), dims);
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Copy a literal's f32 contents to a vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Copy a literal's i32 contents to a vector.
+pub fn to_vec_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))
+}
+
+/// Scalar f32 from a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> anyhow::Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = lit_i32(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(to_vec_i32(&lit).unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar_f32(2.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Training orchestrator: drives the fused AdamW train-step artifact from
+//! Rust with Python completely off the hot path.
+//!
+//! One `execute` per optimizer step: `(params, m, v, step, lr, x, y) ->
+//! (params', m', v', loss)`.  The returned state literals are fed straight
+//! back into the next step (no host-side numeric work); only the scalar
+//! loss crosses to host each step.
+
+pub mod schedule;
+
+pub use schedule::OneCycle;
+
+use crate::config::{CaseCfg, Manifest};
+use crate::data::{self, Dataset};
+use crate::model::init_params;
+use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar_f32, to_scalar_f32};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::stats::{Summary, Timer};
+
+/// Options controlling a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    /// override the case's suggested step budget (None = use manifest)
+    pub steps: Option<usize>,
+    /// evaluate on the test split every `eval_every` steps (0 = only at end)
+    pub eval_every: usize,
+    /// RNG seed for batch sampling (params use the manifest seed)
+    pub sample_seed: u64,
+    /// print progress every `log_every` steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: None,
+            eval_every: 0,
+            sample_seed: 0x5EED,
+            log_every: 0,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub case: String,
+    pub steps: usize,
+    pub losses: Vec<f64>,
+    /// (step, metric) evaluation history; metric is rel-L2 (regression,
+    /// lower better) or accuracy (classification, higher better)
+    pub evals: Vec<(usize, f64)>,
+    pub final_metric: f64,
+    pub wall_s: f64,
+    pub step_ms: Summary,
+    pub param_count: usize,
+    /// final parameters (host copy) for downstream analysis / serving
+    pub params: Vec<f32>,
+}
+
+/// Cyclic shuffled batch sampler over `count` items.
+pub struct BatchSampler {
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(count: usize, seed: u64) -> BatchSampler {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..count).collect();
+        rng.shuffle(&mut order);
+        BatchSampler {
+            order,
+            pos: 0,
+            rng,
+        }
+    }
+    /// Next `batch` indices, reshuffling at epoch boundaries.
+    pub fn next(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.pos >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            out.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+}
+
+/// Gather one batch into (x, y) literals for the case's model.
+pub fn batch_literals(
+    case: &CaseCfg,
+    ds: &Dataset,
+    idx: &[usize],
+    train: bool,
+) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+    let b = idx.len() as i64;
+    let n = case.model.n as i64;
+    if case.model.is_classification() {
+        let (x, y) = ds.gather_tokens(idx, train);
+        Ok((lit_i32(&x, &[b, n])?, lit_i32(&y, &[b])?))
+    } else {
+        let (x, y) = ds.gather_fields(idx, train);
+        Ok((
+            lit_f32(&x, &[b, n, case.model.d_in as i64])?,
+            lit_f32(&y, &[b, n, case.model.d_out as i64])?,
+        ))
+    }
+}
+
+/// Evaluate the case's metric over the full test split.
+pub fn evaluate(
+    rt: &Runtime,
+    manifest: &Manifest,
+    case: &CaseCfg,
+    ds: &Dataset,
+    params: &xla::Literal,
+) -> anyhow::Result<f64> {
+    let exe = rt.load(
+        &format!("{}_eval", case.name),
+        manifest.artifact_path(case, "eval")?,
+    )?;
+    let count = ds.test_len();
+    let b = case.batch;
+    anyhow::ensure!(count >= b, "test split smaller than batch");
+    let mut total = 0.0;
+    let mut batches = 0;
+    let mut i = 0;
+    while i + b <= count {
+        let idx: Vec<usize> = (i..i + b).collect();
+        let (x, y) = batch_literals(case, ds, &idx, false)?;
+        let outs = rt.run_ref(&exe, &[params, &x, &y])?;
+        total += to_scalar_f32(&outs[0])? as f64;
+        batches += 1;
+        i += b;
+    }
+    Ok(total / batches.max(1) as f64)
+}
+
+/// Train one case end to end; returns losses, eval history and final params.
+pub fn train_case(
+    rt: &Runtime,
+    manifest: &Manifest,
+    case: &CaseCfg,
+    opts: &TrainOpts,
+) -> anyhow::Result<TrainOutcome> {
+    let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
+    let steps = opts.steps.unwrap_or(case.train_steps);
+    let sched = OneCycle::new(case.lr, steps);
+
+    let step_exe = rt.load(
+        &format!("{}_step", case.name),
+        manifest.artifact_path(case, "step")?,
+    )?;
+
+    let p0 = init_params(&case.params, case.param_count, manifest.seed);
+    let pc = case.param_count as i64;
+    let mut params = lit_f32(&p0, &[pc])?;
+    let mut m = lit_f32(&vec![0.0; case.param_count], &[pc])?;
+    let mut v = lit_f32(&vec![0.0; case.param_count], &[pc])?;
+
+    let mut sampler = BatchSampler::new(ds.train_len(), opts.sample_seed);
+    let mut losses = Vec::with_capacity(steps);
+    let mut evals = Vec::new();
+    let mut step_times = Vec::with_capacity(steps);
+    let wall = Timer::start();
+
+    for step in 0..steps {
+        let idx = sampler.next(case.batch);
+        let (x, y) = batch_literals(case, &ds, &idx, true)?;
+        let t = Timer::start();
+        let outs = rt.run(
+            &step_exe,
+            &[
+                params,
+                m,
+                v,
+                lit_scalar_f32(step as f32),
+                lit_scalar_f32(sched.lr(step) as f32),
+                x,
+                y,
+            ],
+        )?;
+        step_times.push(t.elapsed_ms());
+        let mut it = outs.into_iter();
+        params = it.next().unwrap();
+        m = it.next().unwrap();
+        v = it.next().unwrap();
+        let loss = to_scalar_f32(&it.next().unwrap())? as f64;
+        losses.push(loss);
+        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == steps) {
+            crate::info!(
+                "[{}] step {step}/{steps} loss {loss:.4} lr {:.2e}",
+                case.name,
+                sched.lr(step)
+            );
+        }
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let metric = evaluate(rt, manifest, case, &ds, &params)?;
+            evals.push((step + 1, metric));
+        }
+    }
+    let final_metric = evaluate(rt, manifest, case, &ds, &params)?;
+    evals.push((steps, final_metric));
+
+    let params_host = crate::runtime::to_vec_f32(&params)?;
+    Ok(TrainOutcome {
+        case: case.name.clone(),
+        steps,
+        losses,
+        evals,
+        final_metric,
+        wall_s: wall.elapsed_s(),
+        step_ms: Summary::of(&step_times),
+        param_count: case.param_count,
+        params: params_host,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_cycles_whole_set() {
+        let mut s = BatchSampler::new(5, 1);
+        let mut seen = vec![0usize; 5];
+        for _ in 0..4 {
+            for i in s.next(5) {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn sampler_batches_have_right_size() {
+        let mut s = BatchSampler::new(3, 2);
+        assert_eq!(s.next(2).len(), 2);
+        assert_eq!(s.next(2).len(), 2); // crosses the epoch boundary
+        assert_eq!(s.next(7).len(), 7);
+        assert!(s.next(7).iter().all(|&i| i < 3));
+    }
+
+    #[test]
+    fn default_opts() {
+        let o = TrainOpts::default();
+        assert!(o.steps.is_none());
+        assert_eq!(o.eval_every, 0);
+    }
+}

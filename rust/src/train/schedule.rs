@@ -1,0 +1,83 @@
+//! OneCycle learning-rate schedule (paper Section D.3: 10% warmup to the
+//! peak LR followed by cosine decay), computed by the Layer-3 coordinator
+//! and fed into the train-step artifact as a scalar input each step.
+
+/// OneCycle schedule: linear warmup to `peak_lr` over `warmup_frac` of
+/// `total_steps`, then cosine decay to `peak_lr * final_div`.
+#[derive(Debug, Clone)]
+pub struct OneCycle {
+    pub peak_lr: f64,
+    pub total_steps: usize,
+    pub warmup_frac: f64,
+    pub final_div: f64,
+}
+
+impl OneCycle {
+    pub fn new(peak_lr: f64, total_steps: usize) -> OneCycle {
+        OneCycle {
+            peak_lr,
+            total_steps: total_steps.max(1),
+            warmup_frac: 0.1,
+            final_div: 1e-2,
+        }
+    }
+
+    /// Learning rate at `step` (0-based).
+    pub fn lr(&self, step: usize) -> f64 {
+        let warm = ((self.total_steps as f64) * self.warmup_frac).max(1.0);
+        let s = step as f64;
+        if s < warm {
+            // linear warmup from peak/25 (OneCycleLR default div_factor)
+            let start = self.peak_lr / 25.0;
+            start + (self.peak_lr - start) * (s / warm)
+        } else {
+            let t = (s - warm) / ((self.total_steps as f64 - warm).max(1.0));
+            let t = t.clamp(0.0, 1.0);
+            let floor = self.peak_lr * self.final_div;
+            floor
+                + (self.peak_lr - floor)
+                    * 0.5
+                    * (1.0 + (std::f64::consts::PI * t).cos())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_to_peak() {
+        let s = OneCycle::new(1e-3, 100);
+        assert!(s.lr(0) < s.lr(5));
+        assert!(s.lr(5) < s.lr(9));
+        let peak = s.lr(10);
+        assert!((peak - 1e-3).abs() < 1e-4, "peak {peak}");
+    }
+
+    #[test]
+    fn decay_monotone_after_peak() {
+        let s = OneCycle::new(1e-3, 200);
+        let mut prev = s.lr(20);
+        for step in 21..200 {
+            let cur = s.lr(step);
+            assert!(cur <= prev + 1e-12, "step {step}: {cur} > {prev}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn final_lr_near_floor() {
+        let s = OneCycle::new(1e-3, 100);
+        let last = s.lr(99);
+        assert!(last < 1.5e-5 + 1e-5, "last {last}");
+        assert!(last > 0.0);
+    }
+
+    #[test]
+    fn degenerate_one_step() {
+        let s = OneCycle::new(1e-3, 1);
+        assert!(s.lr(0).is_finite());
+        assert!(s.lr(5).is_finite()); // past the end clamps
+    }
+}

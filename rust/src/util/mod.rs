@@ -1,0 +1,11 @@
+//! Hand-rolled substrates: RNG, JSON, stats/timers, thread pool, logging.
+//!
+//! The offline vendor set only contains the `xla` crate's dependency
+//! closure (no serde / tokio / criterion / clap), so these utilities are
+//! built from scratch — see DESIGN.md §3 for the substitution table.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,221 @@
+//! Deterministic random number generation.
+//!
+//! Two generators live here:
+//!
+//! * [`u01`] — the *counter-based* SplitMix64 stream shared bit-for-bit with
+//!   `python/compile/rnginit.py`.  Parameter initialization on both sides of
+//!   the FFI boundary draws from this stream so Rust-initialized parameters
+//!   are identical to Python-initialized ones (integration-tested).
+//! * [`Rng`] — a sequential xoshiro-style generator used by the dataset
+//!   simulators and samplers, where cross-language parity is not required
+//!   but reproducibility from a seed is.
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+const M1: u64 = 0xBF58_476D_1CE4_E5B9;
+const M2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// SplitMix64 finalizer.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(M1);
+    z = (z ^ (z >> 27)).wrapping_mul(M2);
+    z ^ (z >> 31)
+}
+
+/// Counter-based uniform in `[0, 1)` with a 24-bit mantissa.
+///
+/// Must stay in exact agreement with `compile.rnginit.u01`: the top 24 bits
+/// of `splitmix64(seed ^ counter * GOLDEN)` as a dyadic rational.
+#[inline]
+pub fn u01(seed: u64, counter: u64) -> f64 {
+    let key = seed ^ counter.wrapping_mul(GOLDEN);
+    let bits = splitmix64(key) >> 40;
+    bits as f64 / (1u64 << 24) as f64
+}
+
+/// Sequential PRNG for simulators (SplitMix64-seeded xoshiro256**).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed all four lanes through SplitMix64 (never all-zero).
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for lane in s.iter_mut() {
+            x = x.wrapping_add(GOLDEN);
+            *lane = splitmix64(x);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-sample generators).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ splitmix64(tag))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // xoshiro256**
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n).
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: first k entries are a uniform sample
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u01_matches_python_vectors() {
+        // golden values computed by python/compile/rnginit.py (seed=42)
+        let got: Vec<f64> = (0..4).map(|i| u01(42, i)).collect();
+        // regenerate with: python -c "from compile.rnginit import u01;
+        //   import numpy as np; print(u01(42, np.arange(4)))"
+        let expect = [
+            0.7415648698806763,
+            0.1599103808403015,
+            0.3743141293525696,
+            0.3955966830253601,
+        ];
+        for (g, e) in got.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-12, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn u01_in_unit_interval() {
+        for i in 0..10_000 {
+            let v = u01(7, i);
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(rng.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(4);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_indices_distinct() {
+        let mut rng = Rng::new(5);
+        let idx = rng.choose_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+}

@@ -1,0 +1,154 @@
+//! A small fixed-size thread pool (no tokio in the offline vendor set).
+//!
+//! The serving coordinator uses this for its worker pool; the API is the
+//! usual `execute(closure)` plus a `scoped_map` helper for data-parallel
+//! sections in the simulators.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool; drops complete outstanding work before joining.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                std::thread::Builder::new()
+                    .name(format!("flare-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            sender: Some(sender),
+            workers,
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close channel, workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to every index in `0..n` across `threads` OS threads and
+/// collect results in order.  Spawns scoped threads, so `f` may borrow.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunks: Vec<(usize, &mut [Option<T>])> = {
+        let mut res = Vec::new();
+        let mut rest = out.as_mut_slice();
+        let mut start = 0;
+        let per = n.div_ceil(threads);
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            res.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        res
+    };
+    std::thread::scope(|scope| {
+        for (start, chunk) in chunks {
+            let f = &f;
+            scope.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(start + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_min_one_worker() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_more_threads_than_items() {
+        let out = parallel_map(3, 16, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

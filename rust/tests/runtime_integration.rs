@@ -1,0 +1,299 @@
+//! Integration tests over the real AOT artifacts: HLO round-trip numerics,
+//! Rust<->Python parameter-init parity, training behaviour, and the
+//! spectral pipeline against the compiled qk artifact.
+//!
+//! All tests are skipped gracefully when `artifacts/` has not been built.
+
+use flare::config::Manifest;
+use flare::data;
+use flare::metrics::mean_rel_l2;
+use flare::model::{find_entry, init_params, param_slice};
+use flare::runtime::literal::{lit_f32, lit_scalar_f32, to_scalar_f32, to_vec_f32};
+use flare::runtime::Runtime;
+use flare::spectral::eig_lowrank;
+use flare::train::{train_case, TrainOpts};
+use flare::util::json::parse;
+use flare::util::rng::u01;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).expect("manifest parses"))
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+/// The deterministic forward input used by the python-side golden dump.
+fn golden_input(count: usize) -> Vec<f32> {
+    (0..count)
+        .map(|i| (u01(1234, i as u64) * 2.0 - 1.0) as f32)
+        .collect()
+}
+
+#[test]
+fn fwd_matches_python_golden() {
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_darcy_flare").unwrap();
+    let golden_path = m.dir.join(format!("{}_golden.json", case.name));
+    let golden = parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load("fwd", m.artifact_path(case, "fwd").unwrap())
+        .unwrap();
+    let params = init_params(&case.params, case.param_count, m.seed);
+    let x = golden_input(case.batch * case.model.n * case.model.d_in);
+    let outs = rt
+        .run(
+            &exe,
+            &[
+                lit_f32(&params, &[case.param_count as i64]).unwrap(),
+                lit_f32(
+                    &x,
+                    &[
+                        case.batch as i64,
+                        case.model.n as i64,
+                        case.model.d_in as i64,
+                    ],
+                )
+                .unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_vec_f32(&outs[0]).unwrap();
+
+    // head values match elementwise; this proves init parity AND the whole
+    // HLO-text round trip in one shot
+    let head = golden.get("head").as_arr().unwrap();
+    for (i, g) in head.iter().enumerate() {
+        let g = g.as_f64().unwrap();
+        assert!(
+            (y[i] as f64 - g).abs() < 1e-4 * g.abs().max(1.0),
+            "elem {i}: rust {} vs python {g}",
+            y[i]
+        );
+    }
+    let l2: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let gl2 = golden.get("l2").as_f64().unwrap();
+    assert!((l2 - gl2).abs() < 1e-3 * gl2, "l2 {l2} vs {gl2}");
+}
+
+#[test]
+fn eval_artifact_matches_host_rel_l2() {
+    // the compiled eval metric must agree with the Rust-side metric applied
+    // to the compiled forward outputs — cross-checks two artifacts
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_darcy_flare").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let fwd = rt
+        .load("fwd2", m.artifact_path(case, "fwd").unwrap())
+        .unwrap();
+    let eval = rt
+        .load("eval2", m.artifact_path(case, "eval").unwrap())
+        .unwrap();
+    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed).unwrap();
+    let params = init_params(&case.params, case.param_count, m.seed);
+    let p = lit_f32(&params, &[case.param_count as i64]).unwrap();
+    let idx: Vec<usize> = (0..case.batch).collect();
+    let (xs, ys) = ds.gather_fields(&idx, false);
+    let xl = lit_f32(
+        &xs,
+        &[
+            case.batch as i64,
+            case.model.n as i64,
+            case.model.d_in as i64,
+        ],
+    )
+    .unwrap();
+    let yl = lit_f32(
+        &ys,
+        &[
+            case.batch as i64,
+            case.model.n as i64,
+            case.model.d_out as i64,
+        ],
+    )
+    .unwrap();
+    let pred = to_vec_f32(&rt.run_ref(&fwd, &[&p, &xl]).unwrap()[0]).unwrap();
+    let host_metric = mean_rel_l2(&pred, &ys, case.model.n * case.model.d_out);
+    let compiled = to_scalar_f32(&rt.run_ref(&eval, &[&p, &xl, &yl]).unwrap()[0]).unwrap();
+    assert!(
+        (host_metric - compiled as f64).abs() < 1e-4,
+        "host {host_metric} vs compiled {compiled}"
+    );
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_darcy_flare").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let out = train_case(
+        &rt,
+        &m,
+        case,
+        &TrainOpts {
+            steps: Some(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.losses.len(), 25);
+    let first = out.losses[0];
+    let last = out.losses[24];
+    assert!(
+        last < first * 0.8,
+        "loss did not decrease: {first} -> {last}"
+    );
+    assert!(out.final_metric.is_finite());
+    assert_eq!(out.params.len(), case.param_count);
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_elas_flare").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let opts = TrainOpts {
+        steps: Some(5),
+        ..Default::default()
+    };
+    let a = train_case(&rt, &m, case, &opts).unwrap();
+    let b = train_case(&rt, &m, case, &opts).unwrap();
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.params, b.params);
+}
+
+#[test]
+fn qk_artifact_feeds_spectral_pipeline() {
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_elas_flare").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load("qk", m.artifact_path(case, "qk").unwrap())
+        .unwrap();
+    let params = init_params(&case.params, case.param_count, m.seed);
+    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed).unwrap();
+    let x = &ds.test_fields[0].x;
+    let outs = rt
+        .run(
+            &exe,
+            &[
+                lit_f32(&params, &[case.param_count as i64]).unwrap(),
+                lit_f32(x, &[case.model.n as i64, case.model.d_in as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), case.model.blocks);
+    let (h, mm, d, n) = (
+        case.model.heads,
+        case.model.m,
+        case.model.head_dim(),
+        case.model.n,
+    );
+    let k0 = to_vec_f32(&outs[0]).unwrap();
+    assert_eq!(k0.len(), h * n * d);
+    let latents = find_entry(&case.params, "blk0.mix.latents").unwrap();
+    let q = &param_slice(&params, latents)[..mm * d];
+    let eig = eig_lowrank(q, &k0[..n * d], mm, n, d);
+    // operator is a product of row-stochastic matrices: top eigenvalue 1
+    assert!((eig.eigenvalues[0] - 1.0).abs() < 1e-6);
+    assert!(eig.eigenvalues.iter().all(|&l| l <= 1.0 + 1e-6));
+}
+
+#[test]
+fn mixer_artifact_matches_dense_operator() {
+    // y = W_dec W_enc V computed densely in Rust must match the compiled
+    // SDPA-form mixer — validates the mixer math across the language gap
+    let Some(m) = manifest() else { return };
+    let Some(mx) = m.mixers.iter().find(|x| x.kind == "flare_sdpa") else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load("mx", m.dir.join(&mx.file)).unwrap();
+    let (h, mm, n, d) = (mx.heads, mx.m, mx.n, mx.head_dim);
+    let mut rng = flare::util::rng::Rng::new(5);
+    let q: Vec<f32> = (0..h * mm * d).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let outs = rt
+        .run(
+            &exe,
+            &[
+                lit_f32(&q, &[h as i64, mm as i64, d as i64]).unwrap(),
+                lit_f32(&k, &[h as i64, n as i64, d as i64]).unwrap(),
+                lit_f32(&v, &[h as i64, n as i64, d as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_vec_f32(&outs[0]).unwrap();
+    // check head 0 against the dense operator
+    let w = flare::spectral::mixing_matrix_dense(&q[..mm * d], &k[..n * d], mm, n, d);
+    for row in 0..8 {
+        for col in 0..d {
+            let mut expect = 0.0f64;
+            for t in 0..n {
+                expect += w[(row, t)] * v[t * d + col] as f64;
+            }
+            let got = y[row * d + col] as f64;
+            assert!(
+                (got - expect).abs() < 1e-4,
+                "row {row} col {col}: {got} vs {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn step_artifact_is_deterministic_executable() {
+    let Some(m) = manifest() else { return };
+    let case = m.case("core_darcy_flare").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load("step_det", m.artifact_path(case, "step").unwrap())
+        .unwrap();
+    let params = init_params(&case.params, case.param_count, m.seed);
+    let pc = case.param_count as i64;
+    let zeros = vec![0.0f32; case.param_count];
+    let x = golden_input(case.batch * case.model.n * case.model.d_in);
+    let y = golden_input(case.batch * case.model.n * case.model.d_out);
+    let run = || {
+        let outs = rt
+            .run(
+                &exe,
+                &[
+                    lit_f32(&params, &[pc]).unwrap(),
+                    lit_f32(&zeros, &[pc]).unwrap(),
+                    lit_f32(&zeros, &[pc]).unwrap(),
+                    lit_scalar_f32(0.0),
+                    lit_scalar_f32(1e-3),
+                    lit_f32(
+                        &x,
+                        &[
+                            case.batch as i64,
+                            case.model.n as i64,
+                            case.model.d_in as i64,
+                        ],
+                    )
+                    .unwrap(),
+                    lit_f32(
+                        &y,
+                        &[
+                            case.batch as i64,
+                            case.model.n as i64,
+                            case.model.d_out as i64,
+                        ],
+                    )
+                    .unwrap(),
+                ],
+            )
+            .unwrap();
+        to_scalar_f32(&outs[3]).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert!(a.is_finite() && a > 0.0);
+}

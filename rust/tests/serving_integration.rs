@@ -1,0 +1,161 @@
+//! Serving-engine integration: correctness of batched responses under
+//! concurrent load, padding behaviour, and graceful error paths.
+
+use std::time::Duration;
+
+use flare::config::Manifest;
+use flare::coordinator::{Server, ServerConfig};
+use flare::data;
+use flare::model::init_params;
+use flare::runtime::literal::{lit_f32, to_vec_f32};
+use flare::runtime::Runtime;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).expect("manifest parses"))
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+/// Direct (unbatched) reference execution of the fwd artifact.
+fn direct_forward(m: &Manifest, case_name: &str, x: &[f32]) -> Vec<f32> {
+    let case = m.case(case_name).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load("ref_fwd", m.artifact_path(case, "fwd").unwrap())
+        .unwrap();
+    let params = init_params(&case.params, case.param_count, m.seed);
+    // pad batch with zeros like the server does
+    let mut xb = x.to_vec();
+    xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
+    let outs = rt
+        .run(
+            &exe,
+            &[
+                lit_f32(&params, &[case.param_count as i64]).unwrap(),
+                lit_f32(
+                    &xb,
+                    &[
+                        case.batch as i64,
+                        case.model.n as i64,
+                        case.model.d_in as i64,
+                    ],
+                )
+                .unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_vec_f32(&outs[0]).unwrap();
+    y[..case.model.n * case.model.d_out].to_vec()
+}
+
+#[test]
+fn concurrent_responses_match_direct_execution() {
+    let Some(m) = manifest() else { return };
+    let name = "core_darcy_flare";
+    let case = m.case(name).unwrap().clone();
+    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed).unwrap();
+
+    let server = Server::start(
+        m.dir.clone(),
+        ServerConfig {
+            cases: vec![name.into()],
+            max_wait: Duration::from_millis(5),
+            params: vec![],
+        },
+    )
+    .unwrap();
+
+    // submit several distinct inputs concurrently
+    let sample_count = 4.min(ds.test_len());
+    let receivers: Vec<_> = (0..sample_count)
+        .map(|i| {
+            let x = ds.test_fields[i].x.clone();
+            (i, server.submit(x, case.model.n))
+        })
+        .collect();
+    for (i, rx) in receivers {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.y.len(), case.model.n * case.model.d_out);
+        // responses must match a direct single-input execution because the
+        // model is applied per-sample along the batch axis (vmapped)
+        let expect = direct_forward(&m, name, &ds.test_fields[i].x);
+        let max_err = resp
+            .y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "sample {i}: max err {max_err}");
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn short_requests_are_padded_and_trimmed() {
+    let Some(m) = manifest() else { return };
+    let name = "core_darcy_flare";
+    let case = m.case(name).unwrap().clone();
+    let server = Server::start(
+        m.dir.clone(),
+        ServerConfig {
+            cases: vec![name.into()],
+            max_wait: Duration::from_millis(5),
+            params: vec![],
+        },
+    )
+    .unwrap();
+    let short_n = case.model.n / 2;
+    let x = vec![0.25f32; short_n * case.model.d_in];
+    let resp = server.infer(x, short_n).unwrap();
+    assert_eq!(resp.y.len(), short_n * case.model.d_out);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn oversized_request_rejected() {
+    let Some(m) = manifest() else { return };
+    let name = "core_darcy_flare";
+    let case = m.case(name).unwrap().clone();
+    let server = Server::start(
+        m.dir.clone(),
+        ServerConfig {
+            cases: vec![name.into()],
+            max_wait: Duration::from_millis(5),
+            params: vec![],
+        },
+    )
+    .unwrap();
+    let big_n = case.model.n * 4;
+    let x = vec![0.0f32; big_n * case.model.d_in];
+    assert!(server.infer(x, big_n).is_err());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_recorded_under_load() {
+    let Some(m) = manifest() else { return };
+    let name = "core_darcy_flare";
+    let case = m.case(name).unwrap().clone();
+    let server = Server::start(
+        m.dir.clone(),
+        ServerConfig {
+            cases: vec![name.into()],
+            max_wait: Duration::from_millis(2),
+            params: vec![],
+        },
+    )
+    .unwrap();
+    let x = vec![0.1f32; case.model.n * case.model.d_in];
+    for _ in 0..6 {
+        server.infer(x.clone(), case.model.n).unwrap();
+    }
+    let lat = server.metrics.summary("latency_ms").unwrap();
+    assert_eq!(lat.count, 6);
+    assert!(lat.mean > 0.0);
+    assert!(server.metrics.summary("batch_size").is_some());
+    server.shutdown().unwrap();
+}

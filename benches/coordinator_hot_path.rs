@@ -1,18 +1,58 @@
 //! Coordinator hot-path microbenchmarks (systems deliverable, not a paper
-//! figure): batcher throughput, literal marshalling cost, end-to-end
-//! serving latency/throughput across flush deadlines, and the overhead of
-//! the coordinator relative to raw model execution.
+//! figure): batcher throughput, the native forward pass that serving rides
+//! on, and end-to-end serving latency/throughput across flush deadlines
+//! with the overhead of the coordinator relative to raw model execution.
+//!
+//! Parts 1-2 run on a clean machine; part 3 needs `artifacts/manifest.json`
+//! for the served case's shapes (any backend).
 //!
 //! Run: cargo bench --bench coordinator_hot_path
 
 use std::time::{Duration, Instant};
 
 use flare::bench::{quick_mode, save_results, Bench, Table};
-use flare::config::Manifest;
+use flare::config::{CaseCfg, Manifest, ModelCfg};
 use flare::coordinator::{Batcher, Server, ServerConfig};
-use flare::model::init_params;
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
+use flare::model::{build_spec, init_params};
+use flare::runtime::{default_backend, make_backend, BatchInput};
+use flare::util::json::Json;
+
+/// A Darcy-sized FLARE case declared entirely in Rust (no manifest).
+fn synthetic_case() -> anyhow::Result<CaseCfg> {
+    let model = ModelCfg {
+        mixer: "flare".into(),
+        n: 1024,
+        d_in: 3,
+        d_out: 1,
+        c: 32,
+        heads: 4,
+        m: 32,
+        blocks: 2,
+        kv_layers: 3,
+        ffn_layers: 3,
+        io_layers: 2,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    };
+    let (entries, total) = build_spec(&model)?;
+    Ok(CaseCfg {
+        name: "synthetic_darcy".into(),
+        group: "bench".into(),
+        dataset: "darcy".into(),
+        dataset_meta: Json::Null,
+        batch: 2,
+        train_steps: 0,
+        lr: 1e-3,
+        model,
+        param_count: total,
+        artifacts: Default::default(),
+        params: entries,
+    })
+}
 
 fn main() -> anyhow::Result<()> {
     let mut all = Vec::new();
@@ -36,88 +76,97 @@ fn main() -> anyhow::Result<()> {
     );
     all.push(m1);
 
-    // 2. literal marshalling (the host <-> device copy on the hot path)
-    let data = vec![0.5f32; 1024 * 3 * 2];
-    let m2 = bench.run("literal_marshal_roundtrip", || {
-        let l = lit_f32(&data, &[2, 1024, 3]).unwrap();
-        let _ = to_vec_f32(&l).unwrap();
+    // 2. the native forward pass serving rides on (synthetic Darcy case)
+    let case = synthetic_case()?;
+    let backend = make_backend("native")?;
+    let params = init_params(&case.params, case.param_count, 42);
+    let x = vec![0.25f32; case.batch * case.model.n * case.model.d_in];
+    let m2 = bench.run("native_forward_batch", || {
+        let _ = backend
+            .forward(&case, &params, BatchInput::Fields(&x), case.batch)
+            .unwrap();
     });
     println!(
-        "literal round-trip (2x1024x3 f32): {:.3} ms ({:.1} GB/s)",
+        "native forward (N={}, batch={}): {:.2} ms/batch ({:.2} ms/request)",
+        case.model.n,
+        case.batch,
         m2.mean_ms(),
-        2.0 * data.len() as f64 * 4.0 / (m2.mean_ms() / 1e3) / 1e9
+        m2.mean_ms() / case.batch as f64
     );
     all.push(m2);
 
     // 3. end-to-end serving vs raw execution (coordinator overhead)
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    if manifest.cases.iter().any(|c| c.name == "core_darcy_flare") {
-        let case = manifest.case("core_darcy_flare")?.clone();
-        let x = vec![0.25f32; case.model.n * case.model.d_in];
+    let manifest = Manifest::load(Manifest::default_dir());
+    match manifest {
+        Ok(manifest) if manifest.cases.iter().any(|c| c.name == "core_darcy_flare") => {
+            let case = manifest.case("core_darcy_flare")?.clone();
+            let x = vec![0.25f32; case.model.n * case.model.d_in];
 
-        // raw: direct PJRT execution of a full batch
-        let rt = Runtime::cpu()?;
-        let exe = rt.load("fwd", manifest.artifact_path(&case, "fwd")?)?;
-        let params = init_params(&case.params, case.param_count, manifest.seed);
-        let p = lit_f32(&params, &[case.param_count as i64])?;
-        let mut xb = x.clone();
-        xb.resize(case.batch * case.model.n * case.model.d_in, 0.25);
-        let xl = lit_f32(
-            &xb,
-            &[case.batch as i64, case.model.n as i64, case.model.d_in as i64],
-        )?;
-        let m3 = bench.run("raw_forward_batch", || {
-            let _ = rt.run_ref(&exe, &[&p, &xl]).unwrap();
-        });
-        let raw_per_req = m3.mean_ms() / case.batch as f64;
-        println!(
-            "raw execute: {:.2} ms/batch ({raw_per_req:.2} ms/request)",
-            m3.mean_ms()
-        );
-        all.push(m3);
-        drop(rt);
-
-        // served: through router + batcher + channels, saturating clients
-        let mut table = Table::new(&["max_wait ms", "req/s", "p50 ms", "p95 ms", "overhead %"]);
-        for wait_ms in [1u64, 5, 20] {
-            let server = Server::start(
-                manifest.dir.clone(),
-                ServerConfig {
-                    cases: vec![case.name.clone()],
-                    max_wait: Duration::from_millis(wait_ms),
-                    params: vec![],
-                },
-            )?;
-            let requests: usize = if quick_mode() { 16 } else { 64 };
-            let clients = 4;
-            let t = Instant::now();
-            std::thread::scope(|scope| {
-                for _ in 0..clients {
-                    let server = &server;
-                    let x = &x;
-                    let n = case.model.n;
-                    scope.spawn(move || {
-                        for _ in 0..requests / clients {
-                            let _ = server.infer(x.clone(), n).unwrap();
-                        }
-                    });
-                }
+            // raw: direct backend execution of a full batch
+            let backend = default_backend()?;
+            backend.prepare(&manifest, &case)?;
+            let params = init_params(&case.params, case.param_count, manifest.seed);
+            let mut xb = x.clone();
+            xb.resize(case.batch * case.model.n * case.model.d_in, 0.25);
+            let m3 = bench.run("raw_forward_batch", || {
+                let _ = backend
+                    .forward(&case, &params, BatchInput::Fields(&xb), case.batch)
+                    .unwrap();
             });
-            let wall = t.elapsed().as_secs_f64();
-            let lat = server.metrics.summary("latency_ms").unwrap();
-            let served = (requests / clients) * clients;
-            let per_req_served = wall * 1e3 / served as f64;
-            table.row(vec![
-                wait_ms.to_string(),
-                format!("{:.1}", served as f64 / wall),
-                format!("{:.2}", lat.p50),
-                format!("{:.2}", lat.p95),
-                format!("{:.0}", (per_req_served / raw_per_req - 1.0) * 100.0),
-            ]);
-            server.shutdown()?;
+            let raw_per_req = m3.mean_ms() / case.batch as f64;
+            println!(
+                "raw execute: {:.2} ms/batch ({raw_per_req:.2} ms/request)",
+                m3.mean_ms()
+            );
+            all.push(m3);
+            drop(backend);
+
+            // served: through router + batcher + channels, saturating clients
+            let mut table =
+                Table::new(&["max_wait ms", "req/s", "p50 ms", "p95 ms", "overhead %"]);
+            for wait_ms in [1u64, 5, 20] {
+                let server = Server::start(
+                    manifest.dir.clone(),
+                    ServerConfig {
+                        cases: vec![case.name.clone()],
+                        max_wait: Duration::from_millis(wait_ms),
+                        params: vec![],
+                        backend: None,
+                    },
+                )?;
+                let requests: usize = if quick_mode() { 16 } else { 64 };
+                let clients = 4;
+                let t = Instant::now();
+                std::thread::scope(|scope| {
+                    for _ in 0..clients {
+                        let server = &server;
+                        let x = &x;
+                        let n = case.model.n;
+                        scope.spawn(move || {
+                            for _ in 0..requests / clients {
+                                let _ = server.infer(x.clone(), n).unwrap();
+                            }
+                        });
+                    }
+                });
+                let wall = t.elapsed().as_secs_f64();
+                let lat = server.metrics.summary("latency_ms").unwrap();
+                let served = (requests / clients) * clients;
+                let per_req_served = wall * 1e3 / served as f64;
+                table.row(vec![
+                    wait_ms.to_string(),
+                    format!("{:.1}", served as f64 / wall),
+                    format!("{:.2}", lat.p50),
+                    format!("{:.2}", lat.p95),
+                    format!("{:.0}", (per_req_served / raw_per_req - 1.0) * 100.0),
+                ]);
+                server.shutdown()?;
+            }
+            println!("\nserving engine vs flush deadline:");
+            table.print();
         }
-        println!("\nserving engine vs flush deadline:");
-        table.print();
+        Ok(_) => println!("\n(skipping serving section: manifest has no core_darcy_flare case)"),
+        Err(e) => println!("\n(skipping serving section: {e})"),
     }
 
     let path = save_results("coordinator_hot_path", &all)?;

@@ -9,7 +9,7 @@
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
     let mut ffn_rows = Vec::new();
     let total = cases.len();
     for (i, case) in cases.iter().enumerate() {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("[{}/{total}] {}", i + 1, case.name);
-        let m = train_measurement(&rt, &manifest, case, steps)?;
+        let m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         let err = m.extra("rel_l2").unwrap_or(f64::NAN);
         if case.name.contains("kv") {
             kv_rows.push((case.model.kv_layers, err, case.param_count));

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -26,9 +26,9 @@ fn main() -> anyhow::Result<()> {
     let mut grid: BTreeMap<(usize, usize), (f64, usize, f64)> = BTreeMap::new();
     let total = cases.len();
     for (i, case) in cases.iter().enumerate() {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("[{}/{total}] {}", i + 1, case.name);
-        let m = train_measurement(&rt, &manifest, case, steps)?;
+        let m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         grid.insert(
             (case.model.blocks, case.model.latent_sa_blocks),
             (

@@ -12,8 +12,7 @@ use flare::bench::{save_results, sweep_steps, Measurement, Table};
 use flare::config::Manifest;
 use flare::data;
 use flare::model::{find_entry, param_slice};
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 use flare::spectral::{eig_lowrank, spectra_diversity, HeadSpectrum};
 use flare::train::{train_case, TrainOpts};
 use flare::util::stats::Summary;
@@ -29,10 +28,10 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["B", "latents", "rel-L2", "params", "spectral diversity"]);
 
     for case in &cases {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("running {}", case.name);
         let out = train_case(
-            &rt,
+            backend.as_ref(),
             &manifest,
             case,
             &TrainOpts {
@@ -43,16 +42,7 @@ fn main() -> anyhow::Result<()> {
 
         // spectra of every head in every block at a test sample
         let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
-        let qk = rt.load(
-            &format!("{}_qk", case.name),
-            manifest.artifact_path(case, "qk")?,
-        )?;
-        let params_lit = lit_f32(&out.params, &[case.param_count as i64])?;
-        let x = lit_f32(
-            &ds.test_fields[0].x,
-            &[case.model.n as i64, case.model.d_in as i64],
-        )?;
-        let ks = rt.run_ref(&qk, &[&params_lit, &x])?;
+        let ks = backend.qk_keys(&manifest, case, &out.params, &ds.test_fields[0].x)?;
         let (h, m, d, n) = (
             case.model.heads,
             case.model.m,
@@ -60,8 +50,7 @@ fn main() -> anyhow::Result<()> {
             case.model.n,
         );
         let mut diversities = Vec::new();
-        for (b, klit) in ks.iter().enumerate() {
-            let kvals = to_vec_f32(klit)?;
+        for (b, kvals) in ks.iter().enumerate() {
             let latents = find_entry(&case.params, &format!("blk{b}.mix.latents"))?;
             let q_all = param_slice(&out.params, latents);
             let spectra: Vec<HeadSpectrum> = (0..h)

@@ -10,7 +10,7 @@
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
     let mut all = Vec::new();
     let mut table = Table::new(&["heads H", "head dim D", "rel-L2", "params"]);
     for case in &cases {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("running {}", case.name);
-        let mut m = train_measurement(&rt, &manifest, case, steps)?;
+        let mut m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         m.extras.push(("head_dim".into(), case.model.head_dim() as f64));
         table.row(vec![
             case.model.heads.to_string(),

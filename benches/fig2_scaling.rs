@@ -1,74 +1,123 @@
 //! Figure 2 reproduction: time and memory of a forward token-mixing pass vs
-//! sequence length, vanilla attention vs FLARE (M in {64, 256}).
+//! sequence length, naive O(N^2) attention vs the native FLARE mixer
+//! (M in {64, 256}).
 //!
 //! The paper's claim: vanilla is O(N^2) and blows past practical budgets by
 //! N ~ 1e5 while FLARE stays O(NM) with near-flat memory, reaching 1e6
-//! tokens; the FLARE curves for different M nearly overlap.  On CPU the
+//! tokens; the FLARE curves for different M nearly overlap.  This bench
+//! exercises the pure-Rust kernels directly (no artifacts needed), so the
 //! absolute times differ from an H100 but the slopes and the crossover
 //! survive.
 //!
-//! Run: cargo bench --bench fig2_scaling
+//! Run: cargo bench --bench fig2_scaling     (FLARE_BENCH_QUICK=1 to smoke)
 
 use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
-use flare::config::Manifest;
-use flare::runtime::literal::lit_f32;
-use flare::runtime::Runtime;
+use flare::linalg::matrix::{axpy_f32, dot_f32};
+use flare::model::forward::flare_mixer;
 use flare::util::rng::Rng;
 use flare::util::stats::current_rss_bytes;
 
-fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    anyhow::ensure!(!manifest.mixers.is_empty(), "fig2 artifacts missing");
-    let max_n = if quick_mode() { 16384 } else { 1_048_576 };
+/// Dense multi-head softmax attention, O(N^2) time but O(N) extra memory
+/// (row-streamed so the bench measures compute scaling, not a score-matrix
+/// allocation cliff).
+fn naive_attention(q: &[f32], k: &[f32], v: &[f32], h: usize, n: usize, d: usize) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut y = vec![0.0f32; h * n * d];
+    let mut row = vec![0.0f32; n];
+    for hh in 0..h {
+        let base = hh * n * d;
+        for i in 0..n {
+            let qi = &q[base + i * d..base + (i + 1) * d];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, rv) in row.iter_mut().enumerate() {
+                let s = scale * dot_f32(qi, &k[base + j * d..base + (j + 1) * d]);
+                *rv = s;
+                mx = mx.max(s);
+            }
+            let mut den = 0.0f32;
+            for rv in row.iter_mut() {
+                *rv = (*rv - mx).exp();
+                den += *rv;
+            }
+            let inv = 1.0 / den;
+            let yi = &mut y[base + i * d..base + (i + 1) * d];
+            for (j, &rv) in row.iter().enumerate() {
+                axpy_f32(rv * inv, &v[base + j * d..base + (j + 1) * d], yi);
+            }
+        }
+    }
+    y
+}
 
-    println!("=== Figure 2: mixer forward time/memory vs N ===\n");
+fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let (h, d) = (8usize, 8usize);
+    let max_n_flare = if quick_mode() { 16_384 } else { 1_048_576 };
+    let max_n_vanilla = if quick_mode() { 2_048 } else { 8_192 };
+    let ns = [1_024usize, 2_048, 4_096, 8_192, 16_384, 65_536, 262_144, 1_048_576];
+
+    println!("=== Figure 2: mixer forward time/memory vs N (native kernels) ===\n");
     let mut all: Vec<Measurement> = Vec::new();
     let mut table = Table::new(&["mixer", "N", "M", "ms/fwd", "MB delta", "ns/token"]);
+    let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(7);
 
-    for mx in &manifest.mixers {
-        if mx.n > max_n {
+    for &n in &ns {
+        if n > max_n_flare && n > max_n_vanilla {
             continue;
         }
-        let rt = Runtime::cpu()?;
-        let exe = rt.load(&mx.name, manifest.dir.join(&mx.file))?;
-        let (h, d, n, m) = (mx.heads, mx.head_dim, mx.n, mx.m);
-        let mut rng = Rng::new(7);
-        let mut fill = |len: usize| -> Vec<f32> {
-            (0..len).map(|_| rng.normal() as f32).collect()
-        };
-        let args = if mx.kind == "vanilla_sdpa" {
-            vec![
-                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
-                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
-                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
-            ]
-        } else {
-            vec![
-                lit_f32(&fill(h * m * d), &[h as i64, m as i64, d as i64])?,
-                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
-                lit_f32(&fill(h * n * d), &[h as i64, n as i64, d as i64])?,
-            ]
-        };
+        let k = fill(&mut rng, h * n * d);
+        let v = fill(&mut rng, h * n * d);
 
-        let rss_before = current_rss_bytes().unwrap_or(0);
-        let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
-        let mut meas = bench.run(&mx.name, || {
-            let _ = rt.run_ref(&exe, &args.iter().collect::<Vec<_>>()).unwrap();
-        });
-        let rss_after = current_rss_bytes().unwrap_or(rss_before);
-        let mb = (rss_after.saturating_sub(rss_before)) as f64 / 1e6;
-        meas.extras.push(("n".into(), n as f64));
-        meas.extras.push(("m".into(), m as f64));
-        meas.extras.push(("rss_delta_mb".into(), mb));
-        table.row(vec![
-            mx.kind.clone(),
-            n.to_string(),
-            if m > 0 { m.to_string() } else { "-".into() },
-            format!("{:.2}", meas.mean_ms()),
-            format!("{mb:.0}"),
-            format!("{:.1}", meas.mean_ms() * 1e6 / n as f64),
-        ]);
-        all.push(meas);
+        if n <= max_n_vanilla {
+            let q = fill(&mut rng, h * n * d);
+            let rss_before = current_rss_bytes().unwrap_or(0);
+            let mut meas = bench.run(&format!("vanilla_n{n}"), || {
+                let _ = naive_attention(&q, &k, &v, h, n, d);
+            });
+            let rss_after = current_rss_bytes().unwrap_or(rss_before);
+            let mb = (rss_after.saturating_sub(rss_before)) as f64 / 1e6;
+            meas.extras.push(("n".into(), n as f64));
+            meas.extras.push(("m".into(), 0.0));
+            meas.extras.push(("rss_delta_mb".into(), mb));
+            table.row(vec![
+                "vanilla".into(),
+                n.to_string(),
+                "-".into(),
+                format!("{:.2}", meas.mean_ms()),
+                format!("{mb:.0}"),
+                format!("{:.1}", meas.mean_ms() * 1e6 / n as f64),
+            ]);
+            all.push(meas);
+        }
+
+        for m in [64usize, 256] {
+            if n > max_n_flare {
+                continue;
+            }
+            let q = fill(&mut rng, h * m * d);
+            let rss_before = current_rss_bytes().unwrap_or(0);
+            let mut meas = bench.run(&format!("flare_n{n}_m{m}"), || {
+                let _ = flare_mixer(&q, &k, &v, h, m, n, d, 1.0);
+            });
+            let rss_after = current_rss_bytes().unwrap_or(rss_before);
+            let mb = (rss_after.saturating_sub(rss_before)) as f64 / 1e6;
+            meas.extras.push(("n".into(), n as f64));
+            meas.extras.push(("m".into(), m as f64));
+            meas.extras.push(("rss_delta_mb".into(), mb));
+            table.row(vec![
+                "flare".into(),
+                n.to_string(),
+                m.to_string(),
+                format!("{:.2}", meas.mean_ms()),
+                format!("{mb:.0}"),
+                format!("{:.1}", meas.mean_ms() * 1e6 / n as f64),
+            ]);
+            all.push(meas);
+        }
     }
     table.print();
 
@@ -76,7 +125,7 @@ fn main() -> anyhow::Result<()> {
     let slope = |kind: &str| -> Option<f64> {
         let pts: Vec<(f64, f64)> = all
             .iter()
-            .filter(|m| m.name.contains(kind))
+            .filter(|m| m.name.starts_with(kind))
             // hold M fixed (64) so the slope isolates the N dependence
             .filter(|m| m.extra("m").map(|v| v == 64.0 || v == 0.0).unwrap_or(true))
             .filter_map(|m| Some((m.extra("n")?, m.mean_ms())))
@@ -89,9 +138,7 @@ fn main() -> anyhow::Result<()> {
         Some((t1 / t0).ln() / (n1 / n0).ln())
     };
     if let (Some(sv), Some(sf)) = (slope("vanilla"), slope("flare")) {
-        println!(
-            "\nlog-log slope: vanilla {sv:.2} (paper: ~2), FLARE {sf:.2} (paper: ~1)"
-        );
+        println!("\nlog-log slope: vanilla {sv:.2} (paper: ~2), FLARE {sf:.2} (paper: ~1)");
     }
     let path = save_results("fig2_scaling", &all)?;
     println!("results written to {path:?}");

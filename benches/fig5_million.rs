@@ -10,7 +10,7 @@
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 use flare::util::stats::peak_rss_bytes;
 
 fn main() -> anyhow::Result<()> {
@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
     let mut all = Vec::new();
     let mut table = Table::new(&["B", "M", "rel-L2", "s/step", "peak RSS GB"]);
     for case in &cases {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("running {}", case.name);
-        let mut m = train_measurement(&rt, &manifest, case, steps)?;
+        let mut m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         let rss = peak_rss_bytes().unwrap_or(0) as f64 / 1e9;
         m.extras.push(("blocks".into(), case.model.blocks as f64));
         m.extras.push(("latents".into(), case.model.m as f64));

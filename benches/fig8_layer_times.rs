@@ -6,64 +6,86 @@
 //! ~1e4 points; physics attention scales linearly but with a larger
 //! constant than FLARE at matched parameter counts.
 //!
-//! Run: cargo bench --bench fig8_layer_times
+//! The baseline mixing layers only exist as AOT artifacts, so this bench
+//! requires the XLA backend: build with `--features xla` against a real
+//! xla_extension.  (The FLARE-only scaling story runs anywhere via
+//! `cargo bench --bench fig2_scaling`.)
+//!
+//! Run: cargo bench --features xla --bench fig8_layer_times
 
-use flare::bench::{quick_mode, save_results, Bench, Table};
-use flare::config::Manifest;
-use flare::model::init_params;
-use flare::runtime::literal::lit_f32;
-use flare::runtime::Runtime;
-use flare::util::rng::Rng;
+#[cfg(feature = "xla")]
+mod xla_only {
+    use flare::bench::{quick_mode, save_results, Bench, Table};
+    use flare::config::Manifest;
+    use flare::model::init_params;
+    use flare::runtime::literal::lit_f32;
+    use flare::runtime::Runtime;
+    use flare::util::rng::Rng;
 
+    pub fn run() -> anyhow::Result<()> {
+        let manifest = Manifest::load(Manifest::default_dir())?;
+        anyhow::ensure!(!manifest.layers.is_empty(), "fig8 artifacts missing");
+        let max_n = if quick_mode() { 4096 } else { usize::MAX };
+
+        println!("=== Figure 8: single-layer execution time ===\n");
+        let mut all = Vec::new();
+        let mut table = Table::new(&["layer", "N", "params", "ms/fwd", "us/token"]);
+        for ly in &manifest.layers {
+            if ly.n > max_n {
+                continue;
+            }
+            let rt = Runtime::cpu()?;
+            let exe = rt.load(&ly.name, manifest.dir.join(&ly.file))?;
+            let params = init_params(&ly.params, ly.param_count, manifest.seed);
+            let p = lit_f32(&params, &[ly.param_count as i64])?;
+            let mut rng = Rng::new(3);
+            let x: Vec<f32> = (0..ly.n * ly.c).map(|_| rng.normal() as f32).collect();
+            let xl = lit_f32(&x, &[ly.n as i64, ly.c as i64])?;
+            let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
+            let mut meas = bench.run(&ly.name, || {
+                let _ = rt.run_ref(&exe, &[&p, &xl]).unwrap();
+            });
+            meas.extras.push(("n".into(), ly.n as f64));
+            table.row(vec![
+                ly.mixer.clone(),
+                ly.n.to_string(),
+                ly.param_count.to_string(),
+                format!("{:.2}", meas.mean_ms()),
+                format!("{:.2}", meas.mean_ms() * 1e3 / ly.n as f64),
+            ]);
+            all.push(meas);
+        }
+        table.print();
+
+        // per-token cost should stay ~flat for flare, grow for vanilla
+        for mixer in ["flare", "vanilla", "transolver"] {
+            let pts: Vec<(f64, f64)> = all
+                .iter()
+                .filter(|m| m.name.starts_with(&format!("ly_{mixer}")))
+                .filter_map(|m| Some((m.extra("n")?, m.mean_ms())))
+                .collect();
+            if pts.len() >= 2 {
+                let slope = (pts[pts.len() - 1].1 / pts[0].1).ln()
+                    / (pts[pts.len() - 1].0 / pts[0].0).ln();
+                println!("{mixer}: log-log time slope {slope:.2}");
+            }
+        }
+        let path = save_results("fig8_layer_times", &all)?;
+        println!("results written to {path:?}");
+        Ok(())
+    }
+}
+
+#[cfg(feature = "xla")]
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    anyhow::ensure!(!manifest.layers.is_empty(), "fig8 artifacts missing");
-    let max_n = if quick_mode() { 4096 } else { usize::MAX };
+    xla_only::run()
+}
 
-    println!("=== Figure 8: single-layer execution time ===\n");
-    let mut all = Vec::new();
-    let mut table = Table::new(&["layer", "N", "params", "ms/fwd", "us/token"]);
-    for ly in &manifest.layers {
-        if ly.n > max_n {
-            continue;
-        }
-        let rt = Runtime::cpu()?;
-        let exe = rt.load(&ly.name, manifest.dir.join(&ly.file))?;
-        let params = init_params(&ly.params, ly.param_count, manifest.seed);
-        let p = lit_f32(&params, &[ly.param_count as i64])?;
-        let mut rng = Rng::new(3);
-        let x: Vec<f32> = (0..ly.n * ly.c).map(|_| rng.normal() as f32).collect();
-        let xl = lit_f32(&x, &[ly.n as i64, ly.c as i64])?;
-        let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
-        let mut meas = bench.run(&ly.name, || {
-            let _ = rt.run_ref(&exe, &[&p, &xl]).unwrap();
-        });
-        meas.extras.push(("n".into(), ly.n as f64));
-        table.row(vec![
-            ly.mixer.clone(),
-            ly.n.to_string(),
-            ly.param_count.to_string(),
-            format!("{:.2}", meas.mean_ms()),
-            format!("{:.2}", meas.mean_ms() * 1e3 / ly.n as f64),
-        ]);
-        all.push(meas);
-    }
-    table.print();
-
-    // per-token cost should stay ~flat for flare, grow for vanilla
-    for mixer in ["flare", "vanilla", "transolver"] {
-        let pts: Vec<(f64, f64)> = all
-            .iter()
-            .filter(|m| m.name.starts_with(&format!("ly_{mixer}")))
-            .filter_map(|m| Some((m.extra("n")?, m.mean_ms())))
-            .collect();
-        if pts.len() >= 2 {
-            let slope = (pts[pts.len() - 1].1 / pts[0].1).ln()
-                / (pts[pts.len() - 1].0 / pts[0].0).ln();
-            println!("{mixer}: log-log time slope {slope:.2}");
-        }
-    }
-    let path = save_results("fig8_layer_times", &all)?;
-    println!("results written to {path:?}");
-    Ok(())
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!(
+        "fig8_layer_times benchmarks the baseline AOT layer artifacts and \
+         requires `--features xla`; see fig2_scaling for the native FLARE \
+         scaling bench"
+    );
 }

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -25,9 +25,9 @@ fn main() -> anyhow::Result<()> {
     let mut grid: BTreeMap<String, BTreeMap<(usize, usize), f64>> = BTreeMap::new();
     let total = cases.len();
     for (i, case) in cases.iter().enumerate() {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         eprintln!("[{}/{total}] {}", i + 1, case.name);
-        let m = train_measurement(&rt, &manifest, case, steps)?;
+        let m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         grid.entry(case.dataset.clone()).or_default().insert(
             (case.model.blocks, case.model.m),
             m.extra("rel_l2").unwrap_or(f64::NAN),

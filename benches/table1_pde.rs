@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 
 use flare::bench::{save_results, sweep_steps, train_measurement, Table};
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -26,9 +26,9 @@ fn main() -> anyhow::Result<()> {
     let mut all = Vec::new();
     let total = cases.len();
     for (i, case) in cases.iter().enumerate() {
-        let rt = Runtime::cpu()?; // fresh runtime per case bounds memory
+        let backend = default_backend()?; // fresh backend per case bounds memory
         eprintln!("[{}/{total}] {}", i + 1, case.name);
-        let m = train_measurement(&rt, &manifest, case, steps)?;
+        let m = train_measurement(backend.as_ref(), &manifest, case, steps)?;
         results
             .entry(case.model.mixer.clone())
             .or_default()

@@ -2,16 +2,15 @@
 //!
 //! Loads the artifact manifest, generates a small Darcy-flow dataset with
 //! the built-in simulator, trains the FLARE surrogate for a handful of
-//! steps, and runs one prediction — all from Rust, with Python nowhere on
-//! the hot path.
+//! steps (XLA backend), and runs one prediction — all from Rust, with
+//! Python nowhere on the hot path.
 //!
-//! Run with:  cargo run --release --example quickstart
+//! Run with:  cargo run --release --features xla --example quickstart
 
 use flare::config::Manifest;
 use flare::data;
 use flare::metrics::rel_l2;
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
+use flare::runtime::{default_backend, BatchInput};
 use flare::train::{train_case, TrainOpts};
 
 fn main() -> anyhow::Result<()> {
@@ -23,10 +22,15 @@ fn main() -> anyhow::Result<()> {
         case.name, case.model.blocks, case.model.m, case.param_count
     );
 
-    // 2. PJRT CPU runtime + training (one XLA execution per optimizer step)
-    let rt = Runtime::cpu()?;
+    // 2. backend + training (one fused optimizer step per execute)
+    let backend = default_backend()?;
+    anyhow::ensure!(
+        backend.supports_training(),
+        "quickstart trains a surrogate; rebuild with --features xla \
+         (or set FLARE_BACKEND=xla)"
+    );
     let out = train_case(
-        &rt,
+        backend.as_ref(),
         &manifest,
         case,
         &TrainOpts {
@@ -46,24 +50,9 @@ fn main() -> anyhow::Result<()> {
     // 3. one-off prediction with the trained parameters
     let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
     let sample = &ds.test_fields[0];
-    let fwd = rt.load("fwd", manifest.artifact_path(case, "fwd")?)?;
     let mut xb = sample.x.clone();
     xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
-    let outs = rt.run(
-        &fwd,
-        &[
-            lit_f32(&out.params, &[case.param_count as i64])?,
-            lit_f32(
-                &xb,
-                &[
-                    case.batch as i64,
-                    case.model.n as i64,
-                    case.model.d_in as i64,
-                ],
-            )?,
-        ],
-    )?;
-    let pred = to_vec_f32(&outs[0])?;
+    let pred = backend.forward(case, &out.params, BatchInput::Fields(&xb), case.batch)?;
     let err = rel_l2(&pred[..sample.y.len()], &sample.y);
     println!("single-sample prediction rel-L2: {err:.4}");
     Ok(())

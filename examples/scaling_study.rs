@@ -6,7 +6,7 @@
 //! Run with:  cargo run --release --example scaling_study [steps]
 
 use flare::config::Manifest;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 use flare::train::{train_case, TrainOpts};
 use flare::util::stats::peak_rss_bytes;
 
@@ -28,9 +28,9 @@ fn main() -> anyhow::Result<()> {
         "case", "B", "M", "rel-L2", "ms/step", "peak RSS MB"
     );
     for case in cases {
-        let rt = Runtime::cpu()?;
+        let backend = default_backend()?;
         let out = train_case(
-            &rt,
+            backend.as_ref(),
             &manifest,
             case,
             &TrainOpts {

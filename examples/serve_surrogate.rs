@@ -11,7 +11,7 @@ use flare::config::Manifest;
 use flare::coordinator::{Server, ServerConfig};
 use flare::data;
 use flare::metrics::rel_l2;
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 use flare::train::{train_case, TrainOpts};
 use flare::util::stats::Timer;
 
@@ -21,9 +21,9 @@ fn main() -> anyhow::Result<()> {
 
     // 1. train briefly so the served model is meaningful
     println!("training surrogate (120 steps)...");
-    let rt = Runtime::cpu()?;
+    let backend = default_backend()?;
     let trained = train_case(
-        &rt,
+        backend.as_ref(),
         &manifest,
         &case,
         &TrainOpts {
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     println!("trained to test rel-L2 {:.4}", trained.final_metric);
-    drop(rt); // the server brings its own runtime on its executor thread
+    drop(backend); // the server brings its own backend on its executor thread
 
     // 2. start the coordinator with the trained weights
     let server = Server::start(
@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             cases: vec![case.name.clone()],
             max_wait: Duration::from_millis(8),
             params: vec![(case.name.clone(), trained.params.clone())],
+            backend: None,
         },
     )?;
 

@@ -1,5 +1,6 @@
 //! Spectral analysis example (paper Section 3.3 / Figure 12): train FLARE
-//! on the elasticity benchmark, then eigendecompose every head's induced
+//! on the elasticity benchmark (XLA backend; falls back to the seeded init
+//! on backends that cannot train), then eigendecompose every head's induced
 //! mixing operator W_h with Algorithm 1 and print the decay profiles,
 //! effective ranks, and the cross-head diversity statistic.
 //!
@@ -7,9 +8,8 @@
 
 use flare::config::Manifest;
 use flare::data;
-use flare::model::{find_entry, param_slice};
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
+use flare::model::{find_entry, init_params, param_slice};
+use flare::runtime::default_backend;
 use flare::spectral::{eig_lowrank, spectra_diversity, HeadSpectrum};
 use flare::train::{train_case, TrainOpts};
 
@@ -20,29 +20,32 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(200);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let case = manifest.case("core_elas_flare")?;
-    let rt = Runtime::cpu()?;
+    let backend = default_backend()?;
 
-    println!("training FLARE on elasticity ({steps} steps)...");
-    let out = train_case(
-        &rt,
-        &manifest,
-        case,
-        &TrainOpts {
-            steps: Some(steps),
-            ..Default::default()
-        },
-    )?;
-    println!("test rel-L2: {:.4}\n", out.final_metric);
+    let params = if backend.supports_training() && steps > 0 {
+        println!("training FLARE on elasticity ({steps} steps)...");
+        let out = train_case(
+            backend.as_ref(),
+            &manifest,
+            case,
+            &TrainOpts {
+                steps: Some(steps),
+                ..Default::default()
+            },
+        )?;
+        println!("test rel-L2: {:.4}\n", out.final_metric);
+        out.params
+    } else {
+        println!(
+            "backend {:?} cannot train; analyzing the seeded init instead\n",
+            backend.name()
+        );
+        init_params(&case.params, case.param_count, manifest.seed)
+    };
 
-    // per-block keys at a real test sample, via the qk artifact
+    // per-block keys at a real test sample, via the backend
     let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
-    let qk = rt.load("qk", manifest.artifact_path(case, "qk")?)?;
-    let x = lit_f32(
-        &ds.test_fields[0].x,
-        &[case.model.n as i64, case.model.d_in as i64],
-    )?;
-    let params_lit = lit_f32(&out.params, &[case.param_count as i64])?;
-    let ks = rt.run_ref(&qk, &[&params_lit, &x])?;
+    let ks = backend.qk_keys(&manifest, case, &params, &ds.test_fields[0].x)?;
 
     let (h, m, d, n) = (
         case.model.heads,
@@ -51,10 +54,9 @@ fn main() -> anyhow::Result<()> {
         case.model.n,
     );
     println!("eigenvalue decay per head (normalized to lambda_1 = 1):");
-    for (b, klit) in ks.iter().enumerate() {
-        let kvals = to_vec_f32(klit)?;
+    for (b, kvals) in ks.iter().enumerate() {
         let latents = find_entry(&case.params, &format!("blk{b}.mix.latents"))?;
-        let q_all = param_slice(&out.params, latents);
+        let q_all = param_slice(&params, latents);
         let mut spectra = Vec::new();
         for head in 0..h {
             let q = &q_all[head * m * d..(head + 1) * m * d];

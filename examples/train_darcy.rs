@@ -9,7 +9,7 @@
 
 use flare::config::Manifest;
 use flare::model::{save_checkpoint, Checkpoint};
-use flare::runtime::Runtime;
+use flare::runtime::default_backend;
 use flare::train::{train_case, TrainOpts};
 use flare::util::json::Json;
 
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(300);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let case = manifest.case("core_darcy_flare")?;
-    let rt = Runtime::cpu()?;
+    let backend = default_backend()?;
 
     println!("=== FLARE end-to-end training: Darcy flow surrogate ===");
     println!(
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let out = train_case(
-        &rt,
+        backend.as_ref(),
         &manifest,
         case,
         &TrainOpts {

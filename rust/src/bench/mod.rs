@@ -190,13 +190,13 @@ pub fn sweep_steps(full: usize) -> usize {
 /// `rel_l2`/`accuracy`, `params`, and `ms_per_step` extras — the shared
 /// path for every table/figure training sweep.
 pub fn train_measurement(
-    rt: &crate::runtime::Runtime,
+    backend: &dyn crate::runtime::Backend,
     manifest: &crate::config::Manifest,
     case: &crate::config::CaseCfg,
     steps: usize,
 ) -> anyhow::Result<Measurement> {
     let out = crate::train::train_case(
-        rt,
+        backend,
         manifest,
         case,
         &crate::train::TrainOpts {

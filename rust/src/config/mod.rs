@@ -41,7 +41,7 @@ impl ParamEntry {
 }
 
 /// Model hyperparameters (mirrors `compile.models.ModelCfg`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelCfg {
     pub mixer: String,
     pub n: usize,
@@ -53,8 +53,10 @@ pub struct ModelCfg {
     pub blocks: usize,
     pub kv_layers: usize,
     pub ffn_layers: usize,
+    pub io_layers: usize,
     pub latent_sa_blocks: usize,
     pub shared_latents: bool,
+    pub scale: f64,
     pub task: String,
     pub vocab: usize,
     pub num_classes: usize,
@@ -73,8 +75,10 @@ impl ModelCfg {
             blocks: j.req_usize("blocks")?,
             kv_layers: j.get("kv_layers").as_usize().unwrap_or(3),
             ffn_layers: j.get("ffn_layers").as_usize().unwrap_or(3),
+            io_layers: j.get("io_layers").as_usize().unwrap_or(2),
             latent_sa_blocks: j.get("latent_sa_blocks").as_usize().unwrap_or(0),
             shared_latents: j.get("shared_latents").as_bool().unwrap_or(false),
+            scale: j.get("scale").as_f64().unwrap_or(1.0),
             task: j
                 .get("task")
                 .as_str()
@@ -293,6 +297,8 @@ mod tests {
         let c = m.case("t").unwrap();
         assert_eq!(c.model.mixer, "flare");
         assert_eq!(c.model.head_dim(), 4);
+        assert_eq!(c.model.io_layers, 1);
+        assert_eq!(c.model.scale, 1.0);
         assert_eq!(c.params[0].shape, vec![2, 5]);
         assert_eq!(m.mixers[0].n, 64);
         assert!(m.case("missing").is_err());

@@ -1,15 +1,16 @@
 //! Layer-3 coordination: request routing, shape-bucketed dynamic batching,
-//! and the channel-fed executor thread that owns the PJRT runtime.
+//! and the channel-fed executor thread that owns the execution backend.
 //!
-//! Architecture (vLLM-router-style, adapted to shape-specialized XLA
-//! executables):
+//! Architecture (vLLM-router-style, adapted to shape-bucketed batching —
+//! the XLA backend is shape-specialized; the native backend reuses the same
+//! buckets so batches stay dense):
 //!
 //! ```text
 //!   clients ──mpsc──▶ executor thread
 //!                      ├─ Router: pick (case, N) bucket, pad input
 //!                      ├─ Batcher: per-bucket queues, size/deadline flush
-//!                      ├─ Runtime: cached PJRT executables, one execute
-//!                      │           per flushed batch
+//!                      ├─ Backend: native Rust forward or cached PJRT
+//!                      │           executables, one call per flushed batch
 //!                      └─ reply channels + metrics Registry
 //! ```
 

@@ -1,8 +1,9 @@
-//! The serving engine: a dedicated executor thread owns the (non-`Send`)
-//! PJRT runtime; clients talk to it through channels.
+//! The serving engine: a dedicated executor thread owns the execution
+//! backend (which may be the non-`Send` PJRT runtime); clients talk to it
+//! through channels.
 //!
 //!   client threads -> mpsc -> [executor thread: router -> batcher ->
-//!                              PJRT execute -> reply channels]
+//!                              Backend::forward -> reply channels]
 //!
 //! Batches flush when full (`bucket.batch`) or when the oldest request has
 //! waited `max_wait` (latency/throughput knob).  All latency, batch-size and
@@ -13,13 +14,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::Manifest;
+use crate::config::{CaseCfg, Manifest};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::router::{Bucket, Router};
 use crate::metrics::Registry;
 use crate::model::init_params;
-use crate::runtime::literal::{lit_f32, to_vec_f32};
-use crate::runtime::Runtime;
+use crate::runtime::{default_backend, make_backend, Backend, BatchInput};
 
 /// A completed inference.
 #[derive(Debug)]
@@ -44,12 +44,14 @@ enum Msg {
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// cases (by name) to serve; each must have a `fwd` artifact
+    /// cases (by name) to serve; each must be a field model
     pub cases: Vec<String>,
     /// flush deadline for partially filled batches
     pub max_wait: Duration,
     /// optional trained parameters per case (defaults to seeded init)
     pub params: Vec<(String, Vec<f32>)>,
+    /// execution backend name ("native" / "xla"); None picks the default
+    pub backend: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +60,7 @@ impl Default for ServerConfig {
             cases: vec!["core_darcy_flare".into()],
             max_wait: Duration::from_millis(20),
             params: vec![],
+            backend: None,
         }
     }
 }
@@ -70,7 +73,7 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the executor thread; compiles every served artifact up front.
+    /// Start the executor thread; prepares every served case up front.
     pub fn start(manifest_dir: std::path::PathBuf, cfg: ServerConfig) -> anyhow::Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Registry::new());
@@ -81,7 +84,7 @@ impl Server {
             .name("flare-executor".into())
             .spawn(move || executor_main(manifest_dir, cfg, rx, ready_tx, metrics_thread))?;
 
-        // wait for compilation to finish (or fail) before returning
+        // wait for backend preparation to finish (or fail) before returning
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
@@ -127,8 +130,8 @@ impl Drop for Server {
 
 struct BucketState {
     bucket: Bucket,
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
-    params: xla::Literal,
+    case: CaseCfg,
+    params: Vec<f32>,
 }
 
 fn executor_main(
@@ -138,10 +141,13 @@ fn executor_main(
     ready_tx: mpsc::Sender<anyhow::Result<()>>,
     metrics: Arc<Registry>,
 ) -> anyhow::Result<()> {
-    // ---- startup: manifest, runtime, compile every served case ----------
-    let setup = (|| -> anyhow::Result<(Runtime, Vec<BucketState>)> {
+    // ---- startup: manifest, backend, prepare every served case ----------
+    let setup = (|| -> anyhow::Result<(Box<dyn Backend>, Vec<BucketState>)> {
         let manifest = Manifest::load(&manifest_dir)?;
-        let rt = Runtime::cpu()?;
+        let backend = match &cfg.backend {
+            Some(kind) => make_backend(kind)?,
+            None => default_backend()?,
+        };
         let mut states = Vec::new();
         for name in &cfg.cases {
             let case = manifest.case(name)?;
@@ -149,10 +155,7 @@ fn executor_main(
                 !case.model.is_classification(),
                 "serving supports field models"
             );
-            let exe = rt.load(
-                &format!("{}_fwd", case.name),
-                manifest.artifact_path(case, "fwd")?,
-            )?;
+            backend.prepare(&manifest, case)?;
             let p = cfg
                 .params
                 .iter()
@@ -160,7 +163,6 @@ fn executor_main(
                 .map(|(_, p)| p.clone())
                 .unwrap_or_else(|| init_params(&case.params, case.param_count, manifest.seed));
             anyhow::ensure!(p.len() == case.param_count, "params length mismatch");
-            let params = lit_f32(&p, &[case.param_count as i64])?;
             states.push(BucketState {
                 bucket: Bucket {
                     case: case.name.clone(),
@@ -169,14 +171,14 @@ fn executor_main(
                     d_out: case.model.d_out,
                     batch: case.batch,
                 },
-                exe,
-                params,
+                case: case.clone(),
+                params: p,
             });
         }
-        Ok((rt, states))
+        Ok((backend, states))
     })();
 
-    let (rt, states) = match setup {
+    let (backend, states) = match setup {
         Ok(v) => {
             let _ = ready_tx.send(Ok(()));
             v
@@ -239,7 +241,7 @@ fn executor_main(
         for batch in ready {
             let st = state_of(&batch.bucket);
             let b = st.bucket.clone();
-            // split oversized batches down to the bucket's compiled size
+            // split oversized batches down to the bucket's execution size
             for chunk in batch.items.chunks(b.batch) {
                 let exec_t = Instant::now();
                 let real = chunk.len();
@@ -249,14 +251,14 @@ fn executor_main(
                 }
                 // pad the batch dimension with zeros
                 x.resize(b.batch * b.n * b.d_in, 0.0);
-                let result = lit_f32(&x, &[b.batch as i64, b.n as i64, b.d_in as i64])
-                    .and_then(|xl| rt.run_ref(&st.exe, &[&st.params, &xl]))
-                    .and_then(|outs| to_vec_f32(&outs[0]));
+                let result =
+                    backend.forward(&st.case, &st.params, BatchInput::Fields(&x), b.batch);
                 match result {
                     Ok(y) => {
                         let per = b.n * b.d_out;
                         for (i, item) in chunk.iter().enumerate() {
-                            let yi = router.trim_output(&b, &y[i * per..(i + 1) * per], item.payload.n);
+                            let yi =
+                                router.trim_output(&b, &y[i * per..(i + 1) * per], item.payload.n);
                             let latency = item.enqueued.elapsed();
                             metrics.record("latency_ms", latency.as_secs_f64() * 1e3);
                             metrics.record("batch_size", real as f64);

@@ -7,16 +7,25 @@
 //!   mixer as a streaming Pallas kernel, validated against a pure-jnp oracle.
 //! * **Layer 2** (`python/compile/`) — JAX models (FLARE + every baseline
 //!   the paper evaluates), AOT-lowered once to HLO text artifacts.
-//! * **Layer 3** (this crate) — everything at runtime: PJRT execution,
-//!   dataset simulators, the training orchestrator, the batched inference
-//!   coordinator, the spectral-analysis engine, and the benchmark harness
-//!   that regenerates every table and figure in the paper.
+//! * **Layer 3** (this crate) — everything at runtime: a swappable
+//!   execution [`runtime::Backend`] (pure-Rust FLARE forward by default,
+//!   PJRT artifact execution behind `--features xla`), dataset simulators,
+//!   the training orchestrator, the batched inference coordinator, the
+//!   spectral-analysis engine, and the benchmark harness that regenerates
+//!   every table and figure in the paper.
 //!
-//! Python never runs on the training/serving hot path; after
-//! `make artifacts` the `flare` binary is self-contained.
+//! Python never runs on the training/serving hot path; the default build
+//! is self-contained (no artifacts, no native libraries), and after
+//! `make artifacts` the `xla` feature drives the compiled graphs.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
+
+// Numeric kernel code indexes heavily into flat row-major buffers; iterator
+// rewrites of those loops obscure the math for no wins.  Mirrored model
+// signatures (resmlp & friends) carry the same argument lists as the
+// python layer they must stay in lockstep with.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod bench;
 pub mod cli;

@@ -198,6 +198,47 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// f32 kernels: the native FLARE forward works in f32 (matching the XLA
+// artifacts), so the hot matmuls get f32 variants of the same ikj loop.
+// ---------------------------------------------------------------------------
+
+/// `C[m, n] = A[m, k] @ B[k, n]`, all row-major f32 slices.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_f32: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_f32: rhs size");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// f32 dot product.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x` in f32.
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +295,29 @@ mod tests {
     fn matvec_known() {
         let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
         assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_f32_matches_f64() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (5, 7, 4);
+        let a32: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b32: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let c32 = matmul_f32(&a32, &b32, m, k, n);
+        let a = Matrix::from_fn(m, k, |i, j| a32[i * k + j] as f64);
+        let b = Matrix::from_fn(k, n, |i, j| b32[i * n + j] as f64);
+        let c = a.matmul(&b);
+        for i in 0..m * n {
+            assert!((c32[i] as f64 - c.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn f32_helpers() {
+        assert_eq!(dot_f32(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        let mut y = vec![1.0f32, 1.0];
+        axpy_f32(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
     }
 
     #[test]

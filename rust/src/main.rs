@@ -5,17 +5,19 @@
 //!   gen-data   --dataset <name>  run a simulator, print dataset statistics
 //!   train      --case <name>     train a case end-to-end, report metrics
 //!   serve      --case <name>     start the serving engine, drive demo load
-//!   spectra    --case <name>     Algorithm-1 eigenanalysis of a trained model
+//!   spectra    --case <name>     Algorithm-1 eigenanalysis of a model
 //!
-//! Global options: --artifacts <dir> (default ./artifacts or $FLARE_ARTIFACTS)
+//! Global options:
+//!   --artifacts <dir>   (default ./artifacts or $FLARE_ARTIFACTS)
+//!   --backend <name>    native | xla (default: xla when compiled in, else
+//!                       native; $FLARE_BACKEND overrides)
 
 use flare::cli::Args;
 use flare::config::Manifest;
 use flare::coordinator::{Server, ServerConfig};
 use flare::data;
 use flare::model::{find_entry, init_params, param_slice};
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
+use flare::runtime::{default_backend, make_backend, Backend};
 use flare::spectral::{eig_lowrank, spectra_diversity, HeadSpectrum};
 use flare::train::{train_case, TrainOpts};
 use flare::util::stats::Timer;
@@ -42,6 +44,13 @@ fn manifest_dir(args: &Args) -> std::path::PathBuf {
     args.get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir)
+}
+
+fn backend_from_args(args: &Args) -> anyhow::Result<Box<dyn Backend>> {
+    match args.get("backend") {
+        Some(kind) => make_backend(kind),
+        None => default_backend(),
+    }
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
@@ -72,14 +81,15 @@ fn print_help() {
            info                        manifest + artifact summary\n\
            gen-data --dataset <name>   run a simulator, print statistics\n\
                     [--count K] [--stats]\n\
-           train    --case <name>      train end-to-end\n\
+           train    --case <name>      train end-to-end (xla backend)\n\
                     [--steps N] [--eval-every K] [--ckpt FILE] [--quiet]\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
                     [--steps N]\n\
          \n\
-         GLOBAL: --artifacts <dir>     artifacts directory\n"
+         GLOBAL: --artifacts <dir>     artifacts directory\n\
+                 --backend <name>      native | xla ($FLARE_BACKEND)\n"
     );
 }
 
@@ -168,7 +178,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         .get("case")
         .ok_or_else(|| anyhow::anyhow!("--case required"))?;
     let case = m.case(name)?;
-    let rt = Runtime::cpu()?;
+    let backend = backend_from_args(args)?;
     let opts = TrainOpts {
         steps: args.get_usize("steps")?,
         eval_every: args.get_usize("eval-every")?.unwrap_or(0),
@@ -176,10 +186,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         log_every: if args.has_flag("quiet") { 0 } else { 25 },
     };
     println!(
-        "training {name}: {} params, dataset {}, batch {}",
-        case.param_count, case.dataset, case.batch
+        "training {name} on {} backend: {} params, dataset {}, batch {}",
+        backend.name(),
+        case.param_count,
+        case.dataset,
+        case.batch
     );
-    let out = train_case(&rt, &m, case, &opts)?;
+    let out = train_case(backend.as_ref(), &m, case, &opts)?;
     println!(
         "done: {} steps in {:.1}s ({:.1} ms/step p50 {:.1})",
         out.steps, out.wall_s, out.step_ms.mean, out.step_ms.p50
@@ -225,6 +238,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             cases: vec![name.clone()],
             max_wait: std::time::Duration::from_millis(10),
             params: vec![],
+            backend: args.get("backend").map(str::to_string),
         },
     )?;
     let ds = data::build(&case.dataset, &case.dataset_meta, m.seed)?;
@@ -258,18 +272,14 @@ fn cmd_spectra(args: &Args) -> anyhow::Result<()> {
     let m = Manifest::load(manifest_dir(args))?;
     let name = args.get_or("case", "core_elas_flare").to_string();
     let case = m.case(&name)?;
-    anyhow::ensure!(
-        case.artifacts.contains_key("qk"),
-        "case {name} has no qk artifact"
-    );
-    let rt = Runtime::cpu()?;
+    let backend = backend_from_args(args)?;
 
     // optionally train first so the spectra reflect learned routing
     let steps = args.get_usize("steps")?.unwrap_or(100);
-    let params_host = if steps > 0 {
+    let params_host = if steps > 0 && backend.supports_training() {
         println!("training {steps} steps first...");
         let out = train_case(
-            &rt,
+            backend.as_ref(),
             &m,
             case,
             &TrainOpts {
@@ -280,16 +290,19 @@ fn cmd_spectra(args: &Args) -> anyhow::Result<()> {
         println!("trained to rel-L2 {:.4}", out.final_metric);
         out.params
     } else {
+        if steps > 0 {
+            println!(
+                "backend {:?} cannot train; analyzing the seeded init instead",
+                backend.name()
+            );
+        }
         init_params(&case.params, case.param_count, m.seed)
     };
 
-    // evaluate per-block keys at a test sample via the qk artifact
+    // evaluate per-block keys at a test sample through the backend
     let ds = data::build(&case.dataset, &case.dataset_meta, m.seed)?;
     let sample = &ds.test_fields[0];
-    let qk_exe = rt.load(&format!("{name}_qk"), m.artifact_path(case, "qk")?)?;
-    let params_lit = lit_f32(&params_host, &[case.param_count as i64])?;
-    let x = lit_f32(&sample.x, &[case.model.n as i64, case.model.d_in as i64])?;
-    let ks = rt.run_ref(&qk_exe, &[&params_lit, &x])?;
+    let ks = backend.qk_keys(&m, case, &params_host, &sample.x)?;
 
     let (h, mm, d, n) = (
         case.model.heads,
@@ -301,8 +314,8 @@ fn cmd_spectra(args: &Args) -> anyhow::Result<()> {
         "\nSpectra (paper Fig. 12): blocks={} heads={h} M={mm} D={d} N={n}",
         case.model.blocks
     );
-    for (b, klit) in ks.iter().enumerate() {
-        let kvals = to_vec_f32(klit)?; // [H, N, D]
+    for (b, kvals) in ks.iter().enumerate() {
+        // kvals: [H, N, D]
         let latents = find_entry(&case.params, &format!("blk{b}.mix.latents"))?;
         let q_all = param_slice(&params_host, latents); // [H, M, D] or [M, D]
         let mut spectra = Vec::new();

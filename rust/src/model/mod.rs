@@ -1,11 +1,15 @@
-//! Rust-side model state: parameter initialization (bit-identical to
-//! python), flat-vector views, and checkpoint save/load.
+//! Rust-side model state and numerics: parameter initialization
+//! (bit-identical to python), the parameter packing spec, the pure-Rust
+//! FLARE forward pass, flat-vector views, and checkpoint save/load.
 
 pub mod checkpoint;
+pub mod forward;
 pub mod init;
+pub mod spec;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
 pub use init::init_params;
+pub use spec::{build_layer_spec, build_spec, index_by_name};
 
 use crate::config::ParamEntry;
 

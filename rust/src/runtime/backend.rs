@@ -1,0 +1,216 @@
+//! The [`Backend`] trait: a swappable execution engine for model forward
+//! passes, training steps and spectral key extraction.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::NativeBackend`] (default) — the FLARE forward pass in
+//!   pure Rust; runs anywhere, no artifacts or native libraries needed.
+//! * `XlaBackend` (`--features xla`) — executes the AOT-compiled HLO
+//!   artifacts through PJRT; the only backend that supports the fused AdamW
+//!   train step.
+//!
+//! Selection: [`default_backend`] honours `FLARE_BACKEND=native|xla`, else
+//! picks `xla` when the feature is compiled in, `native` otherwise.
+//! Backends are deliberately not `Send` (the PJRT client is `Rc`-based);
+//! the serving coordinator constructs its backend on the executor thread.
+
+use crate::config::{CaseCfg, Manifest};
+
+/// One gathered batch of model inputs.
+pub enum BatchInput<'a> {
+    /// Field regression: `[batch * n * d_in]` row-major.
+    Fields(&'a [f32]),
+    /// Sequence classification: `[batch * n]` token ids.
+    Tokens(&'a [i32]),
+}
+
+/// One gathered batch of training targets.
+pub enum BatchTarget<'a> {
+    /// Field regression: `[batch * n * d_out]`.
+    Fields(&'a [f32]),
+    /// Classification: `[batch]` labels.
+    Labels(&'a [i32]),
+}
+
+/// Host-side optimizer state threaded through [`Backend::train_step`].
+#[derive(Debug, Clone)]
+pub struct OptState {
+    pub params: Vec<f32>,
+    /// AdamW first moment
+    pub m: Vec<f32>,
+    /// AdamW second moment
+    pub v: Vec<f32>,
+}
+
+impl OptState {
+    /// Fresh state around initialized parameters (zero moments).
+    pub fn new(params: Vec<f32>) -> OptState {
+        let len = params.len();
+        OptState {
+            params,
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+        }
+    }
+}
+
+/// A model execution engine.
+pub trait Backend {
+    /// Short identifier ("native" / "xla").
+    fn name(&self) -> &'static str;
+
+    /// Make `case` ready for repeated [`Backend::forward`] calls (build the
+    /// native plan / compile the `fwd` artifact).  Idempotent.
+    fn prepare(&self, manifest: &Manifest, case: &CaseCfg) -> anyhow::Result<()>;
+
+    /// Batched forward pass.  Regression returns `[batch * n * d_out]`,
+    /// classification `[batch * num_classes]` logits.
+    fn forward(
+        &self,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// Whether [`Backend::train_step`] is available.
+    fn supports_training(&self) -> bool {
+        false
+    }
+
+    /// One fused AdamW optimizer step: updates `state` in place, returns the
+    /// training loss.
+    fn train_step(
+        &self,
+        manifest: &Manifest,
+        case: &CaseCfg,
+        state: &mut OptState,
+        step: usize,
+        lr: f64,
+        input: BatchInput<'_>,
+        target: BatchTarget<'_>,
+    ) -> anyhow::Result<f64> {
+        let _ = (manifest, case, state, step, lr, input, target);
+        anyhow::bail!(
+            "the {:?} backend does not support training; build with \
+             --features xla and select FLARE_BACKEND=xla",
+            self.name()
+        )
+    }
+
+    /// Metric over one evaluation batch (mean rel-L2 for regression,
+    /// accuracy for classification).  The default routes through
+    /// [`Backend::forward`] plus host-side metrics; the XLA backend
+    /// overrides it to execute the compiled `eval` artifact when the case
+    /// ships one (most training-sweep cases emit only `step`/`eval`, no
+    /// `fwd`).
+    fn eval_batch(
+        &self,
+        manifest: &Manifest,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        target: BatchTarget<'_>,
+    ) -> anyhow::Result<f64> {
+        let _ = manifest;
+        host_eval_batch(self, case, params, input, target)
+    }
+
+    /// Per-block head keys `[H, N, D]` at a single input `x [n, d_in]`, for
+    /// the spectral pipeline (paper Algorithm 1 inputs).
+    fn qk_keys(
+        &self,
+        manifest: &Manifest,
+        case: &CaseCfg,
+        params: &[f32],
+        x: &[f32],
+    ) -> anyhow::Result<Vec<Vec<f32>>>;
+}
+
+/// Forward pass plus host-side metric — the backend-agnostic evaluation
+/// path shared by the trait default and the XLA backend's fallback.
+pub fn host_eval_batch<B: Backend + ?Sized>(
+    backend: &B,
+    case: &CaseCfg,
+    params: &[f32],
+    input: BatchInput<'_>,
+    target: BatchTarget<'_>,
+) -> anyhow::Result<f64> {
+    let per = (case.model.n * case.model.d_out).max(1);
+    let batch = match &target {
+        BatchTarget::Fields(y) => y.len() / per,
+        BatchTarget::Labels(labels) => labels.len(),
+    };
+    anyhow::ensure!(batch > 0, "empty evaluation batch");
+    let pred = backend.forward(case, params, input, batch)?;
+    Ok(match target {
+        BatchTarget::Fields(y) => crate::metrics::mean_rel_l2(&pred, y, per),
+        BatchTarget::Labels(labels) => {
+            crate::metrics::accuracy(&pred, labels, case.model.num_classes)
+        }
+    })
+}
+
+/// Instantiate a backend by name.
+pub fn make_backend(kind: &str) -> anyhow::Result<Box<dyn Backend>> {
+    match kind {
+        "native" => Ok(Box::new(super::native::NativeBackend::new())),
+        #[cfg(feature = "xla")]
+        "xla" => Ok(Box::new(super::pjrt::XlaBackend::new()?)),
+        #[cfg(not(feature = "xla"))]
+        "xla" => anyhow::bail!("backend \"xla\" requires building with --features xla"),
+        other => anyhow::bail!("unknown backend {other:?} (expected \"native\" or \"xla\")"),
+    }
+}
+
+/// The backend this build would pick by default (before env override).
+pub fn default_backend_kind() -> &'static str {
+    if cfg!(feature = "xla") {
+        "xla"
+    } else {
+        "native"
+    }
+}
+
+/// Instantiate the default backend, honouring `FLARE_BACKEND`.
+pub fn default_backend() -> anyhow::Result<Box<dyn Backend>> {
+    if let Ok(kind) = std::env::var("FLARE_BACKEND") {
+        return make_backend(&kind);
+    }
+    make_backend(default_backend_kind())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_backend_native() {
+        let b = make_backend("native").unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(!b.supports_training() || cfg!(feature = "xla"));
+    }
+
+    #[test]
+    fn make_backend_unknown_errors() {
+        assert!(make_backend("bogus").is_err());
+    }
+
+    #[test]
+    fn default_kind_consistent_with_features() {
+        let kind = default_backend_kind();
+        if cfg!(feature = "xla") {
+            assert_eq!(kind, "xla");
+        } else {
+            assert_eq!(kind, "native");
+        }
+    }
+
+    #[test]
+    fn opt_state_zero_moments() {
+        let st = OptState::new(vec![1.0, 2.0]);
+        assert_eq!(st.m, vec![0.0, 0.0]);
+        assert_eq!(st.v, vec![0.0, 0.0]);
+        assert_eq!(st.params.len(), 2);
+    }
+}

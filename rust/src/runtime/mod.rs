@@ -1,186 +1,32 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Execution backends behind the [`Backend`] trait.
 //!
-//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** is the
-//! interchange format (`HloModuleProto::from_text_file` reassigns the 64-bit
-//! instruction ids that xla_extension 0.5.1 would otherwise reject), and
-//! every artifact is lowered with `return_tuple=True`, so executions return
-//! one tuple literal that [`Runtime::run`] decomposes.
+//! * [`NativeBackend`] (default) — the FLARE forward pass in pure Rust
+//!   (`model::forward`), batch-parallel over OS threads.  Works on a clean
+//!   machine with no artifacts and no native libraries.
+//! * `XlaBackend` (`--features xla`) — PJRT execution of the AOT HLO
+//!   artifacts emitted by `python/compile/aot.py`; the only backend with
+//!   the fused AdamW train step.
 //!
-//! `PjRtClient` is `Rc`-based (not `Send`); the serving coordinator keeps a
-//! `Runtime` on a dedicated executor thread and communicates via channels
-//! (see `coordinator/`).
+//! [`default_backend`] selects at runtime (`FLARE_BACKEND=native|xla`
+//! overrides); the serving coordinator, trainer, benches and CLI all go
+//! through the trait, so every later optimization can swap engines without
+//! touching call sites.
 
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "xla")]
 pub mod literal;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
+pub use backend::{
+    default_backend, default_backend_kind, host_eval_batch, make_backend, Backend, BatchInput,
+    BatchTarget, OptState,
+};
+pub use native::NativeBackend;
 
-use crate::util::stats::Timer;
-
+#[cfg(feature = "xla")]
 pub use literal::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, to_vec_i32};
-
-/// PJRT CPU client + executable cache keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// compile times per artifact (seconds), for the perf report
-    compile_times: RefCell<HashMap<String, f64>>,
-}
-
-impl Runtime {
-    /// Create a CPU runtime.
-    pub fn cpu() -> anyhow::Result<Runtime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            cache: RefCell::new(HashMap::new()),
-            compile_times: RefCell::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by `name`).
-    pub fn load(
-        &self,
-        name: &str,
-        path: impl AsRef<Path>,
-    ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(exe));
-        }
-        let timer = Timer::start();
-        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
-            .map_err(|e| anyhow::anyhow!("parsing {:?}: {e:?}", path.as_ref()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.compile_times
-            .borrow_mut()
-            .insert(name.to_string(), timer.elapsed_s());
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), Rc::clone(&exe));
-        Ok(exe)
-    }
-
-    /// Execute a compiled artifact on literal inputs; returns the decomposed
-    /// output tuple.
-    pub fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
-        let outs = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
-    }
-
-    /// Like [`Runtime::run`] but borrows the argument literals (avoids
-    /// copying large host buffers such as parameter vectors).
-    pub fn run_ref(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[&xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
-        let outs = exe
-            .execute::<&xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
-    }
-
-    /// Execute and keep the (tuple) result on device; used when the caller
-    /// only needs a small slice of the output back on the host.
-    pub fn run_raw(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> anyhow::Result<xla::PjRtBuffer> {
-        let mut outs = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-        Ok(outs.remove(0).remove(0))
-    }
-
-    /// Number of cached executables.
-    pub fn cached(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Evict one cached executable (memory control for big sweeps).
-    pub fn evict(&self, name: &str) {
-        self.cache.borrow_mut().remove(name);
-    }
-
-    /// Evict everything.
-    pub fn evict_all(&self) {
-        self.cache.borrow_mut().clear();
-    }
-
-    /// Total artifact compile time recorded so far (seconds).
-    pub fn total_compile_s(&self) -> f64 {
-        self.compile_times.borrow().values().sum()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Build a trivial computation in-process (no artifact dependency):
-    /// f(x, y) = (x + y, x * y) as a tuple.
-    fn tiny_exe(rt: &Runtime) -> Rc<xla::PjRtLoadedExecutable> {
-        let b = xla::XlaBuilder::new("tiny");
-        let shape = xla::Shape::array::<f32>(vec![4]);
-        let x = b.parameter_s(0, &shape, "x").unwrap();
-        let y = b.parameter_s(1, &shape, "y").unwrap();
-        let sum = (x.clone() + y.clone()).unwrap();
-        let prod = (x * y).unwrap();
-        let tup = b.tuple(&[sum, prod]).unwrap();
-        let comp = tup.build().unwrap();
-        Rc::new(rt.client.compile(&comp).unwrap())
-    }
-
-    #[test]
-    fn execute_and_untuple() {
-        let rt = Runtime::cpu().unwrap();
-        let exe = tiny_exe(&rt);
-        let x = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
-        let y = lit_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
-        let outs = rt.run(&exe, &[x, y]).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(to_vec_f32(&outs[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
-        assert_eq!(
-            to_vec_f32(&outs[1]).unwrap(),
-            vec![10.0, 40.0, 90.0, 160.0]
-        );
-    }
-
-    #[test]
-    fn cache_round_trip() {
-        let rt = Runtime::cpu().unwrap();
-        assert_eq!(rt.cached(), 0);
-        // cache API exercised through load() in the integration tests which
-        // need artifacts; here we check eviction bookkeeping only.
-        rt.evict("nothing");
-        rt.evict_all();
-        assert_eq!(rt.cached(), 0);
-    }
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{Runtime, XlaBackend};

@@ -1,0 +1,170 @@
+//! [`NativeBackend`]: the FLARE forward pass in pure Rust.
+//!
+//! No artifacts, no PJRT, no shape specialization — plans are built from
+//! the manifest's packing spec (or re-declared from the model config via
+//! [`crate::model::build_spec`] when the manifest carries none), and batches
+//! fan out across OS threads with [`crate::util::threadpool::parallel_map`].
+//!
+//! This is what makes `cargo build && cargo test` — and serving — work on a
+//! clean machine; the XLA path stays available behind `--features xla` for
+//! training and baseline mixers.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use crate::config::{CaseCfg, Manifest, ModelCfg, ParamEntry};
+use crate::model::forward::{self, ParamTable};
+use crate::model::{build_spec, index_by_name};
+use crate::runtime::backend::{Backend, BatchInput};
+use crate::util::threadpool::parallel_map;
+
+/// Resolved execution plan for one case.
+struct Plan {
+    model: ModelCfg,
+    entries: BTreeMap<String, ParamEntry>,
+    param_count: usize,
+}
+
+impl Plan {
+    fn build(case: &CaseCfg) -> anyhow::Result<Plan> {
+        let model = case.model.clone();
+        forward::check_native_supported(&model)
+            .map_err(|e| anyhow::anyhow!("case {}: {e}", case.name))?;
+        let (entries, param_count) = if case.params.is_empty() {
+            build_spec(&model)?
+        } else {
+            (case.params.clone(), case.param_count)
+        };
+        let covered: usize = entries.iter().map(|e| e.size).sum();
+        anyhow::ensure!(
+            covered == param_count,
+            "case {}: packing spec covers {covered} of {param_count} parameters",
+            case.name
+        );
+        Ok(Plan {
+            model,
+            entries: index_by_name(&entries),
+            param_count,
+        })
+    }
+}
+
+/// Pure-Rust execution backend (the default).
+pub struct NativeBackend {
+    plans: RefCell<HashMap<String, Rc<Plan>>>,
+    threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let threads = std::env::var("FLARE_NATIVE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .max(1);
+        NativeBackend {
+            plans: RefCell::new(HashMap::new()),
+            threads,
+        }
+    }
+
+    /// Worker threads used per batched forward.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn plan(&self, case: &CaseCfg) -> anyhow::Result<Rc<Plan>> {
+        if let Some(p) = self.plans.borrow().get(&case.name) {
+            // guard against a different model reusing a cached case name
+            if p.model == case.model {
+                return Ok(Rc::clone(p));
+            }
+        }
+        let plan = Rc::new(Plan::build(case)?);
+        self.plans.borrow_mut().insert(case.name.clone(), Rc::clone(&plan));
+        Ok(plan)
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, _manifest: &Manifest, case: &CaseCfg) -> anyhow::Result<()> {
+        self.plan(case).map(|_| ())
+    }
+
+    fn forward(
+        &self,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let plan_rc = self.plan(case)?;
+        let plan: &Plan = plan_rc.as_ref();
+        anyhow::ensure!(
+            params.len() == plan.param_count,
+            "params length {} != expected {}",
+            params.len(),
+            plan.param_count
+        );
+        anyhow::ensure!(batch > 0, "empty batch");
+        let outs: Vec<anyhow::Result<Vec<f32>>> = match input {
+            BatchInput::Fields(x) => {
+                anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
+                let per = x.len() / batch;
+                parallel_map(batch, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    forward::forward_sample(&plan.model, &table, &x[i * per..(i + 1) * per])
+                })
+            }
+            BatchInput::Tokens(tokens) => {
+                anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
+                let per = tokens.len() / batch;
+                parallel_map(batch, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    forward::forward_tokens_sample(
+                        &plan.model,
+                        &table,
+                        &tokens[i * per..(i + 1) * per],
+                    )
+                })
+            }
+        };
+        let mut y = Vec::new();
+        for out in outs {
+            y.extend(out?);
+        }
+        Ok(y)
+    }
+
+    fn qk_keys(
+        &self,
+        _manifest: &Manifest,
+        case: &CaseCfg,
+        params: &[f32],
+        x: &[f32],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let plan_rc = self.plan(case)?;
+        let plan: &Plan = plan_rc.as_ref();
+        anyhow::ensure!(
+            params.len() == plan.param_count,
+            "params length {} != expected {}",
+            params.len(),
+            plan.param_count
+        );
+        let table = ParamTable::new(params, &plan.entries);
+        forward::qk_sample(&plan.model, &table, x)
+    }
+}

@@ -1,10 +1,11 @@
-//! Training orchestrator: drives the fused AdamW train-step artifact from
-//! Rust with Python completely off the hot path.
+//! Training orchestrator: drives fused AdamW train steps through the
+//! [`Backend`] trait with Python completely off the hot path.
 //!
-//! One `execute` per optimizer step: `(params, m, v, step, lr, x, y) ->
-//! (params', m', v', loss)`.  The returned state literals are fed straight
-//! back into the next step (no host-side numeric work); only the scalar
-//! loss crosses to host each step.
+//! One [`Backend::train_step`] per optimizer step: the backend consumes the
+//! gathered batch plus the host-side [`OptState`] and returns the scalar
+//! loss.  Evaluation goes through [`Backend::forward`] and the host-side
+//! metrics, so it works on every backend; training itself currently
+//! requires the XLA backend (the AOT step artifact carries the gradients).
 
 pub mod schedule;
 
@@ -13,8 +14,7 @@ pub use schedule::OneCycle;
 use crate::config::{CaseCfg, Manifest};
 use crate::data::{self, Dataset};
 use crate::model::init_params;
-use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar_f32, to_scalar_f32};
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, BatchInput, BatchTarget, OptState};
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, Timer};
 
@@ -71,11 +71,7 @@ impl BatchSampler {
         let mut rng = Rng::new(seed);
         let mut order: Vec<usize> = (0..count).collect();
         rng.shuffle(&mut order);
-        BatchSampler {
-            order,
-            pos: 0,
-            rng,
-        }
+        BatchSampler { order, pos: 0, rng }
     }
     /// Next `batch` indices, reshuffling at epoch boundaries.
     pub fn next(&mut self, batch: usize) -> Vec<usize> {
@@ -92,39 +88,50 @@ impl BatchSampler {
     }
 }
 
-/// Gather one batch into (x, y) literals for the case's model.
-pub fn batch_literals(
-    case: &CaseCfg,
-    ds: &Dataset,
-    idx: &[usize],
-    train: bool,
-) -> anyhow::Result<(xla::Literal, xla::Literal)> {
-    let b = idx.len() as i64;
-    let n = case.model.n as i64;
-    if case.model.is_classification() {
-        let (x, y) = ds.gather_tokens(idx, train);
-        Ok((lit_i32(&x, &[b, n])?, lit_i32(&y, &[b])?))
-    } else {
-        let (x, y) = ds.gather_fields(idx, train);
-        Ok((
-            lit_f32(&x, &[b, n, case.model.d_in as i64])?,
-            lit_f32(&y, &[b, n, case.model.d_out as i64])?,
-        ))
+/// One gathered batch (inputs + targets), owned so it can outlive `ds`
+/// borrows and lend [`BatchInput`]/[`BatchTarget`] views to the backend.
+pub enum OwnedBatch {
+    Fields { x: Vec<f32>, y: Vec<f32> },
+    Tokens { x: Vec<i32>, labels: Vec<i32> },
+}
+
+impl OwnedBatch {
+    pub fn input(&self) -> BatchInput<'_> {
+        match self {
+            OwnedBatch::Fields { x, .. } => BatchInput::Fields(x),
+            OwnedBatch::Tokens { x, .. } => BatchInput::Tokens(x),
+        }
+    }
+    pub fn target(&self) -> BatchTarget<'_> {
+        match self {
+            OwnedBatch::Fields { y, .. } => BatchTarget::Fields(y),
+            OwnedBatch::Tokens { labels, .. } => BatchTarget::Labels(labels),
+        }
     }
 }
 
-/// Evaluate the case's metric over the full test split.
+/// Gather one batch for the case's task kind.
+pub fn gather_batch(case: &CaseCfg, ds: &Dataset, idx: &[usize], train: bool) -> OwnedBatch {
+    if case.model.is_classification() {
+        let (x, labels) = ds.gather_tokens(idx, train);
+        OwnedBatch::Tokens { x, labels }
+    } else {
+        let (x, y) = ds.gather_fields(idx, train);
+        OwnedBatch::Fields { x, y }
+    }
+}
+
+/// Evaluate the case's metric over the full test split.  Each batch goes
+/// through [`Backend::eval_batch`], so the XLA backend can use the compiled
+/// `eval` artifact while the native backend evaluates via its forward pass
+/// plus host-side metrics.
 pub fn evaluate(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     case: &CaseCfg,
     ds: &Dataset,
-    params: &xla::Literal,
+    params: &[f32],
 ) -> anyhow::Result<f64> {
-    let exe = rt.load(
-        &format!("{}_eval", case.name),
-        manifest.artifact_path(case, "eval")?,
-    )?;
     let count = ds.test_len();
     let b = case.batch;
     anyhow::ensure!(count >= b, "test split smaller than batch");
@@ -133,9 +140,8 @@ pub fn evaluate(
     let mut i = 0;
     while i + b <= count {
         let idx: Vec<usize> = (i..i + b).collect();
-        let (x, y) = batch_literals(case, ds, &idx, false)?;
-        let outs = rt.run_ref(&exe, &[params, &x, &y])?;
-        total += to_scalar_f32(&outs[0])? as f64;
+        let batch = gather_batch(case, ds, &idx, false);
+        total += backend.eval_batch(manifest, case, params, batch.input(), batch.target())?;
         batches += 1;
         i += b;
     }
@@ -144,25 +150,23 @@ pub fn evaluate(
 
 /// Train one case end to end; returns losses, eval history and final params.
 pub fn train_case(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     case: &CaseCfg,
     opts: &TrainOpts,
 ) -> anyhow::Result<TrainOutcome> {
+    anyhow::ensure!(
+        backend.supports_training(),
+        "the {:?} backend cannot train case {} (training needs the xla backend)",
+        backend.name(),
+        case.name
+    );
     let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
     let steps = opts.steps.unwrap_or(case.train_steps);
     let sched = OneCycle::new(case.lr, steps);
 
-    let step_exe = rt.load(
-        &format!("{}_step", case.name),
-        manifest.artifact_path(case, "step")?,
-    )?;
-
-    let p0 = init_params(&case.params, case.param_count, manifest.seed);
-    let pc = case.param_count as i64;
-    let mut params = lit_f32(&p0, &[pc])?;
-    let mut m = lit_f32(&vec![0.0; case.param_count], &[pc])?;
-    let mut v = lit_f32(&vec![0.0; case.param_count], &[pc])?;
+    backend.prepare(manifest, case)?;
+    let mut st = OptState::new(init_params(&case.params, case.param_count, manifest.seed));
 
     let mut sampler = BatchSampler::new(ds.train_len(), opts.sample_seed);
     let mut losses = Vec::with_capacity(steps);
@@ -172,26 +176,18 @@ pub fn train_case(
 
     for step in 0..steps {
         let idx = sampler.next(case.batch);
-        let (x, y) = batch_literals(case, &ds, &idx, true)?;
+        let batch = gather_batch(case, &ds, &idx, true);
         let t = Timer::start();
-        let outs = rt.run(
-            &step_exe,
-            &[
-                params,
-                m,
-                v,
-                lit_scalar_f32(step as f32),
-                lit_scalar_f32(sched.lr(step) as f32),
-                x,
-                y,
-            ],
+        let loss = backend.train_step(
+            manifest,
+            case,
+            &mut st,
+            step,
+            sched.lr(step),
+            batch.input(),
+            batch.target(),
         )?;
         step_times.push(t.elapsed_ms());
-        let mut it = outs.into_iter();
-        params = it.next().unwrap();
-        m = it.next().unwrap();
-        v = it.next().unwrap();
-        let loss = to_scalar_f32(&it.next().unwrap())? as f64;
         losses.push(loss);
         if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == steps) {
             crate::info!(
@@ -201,14 +197,13 @@ pub fn train_case(
             );
         }
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
-            let metric = evaluate(rt, manifest, case, &ds, &params)?;
+            let metric = evaluate(backend, manifest, case, &ds, &st.params)?;
             evals.push((step + 1, metric));
         }
     }
-    let final_metric = evaluate(rt, manifest, case, &ds, &params)?;
+    let final_metric = evaluate(backend, manifest, case, &ds, &st.params)?;
     evals.push((steps, final_metric));
 
-    let params_host = crate::runtime::to_vec_f32(&params)?;
     Ok(TrainOutcome {
         case: case.name.clone(),
         steps,
@@ -218,7 +213,7 @@ pub fn train_case(
         wall_s: wall.elapsed_s(),
         step_ms: Summary::of(&step_times),
         param_count: case.param_count,
-        params: params_host,
+        params: st.params,
     })
 }
 
@@ -252,5 +247,62 @@ mod tests {
         let o = TrainOpts::default();
         assert!(o.steps.is_none());
         assert_eq!(o.eval_every, 0);
+    }
+
+    #[test]
+    fn native_backend_refuses_training() {
+        use crate::runtime::make_backend;
+        let backend = make_backend("native").unwrap();
+        if backend.supports_training() {
+            return; // only meaningful for the native backend
+        }
+        // any manifest/case would do — the capability check fires first,
+        // so build the smallest possible stand-ins
+        let dir = std::env::temp_dir().join("flare_train_refuse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 1, "cases": [], "mixers": [], "layers": []}"#,
+        )
+        .unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let case = CaseCfg {
+            name: "t".into(),
+            group: "g".into(),
+            dataset: "darcy".into(),
+            dataset_meta: crate::util::json::parse(
+                r#"{"kind":"darcy","n":16,"grid":4,"train":1,"test":1}"#,
+            )
+            .unwrap(),
+            batch: 1,
+            train_steps: 1,
+            lr: 1e-3,
+            model: crate::config::ModelCfg {
+                mixer: "flare".into(),
+                n: 16,
+                d_in: 3,
+                d_out: 1,
+                c: 8,
+                heads: 2,
+                m: 4,
+                blocks: 1,
+                kv_layers: 1,
+                ffn_layers: 1,
+                io_layers: 1,
+                latent_sa_blocks: 0,
+                shared_latents: false,
+                scale: 1.0,
+                task: "regression".into(),
+                vocab: 0,
+                num_classes: 0,
+            },
+            param_count: 0,
+            artifacts: Default::default(),
+            params: vec![],
+        };
+        let err = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot train"), "{err}");
     }
 }

@@ -1,8 +1,9 @@
 //! Hand-rolled substrates: RNG, JSON, stats/timers, thread pool, logging.
 //!
-//! The offline vendor set only contains the `xla` crate's dependency
-//! closure (no serde / tokio / criterion / clap), so these utilities are
-//! built from scratch — see DESIGN.md §3 for the substitution table.
+//! The workspace builds with no registry dependencies (only the vendored
+//! `anyhow` shim, plus the `xla` stub behind a feature), so there is no
+//! serde / tokio / criterion / clap — these utilities are built from
+//! scratch; see DESIGN.md §3 for the substitution table.
 
 pub mod json;
 pub mod log;

@@ -1,0 +1,427 @@
+//! NativeBackend integration tests — run on a clean machine with default
+//! features, no artifacts required.
+//!
+//! Covers: f32 parity against golden outputs of the JAX layer-2 model
+//! (`compile.models.forward` at fixed seeds), the FLARE mixer against a
+//! naive O(N^2) dense oracle, the rank <= M bound of the induced token
+//! mixing, disjoint per-head latent slices, batching/determinism, and the
+//! serving coordinator end-to-end on the native backend.
+
+use flare::config::{CaseCfg, ModelCfg};
+use flare::coordinator::{Server, ServerConfig};
+use flare::data;
+use flare::linalg::eig::sym_eig_default;
+use flare::linalg::matrix::Matrix;
+use flare::model::forward::flare_mixer;
+use flare::model::{build_spec, init_params};
+use flare::runtime::{make_backend, BatchInput};
+use flare::util::json::Json;
+use flare::util::rng::{u01, Rng};
+
+/// The tiny FLARE regression config the Python goldens were generated with.
+fn tiny_model() -> ModelCfg {
+    ModelCfg {
+        mixer: "flare".into(),
+        n: 16,
+        d_in: 3,
+        d_out: 1,
+        c: 8,
+        heads: 2,
+        m: 4,
+        blocks: 2,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    }
+}
+
+/// Wrap a model config as a manifest-free case (spec declared in Rust).
+fn make_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
+    let (entries, total) = build_spec(&model).expect("spec builds");
+    CaseCfg {
+        name: name.into(),
+        group: "test".into(),
+        dataset: "darcy".into(),
+        dataset_meta: Json::Null,
+        batch,
+        train_steps: 0,
+        lr: 1e-3,
+        model,
+        param_count: total,
+        artifacts: Default::default(),
+        params: entries,
+    }
+}
+
+/// The deterministic input stream shared with the Python golden dump.
+fn golden_input(seed: u64, count: usize) -> Vec<f32> {
+    (0..count)
+        .map(|i| (u01(seed, i as u64) * 2.0 - 1.0) as f32)
+        .collect()
+}
+
+#[test]
+fn forward_matches_python_golden() {
+    // golden values from compile.models.forward (jax f32) at seed 42 with
+    // x = u01(1234, i) * 2 - 1
+    let case = make_case("golden", tiny_model(), 1);
+    assert_eq!(case.param_count, 1913);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 42);
+    let x = golden_input(1234, case.model.n * case.model.d_in);
+    let y = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 1)
+        .unwrap();
+    assert_eq!(y.len(), case.model.n * case.model.d_out);
+
+    let head8 = [
+        1.320330023765564,
+        0.8594478368759155,
+        1.2515642642974854,
+        0.4858933687210083,
+        -0.13168929517269135,
+        -0.3543163537979126,
+        0.8106753826141357,
+        1.1928417682647705,
+    ];
+    for (i, &g) in head8.iter().enumerate() {
+        assert!(
+            (y[i] as f64 - g).abs() < 5e-4,
+            "elem {i}: rust {} vs python {g}",
+            y[i]
+        );
+    }
+    let l2: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let gl2 = 3.0313208635915245;
+    assert!((l2 - gl2).abs() < 1e-3 * gl2, "l2 {l2} vs {gl2}");
+}
+
+#[test]
+fn shared_latents_match_python_golden() {
+    let model = ModelCfg {
+        shared_latents: true,
+        ..tiny_model()
+    };
+    let case = make_case("golden_shared", model, 1);
+    assert_eq!(case.param_count, 1881);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 42);
+    let x = golden_input(1234, case.model.n * case.model.d_in);
+    let y = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 1)
+        .unwrap();
+    let head4 = [
+        0.7093360424041748,
+        -0.6166684031486511,
+        -0.39711135625839233,
+        0.06641694903373718,
+    ];
+    for (i, &g) in head4.iter().enumerate() {
+        assert!((y[i] as f64 - g).abs() < 5e-4, "elem {i}: {} vs {g}", y[i]);
+    }
+    let l2: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let gl2 = 1.763140701169907;
+    assert!((l2 - gl2).abs() < 1e-3 * gl2, "l2 {l2} vs {gl2}");
+}
+
+#[test]
+fn classification_matches_python_golden() {
+    let model = ModelCfg {
+        n: 12,
+        d_in: 0,
+        d_out: 0,
+        blocks: 1,
+        task: "classification".into(),
+        vocab: 11,
+        num_classes: 5,
+        ..tiny_model()
+    };
+    let case = make_case("golden_cls", model, 1);
+    assert_eq!(case.param_count, 933);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 7);
+    let tokens: Vec<i32> = (0..case.model.n)
+        .map(|i| (u01(99, i as u64) * case.model.vocab as f64) as i32)
+        .collect();
+    assert_eq!(&tokens[..6], &[2, 8, 5, 3, 1, 6]);
+    let logits = backend
+        .forward(&case, &params, BatchInput::Tokens(&tokens), 1)
+        .unwrap();
+    let golden = [
+        -0.5598824620246887,
+        -0.8039168119430542,
+        1.2330784797668457,
+        -0.5077758431434631,
+        -0.45244333148002625,
+    ];
+    assert_eq!(logits.len(), golden.len());
+    for (i, &g) in golden.iter().enumerate() {
+        assert!(
+            (logits[i] as f64 - g).abs() < 5e-4,
+            "logit {i}: {} vs {g}",
+            logits[i]
+        );
+    }
+}
+
+#[test]
+fn mixer_token_mixing_has_rank_at_most_m() {
+    // Y = W V with W = W_dec W_enc of rank <= M; with D > M columns of V,
+    // the Gram spectrum of Y must collapse after the first M directions
+    let (h, m, n, d) = (1usize, 3usize, 24usize, 8usize);
+    let mut rng = Rng::new(17);
+    let q: Vec<f32> = (0..h * m * d).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let y = flare_mixer(&q, &k, &v, h, m, n, d, 1.0);
+    let ym = Matrix::from_fn(n, d, |i, j| y[i * d + j] as f64);
+    let eig = sym_eig_default(&ym.gram()); // d x d spectrum of Y^T Y
+    let top = eig.values[0].max(1e-12);
+    for (i, &val) in eig.values.iter().enumerate().skip(m) {
+        assert!(
+            val < 1e-8 * top,
+            "gram eigenvalue {i} = {val:e} exceeds rank-{m} bound (top {top:e})"
+        );
+    }
+}
+
+#[test]
+fn per_head_latent_slices_are_disjoint() {
+    // perturbing head 1's latent slice must leave head 0's output bits
+    // untouched and change head 1's
+    let (h, m, n, d) = (2usize, 4usize, 19usize, 5usize);
+    let mut rng = Rng::new(23);
+    let q: Vec<f32> = (0..h * m * d).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+    let y = flare_mixer(&q, &k, &v, h, m, n, d, 1.0);
+    let mut q2 = q.clone();
+    for qv in q2[m * d..].iter_mut() {
+        *qv += 0.25;
+    }
+    let y2 = flare_mixer(&q2, &k, &v, h, m, n, d, 1.0);
+    assert_eq!(&y[..n * d], &y2[..n * d], "head 0 output changed");
+    let delta: f32 = y[n * d..]
+        .iter()
+        .zip(&y2[n * d..])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(delta > 1e-6, "head 1 output did not react to its latents");
+}
+
+#[test]
+fn batched_forward_matches_single_samples() {
+    let case = make_case("batching", tiny_model(), 2);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 5);
+    let per = case.model.n * case.model.d_in;
+    let x = golden_input(55, 2 * per);
+    let both = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 2)
+        .unwrap();
+    let first = backend
+        .forward(&case, &params, BatchInput::Fields(&x[..per]), 1)
+        .unwrap();
+    let second = backend
+        .forward(&case, &params, BatchInput::Fields(&x[per..]), 1)
+        .unwrap();
+    let expect: Vec<f32> = first.into_iter().chain(second).collect();
+    assert_eq!(both, expect);
+}
+
+#[test]
+fn forward_is_deterministic_and_shape_flexible() {
+    let case = make_case("flexible", tiny_model(), 1);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 9);
+    // the native path has no static N: a 10-point cloud works with the
+    // same weights even though the config says n = 16
+    let x = golden_input(77, 10 * case.model.d_in);
+    let a = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 1)
+        .unwrap();
+    let b = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 1)
+        .unwrap();
+    assert_eq!(a.len(), 10 * case.model.d_out);
+    assert_eq!(a, b);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn unsupported_mixer_rejected() {
+    let model = ModelCfg {
+        mixer: "vanilla".into(),
+        ..tiny_model()
+    };
+    let case = make_case("vanilla_case", model, 1);
+    let backend = make_backend("native").unwrap();
+    let params = vec![0.0f32; case.param_count];
+    let x = vec![0.0f32; case.model.n * case.model.d_in];
+    let err = backend
+        .forward(&case, &params, BatchInput::Fields(&x), 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("flare mixer"), "{err}");
+}
+
+#[test]
+fn qk_keys_shapes_and_finiteness() {
+    let case = make_case("qk", tiny_model(), 1);
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 3);
+    let x = golden_input(11, case.model.n * case.model.d_in);
+    let manifest = write_manifest_dir("flare_native_qk_test", &[]);
+    let m = flare::config::Manifest::load(&manifest).unwrap();
+    let ks = backend.qk_keys(&m, &case, &params, &x).unwrap();
+    assert_eq!(ks.len(), case.model.blocks);
+    let per = case.model.heads * case.model.n * case.model.head_dim();
+    for k in &ks {
+        assert_eq!(k.len(), per);
+        assert!(k.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Write a manifest.json holding `cases` into a temp dir; returns the dir.
+fn write_manifest_dir(tag: &str, cases: &[&CaseCfg]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let entries_json = |case: &CaseCfg| -> Json {
+        Json::Arr(
+            case.params
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::str(e.name.as_str())),
+                        (
+                            "shape",
+                            Json::Arr(e.shape.iter().map(|&s| Json::num(s as f64)).collect()),
+                        ),
+                        ("offset", Json::num(e.offset as f64)),
+                        ("size", Json::num(e.size as f64)),
+                        ("init", Json::str(e.init.as_str())),
+                        ("fan_in", Json::num(e.fan_in as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    let case_json = |case: &CaseCfg| -> Json {
+        Json::obj(vec![
+            ("name", Json::str(case.name.as_str())),
+            ("group", Json::str(case.group.as_str())),
+            ("dataset", Json::str(case.dataset.as_str())),
+            ("dataset_meta", case.dataset_meta.clone()),
+            ("batch", Json::num(case.batch as f64)),
+            ("train_steps", Json::num(case.train_steps as f64)),
+            ("lr", Json::num(case.lr)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("mixer", Json::str(case.model.mixer.as_str())),
+                    ("n", Json::num(case.model.n as f64)),
+                    ("d_in", Json::num(case.model.d_in as f64)),
+                    ("d_out", Json::num(case.model.d_out as f64)),
+                    ("c", Json::num(case.model.c as f64)),
+                    ("heads", Json::num(case.model.heads as f64)),
+                    ("m", Json::num(case.model.m as f64)),
+                    ("blocks", Json::num(case.model.blocks as f64)),
+                    ("kv_layers", Json::num(case.model.kv_layers as f64)),
+                    ("ffn_layers", Json::num(case.model.ffn_layers as f64)),
+                    ("io_layers", Json::num(case.model.io_layers as f64)),
+                    (
+                        "latent_sa_blocks",
+                        Json::num(case.model.latent_sa_blocks as f64),
+                    ),
+                    ("shared_latents", Json::Bool(case.model.shared_latents)),
+                    ("scale", Json::num(case.model.scale)),
+                    ("task", Json::str(case.model.task.as_str())),
+                    ("vocab", Json::num(case.model.vocab as f64)),
+                    ("num_classes", Json::num(case.model.num_classes as f64)),
+                ]),
+            ),
+            ("param_count", Json::num(case.param_count as f64)),
+            ("artifacts", Json::Obj(Default::default())),
+            ("params", entries_json(case)),
+        ])
+    };
+    let manifest = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("seed", Json::num(3.0)),
+        ("cases", Json::Arr(cases.iter().map(|&c| case_json(c)).collect())),
+        ("mixers", Json::Arr(vec![])),
+        ("layers", Json::Arr(vec![])),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string()).unwrap();
+    dir
+}
+
+#[test]
+fn native_serving_end_to_end() {
+    // a Darcy-sized case declared entirely in Rust, served on the native
+    // backend with no artifacts anywhere
+    let meta = flare::util::json::parse(
+        r#"{"kind":"darcy","n":256,"grid":16,"d_in":3,"d_out":1,"train":2,"test":2}"#,
+    )
+    .unwrap();
+    let model = ModelCfg {
+        n: 256,
+        ..tiny_model()
+    };
+    let mut case = make_case("native_darcy", model, 2);
+    case.dataset_meta = meta.clone();
+    let dir = write_manifest_dir("flare_native_serving_test", &[&case]);
+
+    let server = Server::start(
+        dir.clone(),
+        ServerConfig {
+            cases: vec!["native_darcy".into()],
+            max_wait: std::time::Duration::from_millis(5),
+            params: vec![],
+            backend: Some("native".into()),
+        },
+    )
+    .unwrap();
+
+    let ds = data::build("darcy", &meta, 3).unwrap();
+    let x = ds.test_fields[0].x.clone();
+    let resp = server.infer(x.clone(), case.model.n).unwrap();
+    assert_eq!(resp.y.len(), case.model.n * case.model.d_out);
+    assert!(resp.y.iter().all(|v| v.is_finite()));
+
+    // response must match a direct native execution of the padded batch
+    let backend = make_backend("native").unwrap();
+    let params = init_params(&case.params, case.param_count, 3);
+    let mut xb = x;
+    xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
+    let direct = backend
+        .forward(&case, &params, BatchInput::Fields(&xb), case.batch)
+        .unwrap();
+    let per = case.model.n * case.model.d_out;
+    let max_err = resp
+        .y
+        .iter()
+        .zip(&direct[..per])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-6, "served vs direct max err {max_err}");
+
+    // short requests are padded in and trimmed out
+    let short_n = case.model.n / 2;
+    let xs = ds.test_fields[1].x[..short_n * case.model.d_in].to_vec();
+    let resp = server.infer(xs, short_n).unwrap();
+    assert_eq!(resp.y.len(), short_n * case.model.d_out);
+
+    // oversized requests are rejected, not wedged
+    let big = vec![0.0f32; case.model.n * 4 * case.model.d_in];
+    assert!(server.infer(big, case.model.n * 4).is_err());
+
+    assert!(server.metrics.summary("latency_ms").is_some());
+    server.shutdown().unwrap();
+}

@@ -2,7 +2,10 @@
 //! Rust<->Python parameter-init parity, training behaviour, and the
 //! spectral pipeline against the compiled qk artifact.
 //!
-//! All tests are skipped gracefully when `artifacts/` has not been built.
+//! Compiled only with `--features xla` (the PJRT runtime); additionally
+//! skipped gracefully when `artifacts/` has not been built.
+
+#![cfg(feature = "xla")]
 
 use flare::config::Manifest;
 use flare::data;
@@ -129,9 +132,9 @@ fn eval_artifact_matches_host_rel_l2() {
 fn train_step_decreases_loss() {
     let Some(m) = manifest() else { return };
     let case = m.case("core_darcy_flare").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let backend = flare::runtime::XlaBackend::new().unwrap();
     let out = train_case(
-        &rt,
+        &backend,
         &m,
         case,
         &TrainOpts {
@@ -155,13 +158,13 @@ fn train_step_decreases_loss() {
 fn training_is_deterministic() {
     let Some(m) = manifest() else { return };
     let case = m.case("core_elas_flare").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let backend = flare::runtime::XlaBackend::new().unwrap();
     let opts = TrainOpts {
         steps: Some(5),
         ..Default::default()
     };
-    let a = train_case(&rt, &m, case, &opts).unwrap();
-    let b = train_case(&rt, &m, case, &opts).unwrap();
+    let a = train_case(&backend, &m, case, &opts).unwrap();
+    let b = train_case(&backend, &m, case, &opts).unwrap();
     assert_eq!(a.losses, b.losses);
     assert_eq!(a.params, b.params);
 }

@@ -1,5 +1,11 @@
 //! Serving-engine integration: correctness of batched responses under
 //! concurrent load, padding behaviour, and graceful error paths.
+//!
+//! Compiled only with `--features xla` (compares against direct PJRT
+//! execution of the fwd artifact); the artifact-free serving path is
+//! covered by `tests/native_backend.rs`.
+
+#![cfg(feature = "xla")]
 
 use std::time::Duration;
 
@@ -65,6 +71,7 @@ fn concurrent_responses_match_direct_execution() {
             cases: vec![name.into()],
             max_wait: Duration::from_millis(5),
             params: vec![],
+            backend: None,
         },
     )
     .unwrap();
@@ -105,6 +112,7 @@ fn short_requests_are_padded_and_trimmed() {
             cases: vec![name.into()],
             max_wait: Duration::from_millis(5),
             params: vec![],
+            backend: None,
         },
     )
     .unwrap();
@@ -126,6 +134,7 @@ fn oversized_request_rejected() {
             cases: vec![name.into()],
             max_wait: Duration::from_millis(5),
             params: vec![],
+            backend: None,
         },
     )
     .unwrap();
@@ -146,6 +155,7 @@ fn metrics_recorded_under_load() {
             cases: vec![name.into()],
             max_wait: Duration::from_millis(2),
             params: vec![],
+            backend: None,
         },
     )
     .unwrap();

@@ -1,0 +1,129 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! This workspace builds on machines with no crates.io access, so the error
+//! type is vendored here rather than fetched.  Only the surface the `flare`
+//! crate uses is provided:
+//!
+//! * [`Error`] / [`Result`] — a message-carrying error type,
+//! * `From<E: std::error::Error>` so `?` converts std errors,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Unlike upstream `anyhow`, the source chain is flattened to a string at
+//! conversion time; nothing in this workspace downcasts errors, so the
+//! trade keeps the shim small.
+
+use std::fmt;
+
+/// A message-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a preformatted message (used by the [`anyhow!`] macro).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is what
+// makes this blanket conversion coherent (same trick as upstream anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_int(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_int("7").unwrap(), 7);
+        let err = parse_int("x").unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {} at {}", 3, "here");
+        assert_eq!(e.to_string(), "bad value 3 at here");
+        assert_eq!(format!("{e:?}"), "bad value 3 at here");
+        assert_eq!(format!("{e:#}"), "bad value 3 at here");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(4).unwrap(), 8);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+
+        fn g(x: i32) -> Result<()> {
+            ensure!(x == 0);
+            Ok(())
+        }
+        assert!(g(0).is_ok());
+        assert!(g(1).unwrap_err().to_string().contains("x == 0"));
+    }
+}

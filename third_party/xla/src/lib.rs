@@ -1,0 +1,304 @@
+//! API stub for the `xla` PJRT bindings used by the optional `xla` feature.
+//!
+//! The real backend links `xla_extension` (libxla + PJRT), which is not
+//! vendorable in this repository.  This stub keeps the `--features xla`
+//! code *compiling* on any machine:
+//!
+//! * [`Literal`] is fully functional host-side (build / reshape / read
+//!   back), so literal-marshalling code and its unit tests work unchanged.
+//! * Everything that would touch the native runtime — [`PjRtClient`],
+//!   compilation, execution, HLO parsing — returns [`Error`] at runtime.
+//!
+//! To run against real XLA, point Cargo at an `xla_extension` build with a
+//! `[patch]` entry replacing this package; the API surface matches what
+//! `flare::runtime::pjrt` consumes.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Stub error: carries a description of the unavailable native call.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the `xla` feature was built against the API stub \
+         (third_party/xla); link a real xla_extension via [patch] to \
+         execute artifacts"
+    )))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(p: &Payload) -> Option<&[Self]>;
+}
+
+/// Storage for literal contents.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[f32]> {
+        match p {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[i32]> {
+        match p {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor (fully functional in the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal {
+            payload: T::wrap(data.to_vec()),
+            dims,
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal {
+            payload: self.payload,
+            dims: dims.to_vec(),
+        })
+    }
+
+    fn len(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        self.len()
+    }
+
+    /// Copy the contents out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// First element of a typed literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.payload)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple: literal is not a tuple".into())),
+        }
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal {
+            payload: Payload::F32(vec![v]),
+            dims: vec![],
+        }
+    }
+}
+
+/// PJRT client handle (stub: construction fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub: never constructible, execution fails).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (stub: parsing fails).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Array shape descriptor (stub keeps only the dims).
+pub struct Shape {
+    _dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape { _dims: dims }
+    }
+}
+
+/// Graph-building op handle (stub: every op construction fails).
+#[derive(Clone)]
+pub struct XlaOp {
+    _priv: (),
+}
+
+impl XlaOp {
+    pub fn build(&self) -> Result<XlaComputation> {
+        unavailable("XlaOp::build")
+    }
+}
+
+impl std::ops::Add for XlaOp {
+    type Output = Result<XlaOp>;
+    fn add(self, _rhs: XlaOp) -> Result<XlaOp> {
+        unavailable("XlaOp::add")
+    }
+}
+
+impl std::ops::Mul for XlaOp {
+    type Output = Result<XlaOp>;
+    fn mul(self, _rhs: XlaOp) -> Result<XlaOp> {
+        unavailable("XlaOp::mul")
+    }
+}
+
+/// Graph builder (stub).
+pub struct XlaBuilder {
+    _name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder {
+            _name: name.to_string(),
+        }
+    }
+
+    pub fn parameter_s(&self, _index: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        unavailable("XlaBuilder::parameter_s")
+    }
+
+    pub fn tuple(&self, _ops: &[XlaOp]) -> Result<XlaOp> {
+        unavailable("XlaBuilder::tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0])
+            .reshape(&[2, 2])
+            .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let lit = Literal::from(2.5f32);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn bad_reshape_rejected() {
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn native_calls_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope")).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Native train-step microbench: ms per fused AdamW optimizer step
+//! (reverse-mode gradients + update) on the pure-Rust backend, swept over
+//! model width and sequence length.
+//!
+//! This is the number the CI `bench-smoke` job tracks in
+//! `BENCH_native.json` — the cost of one optimizer step is the unit of the
+//! whole training loop, so regressions here are regressions everywhere.
+//!
+//! Run: cargo bench --bench train_step       (FLARE_BENCH_QUICK=1 to smoke)
+
+use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
+use flare::config::{CaseCfg, ModelCfg};
+use flare::model::{build_spec, init_params};
+use flare::runtime::{make_backend, BatchInput, BatchTarget, NativeBackend, OptState};
+use flare::util::json::Json;
+use flare::util::rng::Rng;
+
+fn make_case(name: &str, n: usize, c: usize, m: usize, blocks: usize) -> CaseCfg {
+    let model = ModelCfg {
+        mixer: "flare".into(),
+        n,
+        d_in: 3,
+        d_out: 1,
+        c,
+        heads: 4,
+        m,
+        blocks,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    };
+    let (entries, total) = build_spec(&model).expect("spec");
+    CaseCfg {
+        name: name.into(),
+        group: "bench".into(),
+        dataset: "darcy".into(),
+        dataset_meta: Json::Null,
+        batch: 2,
+        train_steps: 0,
+        lr: 1e-3,
+        model,
+        param_count: total,
+        artifacts: Default::default(),
+        params: entries,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // a synthetic manifest satisfies the Backend trait signature; the
+    // native train step never touches artifacts
+    let dir = std::env::temp_dir().join("flare_train_step_bench");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"seed": 1, "cases": [], "mixers": [], "layers": []}"#,
+    )?;
+    let manifest = flare::config::Manifest::load(&dir)?;
+    let backend = make_backend("native")?;
+
+    let sweeps: &[(usize, usize, usize, usize)] = if quick_mode() {
+        &[(256, 16, 16, 2), (1024, 32, 32, 2)]
+    } else {
+        &[(256, 16, 16, 2), (1024, 32, 32, 2), (4096, 32, 32, 2), (1024, 64, 64, 4)]
+    };
+
+    println!("=== native train step: ms per fused AdamW step ===\n");
+    let bench = if quick_mode() { Bench::quick() } else { Bench::default() };
+    let mut table = Table::new(&["N", "C", "M", "blocks", "params", "ms/step", "ns/token"]);
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut rng = Rng::new(11);
+
+    for &(n, c, m, blocks) in sweeps {
+        let case = make_case(&format!("train_n{n}_c{c}"), n, c, m, blocks);
+        let batch = case.batch;
+        let x: Vec<f32> = (0..batch * n * 3).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..batch * n).map(|_| rng.normal() as f32).collect();
+        let mut st = OptState::new(init_params(&case.params, case.param_count, 1));
+        let mut step = 0usize;
+        let mut meas = bench.run(&format!("train_step_n{n}_c{c}"), || {
+            let loss = backend
+                .train_step(
+                    &manifest,
+                    &case,
+                    &mut st,
+                    step,
+                    1e-3,
+                    BatchInput::Fields(&x),
+                    BatchTarget::Fields(&y),
+                )
+                .expect("train step");
+            assert!(loss.is_finite());
+            step += 1;
+        });
+        meas.extras.push(("n".into(), n as f64));
+        meas.extras.push(("c".into(), c as f64));
+        meas.extras.push(("params".into(), case.param_count as f64));
+        meas.extras
+            .push(("threads".into(), NativeBackend::new().threads() as f64));
+        table.row(vec![
+            n.to_string(),
+            c.to_string(),
+            m.to_string(),
+            blocks.to_string(),
+            case.param_count.to_string(),
+            format!("{:.2}", meas.mean_ms()),
+            format!("{:.1}", meas.mean_ms() * 1e6 / (batch * n) as f64),
+        ]);
+        all.push(meas);
+    }
+    table.print();
+    let path = save_results("train_step", &all)?;
+    println!("results written to {path:?}");
+    Ok(())
+}

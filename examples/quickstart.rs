@@ -1,11 +1,12 @@
 //! Quickstart: the minimal end-to-end path through the public API.
 //!
-//! Loads the artifact manifest, generates a small Darcy-flow dataset with
-//! the built-in simulator, trains the FLARE surrogate for a handful of
-//! steps (XLA backend), and runs one prediction — all from Rust, with
-//! Python nowhere on the hot path.
+//! Loads the artifact manifest (or the builtin artifact-free cases),
+//! generates a small Darcy-flow dataset with the built-in simulator, trains
+//! the FLARE surrogate for a handful of steps — native reverse-mode
+//! gradients by default, the XLA step artifact behind `--features xla` —
+//! and runs one prediction, all from Rust with Python nowhere on the path.
 //!
-//! Run with:  cargo run --release --features xla --example quickstart
+//! Run with:  cargo run --release --example quickstart
 
 use flare::config::Manifest;
 use flare::data;
@@ -14,21 +15,17 @@ use flare::runtime::{default_backend, BatchInput};
 use flare::train::{train_case, TrainOpts};
 
 fn main() -> anyhow::Result<()> {
-    // 1. manifest: every AOT-lowered model + its parameter packing spec
-    let manifest = Manifest::load(Manifest::default_dir())?;
+    // 1. manifest: AOT-lowered models + packing specs when artifacts
+    //    exist, the builtin native cases otherwise
+    let manifest = Manifest::load_or_builtin(Manifest::default_dir())?;
     let case = manifest.case("core_darcy_flare")?;
     println!(
         "case {}: {} FLARE blocks, M={} latents/head, {} params",
         case.name, case.model.blocks, case.model.m, case.param_count
     );
 
-    // 2. backend + training (one fused optimizer step per execute)
+    // 2. backend + training (one fused optimizer step per train_step)
     let backend = default_backend()?;
-    anyhow::ensure!(
-        backend.supports_training(),
-        "quickstart trains a surrogate; rebuild with --features xla \
-         (or set FLARE_BACKEND=xla)"
-    );
     let out = train_case(
         backend.as_ref(),
         &manifest,

@@ -4,6 +4,8 @@
 //! simulator-generated data, logging the loss curve, periodic test rel-L2,
 //! step-time statistics, and writing the curve to `results/e2e_darcy.json`
 //! plus a checkpoint — the full lifecycle a downstream user would run.
+//! Runs on the default (native) backend with no artifacts anywhere: the
+//! gradients come from the pure-Rust reverse pass in `model::backward`.
 //!
 //! Run with:  cargo run --release --example train_darcy [steps]
 
@@ -18,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
-    let manifest = Manifest::load(Manifest::default_dir())?;
+    let manifest = Manifest::load_or_builtin(Manifest::default_dir())?;
     let case = manifest.case("core_darcy_flare")?;
     let backend = default_backend()?;
 

@@ -239,10 +239,20 @@ impl Manifest {
 
     /// Absolute path of a case artifact.
     pub fn artifact_path(&self, case: &CaseCfg, kind: &str) -> anyhow::Result<PathBuf> {
-        let f = case
-            .artifacts
-            .get(kind)
-            .ok_or_else(|| anyhow::anyhow!("case {} has no {kind} artifact", case.name))?;
+        let f = case.artifacts.get(kind).ok_or_else(|| {
+            if case.artifacts.is_empty() {
+                // the builtin fallback manifest ships no compiled artifacts;
+                // point the xla backend user somewhere actionable
+                anyhow::anyhow!(
+                    "case {} carries no compiled artifacts (artifact-free \
+                     manifest); use the native backend (FLARE_BACKEND=native) \
+                     or generate artifacts with python/compile/aot.py",
+                    case.name
+                )
+            } else {
+                anyhow::anyhow!("case {} has no {kind} artifact", case.name)
+            }
+        })?;
         Ok(self.dir.join(f))
     }
 
@@ -251,6 +261,105 @@ impl Manifest {
         std::env::var("FLARE_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load `manifest.json` when it exists, else fall back to the
+    /// [`Manifest::builtin`] cases so a clean checkout (no artifacts, no
+    /// python) can train and serve on the native backend.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::builtin(dir))
+        }
+    }
+
+    /// Artifact-free manifest declared entirely in Rust: CPU-sized core
+    /// cases whose packing specs come from [`crate::model::build_spec`].
+    /// Shapes mirror `python/compile/cases.py` (same C/H/M/blocks ratios);
+    /// dataset counts and step budgets are shrunk so the native trainer
+    /// finishes a smoke run in seconds, and `train_steps` defaults to the
+    /// 20-step loss-decrease check.  `seed` matches `cases.SEED`.
+    pub fn builtin(dir: impl AsRef<Path>) -> Manifest {
+        let meta = |text: &str| parse(text).expect("builtin dataset meta");
+        let case = |name: &str, dataset: &str, dataset_meta: Json, model: ModelCfg| {
+            let (params, param_count) = crate::model::build_spec(&model).expect("builtin spec");
+            CaseCfg {
+                name: name.to_string(),
+                group: "core".to_string(),
+                dataset: dataset.to_string(),
+                dataset_meta,
+                batch: 2,
+                train_steps: 20,
+                lr: 1e-3,
+                model,
+                param_count,
+                artifacts: BTreeMap::new(),
+                params,
+            }
+        };
+        let pde = ModelCfg {
+            mixer: "flare".to_string(),
+            n: 1024,
+            d_in: 3,
+            d_out: 1,
+            c: 32,
+            heads: 4,
+            m: 32,
+            blocks: 2,
+            kv_layers: 3,
+            ffn_layers: 3,
+            io_layers: 2,
+            latent_sa_blocks: 0,
+            shared_latents: false,
+            scale: 1.0,
+            task: "regression".to_string(),
+            vocab: 0,
+            num_classes: 0,
+        };
+        let cases = vec![
+            case(
+                "core_darcy_flare",
+                "darcy",
+                meta(
+                    r#"{"kind":"darcy","n":1024,"grid":32,"d_in":3,"d_out":1,
+                        "train":32,"test":8}"#,
+                ),
+                pde.clone(),
+            ),
+            case(
+                "core_elas_flare",
+                "elasticity",
+                meta(r#"{"kind":"elasticity","n":972,"d_in":2,"d_out":1,"train":16,"test":4}"#),
+                ModelCfg {
+                    n: 972,
+                    d_in: 2,
+                    ..pde.clone()
+                },
+            ),
+            case(
+                "core_listops_flare",
+                "listops",
+                meta(r#"{"kind":"listops","n":512,"vocab":18,"classes":10,"train":64,"test":16}"#),
+                ModelCfg {
+                    n: 512,
+                    d_in: 0,
+                    d_out: 0,
+                    task: "classification".to_string(),
+                    vocab: 18,
+                    num_classes: 10,
+                    ..pde
+                },
+            ),
+        ];
+        Manifest {
+            seed: 42,
+            dir: dir.as_ref().to_path_buf(),
+            cases,
+            mixers: vec![],
+            layers: vec![],
+        }
     }
 }
 
@@ -308,6 +417,28 @@ mod tests {
             .unwrap()
             .ends_with("t_fwd.hlo.txt"));
         assert!(m.artifact_path(c, "step").is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_and_fallback() {
+        let m = Manifest::builtin("nowhere");
+        assert_eq!(m.seed, 42);
+        assert!(m.case("core_darcy_flare").is_ok());
+        assert!(m.case("core_elas_flare").is_ok());
+        assert!(m.case("core_listops_flare").is_ok());
+        for c in &m.cases {
+            // packing spec must tile the flat vector exactly (the same
+            // invariant the loader asserts for real manifests)
+            let covered: usize = c.params.iter().map(|p| p.size).sum();
+            assert_eq!(covered, c.param_count, "case {}", c.name);
+            assert!(c.artifacts.is_empty());
+            assert!(c.train_steps > 0 && c.batch > 0);
+        }
+        // a directory with no manifest.json falls back to the builtin
+        let dir = std::env::temp_dir().join("flare_no_artifacts_here");
+        let _ = std::fs::remove_dir_all(&dir);
+        let m2 = Manifest::load_or_builtin(&dir).unwrap();
+        assert_eq!(m2.cases.len(), m.cases.len());
     }
 
     #[test]

@@ -143,7 +143,9 @@ fn executor_main(
 ) -> anyhow::Result<()> {
     // ---- startup: manifest, backend, prepare every served case ----------
     let setup = (|| -> anyhow::Result<(Box<dyn Backend>, Vec<BucketState>)> {
-        let manifest = Manifest::load(&manifest_dir)?;
+        // missing manifest.json -> builtin native cases, so a clean
+        // checkout can serve without artifacts
+        let manifest = Manifest::load_or_builtin(&manifest_dir)?;
         let backend = match &cfg.backend {
             Some(kind) => make_backend(kind)?,
             None => default_backend()?,

@@ -6,6 +6,11 @@
 //!   train      --case <name>     train a case end-to-end, report metrics
 //!   serve      --case <name>     start the serving engine, drive demo load
 //!   spectra    --case <name>     Algorithm-1 eigenanalysis of a model
+//!   bench-report                 fold results/*.json into BENCH_native.json
+//!
+//! Without an `artifacts/manifest.json`, commands fall back to the builtin
+//! CPU-sized cases and the native backend trains them directly — a clean
+//! checkout can run `cargo run -- train` end to end.
 //!
 //! Global options:
 //!   --artifacts <dir>   (default ./artifacts or $FLARE_ARTIFACTS)
@@ -60,6 +65,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
         "spectra" => cmd_spectra(args),
+        "bench-report" => cmd_bench_report(args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -81,20 +87,24 @@ fn print_help() {
            info                        manifest + artifact summary\n\
            gen-data --dataset <name>   run a simulator, print statistics\n\
                     [--count K] [--stats]\n\
-           train    --case <name>      train end-to-end (xla backend)\n\
+           train    [--case <name>]    train end-to-end (any backend;\n\
+                    default case core_darcy_flare)\n\
                     [--steps N] [--eval-every K] [--ckpt FILE] [--quiet]\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
                     [--steps N]\n\
+           bench-report               fold results/*.json benchmark dumps\n\
+                    [--results DIR] [--out FILE]   into BENCH_native.json\n\
          \n\
-         GLOBAL: --artifacts <dir>     artifacts directory\n\
+         GLOBAL: --artifacts <dir>     artifacts directory (missing manifest\n\
+                                       falls back to builtin native cases)\n\
                  --backend <name>      native | xla ($FLARE_BACKEND)\n"
     );
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(manifest_dir(args))?;
+    let m = Manifest::load_or_builtin(manifest_dir(args))?;
     println!("artifacts dir : {:?}", m.dir);
     println!("seed          : {}", m.seed);
     println!("cases         : {}", m.cases.len());
@@ -111,7 +121,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(manifest_dir(args))?;
+    let m = Manifest::load_or_builtin(manifest_dir(args))?;
     let name = args.get_or("dataset", "darcy").to_string();
     let count = args.get_usize("count")?.unwrap_or(4);
     // find a case that uses this dataset to get its metadata
@@ -173,11 +183,9 @@ fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(manifest_dir(args))?;
-    let name = args
-        .get("case")
-        .ok_or_else(|| anyhow::anyhow!("--case required"))?;
-    let case = m.case(name)?;
+    let m = Manifest::load_or_builtin(manifest_dir(args))?;
+    let name = args.get_or("case", "core_darcy_flare").to_string();
+    let case = m.case(&name)?;
     let backend = backend_from_args(args)?;
     let opts = TrainOpts {
         steps: args.get_usize("steps")?,
@@ -222,7 +230,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = manifest_dir(args);
-    let m = Manifest::load(&dir)?;
+    let m = Manifest::load_or_builtin(&dir)?;
     let name = args.get_or("case", "core_darcy_flare").to_string();
     let case = m.case(&name)?.clone();
     let requests = args.get_usize("requests")?.unwrap_or(16);
@@ -268,8 +276,113 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fold the `results/*.json` dumps written by the benches into one
+/// `BENCH_native.json` perf artifact: per-op median ns, worker threads and
+/// the git sha, validated after writing so CI fails on malformed output.
+fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
+    use flare::util::json::{parse, Json};
+    // default: $FLARE_RESULTS (what save_results honors), else the union of
+    // ./results and rust/results — cargo run keeps the invoker's cwd while
+    // cargo bench runs the dump-writing binaries from the package root, so
+    // dumps can legitimately sit in either
+    let dirs: Vec<std::path::PathBuf> = match args.get("results") {
+        Some(d) => vec![std::path::PathBuf::from(d)],
+        None => match std::env::var("FLARE_RESULTS") {
+            Ok(v) => vec![std::path::PathBuf::from(v)],
+            Err(_) => vec!["results".into(), "rust/results".into()],
+        },
+    };
+    let out_path = std::path::PathBuf::from(args.get_or("out", "BENCH_native.json"));
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    for dir in &dirs {
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            files.extend(
+                rd.filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false)),
+            );
+        }
+    }
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no *.json bench dumps in {dirs:?}");
+    let mut ops: Vec<Json> = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let parsed =
+            parse(&text).map_err(|e| anyhow::anyhow!("malformed bench dump {path:?}: {e}"))?;
+        let Some(arr) = parsed.as_arr() else {
+            // results/ also collects non-bench dumps (e.g. the train_darcy
+            // example's e2e record); only measurement arrays are folded
+            eprintln!("skipping {path:?}: not a bench measurement array");
+            continue;
+        };
+        let bench = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("bench")
+            .to_string();
+        for m in arr {
+            let name = m
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("measurement without name in {path:?}"))?;
+            let p50 = m.get("p50_ms").as_f64().ok_or_else(|| {
+                anyhow::anyhow!("measurement {name:?} without p50_ms in {path:?}")
+            })?;
+            anyhow::ensure!(
+                p50.is_finite() && p50 >= 0.0,
+                "measurement {name:?} has invalid p50_ms {p50}"
+            );
+            let iters = m.get("iters").as_f64().unwrap_or(0.0);
+            ops.push(Json::obj(vec![
+                ("bench", Json::str(&bench)),
+                ("name", Json::str(name)),
+                ("median_ns", Json::num(p50 * 1e6)),
+                ("iters", Json::num(iters)),
+            ]));
+        }
+    }
+    anyhow::ensure!(!ops.is_empty(), "bench dumps contained no measurements");
+    let threads = flare::runtime::NativeBackend::new().threads();
+    let sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(git_head_sha)
+        .unwrap_or_else(|| "unknown".to_string());
+    let count = ops.len();
+    let report = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("backend", Json::str("native")),
+        ("git_sha", Json::str(&sha)),
+        ("threads", Json::num(threads as f64)),
+        ("ops", Json::Arr(ops)),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    // self-check: the artifact must re-parse with a non-empty ops list
+    let back = parse(&std::fs::read_to_string(&out_path)?)?;
+    let n = back.get("ops").as_arr().map(|a| a.len()).unwrap_or(0);
+    anyhow::ensure!(n == count, "written {out_path:?} failed validation");
+    println!("wrote {out_path:?}: {n} ops, {threads} threads, sha {sha}");
+    Ok(())
+}
+
+fn git_head_sha() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if sha.is_empty() {
+        None
+    } else {
+        Some(sha)
+    }
+}
+
 fn cmd_spectra(args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(manifest_dir(args))?;
+    let m = Manifest::load_or_builtin(manifest_dir(args))?;
     let name = args.get_or("case", "core_elas_flare").to_string();
     let case = m.case(&name)?;
     let backend = backend_from_args(args)?;

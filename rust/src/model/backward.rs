@@ -1,0 +1,954 @@
+//! Reverse-mode gradients for the pure-Rust FLARE forward pass.
+//!
+//! Mirrors `model::forward` op by op: every forward primitive gets a
+//! `*_fwd` variant that keeps the activations the backward needs, and a
+//! `*_bwd` that consumes them, returns the input gradient and accumulates
+//! parameter gradients into a [`GradTable`] (same flat layout as the
+//! parameter vector, so the optimizer is a single buffer walk).
+//!
+//! The token mixer's backward is streamed exactly like its forward: the
+//! encode statistics (running max, denominator, normalized latent summary
+//! `Z`) cached by [`flare_mixer_fwd`] let three further O(N·M·D) passes over
+//! `K`/`V` recompute the softmax weights row by row — no `[M, N]` attention
+//! matrix is ever materialized, which is what keeps training memory at
+//! O(M·D) per head just like inference (the FlashAttention recipe applied
+//! to FLARE's two-SDPA factorization).
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelCfg, ParamEntry};
+use crate::linalg::matrix::{axpy_f32, dot_f32};
+use crate::model::forward::{
+    self, affine, check_native_supported, merge_heads, mixer_decode, mixer_encode, split_heads,
+    ParamTable,
+};
+
+/// Named mutable views into a flat gradient vector (the mirror image of
+/// [`ParamTable`]): `acc` hands out the slice for one parameter so op
+/// backwards accumulate in place.
+pub struct GradTable<'a> {
+    flat: &'a mut [f32],
+    entries: &'a BTreeMap<String, ParamEntry>,
+}
+
+impl<'a> GradTable<'a> {
+    pub fn new(flat: &'a mut [f32], entries: &'a BTreeMap<String, ParamEntry>) -> GradTable<'a> {
+        GradTable { flat, entries }
+    }
+
+    /// Mutable slice of the flat gradient holding parameter `name`.
+    pub fn acc(&mut self, name: &str) -> anyhow::Result<&mut [f32]> {
+        let e = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no parameter named {name:?} in spec"))?;
+        anyhow::ensure!(
+            e.offset + e.size <= self.flat.len(),
+            "gradient {name:?} overruns flat vector"
+        );
+        Ok(&mut self.flat[e.offset..e.offset + e.size])
+    }
+}
+
+/// d/dx of [`forward::gelu`] (tanh approximation).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    const A: f32 = 0.044_715;
+    let u = SQRT_2_OVER_PI * (x + A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * A * x * x)
+}
+
+/// Backward of `y = x W + b`: accumulates `dW += x^T dy`, `db += sum_r dy`,
+/// returns `dx = dy W^T`.
+fn affine_bwd(
+    p: &ParamTable,
+    g: &mut GradTable,
+    wname: &str,
+    bname: &str,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    c_in: usize,
+    c_out: usize,
+) -> anyhow::Result<Vec<f32>> {
+    debug_assert_eq!(x.len(), rows * c_in);
+    debug_assert_eq!(dy.len(), rows * c_out);
+    {
+        let dw = g.acc(wname)?;
+        for r in 0..rows {
+            let dyr = &dy[r * c_out..(r + 1) * c_out];
+            for i in 0..c_in {
+                let xv = x[r * c_in + i];
+                if xv != 0.0 {
+                    axpy_f32(xv, dyr, &mut dw[i * c_out..(i + 1) * c_out]);
+                }
+            }
+        }
+    }
+    {
+        let db = g.acc(bname)?;
+        for r in 0..rows {
+            for (b, &dv) in db.iter_mut().zip(&dy[r * c_out..(r + 1) * c_out]) {
+                *b += dv;
+            }
+        }
+    }
+    let w = p.get(wname)?;
+    let mut dx = vec![0.0f32; rows * c_in];
+    for r in 0..rows {
+        let dyr = &dy[r * c_out..(r + 1) * c_out];
+        let dxr = &mut dx[r * c_in..(r + 1) * c_in];
+        for i in 0..c_in {
+            dxr[i] = dot_f32(dyr, &w[i * c_out..(i + 1) * c_out]);
+        }
+    }
+    Ok(dx)
+}
+
+/// Backward of [`forward::linear`].
+pub fn linear_bwd(
+    p: &ParamTable,
+    g: &mut GradTable,
+    prefix: &str,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    c_in: usize,
+    c_out: usize,
+) -> anyhow::Result<Vec<f32>> {
+    affine_bwd(
+        p,
+        g,
+        &format!("{prefix}.w"),
+        &format!("{prefix}.b"),
+        x,
+        dy,
+        rows,
+        c_in,
+        c_out,
+    )
+}
+
+/// Backward of [`forward::layernorm`]: recomputes the per-row statistics
+/// (O(rows·c), cheaper than caching them), accumulates `dgamma`/`dbeta` and
+/// returns `dx`.
+pub fn layernorm_bwd(
+    p: &ParamTable,
+    g: &mut GradTable,
+    prefix: &str,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    c: usize,
+) -> anyhow::Result<Vec<f32>> {
+    debug_assert_eq!(x.len(), rows * c);
+    debug_assert_eq!(dy.len(), rows * c);
+    let gamma = p.get(&format!("{prefix}.gamma"))?;
+    let mut dx = vec![0.0f32; rows * c];
+    let mut xhat = vec![0.0f32; c];
+    let mut dxhat = vec![0.0f32; c];
+    // accumulate locally; one name lookup per parameter, not per row
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    for r in 0..rows {
+        let row = &x[r * c..(r + 1) * c];
+        let dyr = &dy[r * c..(r + 1) * c];
+        let mu = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..c {
+            xhat[j] = (row[j] - mu) * inv;
+            dxhat[j] = dyr[j] * gamma[j];
+            dgamma[j] += dyr[j] * xhat[j];
+            dbeta[j] += dyr[j];
+        }
+        let m1 = dxhat.iter().sum::<f32>() / c as f32;
+        let m2 = dxhat.iter().zip(&xhat).map(|(a, b)| a * b).sum::<f32>() / c as f32;
+        let dxr = &mut dx[r * c..(r + 1) * c];
+        for j in 0..c {
+            dxr[j] = inv * (dxhat[j] - m1 - xhat[j] * m2);
+        }
+    }
+    for (dst, &src) in g.acc(&format!("{prefix}.gamma"))?.iter_mut().zip(&dgamma) {
+        *dst += src;
+    }
+    for (dst, &src) in g.acc(&format!("{prefix}.beta"))?.iter_mut().zip(&dbeta) {
+        *dst += src;
+    }
+    Ok(dx)
+}
+
+/// Activations [`resmlp_fwd`] keeps for the backward: the hidden state after
+/// the input affine (+entry residual) and after each gelu-residual layer
+/// (`h[0..=layers]`), plus each layer's pre-activation (`t[0..layers]`).
+pub struct ResMlpCache {
+    h: Vec<Vec<f32>>,
+    t: Vec<Vec<f32>>,
+}
+
+/// [`forward::resmlp`] with activation caching.
+pub fn resmlp_fwd(
+    p: &ParamTable,
+    prefix: &str,
+    x: &[f32],
+    rows: usize,
+    c_in: usize,
+    c_hidden: usize,
+    c_out: usize,
+    layers: usize,
+) -> anyhow::Result<(Vec<f32>, ResMlpCache)> {
+    let mut h = affine(
+        p,
+        &format!("{prefix}.win"),
+        &format!("{prefix}.bin"),
+        x,
+        rows,
+        c_in,
+        c_hidden,
+    )?;
+    if c_in == c_hidden {
+        for (hv, xv) in h.iter_mut().zip(x) {
+            *hv += xv;
+        }
+    }
+    let mut cache = ResMlpCache {
+        h: Vec::with_capacity(layers + 1),
+        t: Vec::with_capacity(layers),
+    };
+    cache.h.push(h.clone());
+    for l in 0..layers {
+        let t = affine(
+            p,
+            &format!("{prefix}.w{l}"),
+            &format!("{prefix}.b{l}"),
+            &h,
+            rows,
+            c_hidden,
+            c_hidden,
+        )?;
+        for (hv, tv) in h.iter_mut().zip(&t) {
+            *hv += forward::gelu(*tv);
+        }
+        cache.t.push(t);
+        cache.h.push(h.clone());
+    }
+    let mut y = affine(
+        p,
+        &format!("{prefix}.wout"),
+        &format!("{prefix}.bout"),
+        &h,
+        rows,
+        c_hidden,
+        c_out,
+    )?;
+    if c_hidden == c_out {
+        for (yv, hv) in y.iter_mut().zip(&h) {
+            *yv += hv;
+        }
+    }
+    Ok((y, cache))
+}
+
+/// Backward of [`forward::resmlp`]; `x` is the forward input.
+pub fn resmlp_bwd(
+    p: &ParamTable,
+    g: &mut GradTable,
+    prefix: &str,
+    x: &[f32],
+    cache: &ResMlpCache,
+    dy: &[f32],
+    rows: usize,
+    c_in: usize,
+    c_hidden: usize,
+    c_out: usize,
+    layers: usize,
+) -> anyhow::Result<Vec<f32>> {
+    // exit affine (+ residual when c_hidden == c_out)
+    let mut dh = affine_bwd(
+        p,
+        g,
+        &format!("{prefix}.wout"),
+        &format!("{prefix}.bout"),
+        &cache.h[layers],
+        dy,
+        rows,
+        c_hidden,
+        c_out,
+    )?;
+    if c_hidden == c_out {
+        for (hv, dv) in dh.iter_mut().zip(dy) {
+            *hv += dv;
+        }
+    }
+    // gelu-residual stack, reversed
+    for l in (0..layers).rev() {
+        let t = &cache.t[l];
+        let dt: Vec<f32> = dh.iter().zip(t).map(|(&d, &tv)| d * gelu_grad(tv)).collect();
+        let da = affine_bwd(
+            p,
+            g,
+            &format!("{prefix}.w{l}"),
+            &format!("{prefix}.b{l}"),
+            &cache.h[l],
+            &dt,
+            rows,
+            c_hidden,
+            c_hidden,
+        )?;
+        for (hv, av) in dh.iter_mut().zip(&da) {
+            *hv += av;
+        }
+    }
+    // entry affine (+ residual when c_in == c_hidden)
+    let mut dx = affine_bwd(
+        p,
+        g,
+        &format!("{prefix}.win"),
+        &format!("{prefix}.bin"),
+        x,
+        &dh,
+        rows,
+        c_in,
+        c_hidden,
+    )?;
+    if c_in == c_hidden {
+        for (xv, hv) in dx.iter_mut().zip(&dh) {
+            *xv += hv;
+        }
+    }
+    Ok(dx)
+}
+
+/// Per-head encode statistics cached by [`flare_mixer_fwd`]: running max
+/// `mrun [H, M]`, denominator `den [H, M]`, normalized summary `z [H, M, D]`.
+pub struct MixerCache {
+    mrun: Vec<f32>,
+    den: Vec<f32>,
+    z: Vec<f32>,
+}
+
+/// [`forward::flare_mixer`] keeping the encode statistics per head.
+pub fn flare_mixer_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+) -> (Vec<f32>, MixerCache) {
+    assert_eq!(q.len(), h * m * d, "flare_mixer_fwd: q shape");
+    assert_eq!(k.len(), h * n * d, "flare_mixer_fwd: k shape");
+    assert_eq!(v.len(), h * n * d, "flare_mixer_fwd: v shape");
+    let mut y = vec![0.0f32; h * n * d];
+    let mut scores = vec![0.0f32; m];
+    let mut cache = MixerCache {
+        mrun: vec![0.0f32; h * m],
+        den: vec![0.0f32; h * m],
+        z: vec![0.0f32; h * m * d],
+    };
+    for hh in 0..h {
+        let qh = &q[hh * m * d..(hh + 1) * m * d];
+        let kh = &k[hh * n * d..(hh + 1) * n * d];
+        let vh = &v[hh * n * d..(hh + 1) * n * d];
+        let yh = &mut y[hh * n * d..(hh + 1) * n * d];
+        let mrun = &mut cache.mrun[hh * m..(hh + 1) * m];
+        let den = &mut cache.den[hh * m..(hh + 1) * m];
+        let z = &mut cache.z[hh * m * d..(hh + 1) * m * d];
+        mixer_encode(qh, kh, vh, m, n, d, scale, mrun, den, z);
+        mixer_decode(qh, kh, z, m, n, d, scale, yh, &mut scores);
+    }
+    (y, cache)
+}
+
+/// Streaming backward of one mixer head.
+///
+/// With `S = scale * Q K^T`, `A = softmax_N(S)` (encode, rows), `Z = A V`,
+/// `B = softmax_M(S)` (decode, columns) and `Y = B^T Z`, three passes over
+/// `t = 0..N` recompute `A[:, t]` / `B[:, t]` from the cached statistics:
+///
+/// 1. decode backward — accumulate `dZ += B dY` and the `dS_dec` pieces of
+///    `dQ`/`dK` (needs `Z`, `dY` only);
+/// 2. encode row-sums — `rowdot[mi] = sum_t A[mi,t] * dot(dZ[mi], V[t])`,
+///    plus `dV += A^T dZ` (needs the *complete* `dZ` from pass 1);
+/// 3. encode backward — `dS_enc = A (dA - rowdot)` into `dQ`/`dK`.
+#[allow(clippy::too_many_arguments)]
+fn mixer_head_bwd(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    mrun: &[f32],
+    den: &[f32],
+    z: &[f32],
+    dyh: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let mut scores = vec![0.0f32; m]; // raw S[:, t]
+    let mut bw = vec![0.0f32; m]; // decode weights B[:, t]
+    let mut dz = vec![0.0f32; m * d];
+    let mut rowdot = vec![0.0f32; m];
+
+    // pass 1: decode backward, dZ accumulation
+    for t in 0..n {
+        let kt = &kh[t * d..(t + 1) * d];
+        let dyt = &dyh[t * d..(t + 1) * d];
+        let mut mx = f32::NEG_INFINITY;
+        for mi in 0..m {
+            let s = scale * dot_f32(kt, &qh[mi * d..(mi + 1) * d]);
+            scores[mi] = s;
+            mx = mx.max(s);
+        }
+        let mut sum = 0.0f32;
+        for (b, &s) in bw.iter_mut().zip(&scores) {
+            *b = (s - mx).exp();
+            sum += *b;
+        }
+        let inv = 1.0 / sum;
+        let mut colsum = 0.0f32;
+        // db[mi] = <dY_t, Z_mi>; colsum = sum_mi B[mi] db[mi]
+        for mi in 0..m {
+            bw[mi] *= inv;
+            scores[mi] = dot_f32(dyt, &z[mi * d..(mi + 1) * d]); // reuse as db
+            colsum += bw[mi] * scores[mi];
+        }
+        let dkt = &mut dk[t * d..(t + 1) * d];
+        for mi in 0..m {
+            axpy_f32(bw[mi], dyt, &mut dz[mi * d..(mi + 1) * d]);
+            let ds = bw[mi] * (scores[mi] - colsum) * scale;
+            if ds != 0.0 {
+                axpy_f32(ds, kt, &mut dq[mi * d..(mi + 1) * d]);
+                axpy_f32(ds, &qh[mi * d..(mi + 1) * d], dkt);
+            }
+        }
+    }
+
+    // pass 2: encode row-sums rowdot[mi] = sum_t A[mi,t] dA[mi,t], dV
+    for t in 0..n {
+        let kt = &kh[t * d..(t + 1) * d];
+        let vt = &vh[t * d..(t + 1) * d];
+        let dvt = &mut dv[t * d..(t + 1) * d];
+        for mi in 0..m {
+            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
+            let a = (s - mrun[mi]).exp() / den[mi];
+            if a != 0.0 {
+                let da = dot_f32(&dz[mi * d..(mi + 1) * d], vt);
+                rowdot[mi] += a * da;
+                axpy_f32(a, &dz[mi * d..(mi + 1) * d], dvt);
+            }
+        }
+    }
+
+    // pass 3: encode backward dS_enc = A (dA - rowdot)
+    for t in 0..n {
+        let kt = &kh[t * d..(t + 1) * d];
+        let vt = &vh[t * d..(t + 1) * d];
+        let dkt = &mut dk[t * d..(t + 1) * d];
+        for mi in 0..m {
+            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
+            let a = (s - mrun[mi]).exp() / den[mi];
+            if a != 0.0 {
+                let da = dot_f32(&dz[mi * d..(mi + 1) * d], vt);
+                let ds = a * (da - rowdot[mi]) * scale;
+                axpy_f32(ds, kt, &mut dq[mi * d..(mi + 1) * d]);
+                axpy_f32(ds, &qh[mi * d..(mi + 1) * d], dkt);
+            }
+        }
+    }
+}
+
+/// Backward of [`forward::flare_mixer`]: returns `(dq, dk, dv)` with the
+/// forward shapes, using the cached encode statistics.
+pub fn flare_mixer_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    cache: &MixerCache,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(dy.len(), h * n * d, "flare_mixer_bwd: dy shape");
+    let mut dq = vec![0.0f32; h * m * d];
+    let mut dk = vec![0.0f32; h * n * d];
+    let mut dv = vec![0.0f32; h * n * d];
+    for hh in 0..h {
+        mixer_head_bwd(
+            &q[hh * m * d..(hh + 1) * m * d],
+            &k[hh * n * d..(hh + 1) * n * d],
+            &v[hh * n * d..(hh + 1) * n * d],
+            m,
+            n,
+            d,
+            scale,
+            &cache.mrun[hh * m..(hh + 1) * m],
+            &cache.den[hh * m..(hh + 1) * m],
+            &cache.z[hh * m * d..(hh + 1) * m * d],
+            &dy[hh * n * d..(hh + 1) * n * d],
+            &mut dq[hh * m * d..(hh + 1) * m * d],
+            &mut dk[hh * n * d..(hh + 1) * n * d],
+            &mut dv[hh * n * d..(hh + 1) * n * d],
+        );
+    }
+    (dq, dk, dv)
+}
+
+/// Activations of one FLARE mixing layer kept for the backward.
+pub struct FlareLayerCache {
+    kproj: ResMlpCache,
+    vproj: ResMlpCache,
+    /// per-head keys/values `[H, N, D]` (mixer backward inputs)
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    /// latent queries `[H, M, D]` as fed to the mixer
+    q: Vec<f32>,
+    mixer: MixerCache,
+    /// merged mixer output `[N, C]` (input of the out linear)
+    ymerged: Vec<f32>,
+}
+
+/// [`forward::flare_layer`] with activation caching.
+pub fn flare_layer_fwd(
+    p: &ParamTable,
+    prefix: &str,
+    x: &[f32],
+    n: usize,
+    cfg: &ModelCfg,
+) -> anyhow::Result<(Vec<f32>, FlareLayerCache)> {
+    let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
+    let (k, kproj) = resmlp_fwd(p, &format!("{prefix}.kproj"), x, n, c, c, c, cfg.kv_layers)?;
+    let (v, vproj) = resmlp_fwd(p, &format!("{prefix}.vproj"), x, n, c, c, c, cfg.kv_layers)?;
+    let kh = split_heads(&k, n, h, d);
+    let vh = split_heads(&v, n, h, d);
+    let lat = p.get(&format!("{prefix}.latents"))?;
+    let q: Vec<f32> = if cfg.shared_latents {
+        let mut q = Vec::with_capacity(h * m * d);
+        for _ in 0..h {
+            q.extend_from_slice(lat);
+        }
+        q
+    } else {
+        lat.to_vec()
+    };
+    let (yh, mixer) = flare_mixer_fwd(&q, &kh, &vh, h, m, n, d, cfg.scale as f32);
+    let ymerged = merge_heads(&yh, n, h, d);
+    let out = forward::linear(p, &format!("{prefix}.out"), &ymerged, n, c, c)?;
+    Ok((
+        out,
+        FlareLayerCache {
+            kproj,
+            vproj,
+            kh,
+            vh,
+            q,
+            mixer,
+            ymerged,
+        },
+    ))
+}
+
+/// Backward of one FLARE mixing layer; `x` is the layer input `[N, C]`.
+pub fn flare_layer_bwd(
+    p: &ParamTable,
+    g: &mut GradTable,
+    prefix: &str,
+    x: &[f32],
+    cache: &FlareLayerCache,
+    dout: &[f32],
+    n: usize,
+    cfg: &ModelCfg,
+) -> anyhow::Result<Vec<f32>> {
+    let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
+    let dymerged = linear_bwd(p, g, &format!("{prefix}.out"), &cache.ymerged, dout, n, c, c)?;
+    let dyh = split_heads(&dymerged, n, h, d);
+    let (dq, dkh, dvh) = flare_mixer_bwd(
+        &cache.q,
+        &cache.kh,
+        &cache.vh,
+        h,
+        m,
+        n,
+        d,
+        cfg.scale as f32,
+        &cache.mixer,
+        &dyh,
+    );
+    {
+        let dlat = g.acc(&format!("{prefix}.latents"))?;
+        if cfg.shared_latents {
+            // the shared [M, D] slice fed every head: sum head gradients
+            for hh in 0..h {
+                for (dst, &src) in dlat.iter_mut().zip(&dq[hh * m * d..(hh + 1) * m * d]) {
+                    *dst += src;
+                }
+            }
+        } else {
+            for (dst, &src) in dlat.iter_mut().zip(&dq) {
+                *dst += src;
+            }
+        }
+    }
+    let dk = merge_heads(&dkh, n, h, d);
+    let dv = merge_heads(&dvh, n, h, d);
+    let mut dx = resmlp_bwd(
+        p,
+        g,
+        &format!("{prefix}.kproj"),
+        x,
+        &cache.kproj,
+        &dk,
+        n,
+        c,
+        c,
+        c,
+        cfg.kv_layers,
+    )?;
+    let dxv = resmlp_bwd(
+        p,
+        g,
+        &format!("{prefix}.vproj"),
+        x,
+        &cache.vproj,
+        &dv,
+        n,
+        c,
+        c,
+        c,
+        cfg.kv_layers,
+    )?;
+    for (a, b) in dx.iter_mut().zip(&dxv) {
+        *a += b;
+    }
+    Ok(dx)
+}
+
+/// Activations of one pre-norm trunk block.
+struct BlockCache {
+    /// block input `[N, C]`
+    h_in: Vec<f32>,
+    /// ln1 output (mixing-layer input)
+    hn1: Vec<f32>,
+    mix: FlareLayerCache,
+    /// state after the mixing residual (ln2 input)
+    h_mid: Vec<f32>,
+    /// ln2 output (ffn input)
+    hn2: Vec<f32>,
+    ffn: ResMlpCache,
+}
+
+/// Shared-trunk activations for one sample.
+struct TrunkCache {
+    blocks: Vec<BlockCache>,
+    /// trunk output `[N, C]` (out_ln input)
+    h_final: Vec<f32>,
+}
+
+fn trunk_fwd(
+    cfg: &ModelCfg,
+    p: &ParamTable,
+    mut h: Vec<f32>,
+    n: usize,
+) -> anyhow::Result<TrunkCache> {
+    let c = cfg.c;
+    let mut blocks = Vec::with_capacity(cfg.blocks);
+    for b in 0..cfg.blocks {
+        let h_in = h.clone();
+        let hn1 = forward::layernorm(p, &format!("blk{b}.ln1"), &h, n, c)?;
+        let (mix_out, mix) = flare_layer_fwd(p, &format!("blk{b}.mix"), &hn1, n, cfg)?;
+        for (hv, mv) in h.iter_mut().zip(&mix_out) {
+            *hv += mv;
+        }
+        let h_mid = h.clone();
+        let hn2 = forward::layernorm(p, &format!("blk{b}.ln2"), &h, n, c)?;
+        let (ffn_out, ffn) =
+            resmlp_fwd(p, &format!("blk{b}.ffn"), &hn2, n, c, c, c, cfg.ffn_layers)?;
+        for (hv, fv) in h.iter_mut().zip(&ffn_out) {
+            *hv += fv;
+        }
+        blocks.push(BlockCache {
+            h_in,
+            hn1,
+            mix,
+            h_mid,
+            hn2,
+            ffn,
+        });
+    }
+    Ok(TrunkCache {
+        blocks,
+        h_final: h,
+    })
+}
+
+/// Backward through the trunk: consumes `d h_final`, returns `d h0`.
+fn trunk_bwd(
+    cfg: &ModelCfg,
+    p: &ParamTable,
+    g: &mut GradTable,
+    cache: &TrunkCache,
+    mut dh: Vec<f32>,
+    n: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let c = cfg.c;
+    for (b, blk) in cache.blocks.iter().enumerate().rev() {
+        // h_out = h_mid + ffn(ln2(h_mid))
+        let dhn2 = resmlp_bwd(
+            p,
+            g,
+            &format!("blk{b}.ffn"),
+            &blk.hn2,
+            &blk.ffn,
+            &dh,
+            n,
+            c,
+            c,
+            c,
+            cfg.ffn_layers,
+        )?;
+        let dmid_ln = layernorm_bwd(p, g, &format!("blk{b}.ln2"), &blk.h_mid, &dhn2, n, c)?;
+        for (a, bv) in dh.iter_mut().zip(&dmid_ln) {
+            *a += bv;
+        }
+        // h_mid = h_in + mix(ln1(h_in))
+        let dhn1 = flare_layer_bwd(p, g, &format!("blk{b}.mix"), &blk.hn1, &blk.mix, &dh, n, cfg)?;
+        let din_ln = layernorm_bwd(p, g, &format!("blk{b}.ln1"), &blk.h_in, &dhn1, n, c)?;
+        for (a, bv) in dh.iter_mut().zip(&din_ln) {
+            *a += bv;
+        }
+    }
+    Ok(dh)
+}
+
+/// Per-sample relative-L2 loss (paper Eq. 21/22, the training objective of
+/// `compile.train.rel_l2_loss`) and its gradient w.r.t. `pred`.
+fn rel_l2_loss_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
+    debug_assert_eq!(pred.len(), target.len());
+    let mut num2 = 0.0f64;
+    let mut den2 = 0.0f64;
+    for (p, t) in pred.iter().zip(target) {
+        num2 += (*p as f64 - *t as f64).powi(2);
+        den2 += (*t as f64).powi(2);
+    }
+    let num = num2.sqrt();
+    let den = den2.sqrt() + 1e-12;
+    let loss = num / den;
+    let mut grad = vec![0.0f32; pred.len()];
+    if num > 1e-30 {
+        let s = 1.0 / (num * den);
+        for (gv, (p, t)) in grad.iter_mut().zip(pred.iter().zip(target)) {
+            *gv = ((*p as f64 - *t as f64) * s) as f32;
+        }
+    }
+    (loss, grad)
+}
+
+/// Softmax cross-entropy on one logit row and its gradient
+/// (`compile.train.cross_entropy_loss` for batch size 1).
+fn cross_entropy_loss_grad(logits: &[f32], label: usize) -> (f64, Vec<f32>) {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut den = 0.0f64;
+    for &l in logits {
+        den += (l as f64 - mx).exp();
+    }
+    let logden = den.ln();
+    let loss = -((logits[label] as f64 - mx) - logden);
+    let mut grad = vec![0.0f32; logits.len()];
+    for (j, gv) in grad.iter_mut().enumerate() {
+        let p = (logits[j] as f64 - mx).exp() / den;
+        *gv = (p - if j == label { 1.0 } else { 0.0 }) as f32;
+    }
+    (loss, grad)
+}
+
+/// Loss + full parameter gradient for one regression sample: accumulates
+/// `dL/dθ` into `grad` (callers batch by summing flat buffers) and returns
+/// the sample's relative-L2 loss.
+pub fn loss_grad_fields(
+    cfg: &ModelCfg,
+    p: &ParamTable,
+    g: &mut GradTable,
+    x: &[f32],
+    target: &[f32],
+) -> anyhow::Result<f64> {
+    check_native_supported(cfg)?;
+    anyhow::ensure!(!cfg.is_classification(), "use loss_grad_tokens for token tasks");
+    anyhow::ensure!(cfg.d_in > 0 && x.len() % cfg.d_in == 0, "input not a multiple of d_in");
+    let n = x.len() / cfg.d_in;
+    anyhow::ensure!(
+        target.len() == n * cfg.d_out,
+        "target length {} != n*d_out = {}",
+        target.len(),
+        n * cfg.d_out
+    );
+    let c = cfg.c;
+
+    // forward with caches
+    let (h0, in_proj) = resmlp_fwd(p, "in_proj", x, n, cfg.d_in, c, c, cfg.io_layers)?;
+    let trunk = trunk_fwd(cfg, p, h0, n)?;
+    let hn_out = forward::layernorm(p, "out_ln", &trunk.h_final, n, c)?;
+    let (pred, out_proj) = resmlp_fwd(p, "out_proj", &hn_out, n, c, c, cfg.d_out, cfg.io_layers)?;
+
+    let (loss, dpred) = rel_l2_loss_grad(&pred, target);
+
+    // backward
+    let dhn_out = resmlp_bwd(
+        p,
+        g,
+        "out_proj",
+        &hn_out,
+        &out_proj,
+        &dpred,
+        n,
+        c,
+        c,
+        cfg.d_out,
+        cfg.io_layers,
+    )?;
+    let dh_final = layernorm_bwd(p, g, "out_ln", &trunk.h_final, &dhn_out, n, c)?;
+    let dh0 = trunk_bwd(cfg, p, g, &trunk, dh_final, n)?;
+    resmlp_bwd(p, g, "in_proj", x, &in_proj, &dh0, n, cfg.d_in, c, c, cfg.io_layers)?;
+    Ok(loss)
+}
+
+/// Loss + full parameter gradient for one classification sample (embedding
+/// lookup, trunk, mean pool, linear head, softmax cross-entropy).
+pub fn loss_grad_tokens(
+    cfg: &ModelCfg,
+    p: &ParamTable,
+    g: &mut GradTable,
+    tokens: &[i32],
+    label: i32,
+) -> anyhow::Result<f64> {
+    check_native_supported(cfg)?;
+    anyhow::ensure!(cfg.is_classification(), "use loss_grad_fields for field tasks");
+    anyhow::ensure!(
+        label >= 0 && (label as usize) < cfg.num_classes,
+        "label {label} outside {} classes",
+        cfg.num_classes
+    );
+    let n = tokens.len();
+    let c = cfg.c;
+    let embed = p.get("embed")?;
+    let mut h0 = vec![0.0f32; n * c];
+    for (t, &tok) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            tok >= 0 && (tok as usize) < cfg.vocab,
+            "token id {tok} outside vocab {}",
+            cfg.vocab
+        );
+        h0[t * c..(t + 1) * c].copy_from_slice(&embed[tok as usize * c..(tok as usize + 1) * c]);
+    }
+    let trunk = trunk_fwd(cfg, p, h0, n)?;
+    let hn_out = forward::layernorm(p, "out_ln", &trunk.h_final, n, c)?;
+    let pooled: Vec<f32> =
+        (0..c).map(|j| (0..n).map(|t| hn_out[t * c + j]).sum::<f32>() / n as f32).collect();
+    let logits = forward::linear(p, "cls_head", &pooled, 1, c, cfg.num_classes)?;
+
+    let (loss, dlogits) = cross_entropy_loss_grad(&logits, label as usize);
+
+    let dpooled = linear_bwd(p, g, "cls_head", &pooled, &dlogits, 1, c, cfg.num_classes)?;
+    let mut dhn_out = vec![0.0f32; n * c];
+    let inv_n = 1.0 / n as f32;
+    for t in 0..n {
+        for j in 0..c {
+            dhn_out[t * c + j] = dpooled[j] * inv_n;
+        }
+    }
+    let dh_final = layernorm_bwd(p, g, "out_ln", &trunk.h_final, &dhn_out, n, c)?;
+    let dh0 = trunk_bwd(cfg, p, g, &trunk, dh_final, n)?;
+    {
+        let dembed = g.acc("embed")?;
+        for (t, &tok) in tokens.iter().enumerate() {
+            let dst = &mut dembed[tok as usize * c..(tok as usize + 1) * c];
+            for (a, &b) in dst.iter_mut().zip(&dh0[t * c..(t + 1) * c]) {
+                *a += b;
+            }
+        }
+    }
+    Ok(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::SpecBuilder;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.3, 0.0, 0.4, 1.0, 2.5] {
+            let eps = 1e-3f64;
+            let xf = x as f64;
+            let fd = (forward::gelu((xf + eps) as f32) as f64
+                - forward::gelu((xf - eps) as f32) as f64)
+                / (2.0 * eps);
+            let an = gelu_grad(x) as f64;
+            assert!((an - fd).abs() < 1e-3, "x={x}: analytic {an} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn mixer_fwd_cache_matches_plain_forward() {
+        let (h, m, n, d) = (2usize, 4usize, 13usize, 5usize);
+        let mut rng = Rng::new(3);
+        let q: Vec<f32> = (0..h * m * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+        let plain = forward::flare_mixer(&q, &k, &v, h, m, n, d, 0.7);
+        let (cached, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, 0.7);
+        assert_eq!(plain, cached);
+        assert_eq!(cache.mrun.len(), h * m);
+        assert_eq!(cache.den.len(), h * m);
+        assert_eq!(cache.z.len(), h * m * d);
+        assert!(cache.den.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn mixer_bwd_row_stochastic_invariance() {
+        // decode weights are row-stochastic over M, so a dY that is constant
+        // per token must produce dV columns summing to that constant per
+        // token (sum_mi B A = row-stochastic composition) — and dQ/dK that
+        // are exactly zero only in the *sum over the value path*; here we
+        // check the cheap invariant: sum over all dV equals sum over all dY.
+        let (h, m, n, d) = (1usize, 3usize, 9usize, 4usize);
+        let mut rng = Rng::new(5);
+        let q: Vec<f32> = (0..h * m * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+        let (_, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, 1.0);
+        let dy: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
+        let (_, _, dv) = flare_mixer_bwd(&q, &k, &v, h, m, n, d, 1.0, &cache, &dy);
+        // Y = B^T A V with B^T A doubly "column-stochastic" in the sense
+        // that each output token's weights over input tokens sum to 1, so
+        // summing dV over tokens per channel equals summing dY per channel.
+        for j in 0..d {
+            let sv: f32 = (0..n).map(|t| dv[t * d + j]).sum();
+            let sy: f32 = (0..n).map(|t| dy[t * d + j]).sum();
+            assert!((sv - sy).abs() < 1e-4, "channel {j}: {sv} vs {sy}");
+        }
+    }
+
+    #[test]
+    fn grad_table_addresses_entries() {
+        let mut s = SpecBuilder::new();
+        s.linear("l", 2, 3);
+        let (entries, total) = s.finish();
+        let map = crate::model::spec::index_by_name(&entries);
+        let mut flat = vec![0.0f32; total];
+        let mut g = GradTable::new(&mut flat, &map);
+        g.acc("l.b").unwrap()[1] = 2.5;
+        assert!(g.acc("nope").is_err());
+        assert_eq!(flat[2 * 3 + 1], 2.5);
+    }
+}

@@ -51,7 +51,7 @@ pub fn gelu(x: f32) -> f32 {
 }
 
 /// `y[rows, c_out] = x[rows, c_in] @ W + b` with explicit weight names.
-fn affine(
+pub(crate) fn affine(
     p: &ParamTable,
     wname: &str,
     bname: &str,
@@ -193,6 +193,89 @@ pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
     out
 }
 
+/// Encode pass of one head: `z = softmax_N(Q K^T) V` via an online softmax
+/// streamed over N.  Writes the running max `mrun [M]`, denominator
+/// `den [M]` and the *normalized* latent summary `z [M, D]` into the caller's
+/// buffers — the same statistics the streaming backward pass replays, so
+/// forward-with-cache is this exact function with the buffers kept.
+pub(crate) fn mixer_encode(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    mrun: &mut [f32],
+    den: &mut [f32],
+    z: &mut [f32],
+) {
+    mrun.fill(f32::NEG_INFINITY);
+    den.fill(0.0);
+    z.fill(0.0);
+    for t in 0..n {
+        let kt = &kh[t * d..(t + 1) * d];
+        let vt = &vh[t * d..(t + 1) * d];
+        for mi in 0..m {
+            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
+            let acc = &mut z[mi * d..(mi + 1) * d];
+            if s <= mrun[mi] {
+                let e = (s - mrun[mi]).exp();
+                den[mi] += e;
+                axpy_f32(e, vt, acc);
+            } else {
+                // new running max: rescale history, this element weighs 1
+                let corr = (mrun[mi] - s).exp();
+                den[mi] = den[mi] * corr + 1.0;
+                for (a, &vv) in acc.iter_mut().zip(vt) {
+                    *a = *a * corr + vv;
+                }
+                mrun[mi] = s;
+            }
+        }
+    }
+    for mi in 0..m {
+        let inv = 1.0 / den[mi];
+        for zv in z[mi * d..(mi + 1) * d].iter_mut() {
+            *zv *= inv;
+        }
+    }
+}
+
+/// Decode pass of one head: `y_t = softmax_M(K_t Q^T) Z` with the M latent
+/// axis fully resident; `scores` is an `[M]` scratch buffer.
+pub(crate) fn mixer_decode(
+    qh: &[f32],
+    kh: &[f32],
+    z: &[f32],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    yh: &mut [f32],
+    scores: &mut [f32],
+) {
+    for t in 0..n {
+        let kt = &kh[t * d..(t + 1) * d];
+        let mut mx = f32::NEG_INFINITY;
+        for mi in 0..m {
+            let s = scale * dot_f32(kt, &qh[mi * d..(mi + 1) * d]);
+            scores[mi] = s;
+            mx = mx.max(s);
+        }
+        let mut sum = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            sum += *sc;
+        }
+        let inv = 1.0 / sum;
+        let yt = &mut yh[t * d..(t + 1) * d];
+        for mi in 0..m {
+            axpy_f32(scores[mi] * inv, &z[mi * d..(mi + 1) * d], yt);
+        }
+    }
+}
+
 /// Multi-head FLARE mixer: `q [H, M, D]`, `k`/`v` `[H, N, D]` -> `[H, N, D]`.
 ///
 /// Encode streams `K`/`V` once with an online softmax (running max `m`,
@@ -222,59 +305,8 @@ pub fn flare_mixer(
         let kh = &k[hh * n * d..(hh + 1) * n * d];
         let vh = &v[hh * n * d..(hh + 1) * n * d];
         let yh = &mut y[hh * n * d..(hh + 1) * n * d];
-
-        // encode pass: z = softmax(Q K^T) V via online softmax over N
-        mrun.fill(f32::NEG_INFINITY);
-        den.fill(0.0);
-        z.fill(0.0);
-        for t in 0..n {
-            let kt = &kh[t * d..(t + 1) * d];
-            let vt = &vh[t * d..(t + 1) * d];
-            for mi in 0..m {
-                let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
-                let acc = &mut z[mi * d..(mi + 1) * d];
-                if s <= mrun[mi] {
-                    let e = (s - mrun[mi]).exp();
-                    den[mi] += e;
-                    axpy_f32(e, vt, acc);
-                } else {
-                    // new running max: rescale history, this element weighs 1
-                    let corr = (mrun[mi] - s).exp();
-                    den[mi] = den[mi] * corr + 1.0;
-                    for (a, &vv) in acc.iter_mut().zip(vt) {
-                        *a = *a * corr + vv;
-                    }
-                    mrun[mi] = s;
-                }
-            }
-        }
-        for mi in 0..m {
-            let inv = 1.0 / den[mi];
-            for zv in z[mi * d..(mi + 1) * d].iter_mut() {
-                *zv *= inv;
-            }
-        }
-
-        // decode pass: y_t = softmax_M(K_t Q^T) Z, M axis fully resident
-        for t in 0..n {
-            let kt = &kh[t * d..(t + 1) * d];
-            let mut mx = f32::NEG_INFINITY;
-            for mi in 0..m {
-                let s = scale * dot_f32(kt, &qh[mi * d..(mi + 1) * d]);
-                scores[mi] = s;
-                mx = mx.max(s);
-            }
-            let mut sum = 0.0f32;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - mx).exp();
-                sum += *sc;
-            }
-            let inv = 1.0 / sum;
-            let yt = &mut yh[t * d..(t + 1) * d];
-            for mi in 0..m {
-                axpy_f32(scores[mi] * inv, &z[mi * d..(mi + 1) * d], yt);
-            }
-        }
+        mixer_encode(qh, kh, vh, m, n, d, scale, &mut mrun, &mut den, &mut z);
+        mixer_decode(qh, kh, &z, m, n, d, scale, yh, &mut scores);
     }
     y
 }

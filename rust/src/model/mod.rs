@@ -1,7 +1,9 @@
 //! Rust-side model state and numerics: parameter initialization
 //! (bit-identical to python), the parameter packing spec, the pure-Rust
-//! FLARE forward pass, flat-vector views, and checkpoint save/load.
+//! FLARE forward pass and its reverse-mode backward, flat-vector views, and
+//! checkpoint save/load.
 
+pub mod backward;
 pub mod checkpoint;
 pub mod forward;
 pub mod init;

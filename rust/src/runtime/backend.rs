@@ -3,11 +3,11 @@
 //!
 //! Two implementations exist:
 //!
-//! * [`crate::runtime::NativeBackend`] (default) — the FLARE forward pass in
-//!   pure Rust; runs anywhere, no artifacts or native libraries needed.
+//! * [`crate::runtime::NativeBackend`] (default) — the FLARE forward and
+//!   reverse-mode backward pass in pure Rust with a fused AdamW step; runs
+//!   (and trains) anywhere, no artifacts or native libraries needed.
 //! * `XlaBackend` (`--features xla`) — executes the AOT-compiled HLO
-//!   artifacts through PJRT; the only backend that supports the fused AdamW
-//!   train step.
+//!   artifacts through PJRT, including the fused AdamW step artifact.
 //!
 //! Selection: [`default_backend`] honours `FLARE_BACKEND=native|xla`, else
 //! picks `xla` when the feature is compiled in, `native` otherwise.
@@ -92,8 +92,7 @@ pub trait Backend {
     ) -> anyhow::Result<f64> {
         let _ = (manifest, case, state, step, lr, input, target);
         anyhow::bail!(
-            "the {:?} backend does not support training; build with \
-             --features xla and select FLARE_BACKEND=xla",
+            "the {:?} backend does not implement train_step",
             self.name()
         )
     }
@@ -188,7 +187,7 @@ mod tests {
     fn make_backend_native() {
         let b = make_backend("native").unwrap();
         assert_eq!(b.name(), "native");
-        assert!(!b.supports_training() || cfg!(feature = "xla"));
+        assert!(b.supports_training(), "native backend trains out of the box");
     }
 
     #[test]

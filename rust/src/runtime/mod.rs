@@ -1,11 +1,12 @@
 //! Execution backends behind the [`Backend`] trait.
 //!
-//! * [`NativeBackend`] (default) — the FLARE forward pass in pure Rust
-//!   (`model::forward`), batch-parallel over OS threads.  Works on a clean
-//!   machine with no artifacts and no native libraries.
+//! * [`NativeBackend`] (default) — the FLARE forward pass plus reverse-mode
+//!   training (`model::forward` / `model::backward` + fused AdamW),
+//!   batch-parallel over OS threads.  Works on a clean machine with no
+//!   artifacts and no native libraries.
 //! * `XlaBackend` (`--features xla`) — PJRT execution of the AOT HLO
-//!   artifacts emitted by `python/compile/aot.py`; the only backend with
-//!   the fused AdamW train step.
+//!   artifacts emitted by `python/compile/aot.py`, including the fused
+//!   AdamW step artifact.
 //!
 //! [`default_backend`] selects at runtime (`FLARE_BACKEND=native|xla`
 //! overrides); the serving coordinator, trainer, benches and CLI all go

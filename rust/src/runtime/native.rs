@@ -1,22 +1,32 @@
-//! [`NativeBackend`]: the FLARE forward pass in pure Rust.
+//! [`NativeBackend`]: the FLARE forward *and* backward pass in pure Rust.
 //!
 //! No artifacts, no PJRT, no shape specialization — plans are built from
 //! the manifest's packing spec (or re-declared from the model config via
 //! [`crate::model::build_spec`] when the manifest carries none), and batches
 //! fan out across OS threads with [`crate::util::threadpool::parallel_map`].
 //!
-//! This is what makes `cargo build && cargo test` — and serving — work on a
-//! clean machine; the XLA path stays available behind `--features xla` for
-//! training and baseline mixers.
+//! Training is native too: each sample's loss + full parameter gradient is
+//! computed by the reverse pass in [`crate::model::backward`] (batch
+//! members in parallel, gradients averaged on the host), then the fused
+//! [`AdamW`] step updates the flat optimizer state in place.  This makes
+//! `cargo build && cargo test` — and the whole train-then-serve lifecycle —
+//! work on a clean machine; the XLA path stays available behind
+//! `--features xla` for the AOT artifacts and baseline mixers.
+//!
+//! Capability errors route through `forward::check_native_supported`, so an
+//! unsupported configuration names the offending field (mixer kind,
+//! `latent_sa_blocks`) instead of a blanket "requires xla".
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
 use crate::config::{CaseCfg, Manifest, ModelCfg, ParamEntry};
+use crate::model::backward::{loss_grad_fields, loss_grad_tokens, GradTable};
 use crate::model::forward::{self, ParamTable};
 use crate::model::{build_spec, index_by_name};
-use crate::runtime::backend::{Backend, BatchInput};
+use crate::runtime::backend::{Backend, BatchInput, BatchTarget, OptState};
+use crate::train::AdamW;
 use crate::util::threadpool::parallel_map;
 
 /// Resolved execution plan for one case.
@@ -147,6 +157,103 @@ impl Backend for NativeBackend {
             y.extend(out?);
         }
         Ok(y)
+    }
+
+    fn supports_training(&self) -> bool {
+        true
+    }
+
+    /// One native AdamW step: per-sample reverse passes in parallel,
+    /// gradients averaged over the batch, fused optimizer update in place.
+    fn train_step(
+        &self,
+        _manifest: &Manifest,
+        case: &CaseCfg,
+        state: &mut OptState,
+        step: usize,
+        lr: f64,
+        input: BatchInput<'_>,
+        target: BatchTarget<'_>,
+    ) -> anyhow::Result<f64> {
+        let plan_rc = self.plan(case)?;
+        let plan: &Plan = plan_rc.as_ref();
+        anyhow::ensure!(
+            state.params.len() == plan.param_count
+                && state.m.len() == plan.param_count
+                && state.v.len() == plan.param_count,
+            "optimizer state length {} != expected {}",
+            state.params.len(),
+            plan.param_count
+        );
+        let params = &state.params;
+        let results: Vec<anyhow::Result<(f64, Vec<f32>)>> = match (&input, &target) {
+            (BatchInput::Fields(x), BatchTarget::Fields(y)) => {
+                // the gathered batch holds exactly case.batch samples (the
+                // trait contract, same as the XLA step artifact's shapes);
+                // sample length is NOT inferred from model.n because the
+                // native path supports variable point counts, where length
+                // division alone is ambiguous
+                let batch = case.batch;
+                anyhow::ensure!(batch > 0, "case {} has batch 0", case.name);
+                anyhow::ensure!(
+                    !y.is_empty() && y.len() % batch == 0,
+                    "target length {} not divisible by batch {batch}",
+                    y.len()
+                );
+                anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
+                let per_y = y.len() / batch;
+                let per_x = x.len() / batch;
+                parallel_map(batch, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    let mut gflat = vec![0.0f32; plan.param_count];
+                    let mut grads = GradTable::new(&mut gflat, &plan.entries);
+                    let loss = loss_grad_fields(
+                        &plan.model,
+                        &table,
+                        &mut grads,
+                        &x[i * per_x..(i + 1) * per_x],
+                        &y[i * per_y..(i + 1) * per_y],
+                    )?;
+                    Ok((loss, gflat))
+                })
+            }
+            (BatchInput::Tokens(tokens), BatchTarget::Labels(labels)) => {
+                let batch = labels.len();
+                anyhow::ensure!(batch > 0, "empty training batch");
+                anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
+                let per = tokens.len() / batch;
+                parallel_map(batch, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    let mut gflat = vec![0.0f32; plan.param_count];
+                    let mut grads = GradTable::new(&mut gflat, &plan.entries);
+                    let loss = loss_grad_tokens(
+                        &plan.model,
+                        &table,
+                        &mut grads,
+                        &tokens[i * per..(i + 1) * per],
+                        labels[i],
+                    )?;
+                    Ok((loss, gflat))
+                })
+            }
+            _ => anyhow::bail!("mismatched input/target kinds for case {}", case.name),
+        };
+        let mut grad = vec![0.0f32; plan.param_count];
+        let mut loss_sum = 0.0f64;
+        let count = results.len();
+        for r in results {
+            let (loss, gflat) = r?;
+            loss_sum += loss;
+            for (a, &b) in grad.iter_mut().zip(&gflat) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / count as f32;
+        for gv in grad.iter_mut() {
+            *gv *= inv;
+        }
+        AdamW::default().step(state, &grad, step, lr);
+        Ok(loss_sum / count as f64)
     }
 
     fn qk_keys(

@@ -3,12 +3,16 @@
 //!
 //! One [`Backend::train_step`] per optimizer step: the backend consumes the
 //! gathered batch plus the host-side [`OptState`] and returns the scalar
-//! loss.  Evaluation goes through [`Backend::forward`] and the host-side
-//! metrics, so it works on every backend; training itself currently
-//! requires the XLA backend (the AOT step artifact carries the gradients).
+//! loss.  Every backend trains: the native backend computes gradients with
+//! the pure-Rust reverse pass (`model::backward`) and applies the fused
+//! [`AdamW`] step; the XLA backend executes the AOT step artifact.
+//! Evaluation goes through [`Backend::eval_batch`], which defaults to
+//! forward + host-side metrics.
 
+pub mod optim;
 pub mod schedule;
 
+pub use optim::AdamW;
 pub use schedule::OneCycle;
 
 use crate::config::{CaseCfg, Manifest};
@@ -157,7 +161,7 @@ pub fn train_case(
 ) -> anyhow::Result<TrainOutcome> {
     anyhow::ensure!(
         backend.supports_training(),
-        "the {:?} backend cannot train case {} (training needs the xla backend)",
+        "the {:?} backend does not implement train_step for case {}",
         backend.name(),
         case.name
     );
@@ -250,15 +254,11 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_refuses_training() {
+    fn native_backend_trains_tiny_case() {
         use crate::runtime::make_backend;
         let backend = make_backend("native").unwrap();
-        if backend.supports_training() {
-            return; // only meaningful for the native backend
-        }
-        // any manifest/case would do — the capability check fires first,
-        // so build the smallest possible stand-ins
-        let dir = std::env::temp_dir().join("flare_train_refuse_test");
+        assert!(backend.supports_training(), "native backend must train");
+        let dir = std::env::temp_dir().join("flare_train_native_test");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
             dir.join("manifest.json"),
@@ -266,43 +266,48 @@ mod tests {
         )
         .unwrap();
         let manifest = Manifest::load(&dir).unwrap();
+        let model = crate::config::ModelCfg {
+            mixer: "flare".into(),
+            n: 16,
+            d_in: 3,
+            d_out: 1,
+            c: 8,
+            heads: 2,
+            m: 4,
+            blocks: 1,
+            kv_layers: 1,
+            ffn_layers: 1,
+            io_layers: 1,
+            latent_sa_blocks: 0,
+            shared_latents: false,
+            scale: 1.0,
+            task: "regression".into(),
+            vocab: 0,
+            num_classes: 0,
+        };
+        let (entries, param_count) = crate::model::build_spec(&model).unwrap();
         let case = CaseCfg {
             name: "t".into(),
             group: "g".into(),
             dataset: "darcy".into(),
             dataset_meta: crate::util::json::parse(
-                r#"{"kind":"darcy","n":16,"grid":4,"train":1,"test":1}"#,
+                r#"{"kind":"darcy","n":16,"grid":4,"train":2,"test":1}"#,
             )
             .unwrap(),
             batch: 1,
-            train_steps: 1,
+            train_steps: 3,
             lr: 1e-3,
-            model: crate::config::ModelCfg {
-                mixer: "flare".into(),
-                n: 16,
-                d_in: 3,
-                d_out: 1,
-                c: 8,
-                heads: 2,
-                m: 4,
-                blocks: 1,
-                kv_layers: 1,
-                ffn_layers: 1,
-                io_layers: 1,
-                latent_sa_blocks: 0,
-                shared_latents: false,
-                scale: 1.0,
-                task: "regression".into(),
-                vocab: 0,
-                num_classes: 0,
-            },
-            param_count: 0,
+            model,
+            param_count,
             artifacts: Default::default(),
-            params: vec![],
+            params: entries,
         };
-        let err = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default())
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("cannot train"), "{err}");
+        let out = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default()).unwrap();
+        assert_eq!(out.losses.len(), 3);
+        assert!(out.losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+        assert!(out.final_metric.is_finite());
+        // the optimizer actually moved the parameters
+        let init = init_params(&case.params, case.param_count, manifest.seed);
+        assert_ne!(out.params, init);
     }
 }

@@ -1,0 +1,590 @@
+//! Gradient checks for the native reverse pass (`model::backward`).
+//!
+//! Each op backward is validated against *central finite differences of an
+//! f64 reference implementation* of the same math — the f64 reference keeps
+//! the difference quotient free of f32 rounding, so the analytic f32
+//! gradients must agree to well under the 1e-3 relative-error gate.  A
+//! full-model directional-derivative check and a 20-step end-to-end Darcy
+//! training run (seeded `util::rng::Rng`, loss must trend monotonically
+//! down) close the loop from op gradients to the optimizer.
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use flare::config::ModelCfg;
+use flare::model::backward::{
+    flare_mixer_bwd, flare_mixer_fwd, layernorm_bwd, loss_grad_fields, resmlp_bwd, resmlp_fwd,
+    GradTable,
+};
+use flare::model::forward::ParamTable;
+use flare::model::spec::SpecBuilder;
+use flare::model::{build_spec, index_by_name, init_params};
+use flare::util::rng::Rng;
+
+const EPS: f64 = 1e-5;
+/// Relative-error gate of the acceptance criteria.
+const TOL: f64 = 1e-3;
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / (a.abs() + b.abs()).max(1e-2)
+}
+
+fn randn(rng: &mut Rng, len: usize, scale: f64) -> Vec<f32> {
+    (0..len).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+// ---------------------------------------------------------------- layernorm
+
+/// f64 layernorm reference (eps 1e-5, matching the f32 kernel).
+fn layernorm_ref(x: &[f64], gamma: &[f64], beta: &[f64], rows: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; rows * c];
+    for r in 0..rows {
+        let row = &x[r * c..(r + 1) * c];
+        let mu = row.iter().sum::<f64>() / c as f64;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / c as f64;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..c {
+            out[r * c + j] = (row[j] - mu) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+#[test]
+fn layernorm_backward_matches_central_differences() {
+    let (rows, c) = (3usize, 5usize);
+    let mut s = SpecBuilder::new();
+    s.layernorm("ln", c);
+    let (entries, total) = s.finish();
+    let map = index_by_name(&entries);
+    let mut rng = Rng::new(42);
+    let flat = randn(&mut rng, total, 0.8);
+    let x = randn(&mut rng, rows * c, 1.0);
+    let w = randn(&mut rng, rows * c, 1.0); // linear functional L = <w, y>
+
+    // analytic: dL/dy = w through the f32 backward
+    let p = ParamTable::new(&flat, &map);
+    let mut gflat = vec![0.0f32; total];
+    let mut g = GradTable::new(&mut gflat, &map);
+    let dx = layernorm_bwd(&p, &mut g, "ln", &x, &w, rows, c).unwrap();
+
+    // f64 reference loss as a function of (x, gamma, beta)
+    let loss = |xv: &[f64], gv: &[f64], bv: &[f64]| -> f64 {
+        layernorm_ref(xv, gv, bv, rows, c)
+            .iter()
+            .zip(&w)
+            .map(|(y, &wv)| y * wv as f64)
+            .sum()
+    };
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let g64: Vec<f64> = flat[..c].iter().map(|&v| v as f64).collect();
+    let b64: Vec<f64> = flat[c..].iter().map(|&v| v as f64).collect();
+
+    let mut max_rel = 0.0f64;
+    for i in 0..rows * c {
+        let mut hi = x64.clone();
+        let mut lo = x64.clone();
+        hi[i] += EPS;
+        lo[i] -= EPS;
+        let fd = (loss(&hi, &g64, &b64) - loss(&lo, &g64, &b64)) / (2.0 * EPS);
+        max_rel = max_rel.max(rel_err(dx[i] as f64, fd));
+    }
+    for j in 0..c {
+        let mut hi = g64.clone();
+        let mut lo = g64.clone();
+        hi[j] += EPS;
+        lo[j] -= EPS;
+        let fd = (loss(&x64, &hi, &b64) - loss(&x64, &lo, &b64)) / (2.0 * EPS);
+        max_rel = max_rel.max(rel_err(gflat[j] as f64, fd));
+        let mut hi = b64.clone();
+        let mut lo = b64.clone();
+        hi[j] += EPS;
+        lo[j] -= EPS;
+        let fd = (loss(&x64, &g64, &hi) - loss(&x64, &g64, &lo)) / (2.0 * EPS);
+        max_rel = max_rel.max(rel_err(gflat[c + j] as f64, fd));
+    }
+    assert!(max_rel < TOL, "layernorm max relative error {max_rel:.2e}");
+}
+
+// ------------------------------------------------------------------- resmlp
+
+fn gelu_ref(x: f64) -> f64 {
+    const S: f64 = 0.797_884_56;
+    const A: f64 = 0.044_715;
+    0.5 * x * (1.0 + (S * (x + A * x * x * x)).tanh())
+}
+
+/// f64 ResMLP reference over a flat parameter vector with the spec layout.
+struct ResMlpRef {
+    entries: Vec<(String, usize, usize)>, // name, offset, size
+    c_in: usize,
+    c_hidden: usize,
+    c_out: usize,
+    layers: usize,
+}
+
+impl ResMlpRef {
+    fn get<'a>(&self, flat: &'a [f64], name: &str) -> &'a [f64] {
+        let (_, off, size) = self
+            .entries
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .expect("ref entry");
+        &flat[*off..*off + *size]
+    }
+
+    fn affine(
+        &self,
+        flat: &[f64],
+        w: &str,
+        b: &str,
+        x: &[f64],
+        rows: usize,
+        ci: usize,
+        co: usize,
+    ) -> Vec<f64> {
+        let wv = self.get(flat, w);
+        let bv = self.get(flat, b);
+        let mut y = vec![0.0f64; rows * co];
+        for r in 0..rows {
+            for j in 0..co {
+                let mut acc = bv[j];
+                for i in 0..ci {
+                    acc += x[r * ci + i] * wv[i * co + j];
+                }
+                y[r * co + j] = acc;
+            }
+        }
+        y
+    }
+
+    fn forward(&self, flat: &[f64], x: &[f64], rows: usize) -> Vec<f64> {
+        let (ci, ch, co) = (self.c_in, self.c_hidden, self.c_out);
+        let mut h = self.affine(flat, "mlp.win", "mlp.bin", x, rows, ci, ch);
+        if ci == ch {
+            for (hv, xv) in h.iter_mut().zip(x) {
+                *hv += xv;
+            }
+        }
+        for l in 0..self.layers {
+            let t = self.affine(flat, &format!("mlp.w{l}"), &format!("mlp.b{l}"), &h, rows, ch, ch);
+            for (hv, tv) in h.iter_mut().zip(&t) {
+                *hv += gelu_ref(*tv);
+            }
+        }
+        let mut y = self.affine(flat, "mlp.wout", "mlp.bout", &h, rows, ch, co);
+        if ch == co {
+            for (yv, hv) in y.iter_mut().zip(&h) {
+                *yv += hv;
+            }
+        }
+        y
+    }
+}
+
+fn check_resmlp(c_in: usize, c_hidden: usize, c_out: usize, layers: usize, seed: u64) {
+    let rows = 3usize;
+    let mut s = SpecBuilder::new();
+    s.resmlp("mlp", c_in, c_hidden, c_out, layers);
+    let (entries, total) = s.finish();
+    let map = index_by_name(&entries);
+    let mut rng = Rng::new(seed);
+    let flat = randn(&mut rng, total, 0.5);
+    let x = randn(&mut rng, rows * c_in, 1.0);
+    let w = randn(&mut rng, rows * c_out, 1.0);
+
+    let p = ParamTable::new(&flat, &map);
+    let (_, cache) = resmlp_fwd(&p, "mlp", &x, rows, c_in, c_hidden, c_out, layers).unwrap();
+    let mut gflat = vec![0.0f32; total];
+    let mut g = GradTable::new(&mut gflat, &map);
+    let dx =
+        resmlp_bwd(&p, &mut g, "mlp", &x, &cache, &w, rows, c_in, c_hidden, c_out, layers).unwrap();
+
+    let rref = ResMlpRef {
+        entries: entries.iter().map(|e| (e.name.clone(), e.offset, e.size)).collect(),
+        c_in,
+        c_hidden,
+        c_out,
+        layers,
+    };
+    let flat64: Vec<f64> = flat.iter().map(|&v| v as f64).collect();
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let loss = |fv: &[f64], xv: &[f64]| -> f64 {
+        rref.forward(fv, xv, rows).iter().zip(&w).map(|(y, &wv)| y * wv as f64).sum()
+    };
+
+    let mut max_rel = 0.0f64;
+    for i in 0..total {
+        let mut hi = flat64.clone();
+        let mut lo = flat64.clone();
+        hi[i] += EPS;
+        lo[i] -= EPS;
+        let fd = (loss(&hi, &x64) - loss(&lo, &x64)) / (2.0 * EPS);
+        max_rel = max_rel.max(rel_err(gflat[i] as f64, fd));
+    }
+    for i in 0..rows * c_in {
+        let mut hi = x64.clone();
+        let mut lo = x64.clone();
+        hi[i] += EPS;
+        lo[i] -= EPS;
+        let fd = (loss(&flat64, &hi) - loss(&flat64, &lo)) / (2.0 * EPS);
+        max_rel = max_rel.max(rel_err(dx[i] as f64, fd));
+    }
+    assert!(
+        max_rel < TOL,
+        "resmlp({c_in},{c_hidden},{c_out},x{layers}) max relative error {max_rel:.2e}"
+    );
+}
+
+#[test]
+fn resmlp_backward_matches_central_differences() {
+    // both residual paths active (c_in == c_hidden == c_out)
+    check_resmlp(4, 4, 4, 2, 7);
+    // no residual paths (distinct widths)
+    check_resmlp(3, 5, 2, 1, 8);
+}
+
+// -------------------------------------------------------------- flare mixer
+
+/// Dense f64 oracle for one head: Y = softmax_M(K Q^T) softmax_N(Q K^T) V.
+fn dense_mixer_head(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f64,
+) -> Vec<f64> {
+    let mut s = vec![0.0f64; m * n];
+    for mi in 0..m {
+        for t in 0..n {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += q[mi * d + j] * k[t * d + j];
+            }
+            s[mi * n + t] = acc * scale;
+        }
+    }
+    // encode: softmax over N per latent, z = A V
+    let mut z = vec![0.0f64; m * d];
+    for mi in 0..m {
+        let row = &s[mi * n..(mi + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = row.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for t in 0..n {
+            let wv = e[t] / den;
+            for j in 0..d {
+                z[mi * d + j] += wv * v[t * d + j];
+            }
+        }
+    }
+    // decode: softmax over M per token, y = B^T z
+    let mut y = vec![0.0f64; n * d];
+    for t in 0..n {
+        let col: Vec<f64> = (0..m).map(|mi| s[mi * n + t]).collect();
+        let mx = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = col.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for mi in 0..m {
+            let wv = e[mi] / den;
+            for j in 0..d {
+                y[t * d + j] += wv * z[mi * d + j];
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn mixer_backward_matches_central_differences() {
+    let (h, m, n, d) = (2usize, 3usize, 7usize, 4usize);
+    let scale = 0.9f64;
+    let mut rng = Rng::new(17);
+    let q = randn(&mut rng, h * m * d, 1.0);
+    let k = randn(&mut rng, h * n * d, 1.0);
+    let v = randn(&mut rng, h * n * d, 1.0);
+    let w = randn(&mut rng, h * n * d, 1.0);
+
+    let (_, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, scale as f32);
+    let (dq, dk, dv) = flare_mixer_bwd(&q, &k, &v, h, m, n, d, scale as f32, &cache, &w);
+
+    // f64 loss over all heads: L = sum_h <w_h, Y_h>
+    let to64 = |xs: &[f32]| xs.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+    let (q64, k64, v64) = (to64(&q), to64(&k), to64(&v));
+    let loss = |qv: &[f64], kv: &[f64], vv: &[f64]| -> f64 {
+        let mut acc = 0.0;
+        for hh in 0..h {
+            let y = dense_mixer_head(
+                &qv[hh * m * d..(hh + 1) * m * d],
+                &kv[hh * n * d..(hh + 1) * n * d],
+                &vv[hh * n * d..(hh + 1) * n * d],
+                m,
+                n,
+                d,
+                scale,
+            );
+            for (yv, &wv) in y.iter().zip(&w[hh * n * d..(hh + 1) * n * d]) {
+                acc += yv * wv as f64;
+            }
+        }
+        acc
+    };
+
+    let mut max_rel = 0.0f64;
+    let diff = |base: &[f64], i: usize, which: u8| -> f64 {
+        let mut hi = base.to_vec();
+        let mut lo = base.to_vec();
+        hi[i] += EPS;
+        lo[i] -= EPS;
+        let (lh, ll) = match which {
+            0 => (loss(&hi, &k64, &v64), loss(&lo, &k64, &v64)),
+            1 => (loss(&q64, &hi, &v64), loss(&q64, &lo, &v64)),
+            _ => (loss(&q64, &k64, &hi), loss(&q64, &k64, &lo)),
+        };
+        (lh - ll) / (2.0 * EPS)
+    };
+    for i in 0..h * m * d {
+        max_rel = max_rel.max(rel_err(dq[i] as f64, diff(&q64, i, 0)));
+    }
+    for i in 0..h * n * d {
+        max_rel = max_rel.max(rel_err(dk[i] as f64, diff(&k64, i, 1)));
+        max_rel = max_rel.max(rel_err(dv[i] as f64, diff(&v64, i, 2)));
+    }
+    assert!(max_rel < TOL, "mixer max relative error {max_rel:.2e}");
+}
+
+#[test]
+fn mixer_backward_per_head_latent_slices_are_disjoint() {
+    // an upstream gradient confined to head 0 must produce exactly zero
+    // gradient on head 1's latent slice (and vice versa): per-head latent
+    // routing stays disjoint through the backward too
+    let (h, m, n, d) = (2usize, 4usize, 9usize, 5usize);
+    let mut rng = Rng::new(23);
+    let q = randn(&mut rng, h * m * d, 1.0);
+    let k = randn(&mut rng, h * n * d, 1.0);
+    let v = randn(&mut rng, h * n * d, 1.0);
+    let (_, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, 1.0);
+
+    let mut dy = vec![0.0f32; h * n * d];
+    for val in dy[..n * d].iter_mut() {
+        *val = 1.0;
+    }
+    let (dq, dk, dv) = flare_mixer_bwd(&q, &k, &v, h, m, n, d, 1.0, &cache, &dy);
+    assert!(dq[..m * d].iter().any(|&x| x != 0.0), "head 0 got no gradient");
+    assert!(dq[m * d..].iter().all(|&x| x == 0.0), "head 1 latents leaked");
+    assert!(dk[n * d..].iter().all(|&x| x == 0.0), "head 1 keys leaked");
+    assert!(dv[n * d..].iter().all(|&x| x == 0.0), "head 1 values leaked");
+}
+
+// --------------------------------------------------- full model + training
+
+fn tiny_model() -> ModelCfg {
+    ModelCfg {
+        mixer: "flare".into(),
+        n: 16,
+        d_in: 3,
+        d_out: 1,
+        c: 8,
+        heads: 2,
+        m: 4,
+        blocks: 2,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    }
+}
+
+#[test]
+fn cached_training_forward_matches_serving_forward() {
+    // loss_grad_fields runs its own activation-caching forward; it must
+    // compute the exact same prediction as the serving-path forward_sample,
+    // or training would silently optimize a different function than the
+    // one being served.  Equal f32 predictions + the same f64 reduction
+    // order make the losses bit-comparable.
+    use flare::metrics::rel_l2;
+    use flare::model::forward::forward_sample;
+
+    for shared in [false, true] {
+        let cfg = ModelCfg {
+            shared_latents: shared,
+            ..tiny_model()
+        };
+        let (entries, total) = build_spec(&cfg).unwrap();
+        let map = index_by_name(&entries);
+        let params = init_params(&entries, total, 11);
+        let mut rng = Rng::new(13);
+        let x = randn(&mut rng, cfg.n * cfg.d_in, 1.0);
+        let y = randn(&mut rng, cfg.n * cfg.d_out, 1.0);
+
+        let p = ParamTable::new(&params, &map);
+        let mut scratch = vec![0.0f32; total];
+        let mut g = GradTable::new(&mut scratch, &map);
+        let loss = loss_grad_fields(&cfg, &p, &mut g, &x, &y).unwrap();
+
+        let pred = forward_sample(&cfg, &p, &x).unwrap();
+        let serving_loss = rel_l2(&pred, &y);
+        assert!(
+            (loss - serving_loss).abs() < 1e-9,
+            "shared={shared}: training loss {loss} != serving loss {serving_loss}"
+        );
+    }
+}
+
+#[test]
+fn cached_token_forward_matches_serving_forward() {
+    // same parity pin for the classification path: the loss reported by
+    // loss_grad_tokens must equal the cross-entropy of the serving-path
+    // forward_tokens_sample logits (identical f64 reduction order)
+    use flare::model::backward::loss_grad_tokens;
+    use flare::model::forward::forward_tokens_sample;
+    use flare::util::rng::u01;
+
+    let cfg = ModelCfg {
+        n: 12,
+        d_in: 0,
+        d_out: 0,
+        blocks: 1,
+        task: "classification".into(),
+        vocab: 11,
+        num_classes: 5,
+        ..tiny_model()
+    };
+    let (entries, total) = build_spec(&cfg).unwrap();
+    let map = index_by_name(&entries);
+    let params = init_params(&entries, total, 7);
+    let tokens: Vec<i32> =
+        (0..cfg.n).map(|i| (u01(99, i as u64) * cfg.vocab as f64) as i32).collect();
+    let label = 3i32;
+
+    let p = ParamTable::new(&params, &map);
+    let mut scratch = vec![0.0f32; total];
+    let mut g = GradTable::new(&mut scratch, &map);
+    let loss = loss_grad_tokens(&cfg, &p, &mut g, &tokens, label).unwrap();
+    assert!(scratch.iter().any(|&v| v != 0.0), "no gradient accumulated");
+
+    let logits = forward_tokens_sample(&cfg, &p, &tokens).unwrap();
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut den = 0.0f64;
+    for &l in &logits {
+        den += (l as f64 - mx).exp();
+    }
+    let expected = -((logits[label as usize] as f64 - mx) - den.ln());
+    assert!(
+        (loss - expected).abs() < 1e-9,
+        "training loss {loss} != serving cross-entropy {expected}"
+    );
+}
+
+#[test]
+fn full_model_directional_derivative_matches() {
+    // the strongest wiring check: along the analytic gradient direction,
+    // the finite-difference slope of the f32 loss must equal ||g||
+    let cfg = tiny_model();
+    let (entries, total) = build_spec(&cfg).unwrap();
+    let map = index_by_name(&entries);
+    let params = init_params(&entries, total, 42);
+    let mut rng = Rng::new(5);
+    let x = randn(&mut rng, cfg.n * cfg.d_in, 1.0);
+    let y = randn(&mut rng, cfg.n * cfg.d_out, 1.0);
+
+    let loss_at = |pv: &[f32]| -> f64 {
+        let p = ParamTable::new(pv, &map);
+        let mut scratch = vec![0.0f32; total];
+        let mut g = GradTable::new(&mut scratch, &map);
+        loss_grad_fields(&cfg, &p, &mut g, &x, &y).unwrap()
+    };
+
+    let p = ParamTable::new(&params, &map);
+    let mut gflat = vec![0.0f32; total];
+    let mut g = GradTable::new(&mut gflat, &map);
+    loss_grad_fields(&cfg, &p, &mut g, &x, &y).unwrap();
+    let gnorm = gflat.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    assert!(gnorm > 1e-6, "degenerate gradient norm {gnorm}");
+
+    let eps = 1e-2f64;
+    let shift = |sign: f64| -> Vec<f32> {
+        params
+            .iter()
+            .zip(&gflat)
+            .map(|(&pv, &gv)| (pv as f64 + sign * eps * gv as f64 / gnorm) as f32)
+            .collect()
+    };
+    let fd = (loss_at(&shift(1.0)) - loss_at(&shift(-1.0))) / (2.0 * eps);
+    let rel = (fd - gnorm).abs() / gnorm;
+    assert!(
+        rel < 2e-2,
+        "directional derivative {fd:.6} vs ||g|| {gnorm:.6} (rel {rel:.2e})"
+    );
+}
+
+#[test]
+fn darcy_training_loss_trends_monotonically_down_over_20_steps() {
+    use flare::config::{CaseCfg, Manifest};
+    use flare::runtime::make_backend;
+    use flare::train::{train_case, TrainOpts};
+
+    let dir = std::env::temp_dir().join("flare_grad_check_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"seed": 42, "cases": [], "mixers": [], "layers": []}"#,
+    )
+    .unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+
+    let model = ModelCfg {
+        n: 256,
+        c: 16,
+        heads: 4,
+        m: 16,
+        ..tiny_model()
+    };
+    let (entries, param_count) = build_spec(&model).unwrap();
+    let case = CaseCfg {
+        name: "darcy_smoke".into(),
+        group: "test".into(),
+        dataset: "darcy".into(),
+        dataset_meta: flare::util::json::parse(
+            r#"{"kind":"darcy","n":256,"grid":16,"d_in":3,"d_out":1,"train":32,"test":8}"#,
+        )
+        .unwrap(),
+        batch: 4,
+        train_steps: 20,
+        lr: 1e-3,
+        model,
+        param_count,
+        artifacts: Default::default(),
+        params: entries,
+    };
+    let backend = make_backend("native").unwrap();
+    let out = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default()).unwrap();
+
+    assert_eq!(out.losses.len(), 20);
+    assert!(out.losses.iter().all(|l| l.is_finite() && *l > 0.0), "{:?}", out.losses);
+    // batch noise makes single steps wiggle; the 5-step window means must
+    // fall monotonically (5% slack for late-plateau noise) with a large
+    // overall drop
+    let window = |i: usize| out.losses[i * 5..(i + 1) * 5].iter().sum::<f64>() / 5.0;
+    let w: Vec<f64> = (0..4).map(window).collect();
+    for i in 1..4 {
+        assert!(
+            w[i] < w[i - 1] * 1.05,
+            "loss windows not decreasing: {w:?} (losses {:?})",
+            out.losses
+        );
+    }
+    assert!(
+        w[3] < 0.75 * w[0],
+        "insufficient overall decrease: {w:?} (losses {:?})",
+        out.losses
+    );
+    assert!(out.losses[19] < out.losses[0], "{:?}", out.losses);
+    assert!(out.final_metric.is_finite() && out.final_metric > 0.0);
+}

@@ -14,7 +14,7 @@ use flare::linalg::eig::sym_eig_default;
 use flare::linalg::matrix::Matrix;
 use flare::model::forward::flare_mixer;
 use flare::model::{build_spec, init_params};
-use flare::runtime::{make_backend, BatchInput};
+use flare::runtime::{make_backend, BatchInput, BatchTarget, OptState};
 use flare::util::json::Json;
 use flare::util::rng::{u01, Rng};
 
@@ -269,6 +269,116 @@ fn unsupported_mixer_rejected() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("flare mixer"), "{err}");
+}
+
+#[test]
+fn capability_errors_name_the_unsupported_field() {
+    // train_step and eval_batch on an unsupported config must say *what* is
+    // unsupported (mixer kind / latent_sa_blocks), not claim xla is needed
+    let backend = make_backend("native").unwrap();
+    let dir = write_manifest_dir("flare_native_capability_test", &[]);
+    let manifest = flare::config::Manifest::load(&dir).unwrap();
+
+    let vanilla = make_case(
+        "vanilla_train",
+        ModelCfg {
+            mixer: "vanilla".into(),
+            ..tiny_model()
+        },
+        1,
+    );
+    let x = vec![0.0f32; vanilla.model.n * vanilla.model.d_in];
+    let y = vec![0.0f32; vanilla.model.n * vanilla.model.d_out];
+    let mut st = OptState::new(vec![0.0f32; vanilla.param_count]);
+    let err = backend
+        .train_step(
+            &manifest,
+            &vanilla,
+            &mut st,
+            0,
+            1e-3,
+            BatchInput::Fields(&x),
+            BatchTarget::Fields(&y),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("flare mixer") && err.contains("vanilla"), "{err}");
+    assert!(
+        !err.contains("does not support training"),
+        "capability error hidden behind a blanket training error: {err}"
+    );
+    let params = vec![0.0f32; vanilla.param_count];
+    let err = backend
+        .eval_batch(
+            &manifest,
+            &vanilla,
+            &params,
+            BatchInput::Fields(&x),
+            BatchTarget::Fields(&y),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("flare mixer"), "{err}");
+
+    let hybrid = make_case(
+        "hybrid_train",
+        ModelCfg {
+            latent_sa_blocks: 1,
+            ..tiny_model()
+        },
+        1,
+    );
+    let mut st = OptState::new(vec![0.0f32; hybrid.param_count]);
+    let err = backend
+        .train_step(
+            &manifest,
+            &hybrid,
+            &mut st,
+            0,
+            1e-3,
+            BatchInput::Fields(&x),
+            BatchTarget::Fields(&y),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("latent_sa_blocks"), "{err}");
+}
+
+#[test]
+fn native_train_step_decreases_loss_on_fixed_batch() {
+    // repeated steps on one batch must drive the loss down fast — the
+    // sharpest cheap signal that gradients point the right way
+    let case = make_case("fixed_batch", tiny_model(), 2);
+    let backend = make_backend("native").unwrap();
+    let dir = write_manifest_dir("flare_native_fixed_batch_test", &[]);
+    let manifest = flare::config::Manifest::load(&dir).unwrap();
+    let mut st = OptState::new(init_params(&case.params, case.param_count, 42));
+    let per_x = case.model.n * case.model.d_in;
+    let per_y = case.model.n * case.model.d_out;
+    let x = golden_input(21, 2 * per_x);
+    let y = golden_input(22, 2 * per_y);
+    let mut losses = Vec::new();
+    for step in 0..30 {
+        let loss = backend
+            .train_step(
+                &manifest,
+                &case,
+                &mut st,
+                step,
+                3e-3,
+                BatchInput::Fields(&x),
+                BatchTarget::Fields(&y),
+            )
+            .unwrap();
+        losses.push(loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(
+        last < 0.7 * first,
+        "fixed-batch loss did not drop: {first:.4} -> {last:.4} ({losses:?})"
+    );
 }
 
 #[test]

@@ -13,7 +13,7 @@
 
 use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
 use flare::linalg::matrix::{axpy_f32, dot_f32};
-use flare::model::forward::flare_mixer;
+use flare::model::forward::{flare_mixer, mixer_decode, mixer_encode};
 use flare::util::rng::Rng;
 use flare::util::stats::current_rss_bytes;
 
@@ -120,6 +120,32 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
+
+    // kernel-level: the tiled encode/decode passes of one head in isolation
+    // (fixed N, M) so BENCH_native.json pins where mixer time goes
+    {
+        let (n, m) = (8_192usize, 64usize);
+        let q = fill(&mut rng, m * d);
+        let k = fill(&mut rng, n * d);
+        let v = fill(&mut rng, n * d);
+        let mut mrun = vec![0.0f32; m];
+        let mut den = vec![0.0f32; m];
+        let mut z = vec![0.0f32; m * d];
+        let mut meas = bench.run(&format!("mixer_encode_n{n}_m{m}"), || {
+            mixer_encode(&q, &k, &v, m, n, d, 1.0, &mut mrun, &mut den, &mut z);
+        });
+        meas.extras.push(("n".into(), n as f64));
+        meas.extras.push(("m".into(), m as f64));
+        all.push(meas);
+        let mut y = vec![0.0f32; n * d];
+        let mut meas = bench.run(&format!("mixer_decode_n{n}_m{m}"), || {
+            y.fill(0.0);
+            mixer_decode(&q, &k, &z, m, n, d, 1.0, &mut y);
+        });
+        meas.extras.push(("n".into(), n as f64));
+        meas.extras.push(("m".into(), m as f64));
+        all.push(meas);
+    }
 
     // slope check: vanilla should scale ~quadratically, FLARE ~linearly
     let slope = |kind: &str| -> Option<f64> {

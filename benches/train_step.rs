@@ -10,8 +10,10 @@
 
 use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
 use flare::config::{CaseCfg, ModelCfg};
+use flare::linalg::kernel::{matmul_f32, matmul_f32_reference, scale_softmax_rows};
 use flare::model::{build_spec, init_params};
 use flare::runtime::{make_backend, BatchInput, BatchTarget, NativeBackend, OptState};
+use flare::train::AdamW;
 use flare::util::json::Json;
 use flare::util::rng::Rng;
 
@@ -114,6 +116,80 @@ fn main() -> anyhow::Result<()> {
         all.push(meas);
     }
     table.print();
+
+    // kernel-level microbenches: the blocked/SIMD GEMM against the seed's
+    // naive ikj loop (the before/after pair BENCH_native.json pins), plus
+    // the fused softmax row kernel and the fused AdamW update
+    println!("\n=== kernel microbenches: blocked vs naive ===\n");
+    let mut ktable = Table::new(&["kernel", "shape", "ms", "GFLOP/s"]);
+    let gemm_sizes: &[(usize, usize, usize)] = if quick_mode() {
+        &[(512, 64, 64)]
+    } else {
+        &[(512, 64, 64), (1024, 256, 256)]
+    };
+    for &(m, k, n) in gemm_sizes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let flops = 2.0 * (m * k * n) as f64;
+        let meas = bench.run(&format!("gemm_m{m}_k{k}_n{n}"), || {
+            let c = matmul_f32(&a, &b, m, k, n);
+            assert_eq!(c.len(), m * n);
+        });
+        ktable.row(vec![
+            "gemm_blocked".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.3}", meas.mean_ms()),
+            format!("{:.2}", flops / (meas.mean_ms() * 1e6)),
+        ]);
+        all.push(meas);
+        let meas = bench.run(&format!("gemm_naive_m{m}_k{k}_n{n}"), || {
+            let c = matmul_f32_reference(&a, &b, m, k, n);
+            assert_eq!(c.len(), m * n);
+        });
+        ktable.row(vec![
+            "gemm_naive".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.3}", meas.mean_ms()),
+            format!("{:.2}", flops / (meas.mean_ms() * 1e6)),
+        ]);
+        all.push(meas);
+    }
+    {
+        let (rows, cols) = (4096usize, 64usize);
+        let base: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let mut buf = base.clone();
+        let meas = bench.run("softmax_rows_4096x64", || {
+            buf.copy_from_slice(&base);
+            scale_softmax_rows(&mut buf, rows, cols, 0.125);
+        });
+        ktable.row(vec![
+            "softmax_rows".into(),
+            format!("{rows}x{cols}"),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+    }
+    {
+        let p = 1usize << 20;
+        let grad: Vec<f32> = (0..p).map(|_| rng.normal() as f32 * 1e-3).collect();
+        let mut st = OptState::new(vec![0.0f32; p]);
+        let opt = AdamW::default();
+        let mut step_i = 0usize;
+        let meas = bench.run("adamw_fused_1m", || {
+            opt.step(&mut st, &grad, step_i, 1e-3);
+            step_i += 1;
+        });
+        ktable.row(vec![
+            "adamw_fused".into(),
+            format!("{p}"),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+    }
+    ktable.print();
+
     let path = save_results("train_step", &all)?;
     println!("results written to {path:?}");
     Ok(())

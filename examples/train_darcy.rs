@@ -97,8 +97,8 @@ fn main() -> anyhow::Result<()> {
             case: out.case.clone(),
             step: out.steps,
             params: out.params.clone(),
-            m: vec![],
-            v: vec![],
+            m: out.opt_m.clone(),
+            v: out.opt_v.clone(),
             train_loss: *out.losses.last().unwrap(),
         },
     )?;

@@ -1,0 +1,534 @@
+//! Blocked, register-tiled f32 kernels for the native hot paths.
+//!
+//! The FLARE value proposition is that the dominant O(N·M) work is plain
+//! SDPA, so it lives or dies on matmul throughput.  This module replaces the
+//! seed's naive `ikj` triple loop with a cache-blocked GEMM in the BLIS
+//! style: `A`/`B` panels are packed into `MR`/`NR`-interleaved buffers
+//! (MC/KC/NC blocking), and an 8-wide unrolled micro-kernel accumulates an
+//! `MR x NR` register tile.  On x86-64 an AVX2+FMA micro-kernel is selected
+//! at runtime behind `is_x86_feature_detected!`; everywhere else the scalar
+//! micro-kernel is written over fixed-size arrays so LLVM autovectorizes it
+//! on stable Rust.
+//!
+//! Three data layouts cover every hot call site:
+//!   * [`gemm_acc`]      — `C += A · B`           (forward projections)
+//!   * [`gemm_bt_acc`]   — `C += A · Bᵀ`          (score tiles, `dx = dy Wᵀ`)
+//!   * [`gemm_at_acc`]   — `C += Aᵀ · B`          (`dW += xᵀ dy`, mixer bwd)
+//!
+//! plus the fused softmax row kernels the two-SDPA mixer loops need
+//! ([`scale_softmax_rows`], [`online_softmax_row`], [`softmax_replay_rows`])
+//! and the fused AdamW element update ([`adamw_fused`]).
+//!
+//! Large single matmuls parallelize across M-panels through the existing
+//! [`crate::util::threadpool`]; each output row is computed by exactly one
+//! worker with a k-sequential accumulation, so results are **bitwise stable
+//! across thread counts** (the `threads=1` CI leg pins this).
+//!
+//! Determinism notes: the micro-kernel keeps one accumulator per output
+//! element and walks `k` in order, so the blocked GEMM reproduces the naive
+//! loop's summation order; only the FMA contraction (no intermediate
+//! rounding) differs from [`matmul_f32_reference`], well inside the 1e-5
+//! parity gate.  `FLARE_NO_SIMD=1` forces the scalar micro-kernel.
+
+use std::cell::Cell;
+
+use crate::util::threadpool::{default_threads, in_parallel_worker, parallel_map};
+
+thread_local! {
+    // pack panels reused across GEMM calls (the tiled mixer issues several
+    // small GEMMs per 64-token tile; per-call Vec allocation is pure
+    // overhead on that hot loop).  gemm_core takes the pair at entry and
+    // puts it back at exit, so one pair per thread suffices.
+    static PACK_SCRATCH: Cell<(Vec<f32>, Vec<f32>)> =
+        const { Cell::new((Vec::new(), Vec::new())) };
+}
+
+/// Rows of `A` per macro panel (L2-resident packed panel).
+const MC: usize = 128;
+/// Shared dimension per packed panel (L1-resident micro-panel depth).
+const KC: usize = 256;
+/// Columns of `B` per macro panel (L3-resident packed panel).
+const NC: usize = 1024;
+/// Register-tile rows of the micro-kernel.
+const MR: usize = 4;
+/// Register-tile columns of the micro-kernel (one 8-lane f32 vector).
+const NR: usize = 8;
+
+// the AVX2 micro-kernel is written for exactly this tile
+const _: () = assert!(MR == 4 && NR == 8);
+
+#[cfg(target_arch = "x86_64")]
+fn fma_available() -> bool {
+    use std::sync::OnceLock;
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        let disabled = std::env::var("FLARE_NO_SIMD").map(|v| v == "1").unwrap_or(false);
+        !disabled && is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fma_available() -> bool {
+    false
+}
+
+/// `C[m, n] = A[m, k] @ B[k, n]`, all row-major f32 slices.
+///
+/// Drop-in replacement for the seed's naive loop (same signature, same
+/// call sites); dispatches to the blocked kernel and fans out across
+/// M-panels when the product is large enough to amortize the threads.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_f32: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_f32: rhs size");
+    matmul_f32_threads(a, b, m, k, n, gemm_threads(m, k, n))
+}
+
+/// [`matmul_f32`] with an explicit worker count.  Tests pin several counts
+/// against each other to prove the M-panel split is bitwise stable.
+pub fn matmul_f32_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_f32_threads: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_f32_threads: rhs size");
+    matmul_panels(a, m, k, n, threads, |cp, ap, rows| gemm_acc(cp, ap, b, rows, k, n))
+}
+
+/// `C[m, n] = A[m, k] @ Bᵀ` with `bt` row-major `[n, k]` — the backward
+/// pass's `dx = dy · Wᵀ` without materializing the transpose.
+pub fn matmul_f32_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_f32_bt: lhs size");
+    assert_eq!(bt.len(), n * k, "matmul_f32_bt: rhs size");
+    matmul_panels(a, m, k, n, gemm_threads(m, k, n), |cp, ap, rows| {
+        gemm_bt_acc(cp, ap, bt, rows, k, n)
+    })
+}
+
+/// Worker budget for one GEMM: below ~8 MFLOP the scoped fan-out costs more
+/// than it saves, and inside a [`parallel_map`] worker the batch fan-out
+/// already owns the cores — nesting would only oversubscribe them.
+fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
+    if in_parallel_worker() || 2 * m * k * n < 8_000_000 {
+        1
+    } else {
+        default_threads()
+    }
+}
+
+/// Split the output into contiguous M-panels and run `panel` on each across
+/// the thread pool; row results are stitched back in order.
+fn matmul_panels(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    panel: impl Fn(&mut [f32], &[f32], usize) + Sync,
+) -> Vec<f32> {
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 {
+        let mut c = vec![0.0f32; m * n];
+        panel(&mut c, a, m);
+        return c;
+    }
+    let rows_per = m.div_ceil(threads);
+    let panels = m.div_ceil(rows_per);
+    let chunks = parallel_map(panels, threads, |p| {
+        let i0 = p * rows_per;
+        let rows = rows_per.min(m - i0);
+        let mut cp = vec![0.0f32; rows * n];
+        panel(&mut cp, &a[i0 * k..(i0 + rows) * k], rows);
+        cp
+    });
+    let mut c = Vec::with_capacity(m * n);
+    for chunk in &chunks {
+        c.extend_from_slice(chunk);
+    }
+    c
+}
+
+/// `C[m, n] += A[m, k] @ B[k, n]` (row-major), single-threaded blocked core.
+pub fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    gemm_core(c, m, n, k, |i, p| a[i * k + p], |p, j| b[p * n + j]);
+}
+
+/// `C[m, n] += A[m, k] @ Bᵀ` with `bt` row-major `[n, k]`.
+pub fn gemm_bt_acc(c: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && bt.len() >= n * k);
+    gemm_core(c, m, n, k, |i, p| a[i * k + p], |p, j| bt[j * k + p]);
+}
+
+/// `C[m, n] += Aᵀ @ B` with `a` row-major `[rows, m]` and `b` `[rows, n]` —
+/// the backward pass's `dW += xᵀ · dy` without materializing the transpose.
+pub fn gemm_at_acc(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) {
+    debug_assert!(a.len() >= rows * m && b.len() >= rows * n);
+    gemm_core(c, m, n, rows, |i, p| a[p * m + i], |p, j| b[p * n + j]);
+}
+
+/// Packed blocked GEMM core: `C[m, n] += Σ_p a_at(i, p) · b_at(p, j)`.
+///
+/// The element accessors absorb the transpose variants; they are only
+/// called during packing (O(m·k + k·n) per panel), never in the O(m·k·n)
+/// micro-kernel loop.
+fn gemm_core(
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a_at: impl Fn(usize, usize) -> f32,
+    b_at: impl Fn(usize, usize) -> f32,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    debug_assert_eq!(c.len(), m * n);
+    let use_fma = fma_available();
+    let kc_max = KC.min(k);
+    let mc_max = MC.min(m).div_ceil(MR) * MR;
+    let nc_max = NC.min(n).div_ceil(NR) * NR;
+    // borrow the thread-local packs for the duration of this call (take /
+    // replace rather than a held borrow keeps the body free of closures)
+    let (mut apack, mut bpack) = PACK_SCRATCH.with(|cell| cell.take());
+    if apack.len() < mc_max * kc_max {
+        apack.resize(mc_max * kc_max, 0.0);
+    }
+    if bpack.len() < nc_max * kc_max {
+        bpack.resize(nc_max * kc_max, 0.0);
+    }
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let njp = nc.div_ceil(NR);
+            // pack B: per NR-column panel, kc rows of NR values (zero-padded)
+            for jp in 0..njp {
+                for p in 0..kc {
+                    let dst = &mut bpack[(jp * kc + p) * NR..(jp * kc + p + 1) * NR];
+                    for (jj, d) in dst.iter_mut().enumerate() {
+                        let j = jc + jp * NR + jj;
+                        *d = if j < jc + nc { b_at(pc + p, j) } else { 0.0 };
+                    }
+                }
+            }
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let nip = mc.div_ceil(MR);
+                // pack A: per MR-row panel, kc columns of MR values
+                for ip in 0..nip {
+                    for p in 0..kc {
+                        let dst = &mut apack[(ip * kc + p) * MR..(ip * kc + p + 1) * MR];
+                        for (ii, d) in dst.iter_mut().enumerate() {
+                            let i = ic + ip * MR + ii;
+                            *d = if i < ic + mc { a_at(i, pc + p) } else { 0.0 };
+                        }
+                    }
+                }
+                // macro kernel: every MR x NR register tile of this block
+                for ip in 0..nip {
+                    let ap = &apack[ip * kc * MR..(ip + 1) * kc * MR];
+                    for jp in 0..njp {
+                        let bp = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        micro_kernel(ap, bp, kc, &mut acc, use_fma);
+                        let i_hi = MR.min(mc - ip * MR);
+                        let j_hi = NR.min(nc - jp * NR);
+                        for (ii, accr) in acc.iter().enumerate().take(i_hi) {
+                            let row = &mut c[(ic + ip * MR + ii) * n + jc + jp * NR..][..j_hi];
+                            for (cv, &av) in row.iter_mut().zip(accr.iter()) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    PACK_SCRATCH.with(|cell| cell.set((apack, bpack)));
+}
+
+#[inline(always)]
+fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR], use_fma: bool) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_fma {
+            // SAFETY: gated on runtime AVX2+FMA detection in fma_available()
+            unsafe { micro_kernel_avx2(ap, bp, kc, acc) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_fma;
+    micro_kernel_scalar(ap, bp, kc, acc);
+}
+
+/// Scalar micro-kernel over fixed-size register tiles; the `NR`-wide inner
+/// loop over arrays of known length is what LLVM autovectorizes.
+#[inline(always)]
+fn micro_kernel_scalar(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    for p in 0..kc {
+        let av = &ap[p * MR..(p + 1) * MR];
+        let bv = &bp[p * NR..(p + 1) * NR];
+        for (accr, &a) in acc.iter_mut().zip(av) {
+            for (cv, &b) in accr.iter_mut().zip(bv) {
+                *cv += a * b;
+            }
+        }
+    }
+}
+
+/// AVX2+FMA micro-kernel: 4 broadcast-FMA rows against one 8-lane B vector.
+/// Accumulates on top of `acc`, matching the scalar kernel's contract.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn micro_kernel_avx2(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::{_mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_storeu_ps};
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+    let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+    let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+    let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+    let apz = ap.as_ptr();
+    let bpz = bp.as_ptr();
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(bpz.add(p * NR));
+        let ab = apz.add(p * MR);
+        c0 = _mm256_fmadd_ps(_mm256_set1_ps(*ab), bv, c0);
+        c1 = _mm256_fmadd_ps(_mm256_set1_ps(*ab.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(_mm256_set1_ps(*ab.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(_mm256_set1_ps(*ab.add(3)), bv, c3);
+    }
+    _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+    _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+    _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+    _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+}
+
+// ---------------------------------------------------------------------------
+// Fused softmax row kernels (the two-SDPA mixer loops)
+// ---------------------------------------------------------------------------
+
+/// Fused scale + row softmax in place: each `cols`-row of `s` becomes
+/// `softmax(scale * row)` — the decode-side kernel (softmax over the fully
+/// resident M latent axis, one row per token).
+pub fn scale_softmax_rows(s: &mut [f32], rows: usize, cols: usize, scale: f32) {
+    debug_assert!(s.len() >= rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    for row in s[..rows * cols].chunks_exact_mut(cols) {
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            mx = mx.max(scale * v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            let e = (scale * *v - mx).exp();
+            *v = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Fused scale + online-softmax update for one encode row over a tile of
+/// raw scores: folds the tile maximum into the running max `mrun`, rescales
+/// the running denominator `den` and the latent accumulator row `z`, and
+/// overwrites `e` with the tile's un-normalized weights
+/// `exp(scale * e - mrun)` so the caller can GEMM them against the V tile.
+pub fn online_softmax_row(e: &mut [f32], scale: f32, mrun: &mut f32, den: &mut f32, z: &mut [f32]) {
+    if e.is_empty() {
+        return;
+    }
+    let mut mx = *mrun;
+    for &v in e.iter() {
+        mx = mx.max(scale * v);
+    }
+    if mx > *mrun {
+        // new running max: rescale history (exp(-inf - mx) == 0 on the
+        // first tile, so the zero-initialized den/z need no special case)
+        let corr = (*mrun - mx).exp();
+        *den *= corr;
+        for zv in z.iter_mut() {
+            *zv *= corr;
+        }
+        *mrun = mx;
+    }
+    let mut sum = 0.0f32;
+    for v in e.iter_mut() {
+        let w = (scale * *v - mx).exp();
+        *v = w;
+        sum += w;
+    }
+    *den += sum;
+}
+
+/// Replay encode attention weights from cached statistics: each `cols`-row
+/// `mi` of raw scores becomes `exp(scale * s - mrun[mi]) / den[mi]` — the
+/// streaming-backward kernel that recomputes `A` tiles without an `[M, N]`
+/// buffer.
+pub fn softmax_replay_rows(s: &mut [f32], cols: usize, scale: f32, mrun: &[f32], den: &[f32]) {
+    if cols == 0 {
+        return;
+    }
+    for (row, (&m, &d)) in s.chunks_exact_mut(cols).zip(mrun.iter().zip(den.iter())) {
+        let inv = 1.0 / d;
+        for v in row.iter_mut() {
+            *v = (scale * *v - m).exp() * inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused AdamW element update
+// ---------------------------------------------------------------------------
+
+/// Fused AdamW update over the flat buffers: one pass updates `m`, `v` and
+/// `params` in place (f64 math per element, matching the pre-kernel loop in
+/// `train::optim` bit for bit).  `clip` is the precomputed global-norm clip
+/// factor; `bc1`/`bc2` the bias corrections for this step.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_fused(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    clip: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    weight_decay: f64,
+    lr: f64,
+    bc1: f64,
+    bc2: f64,
+) {
+    assert!(
+        params.len() == grad.len() && m.len() == grad.len() && v.len() == grad.len(),
+        "adamw_fused: buffer length mismatch"
+    );
+    for (((p, mv), vv), &g0) in
+        params.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(grad.iter())
+    {
+        let g = g0 as f64 * clip;
+        let mi = beta1 * *mv as f64 + (1.0 - beta1) * g;
+        let vi = beta2 * *vv as f64 + (1.0 - beta2) * g * g;
+        *mv = mi as f32;
+        *vv = vi as f32;
+        let update = (mi / bc1) / ((vi / bc2).sqrt() + eps) + weight_decay * *p as f64;
+        *p = (*p as f64 - lr * update) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference oracle
+// ---------------------------------------------------------------------------
+
+/// The seed's naive `ikj` matmul, kept verbatim as the reference oracle for
+/// the kernel parity tests and the `gemm_naive_*` microbench baseline.
+pub fn matmul_f32_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_f32_reference: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_f32_reference: rhs size");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn blocked_matches_reference_basic() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3, 4, 5), (16, 16, 16), (130, 9, 33), (1, 300, 1)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let c = matmul_f32(&a, &b, m, k, n);
+            let r = matmul_f32_reference(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&r) {
+                assert!((x - y).abs() < 1e-4, "{m}x{k}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_acc_accumulates_on_top() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (7, 5, 9);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        gemm_acc(&mut c, &a, &b, m, k, n);
+        gemm_acc(&mut c, &a, &b, m, k, n);
+        let once = matmul_f32_reference(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&once) {
+            assert!((x - 2.0 * y).abs() < 1e-4, "{x} vs 2*{y}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_do_not_panic() {
+        let c = matmul_f32(&[], &[], 0, 0, 0);
+        assert!(c.is_empty());
+        let c = matmul_f32(&[], &[1.0, 2.0], 0, 1, 2);
+        assert!(c.is_empty());
+        let c = matmul_f32(&[1.0, 2.0], &[], 2, 1, 0);
+        assert!(c.is_empty());
+        // k == 0: the contraction is empty, so C is all zeros
+        let c = matmul_f32(&[], &[], 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+        scale_softmax_rows(&mut [], 0, 0, 1.0);
+        softmax_replay_rows(&mut [], 0, 1.0, &[], &[]);
+        let (mut mr, mut dn) = (f32::NEG_INFINITY, 0.0f32);
+        online_softmax_row(&mut [], 1.0, &mut mr, &mut dn, &mut []);
+        assert_eq!(dn, 0.0);
+    }
+
+    #[test]
+    fn adamw_fused_moves_against_gradient() {
+        let mut p = vec![1.0f32, -1.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adamw_fused(
+            &mut p,
+            &mut m,
+            &mut v,
+            &[0.5, -0.5],
+            1.0,
+            0.9,
+            0.999,
+            1e-8,
+            0.0,
+            0.01,
+            0.1,
+            0.001,
+        );
+        assert!(p[0] < 1.0 && p[1] > -1.0);
+        assert!((m[0] - 0.05).abs() < 1e-7 && (m[1] + 0.05).abs() < 1e-7);
+    }
+}

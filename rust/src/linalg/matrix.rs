@@ -200,28 +200,18 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 
 // ---------------------------------------------------------------------------
 // f32 kernels: the native FLARE forward works in f32 (matching the XLA
-// artifacts), so the hot matmuls get f32 variants of the same ikj loop.
+// artifacts).  The hot matmul delegates to the blocked/SIMD kernel
+// subsystem; the seed's naive ikj loop survives as
+// `kernel::matmul_f32_reference`, the parity-test oracle.
 // ---------------------------------------------------------------------------
 
 /// `C[m, n] = A[m, k] @ B[k, n]`, all row-major f32 slices.
+///
+/// Delegates to [`crate::linalg::kernel::matmul_f32`] — cache-blocked,
+/// register-tiled, AVX2/FMA when available, parallel across M-panels for
+/// large shapes — so every existing call site upgrades in place.
 pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_f32: lhs size");
-    assert_eq!(b.len(), k * n, "matmul_f32: rhs size");
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let out_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in a_row.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
+    crate::linalg::kernel::matmul_f32(a, b, m, k, n)
 }
 
 /// f32 dot product.

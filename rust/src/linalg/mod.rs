@@ -1,5 +1,6 @@
-//! Dense/sparse linear-algebra substrate: matrices, Jacobi symmetric
-//! eigendecomposition, conjugate gradients, FFT and Gaussian random fields.
+//! Dense/sparse linear-algebra substrate: matrices, the blocked/SIMD f32
+//! kernel subsystem ([`kernel`]), Jacobi symmetric eigendecomposition,
+//! conjugate gradients, FFT and Gaussian random fields.
 //!
 //! Everything here is written from scratch (no BLAS/LAPACK in the offline
 //! vendor set) and sized for the repo's needs: the largest dense eigenproblem
@@ -9,6 +10,7 @@
 pub mod cg;
 pub mod eig;
 pub mod fft;
+pub mod kernel;
 pub mod matrix;
 
 pub use cg::{conjugate_gradient, CgResult};

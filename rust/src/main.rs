@@ -90,12 +90,16 @@ fn print_help() {
            train    [--case <name>]    train end-to-end (any backend;\n\
                     default case core_darcy_flare)\n\
                     [--steps N] [--eval-every K] [--ckpt FILE] [--quiet]\n\
+                    [--resume FILE]    continue from a --ckpt checkpoint\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
                     [--steps N]\n\
            bench-report               fold results/*.json benchmark dumps\n\
                     [--results DIR] [--out FILE]   into BENCH_native.json\n\
+                    [--compare BASELINE.json [--max-regression R]]\n\
+                                       exit non-zero when any shared op's\n\
+                                       median ns/op regresses past R (1.5)\n\
          \n\
          GLOBAL: --artifacts <dir>     artifacts directory (missing manifest\n\
                                        falls back to builtin native cases)\n\
@@ -187,11 +191,43 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let name = args.get_or("case", "core_darcy_flare").to_string();
     let case = m.case(&name)?;
     let backend = backend_from_args(args)?;
+    let resume = match args.get("resume") {
+        Some(path) => {
+            let ck = flare::model::load_checkpoint(path)?;
+            anyhow::ensure!(
+                ck.case == name,
+                "checkpoint {path:?} was written for case {:?}, not {name:?}",
+                ck.case
+            );
+            let len = ck.params.len();
+            // legacy params-only checkpoints (empty moments) resume with
+            // zeros; any other length is corruption, not legacy
+            anyhow::ensure!(
+                (ck.m.len() == len && ck.v.len() == len) || (ck.m.is_empty() && ck.v.is_empty()),
+                "checkpoint {path:?} moment lengths {}/{} do not match {len} params",
+                ck.m.len(),
+                ck.v.len()
+            );
+            let mom = if ck.m.is_empty() { vec![0.0; len] } else { ck.m };
+            let vel = if ck.v.is_empty() { vec![0.0; len] } else { ck.v };
+            println!("resuming from {path} at step {}", ck.step);
+            Some((
+                flare::runtime::OptState {
+                    params: ck.params,
+                    m: mom,
+                    v: vel,
+                },
+                ck.step,
+            ))
+        }
+        None => None,
+    };
     let opts = TrainOpts {
         steps: args.get_usize("steps")?,
         eval_every: args.get_usize("eval-every")?.unwrap_or(0),
         sample_seed: 0x5EED,
         log_every: if args.has_flag("quiet") { 0 } else { 25 },
+        resume,
     };
     println!(
         "training {name} on {} backend: {} params, dataset {}, batch {}",
@@ -218,12 +254,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 case: out.case.clone(),
                 step: out.steps,
                 params: out.params.clone(),
-                m: vec![],
-                v: vec![],
+                m: out.opt_m.clone(),
+                v: out.opt_v.clone(),
                 train_loss: out.losses.last().copied().unwrap_or(0.0),
             },
         )?;
-        println!("checkpoint written to {path}");
+        println!("checkpoint written to {path} (full optimizer state; resume with --resume)");
     }
     Ok(())
 }
@@ -305,6 +341,8 @@ fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
     files.sort();
     anyhow::ensure!(!files.is_empty(), "no *.json bench dumps in {dirs:?}");
     let mut ops: Vec<Json> = Vec::new();
+    // (bench, name, median_ns) kept flat for the --compare perf gate
+    let mut measured: Vec<(String, String, f64)> = Vec::new();
     for path in &files {
         let text = std::fs::read_to_string(path)?;
         let parsed =
@@ -333,6 +371,7 @@ fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
                 "measurement {name:?} has invalid p50_ms {p50}"
             );
             let iters = m.get("iters").as_f64().unwrap_or(0.0);
+            measured.push((bench.clone(), name.to_string(), p50 * 1e6));
             ops.push(Json::obj(vec![
                 ("bench", Json::str(&bench)),
                 ("name", Json::str(name)),
@@ -362,6 +401,61 @@ fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
     let n = back.get("ops").as_arr().map(|a| a.len()).unwrap_or(0);
     anyhow::ensure!(n == count, "written {out_path:?} failed validation");
     println!("wrote {out_path:?}: {n} ops, {threads} threads, sha {sha}");
+
+    // perf-regression gate: compare every shared (bench, name) against the
+    // committed baseline and fail when the median regresses past the bound
+    if let Some(base_path) = args.get("compare") {
+        let max_reg = args.get_f64("max-regression")?.unwrap_or(1.5);
+        anyhow::ensure!(max_reg > 0.0, "--max-regression must be positive");
+        let base = parse(&std::fs::read_to_string(base_path)?)
+            .map_err(|e| anyhow::anyhow!("malformed baseline {base_path:?}: {e}"))?;
+        let mut baseline: std::collections::BTreeMap<(String, String), f64> = Default::default();
+        if let Some(arr) = base.get("ops").as_arr() {
+            for op in arr {
+                if let (Some(b), Some(nm), Some(med)) = (
+                    op.get("bench").as_str(),
+                    op.get("name").as_str(),
+                    op.get("median_ns").as_f64(),
+                ) {
+                    baseline.insert((b.to_string(), nm.to_string()), med);
+                }
+            }
+        }
+        let mut compared = 0usize;
+        let mut regressions: Vec<String> = Vec::new();
+        for (bench, op_name, median_ns) in &measured {
+            let Some(&base_ns) = baseline.get(&(bench.clone(), op_name.clone())) else {
+                continue;
+            };
+            if base_ns <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let ratio = median_ns / base_ns;
+            if ratio > max_reg {
+                regressions.push(format!(
+                    "{bench}/{op_name}: {median_ns:.0} ns vs baseline {base_ns:.0} ns \
+                     ({ratio:.2}x > {max_reg:.2}x)"
+                ));
+            }
+        }
+        anyhow::ensure!(
+            compared > 0,
+            "perf gate compared 0 ops against {base_path:?} — baseline and run share no \
+             benchmark names; refresh the baseline (see README)"
+        );
+        if regressions.is_empty() {
+            println!("perf gate: {compared} shared ops within {max_reg:.2}x of {base_path:?}");
+        } else {
+            for r in &regressions {
+                eprintln!("REGRESSION {r}");
+            }
+            anyhow::bail!(
+                "{} of {compared} benchmark(s) regressed more than {max_reg}x vs {base_path:?}",
+                regressions.len()
+            );
+        }
+    }
     Ok(())
 }
 

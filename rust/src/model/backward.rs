@@ -8,19 +8,21 @@
 //!
 //! The token mixer's backward is streamed exactly like its forward: the
 //! encode statistics (running max, denominator, normalized latent summary
-//! `Z`) cached by [`flare_mixer_fwd`] let three further O(N·M·D) passes over
-//! `K`/`V` recompute the softmax weights row by row — no `[M, N]` attention
-//! matrix is ever materialized, which is what keeps training memory at
-//! O(M·D) per head just like inference (the FlashAttention recipe applied
-//! to FLARE's two-SDPA factorization).
+//! `Z`) cached by [`flare_mixer_fwd`] let two further O(N·M·D) tile passes
+//! over `K`/`V` recompute the softmax weights block by block — no `[M, N]`
+//! attention matrix is ever materialized, which is what keeps training
+//! memory at O(M·D) per head just like inference (the FlashAttention recipe
+//! applied to FLARE's two-SDPA factorization, on the blocked GEMM kernels).
 
 use std::collections::BTreeMap;
 
 use crate::config::{ModelCfg, ParamEntry};
-use crate::linalg::matrix::{axpy_f32, dot_f32};
+use crate::linalg::kernel::{
+    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32_bt, scale_softmax_rows, softmax_replay_rows,
+};
 use crate::model::forward::{
     self, affine, check_native_supported, merge_heads, mixer_decode, mixer_encode, split_heads,
-    ParamTable,
+    MIXER_TILE, ParamTable,
 };
 
 /// Named mutable views into a flat gradient vector (the mirror image of
@@ -76,35 +78,21 @@ fn affine_bwd(
     debug_assert_eq!(x.len(), rows * c_in);
     debug_assert_eq!(dy.len(), rows * c_out);
     {
+        // dW[c_in, c_out] += xᵀ · dy — transposed-A GEMM, no transpose copy
         let dw = g.acc(wname)?;
-        for r in 0..rows {
-            let dyr = &dy[r * c_out..(r + 1) * c_out];
-            for i in 0..c_in {
-                let xv = x[r * c_in + i];
-                if xv != 0.0 {
-                    axpy_f32(xv, dyr, &mut dw[i * c_out..(i + 1) * c_out]);
-                }
-            }
-        }
+        gemm_at_acc(dw, x, dy, rows, c_in, c_out);
     }
     {
         let db = g.acc(bname)?;
-        for r in 0..rows {
-            for (b, &dv) in db.iter_mut().zip(&dy[r * c_out..(r + 1) * c_out]) {
+        for dyr in dy.chunks_exact(c_out) {
+            for (b, &dv) in db.iter_mut().zip(dyr) {
                 *b += dv;
             }
         }
     }
+    // dx[rows, c_in] = dy · Wᵀ — transposed-B GEMM
     let w = p.get(wname)?;
-    let mut dx = vec![0.0f32; rows * c_in];
-    for r in 0..rows {
-        let dyr = &dy[r * c_out..(r + 1) * c_out];
-        let dxr = &mut dx[r * c_in..(r + 1) * c_in];
-        for i in 0..c_in {
-            dxr[i] = dot_f32(dyr, &w[i * c_out..(i + 1) * c_out]);
-        }
-    }
-    Ok(dx)
+    Ok(matmul_f32_bt(dy, w, rows, c_out, c_in))
 }
 
 /// Backward of [`forward::linear`].
@@ -344,7 +332,6 @@ pub fn flare_mixer_fwd(
     assert_eq!(k.len(), h * n * d, "flare_mixer_fwd: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer_fwd: v shape");
     let mut y = vec![0.0f32; h * n * d];
-    let mut scores = vec![0.0f32; m];
     let mut cache = MixerCache {
         mrun: vec![0.0f32; h * m],
         den: vec![0.0f32; h * m],
@@ -359,22 +346,29 @@ pub fn flare_mixer_fwd(
         let den = &mut cache.den[hh * m..(hh + 1) * m];
         let z = &mut cache.z[hh * m * d..(hh + 1) * m * d];
         mixer_encode(qh, kh, vh, m, n, d, scale, mrun, den, z);
-        mixer_decode(qh, kh, z, m, n, d, scale, yh, &mut scores);
+        mixer_decode(qh, kh, z, m, n, d, scale, yh);
     }
     (y, cache)
 }
 
-/// Streaming backward of one mixer head.
+/// Streaming backward of one mixer head, tiled like the forward.
 ///
 /// With `S = scale * Q K^T`, `A = softmax_N(S)` (encode, rows), `Z = A V`,
-/// `B = softmax_M(S)` (decode, columns) and `Y = B^T Z`, three passes over
-/// `t = 0..N` recompute `A[:, t]` / `B[:, t]` from the cached statistics:
+/// `B = softmax_M(S)` (decode, columns) and `Y = B^T Z`, two passes over
+/// [`MIXER_TILE`]-token tiles recompute `A` / `B` blocks from the cached
+/// statistics (every O(N·M·D) contraction is a blocked GEMM; scratch stays
+/// O(M·TILE), no `[M, N]` buffer):
 ///
-/// 1. decode backward — accumulate `dZ += B dY` and the `dS_dec` pieces of
-///    `dQ`/`dK` (needs `Z`, `dY` only);
-/// 2. encode row-sums — `rowdot[mi] = sum_t A[mi,t] * dot(dZ[mi], V[t])`,
-///    plus `dV += A^T dZ` (needs the *complete* `dZ` from pass 1);
-/// 3. encode backward — `dS_enc = A (dA - rowdot)` into `dQ`/`dK`.
+/// 1. decode backward — per tile `S = Kt·Qᵀ`, fused scale+softmax to `B`,
+///    `dB = dYt·Zᵀ`, then `dZ += Bᵀ·dYt` and the `dS_dec` pieces
+///    `dQ += dSᵀ·Kt`, `dKt += dS·Q` (needs `Z`, `dY` only);
+/// 2. encode backward — with the complete `dZ`, the softmax row-sum
+///    collapses to one O(M·D) dot against the cache:
+///    `rowdot[mi] = Σ_t A[mi,t]·⟨dZ_mi, V_t⟩ = ⟨dZ_mi, Z_mi⟩` (since the
+///    cached `Z = A·V` is already normalized).  One tile sweep then replays
+///    `A = exp(scale·Q·Ktᵀ - mrun)/den`, `dA = dZ·Vtᵀ`, and emits both
+///    `dVt += Aᵀ·dZ` and `dS_enc = A (dA - rowdot) * scale` into
+///    `dQ += dS·Kt`, `dKt += dSᵀ·Q`.
 #[allow(clippy::too_many_arguments)]
 fn mixer_head_bwd(
     qh: &[f32],
@@ -392,76 +386,70 @@ fn mixer_head_bwd(
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
-    let mut scores = vec![0.0f32; m]; // raw S[:, t]
-    let mut bw = vec![0.0f32; m]; // decode weights B[:, t]
+    let mut sa = vec![0.0f32; m * MIXER_TILE]; // softmax weights tile
+    let mut sb = vec![0.0f32; m * MIXER_TILE]; // d-score tile
     let mut dz = vec![0.0f32; m * d];
     let mut rowdot = vec![0.0f32; m];
 
     // pass 1: decode backward, dZ accumulation
-    for t in 0..n {
-        let kt = &kh[t * d..(t + 1) * d];
-        let dyt = &dyh[t * d..(t + 1) * d];
-        let mut mx = f32::NEG_INFINITY;
-        for mi in 0..m {
-            let s = scale * dot_f32(kt, &qh[mi * d..(mi + 1) * d]);
-            scores[mi] = s;
-            mx = mx.max(s);
-        }
-        let mut sum = 0.0f32;
-        for (b, &s) in bw.iter_mut().zip(&scores) {
-            *b = (s - mx).exp();
-            sum += *b;
-        }
-        let inv = 1.0 / sum;
-        let mut colsum = 0.0f32;
-        // db[mi] = <dY_t, Z_mi>; colsum = sum_mi B[mi] db[mi]
-        for mi in 0..m {
-            bw[mi] *= inv;
-            scores[mi] = dot_f32(dyt, &z[mi * d..(mi + 1) * d]); // reuse as db
-            colsum += bw[mi] * scores[mi];
-        }
-        let dkt = &mut dk[t * d..(t + 1) * d];
-        for mi in 0..m {
-            axpy_f32(bw[mi], dyt, &mut dz[mi * d..(mi + 1) * d]);
-            let ds = bw[mi] * (scores[mi] - colsum) * scale;
-            if ds != 0.0 {
-                axpy_f32(ds, kt, &mut dq[mi * d..(mi + 1) * d]);
-                axpy_f32(ds, &qh[mi * d..(mi + 1) * d], dkt);
+    for t0 in (0..n).step_by(MIXER_TILE) {
+        let tn = MIXER_TILE.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let dyt = &dyh[t0 * d..(t0 + tn) * d];
+        let bw = &mut sa[..tn * m];
+        bw.fill(0.0);
+        gemm_bt_acc(bw, kt, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
+        scale_softmax_rows(bw, tn, m, scale); // B[tn, m]
+        let db = &mut sb[..tn * m];
+        db.fill(0.0);
+        gemm_bt_acc(db, dyt, z, tn, d, m); // dB[t, mi] = <dY_t, Z_mi>
+        gemm_at_acc(&mut dz, bw, dyt, tn, m, d); // dZ += Bᵀ · dYt
+        // dS_dec = B (dB - colsum) * scale, in place over the dB tile
+        for (brow, drow) in bw.chunks_exact(m).zip(db.chunks_exact_mut(m)) {
+            let mut colsum = 0.0f32;
+            for (b, dbv) in brow.iter().zip(drow.iter()) {
+                colsum += b * dbv;
             }
+            for (b, dbv) in brow.iter().zip(drow.iter_mut()) {
+                *dbv = b * (*dbv - colsum) * scale;
+            }
+        }
+        gemm_at_acc(dq, db, kt, tn, m, d); // dQ += dSᵀ · Kt
+        gemm_acc(&mut dk[t0 * d..(t0 + tn) * d], db, qh, tn, m, d); // dKt += dS · Q
+    }
+
+    // rowdot[mi] = sum_t A[mi,t]·dA[mi,t] collapses to <dZ_mi, Z_mi>: with
+    // dA[mi,t] = <dZ_mi, V_t> and the cached Z_mi = sum_t A[mi,t]·V_t
+    // already normalized, the N-sum is one O(M·D) dot against the cache
+    for ((rd, dzr), zr) in rowdot.iter_mut().zip(dz.chunks_exact(d)).zip(z.chunks_exact(d)) {
+        for (x, y) in dzr.iter().zip(zr.iter()) {
+            *rd += x * y;
         }
     }
 
-    // pass 2: encode row-sums rowdot[mi] = sum_t A[mi,t] dA[mi,t], dV
-    for t in 0..n {
-        let kt = &kh[t * d..(t + 1) * d];
-        let vt = &vh[t * d..(t + 1) * d];
-        let dvt = &mut dv[t * d..(t + 1) * d];
-        for mi in 0..m {
-            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
-            let a = (s - mrun[mi]).exp() / den[mi];
-            if a != 0.0 {
-                let da = dot_f32(&dz[mi * d..(mi + 1) * d], vt);
-                rowdot[mi] += a * da;
-                axpy_f32(a, &dz[mi * d..(mi + 1) * d], dvt);
+    // pass 2: encode backward — dV and dS_enc = A (dA - rowdot) * scale in
+    // one tile sweep
+    for t0 in (0..n).step_by(MIXER_TILE) {
+        let tn = MIXER_TILE.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let vt = &vh[t0 * d..(t0 + tn) * d];
+        let aw = &mut sa[..m * tn];
+        aw.fill(0.0);
+        gemm_bt_acc(aw, qh, kt, m, d, tn); // S[m, tn] = Q · Ktᵀ
+        softmax_replay_rows(aw, tn, scale, mrun, den); // A[m, tn]
+        let da = &mut sb[..m * tn];
+        da.fill(0.0);
+        gemm_bt_acc(da, &dz, vt, m, d, tn); // dA[mi, t] = <dZ_mi, V_t>
+        gemm_at_acc(&mut dv[t0 * d..(t0 + tn) * d], &sa[..m * tn], &dz, m, tn, d); // dVt += Aᵀ · dZ
+        for ((&rd, arow), drow) in
+            rowdot.iter().zip(sa[..m * tn].chunks_exact(tn)).zip(da.chunks_exact_mut(tn))
+        {
+            for (a, dav) in arow.iter().zip(drow.iter_mut()) {
+                *dav = a * (*dav - rd) * scale;
             }
         }
-    }
-
-    // pass 3: encode backward dS_enc = A (dA - rowdot)
-    for t in 0..n {
-        let kt = &kh[t * d..(t + 1) * d];
-        let vt = &vh[t * d..(t + 1) * d];
-        let dkt = &mut dk[t * d..(t + 1) * d];
-        for mi in 0..m {
-            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
-            let a = (s - mrun[mi]).exp() / den[mi];
-            if a != 0.0 {
-                let da = dot_f32(&dz[mi * d..(mi + 1) * d], vt);
-                let ds = a * (da - rowdot[mi]) * scale;
-                axpy_f32(ds, kt, &mut dq[mi * d..(mi + 1) * d]);
-                axpy_f32(ds, &qh[mi * d..(mi + 1) * d], dkt);
-            }
-        }
+        gemm_acc(dq, &sb[..m * tn], kt, m, tn, d); // dQ += dS · Kt
+        gemm_at_acc(&mut dk[t0 * d..(t0 + tn) * d], &sb[..m * tn], qh, m, tn, d); // dKt += dSᵀ · Q
     }
 }
 

@@ -12,7 +12,9 @@
 use std::collections::BTreeMap;
 
 use crate::config::{ModelCfg, ParamEntry};
-use crate::linalg::matrix::{axpy_f32, dot_f32, matmul_f32};
+use crate::linalg::kernel::{
+    gemm_acc, gemm_bt_acc, matmul_f32, online_softmax_row, scale_softmax_rows,
+};
 
 /// Named views into a flat parameter vector.
 pub struct ParamTable<'a> {
@@ -193,12 +195,24 @@ pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
     out
 }
 
+/// Tokens per tile in the tiled mixer kernels.  A tile's score block is
+/// `[M, TILE]` (encode) or `[TILE, M]` (decode) f32 scratch — small enough
+/// to stay cache-resident while giving the blocked GEMM full panels.  The
+/// streaming backward replays scores with the same tile size, so cached
+/// statistics match bitwise.
+pub(crate) const MIXER_TILE: usize = 64;
+
 /// Encode pass of one head: `z = softmax_N(Q K^T) V` via an online softmax
-/// streamed over N.  Writes the running max `mrun [M]`, denominator
-/// `den [M]` and the *normalized* latent summary `z [M, D]` into the caller's
-/// buffers — the same statistics the streaming backward pass replays, so
-/// forward-with-cache is this exact function with the buffers kept.
-pub(crate) fn mixer_encode(
+/// streamed over N in [`MIXER_TILE`]-token tiles.  Each tile is one
+/// `S = Q·Ktᵀ` GEMM, a fused scale+online-softmax row update
+/// ([`online_softmax_row`]) and one `Z += E·Vt` GEMM.  Writes the running
+/// max `mrun [M]`, denominator `den [M]` and the *normalized* latent
+/// summary `z [M, D]` into the caller's buffers — the same statistics the
+/// streaming backward pass replays, so forward-with-cache is this exact
+/// function with the buffers kept.  Public so kernel-level benches can
+/// time the encode pass in isolation.
+#[allow(clippy::too_many_arguments)]
+pub fn mixer_encode(
     qh: &[f32],
     kh: &[f32],
     vh: &[f32],
@@ -213,26 +227,24 @@ pub(crate) fn mixer_encode(
     mrun.fill(f32::NEG_INFINITY);
     den.fill(0.0);
     z.fill(0.0);
-    for t in 0..n {
-        let kt = &kh[t * d..(t + 1) * d];
-        let vt = &vh[t * d..(t + 1) * d];
+    let mut s = vec![0.0f32; m * MIXER_TILE];
+    for t0 in (0..n).step_by(MIXER_TILE) {
+        let tn = MIXER_TILE.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let vt = &vh[t0 * d..(t0 + tn) * d];
+        let st = &mut s[..m * tn];
+        st.fill(0.0);
+        gemm_bt_acc(st, qh, kt, m, d, tn); // S[m, tn] = Q · Ktᵀ
         for mi in 0..m {
-            let s = scale * dot_f32(&qh[mi * d..(mi + 1) * d], kt);
-            let acc = &mut z[mi * d..(mi + 1) * d];
-            if s <= mrun[mi] {
-                let e = (s - mrun[mi]).exp();
-                den[mi] += e;
-                axpy_f32(e, vt, acc);
-            } else {
-                // new running max: rescale history, this element weighs 1
-                let corr = (mrun[mi] - s).exp();
-                den[mi] = den[mi] * corr + 1.0;
-                for (a, &vv) in acc.iter_mut().zip(vt) {
-                    *a = *a * corr + vv;
-                }
-                mrun[mi] = s;
-            }
+            online_softmax_row(
+                &mut st[mi * tn..(mi + 1) * tn],
+                scale,
+                &mut mrun[mi],
+                &mut den[mi],
+                &mut z[mi * d..(mi + 1) * d],
+            );
         }
+        gemm_acc(z, st, vt, m, tn, d); // Z += E · Vt
     }
     for mi in 0..m {
         let inv = 1.0 / den[mi];
@@ -243,8 +255,11 @@ pub(crate) fn mixer_encode(
 }
 
 /// Decode pass of one head: `y_t = softmax_M(K_t Q^T) Z` with the M latent
-/// axis fully resident; `scores` is an `[M]` scratch buffer.
-pub(crate) fn mixer_decode(
+/// axis fully resident, tiled over tokens: per tile one `S = Kt·Qᵀ` GEMM, a
+/// fused scale+row-softmax ([`scale_softmax_rows`]) and one `Y += P·Z` GEMM.
+/// `yh` must be zero-initialized.  Public so kernel-level benches can time
+/// the decode pass in isolation.
+pub fn mixer_decode(
     qh: &[f32],
     kh: &[f32],
     z: &[f32],
@@ -253,26 +268,16 @@ pub(crate) fn mixer_decode(
     d: usize,
     scale: f32,
     yh: &mut [f32],
-    scores: &mut [f32],
 ) {
-    for t in 0..n {
-        let kt = &kh[t * d..(t + 1) * d];
-        let mut mx = f32::NEG_INFINITY;
-        for mi in 0..m {
-            let s = scale * dot_f32(kt, &qh[mi * d..(mi + 1) * d]);
-            scores[mi] = s;
-            mx = mx.max(s);
-        }
-        let mut sum = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - mx).exp();
-            sum += *sc;
-        }
-        let inv = 1.0 / sum;
-        let yt = &mut yh[t * d..(t + 1) * d];
-        for mi in 0..m {
-            axpy_f32(scores[mi] * inv, &z[mi * d..(mi + 1) * d], yt);
-        }
+    let mut s = vec![0.0f32; MIXER_TILE * m];
+    for t0 in (0..n).step_by(MIXER_TILE) {
+        let tn = MIXER_TILE.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let st = &mut s[..tn * m];
+        st.fill(0.0);
+        gemm_bt_acc(st, kt, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
+        scale_softmax_rows(st, tn, m, scale); // P[tn, m]
+        gemm_acc(&mut yh[t0 * d..(t0 + tn) * d], st, z, tn, m, d); // Y += P · Z
     }
 }
 
@@ -281,7 +286,8 @@ pub(crate) fn mixer_decode(
 /// Encode streams `K`/`V` once with an online softmax (running max `m`,
 /// denominator `den`, accumulator `z` resident per head); decode re-streams
 /// `K`, doing an ordinary row softmax over the fully resident M latent axis.
-/// Memory: O(M·D) scratch per head; no `[M, N]` buffer exists.
+/// Both passes run in [`MIXER_TILE`]-token tiles on the blocked GEMM.
+/// Memory: O(M·(D + TILE)) scratch per head; no `[M, N]` buffer exists.
 pub fn flare_mixer(
     q: &[f32],
     k: &[f32],
@@ -296,7 +302,6 @@ pub fn flare_mixer(
     assert_eq!(k.len(), h * n * d, "flare_mixer: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer: v shape");
     let mut y = vec![0.0f32; h * n * d];
-    let mut scores = vec![0.0f32; m];
     let mut mrun = vec![0.0f32; m];
     let mut den = vec![0.0f32; m];
     let mut z = vec![0.0f32; m * d];
@@ -306,7 +311,7 @@ pub fn flare_mixer(
         let vh = &v[hh * n * d..(hh + 1) * n * d];
         let yh = &mut y[hh * n * d..(hh + 1) * n * d];
         mixer_encode(qh, kh, vh, m, n, d, scale, &mut mrun, &mut den, &mut z);
-        mixer_decode(qh, kh, &z, m, n, d, scale, yh, &mut scores);
+        mixer_decode(qh, kh, &z, m, n, d, scale, yh);
     }
     y
 }

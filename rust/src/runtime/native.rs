@@ -68,16 +68,9 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        let threads = std::env::var("FLARE_NATIVE_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-            .max(1);
         NativeBackend {
             plans: RefCell::new(HashMap::new()),
-            threads,
+            threads: crate::util::threadpool::default_threads(),
         }
     }
 

@@ -33,6 +33,14 @@ pub struct TrainOpts {
     pub sample_seed: u64,
     /// print progress every `log_every` steps (0 = silent)
     pub log_every: usize,
+    /// resume from a checkpointed optimizer state at the given global step;
+    /// `steps` then counts *additional* steps.  AdamW bias correction and
+    /// the batch-sample stream continue from the global step exactly; the
+    /// OneCycle LR schedule is re-planned over the combined total, so the
+    /// resumed segment matches an uninterrupted run of that total while the
+    /// *first* segment (already trained) followed its own shorter cycle —
+    /// split runs are resumable, not bitwise equal to one long run
+    pub resume: Option<(OptState, usize)>,
 }
 
 impl Default for TrainOpts {
@@ -42,6 +50,7 @@ impl Default for TrainOpts {
             eval_every: 0,
             sample_seed: 0x5EED,
             log_every: 0,
+            resume: None,
         }
     }
 }
@@ -61,6 +70,11 @@ pub struct TrainOutcome {
     pub param_count: usize,
     /// final parameters (host copy) for downstream analysis / serving
     pub params: Vec<f32>,
+    /// final AdamW first moment — with `opt_v` and `steps`, everything a
+    /// resumable checkpoint needs
+    pub opt_m: Vec<f32>,
+    /// final AdamW second moment
+    pub opt_v: Vec<f32>,
 }
 
 /// Cyclic shuffled batch sampler over `count` items.
@@ -167,18 +181,40 @@ pub fn train_case(
     );
     let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
     let steps = opts.steps.unwrap_or(case.train_steps);
-    let sched = OneCycle::new(case.lr, steps);
+    let (mut st, start) = match &opts.resume {
+        Some((state, at)) => {
+            anyhow::ensure!(
+                state.params.len() == case.param_count
+                    && state.m.len() == case.param_count
+                    && state.v.len() == case.param_count,
+                "resume state length {} != case param count {}",
+                state.params.len(),
+                case.param_count
+            );
+            (state.clone(), *at)
+        }
+        None => (
+            OptState::new(init_params(&case.params, case.param_count, manifest.seed)),
+            0,
+        ),
+    };
+    let total = start + steps;
+    let sched = OneCycle::new(case.lr, total);
 
     backend.prepare(manifest, case)?;
-    let mut st = OptState::new(init_params(&case.params, case.param_count, manifest.seed));
 
     let mut sampler = BatchSampler::new(ds.train_len(), opts.sample_seed);
+    // fast-forward past the batches the checkpointed run already consumed so
+    // a resumed run continues the sample stream instead of replaying it
+    for _ in 0..start {
+        sampler.next(case.batch);
+    }
     let mut losses = Vec::with_capacity(steps);
     let mut evals = Vec::new();
     let mut step_times = Vec::with_capacity(steps);
     let wall = Timer::start();
 
-    for step in 0..steps {
+    for step in start..total {
         let idx = sampler.next(case.batch);
         let batch = gather_batch(case, &ds, &idx, true);
         let t = Timer::start();
@@ -193,9 +229,9 @@ pub fn train_case(
         )?;
         step_times.push(t.elapsed_ms());
         losses.push(loss);
-        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == steps) {
+        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == total) {
             crate::info!(
-                "[{}] step {step}/{steps} loss {loss:.4} lr {:.2e}",
+                "[{}] step {step}/{total} loss {loss:.4} lr {:.2e}",
                 case.name,
                 sched.lr(step)
             );
@@ -206,11 +242,11 @@ pub fn train_case(
         }
     }
     let final_metric = evaluate(backend, manifest, case, &ds, &st.params)?;
-    evals.push((steps, final_metric));
+    evals.push((total, final_metric));
 
     Ok(TrainOutcome {
         case: case.name.clone(),
-        steps,
+        steps: total,
         losses,
         evals,
         final_metric,
@@ -218,6 +254,8 @@ pub fn train_case(
         step_ms: Summary::of(&step_times),
         param_count: case.param_count,
         params: st.params,
+        opt_m: st.m,
+        opt_v: st.v,
     })
 }
 
@@ -253,12 +291,9 @@ mod tests {
         assert_eq!(o.eval_every, 0);
     }
 
-    #[test]
-    fn native_backend_trains_tiny_case() {
-        use crate::runtime::make_backend;
-        let backend = make_backend("native").unwrap();
-        assert!(backend.supports_training(), "native backend must train");
-        let dir = std::env::temp_dir().join("flare_train_native_test");
+    /// Artifact-free tiny Darcy case + manifest (per-test temp dir).
+    fn tiny_manifest_and_case(tag: &str) -> (Manifest, CaseCfg) {
+        let dir = std::env::temp_dir().join(format!("flare_train_test_{tag}"));
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
             dir.join("manifest.json"),
@@ -302,6 +337,15 @@ mod tests {
             artifacts: Default::default(),
             params: entries,
         };
+        (manifest, case)
+    }
+
+    #[test]
+    fn native_backend_trains_tiny_case() {
+        use crate::runtime::make_backend;
+        let backend = make_backend("native").unwrap();
+        assert!(backend.supports_training(), "native backend must train");
+        let (manifest, case) = tiny_manifest_and_case("native");
         let out = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default()).unwrap();
         assert_eq!(out.losses.len(), 3);
         assert!(out.losses.iter().all(|l| l.is_finite() && *l >= 0.0));
@@ -309,5 +353,86 @@ mod tests {
         // the optimizer actually moved the parameters
         let init = init_params(&case.params, case.param_count, manifest.seed);
         assert_ne!(out.params, init);
+        // moments are returned for checkpointing and actually populated
+        assert_eq!(out.opt_m.len(), case.param_count);
+        assert_eq!(out.opt_v.len(), case.param_count);
+        assert!(out.opt_v.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn resume_from_checkpoint_roundtrip() {
+        use crate::model::{load_checkpoint, save_checkpoint, Checkpoint};
+        use crate::runtime::make_backend;
+        let backend = make_backend("native").unwrap();
+        let (manifest, case) = tiny_manifest_and_case("resume");
+        let out = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(3),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.steps, 3);
+
+        // full optimizer state round-trips through the checkpoint format
+        let path = std::env::temp_dir().join("flare_resume_roundtrip.ckpt");
+        save_checkpoint(
+            &path,
+            &Checkpoint {
+                case: out.case.clone(),
+                step: out.steps,
+                params: out.params.clone(),
+                m: out.opt_m.clone(),
+                v: out.opt_v.clone(),
+                train_loss: out.losses.last().copied().unwrap_or(0.0),
+            },
+        )
+        .unwrap();
+        let ck = load_checkpoint(&path).unwrap();
+        assert_eq!(ck.step, 3);
+        assert_eq!(ck.params, out.params);
+        assert_eq!(ck.m, out.opt_m);
+        assert_eq!(ck.v, out.opt_v);
+
+        // resuming continues the global step count and keeps training
+        let resumed = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(2),
+                resume: Some((
+                    OptState {
+                        params: ck.params,
+                        m: ck.m,
+                        v: ck.v,
+                    },
+                    ck.step,
+                )),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(resumed.steps, 5);
+        assert_eq!(resumed.losses.len(), 2);
+        assert!(resumed.losses.iter().all(|l| l.is_finite()));
+        assert_ne!(resumed.params, out.params, "resume must keep training");
+
+        // a wrong-sized state is rejected, not silently reinitialized
+        let bad = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(1),
+                resume: Some((OptState::new(vec![0.0; 3]), 1)),
+                ..Default::default()
+            },
+        );
+        assert!(bad.is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

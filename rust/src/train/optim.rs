@@ -4,9 +4,12 @@
 //! decay folded into the same update term as the python artifact.
 //!
 //! "Fused" here means one pass over the four O(P) buffers per step: the
-//! clip factor is computed first, then a single loop updates `m`, `v` and
-//! `params` in place — no temporaries, no per-parameter dispatch.
+//! clip factor is computed first, then [`crate::linalg::kernel::adamw_fused`]
+//! updates `m`, `v` and `params` in place — no temporaries, no
+//! per-parameter dispatch, and the element loop lives in the kernel
+//! subsystem next to the GEMMs it feeds.
 
+use crate::linalg::kernel::adamw_fused;
 use crate::runtime::OptState;
 
 /// AdamW hyperparameters (mirrors `compile.train.OptCfg`).
@@ -43,18 +46,20 @@ impl AdamW {
         let t = (step + 1) as f64;
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
-        for i in 0..grad.len() {
-            let g = grad[i] as f64 * clip;
-            let m = self.beta1 * state.m[i] as f64 + (1.0 - self.beta1) * g;
-            let v = self.beta2 * state.v[i] as f64 + (1.0 - self.beta2) * g * g;
-            state.m[i] = m as f32;
-            state.v[i] = v as f32;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            let update = mhat / (vhat.sqrt() + self.eps)
-                + self.weight_decay * state.params[i] as f64;
-            state.params[i] = (state.params[i] as f64 - lr * update) as f32;
-        }
+        adamw_fused(
+            &mut state.params,
+            &mut state.m,
+            &mut state.v,
+            grad,
+            clip,
+            self.beta1,
+            self.beta2,
+            self.eps,
+            self.weight_decay,
+            lr,
+            bc1,
+            bc2,
+        );
     }
 }
 

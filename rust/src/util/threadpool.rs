@@ -4,9 +4,22 @@
 //! usual `execute(closure)` plus a `scoped_map` helper for data-parallel
 //! sections in the simulators.
 
+use std::cell::Cell;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+thread_local! {
+    static IN_PARALLEL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is the current thread a [`parallel_map`] worker?  The kernel subsystem
+/// consults this to keep nested GEMMs single-threaded: when the batch
+/// fan-out already owns the cores, a per-matmul fan-out would only
+/// oversubscribe them.
+pub fn in_parallel_worker() -> bool {
+    IN_PARALLEL_WORKER.with(|f| f.get())
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -70,6 +83,22 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Worker-thread budget shared by the batch fan-out and the kernel
+/// subsystem's M-panel GEMM parallelism: `FLARE_THREADS`, then the legacy
+/// `FLARE_NATIVE_THREADS`, then the machine's available parallelism.
+/// `FLARE_THREADS=1` is the CI determinism leg — every parallel path must
+/// produce bitwise-identical results under it.
+pub fn default_threads() -> usize {
+    for var in ["FLARE_THREADS", "FLARE_NATIVE_THREADS"] {
+        if let Ok(v) = std::env::var(var) {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Apply `f` to every index in `0..n` across `threads` OS threads and
 /// collect results in order.  Spawns scoped threads, so `f` may borrow.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
@@ -78,6 +107,11 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        // run inline: no spawn, and the caller keeps its non-worker status,
+        // so nested kernels may still fan out (the batch == 1 case)
+        return (0..n).map(f).collect();
+    }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let chunks: Vec<(usize, &mut [Option<T>])> = {
         let mut res = Vec::new();
@@ -97,6 +131,8 @@ where
         for (start, chunk) in chunks {
             let f = &f;
             scope.spawn(move || {
+                // scoped threads are fresh per call, so set-only is enough
+                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     *slot = Some(f(start + i));
                 }

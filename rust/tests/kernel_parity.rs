@@ -1,0 +1,250 @@
+//! Parity tests for the blocked/SIMD `linalg::kernel` subsystem: every new
+//! kernel against the seed's naive reference oracle over a shape grid that
+//! includes degenerate dims, the transposed variants, the fused softmax row
+//! kernels, and bitwise stability of the M-panel parallel GEMM across
+//! thread counts.
+
+use flare::linalg::kernel::{
+    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32, matmul_f32_bt, matmul_f32_reference,
+    matmul_f32_threads, online_softmax_row, scale_softmax_rows, softmax_replay_rows,
+};
+use flare::util::rng::Rng;
+
+/// Acceptance grid from the issue: m/k/n ∈ {0, 1, 7, 64, 65}.
+const DIMS: [usize; 5] = [0, 1, 7, 64, 65];
+
+fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+/// Relative error with an absolute floor, per the ≤1e-5 acceptance gate.
+fn rel_err(a: f32, b: f32) -> f64 {
+    let (a, b) = (a as f64, b as f64);
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn gemm_matches_oracle_over_shape_grid() {
+    let mut rng = Rng::new(42);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, m * k);
+                let b = randv(&mut rng, k * n);
+                let c = matmul_f32(&a, &b, m, k, n);
+                let r = matmul_f32_reference(&a, &b, m, k, n);
+                assert_eq!(c.len(), r.len(), "shape {m}x{k}x{n}");
+                for i in 0..c.len() {
+                    assert!(
+                        rel_err(c[i], r[i]) < 1e-5,
+                        "gemm {m}x{k}x{n} elem {i}: {} vs oracle {}",
+                        c[i],
+                        r[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_bt_matches_oracle() {
+    let mut rng = Rng::new(7);
+    for &(m, k, n) in &[(5, 7, 9), (64, 64, 64), (65, 1, 7), (1, 65, 64), (33, 17, 65)] {
+        let a = randv(&mut rng, m * k);
+        let bt = randv(&mut rng, n * k);
+        let mut b = vec![0.0f32; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let c = matmul_f32_bt(&a, &bt, m, k, n);
+        let r = matmul_f32_reference(&a, &b, m, k, n);
+        for i in 0..c.len() {
+            assert!(
+                rel_err(c[i], r[i]) < 1e-5,
+                "gemm_bt {m}x{k}x{n} elem {i}: {} vs oracle {}",
+                c[i],
+                r[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_at_matches_oracle() {
+    let mut rng = Rng::new(8);
+    for &(rows, m, n) in &[(7, 5, 9), (64, 33, 65), (1, 1, 1), (65, 64, 7)] {
+        let a = randv(&mut rng, rows * m);
+        let b = randv(&mut rng, rows * n);
+        let mut at = vec![0.0f32; m * rows];
+        for r in 0..rows {
+            for i in 0..m {
+                at[i * rows + r] = a[r * m + i];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        gemm_at_acc(&mut c, &a, &b, rows, m, n);
+        let r = matmul_f32_reference(&at, &b, m, rows, n);
+        for i in 0..c.len() {
+            assert!(
+                rel_err(c[i], r[i]) < 1e-5,
+                "gemm_at {rows}x{m}x{n} elem {i}: {} vs oracle {}",
+                c[i],
+                r[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn accumulate_variants_add_on_top() {
+    let mut rng = Rng::new(9);
+    let (m, k, n) = (13, 11, 17);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let bt = {
+        let mut bt = vec![0.0f32; n * k];
+        for j in 0..n {
+            for p in 0..k {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        bt
+    };
+    let once = matmul_f32_reference(&a, &b, m, k, n);
+    let mut c = vec![0.0f32; m * n];
+    gemm_acc(&mut c, &a, &b, m, k, n);
+    gemm_bt_acc(&mut c, &a, &bt, m, k, n);
+    for i in 0..c.len() {
+        assert!(
+            rel_err(c[i], 2.0 * once[i]) < 1e-5,
+            "acc elem {i}: {} vs 2*{}",
+            c[i],
+            once[i]
+        );
+    }
+}
+
+#[test]
+fn parallel_gemm_is_bitwise_stable_across_thread_counts() {
+    let mut rng = Rng::new(10);
+    // odd sizes so panel boundaries hit row-tile tails differently per count
+    let (m, k, n) = (257, 33, 65);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let c1 = matmul_f32_threads(&a, &b, m, k, n, 1);
+    for threads in [2usize, 3, 4, 7, 16] {
+        let ct = matmul_f32_threads(&a, &b, m, k, n, threads);
+        assert!(c1 == ct, "thread count {threads} changed GEMM bits");
+    }
+    // and the auto-dispatched entry point agrees with the pinned one
+    let auto = matmul_f32(&a, &b, m, k, n);
+    assert!(c1 == auto, "auto thread dispatch changed GEMM bits");
+}
+
+#[test]
+fn fused_softmax_rows_match_plain_softmax() {
+    let mut rng = Rng::new(11);
+    let (rows, cols) = (9usize, 23usize);
+    let scale = 0.37f32;
+    let base = randv(&mut rng, rows * cols);
+    let mut s = base.clone();
+    scale_softmax_rows(&mut s, rows, cols, scale);
+    for r in 0..rows {
+        let row = &base[r * cols..(r + 1) * cols];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(scale * v));
+        let e: Vec<f64> = row.iter().map(|&v| ((scale * v - mx) as f64).exp()).collect();
+        let den: f64 = e.iter().sum();
+        let mut sum = 0.0f32;
+        for j in 0..cols {
+            let got = s[r * cols + j];
+            let expect = e[j] / den;
+            assert!(
+                (got as f64 - expect).abs() < 1e-6,
+                "row {r} col {j}: {got} vs {expect}"
+            );
+            sum += got;
+        }
+        assert!((sum - 1.0).abs() < 1e-5, "row {r} does not sum to 1: {sum}");
+    }
+    // degenerate shapes must be no-ops, not panics
+    scale_softmax_rows(&mut [], 0, 0, 1.0);
+    scale_softmax_rows(&mut [], 0, 5, 1.0);
+}
+
+#[test]
+fn online_softmax_tiled_matches_one_shot() {
+    let mut rng = Rng::new(12);
+    let (n, d) = (37usize, 4usize);
+    let scale = 0.9f32;
+    let scores = randv(&mut rng, n);
+    let vals = randv(&mut rng, n * d);
+    // accumulate z += E·V after each update, mirroring the encode loop
+    let run = |tile: usize| -> (f32, f32, Vec<f32>) {
+        let mut mrun = f32::NEG_INFINITY;
+        let mut den = 0.0f32;
+        let mut z = vec![0.0f32; d];
+        let mut t0 = 0;
+        while t0 < n {
+            let tn = tile.min(n - t0);
+            let mut e = scores[t0..t0 + tn].to_vec();
+            online_softmax_row(&mut e, scale, &mut mrun, &mut den, &mut z);
+            for (t, w) in e.iter().enumerate() {
+                for j in 0..d {
+                    z[j] += w * vals[(t0 + t) * d + j];
+                }
+            }
+            t0 += tn;
+        }
+        (mrun, den, z)
+    };
+    let (m1, d1, z1) = run(n); // one shot
+    for tile in [1usize, 8, 16] {
+        let (m2, d2, z2) = run(tile);
+        assert!((m1 - m2).abs() < 1e-6, "tile {tile}: max {m2} vs {m1}");
+        assert!(rel_err(d1, d2) < 1e-5, "tile {tile}: den {d2} vs {d1}");
+        for j in 0..d {
+            assert!(rel_err(z1[j], z2[j]) < 1e-4, "tile {tile} z[{j}]: {} vs {}", z2[j], z1[j]);
+        }
+    }
+    // empty tile is a no-op
+    let (mut mr, mut dn) = (f32::NEG_INFINITY, 0.0f32);
+    online_softmax_row(&mut [], 1.0, &mut mr, &mut dn, &mut []);
+    assert_eq!(dn, 0.0);
+}
+
+#[test]
+fn softmax_replay_reproduces_normalized_weights() {
+    let mut rng = Rng::new(13);
+    let (m, n) = (3usize, 11usize);
+    let scale = 0.5f32;
+    let s = randv(&mut rng, m * n);
+    // build the online stats row by row (d = 0: no accumulator needed)
+    let mut mrun = vec![f32::NEG_INFINITY; m];
+    let mut den = vec![0.0f32; m];
+    for mi in 0..m {
+        let mut e = s[mi * n..(mi + 1) * n].to_vec();
+        online_softmax_row(&mut e, scale, &mut mrun[mi], &mut den[mi], &mut []);
+    }
+    let mut a = s.clone();
+    softmax_replay_rows(&mut a, n, scale, &mrun, &den);
+    for mi in 0..m {
+        let row = &s[mi * n..(mi + 1) * n];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(scale * v));
+        let e: Vec<f64> = row.iter().map(|&v| ((scale * v - mx) as f64).exp()).collect();
+        let dsum: f64 = e.iter().sum();
+        let mut sum = 0.0f32;
+        for j in 0..n {
+            let got = a[mi * n + j];
+            let expect = e[j] / dsum;
+            assert!(
+                (got as f64 - expect).abs() < 1e-6,
+                "row {mi} col {j}: {got} vs {expect}"
+            );
+            sum += got;
+        }
+        assert!((sum - 1.0).abs() < 1e-5, "replayed row {mi} sums to {sum}");
+    }
+}

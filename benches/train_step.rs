@@ -11,6 +11,7 @@
 use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
 use flare::config::{CaseCfg, ModelCfg};
 use flare::linalg::kernel::{matmul_f32, matmul_f32_reference, scale_softmax_rows};
+use flare::linalg::vexp::vexp;
 use flare::model::{build_spec, init_params};
 use flare::runtime::{make_backend, BatchInput, BatchTarget, NativeBackend, OptState};
 use flare::train::AdamW;
@@ -165,6 +166,40 @@ fn main() -> anyhow::Result<()> {
         ktable.row(vec![
             "softmax_rows".into(),
             format!("{rows}x{cols}"),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+    }
+    {
+        // the softmax/exp split: vectorized polynomial exp vs the scalar
+        // libm loop it replaced — the per-element transcendental cost that
+        // dominated the softmax rows before linalg::vexp landed
+        let len = 1usize << 18;
+        let base: Vec<f32> = (0..len).map(|_| rng.normal() as f32 * 8.0).collect();
+        let mut buf = base.clone();
+        let meas = bench.run("vexp_262144", || {
+            buf.copy_from_slice(&base);
+            vexp(&mut buf);
+            assert!(buf[0].is_finite());
+        });
+        ktable.row(vec![
+            "vexp".into(),
+            format!("{len}"),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+        let meas = bench.run("exp_libm_262144", || {
+            buf.copy_from_slice(&base);
+            for v in buf.iter_mut() {
+                *v = v.exp();
+            }
+            assert!(buf[0].is_finite());
+        });
+        ktable.row(vec![
+            "exp_libm".into(),
+            format!("{len}"),
             format!("{:.3}", meas.mean_ms()),
             "-".into(),
         ]);

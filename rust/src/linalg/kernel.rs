@@ -16,8 +16,12 @@
 //!   * [`gemm_at_acc`]   — `C += Aᵀ · B`          (`dW += xᵀ dy`, mixer bwd)
 //!
 //! plus the fused softmax row kernels the two-SDPA mixer loops need
-//! ([`scale_softmax_rows`], [`online_softmax_row`], [`softmax_replay_rows`])
-//! and the fused AdamW element update ([`adamw_fused`]).
+//! ([`scale_softmax_rows`], [`online_softmax_row`], [`softmax_replay_rows`]
+//! — their exp inner loops run on the vectorized polynomial in
+//! [`crate::linalg::vexp`] rather than scalar libm) and the fused AdamW
+//! element update ([`adamw_fused`]).  `*_into` variants of the matmul entry
+//! points write into caller-provided workspace buffers so the model hot
+//! paths stay allocation-free.
 //!
 //! Large single matmuls parallelize across M-panels through the existing
 //! [`crate::util::threadpool`]; each output row is computed by exactly one
@@ -32,7 +36,8 @@
 
 use std::cell::Cell;
 
-use crate::util::threadpool::{default_threads, in_parallel_worker, parallel_map};
+use crate::linalg::vexp::{exp_f32, vexp_affine};
+use crate::util::threadpool::{default_threads, in_parallel_worker, parallel_chunks_mut};
 
 thread_local! {
     // pack panels reused across GEMM calls (the tiled mixer issues several
@@ -57,8 +62,11 @@ const NR: usize = 8;
 // the AVX2 micro-kernel is written for exactly this tile
 const _: () = assert!(MR == 4 && NR == 8);
 
+/// Is the AVX2+FMA fast path usable?  Shared by the GEMM micro-kernel and
+/// the [`crate::linalg::vexp`] transcendental kernels; `FLARE_NO_SIMD=1`
+/// forces the scalar fallbacks everywhere at once (the CI `no-simd` leg).
 #[cfg(target_arch = "x86_64")]
-fn fma_available() -> bool {
+pub(crate) fn simd_available() -> bool {
     use std::sync::OnceLock;
     static AVAIL: OnceLock<bool> = OnceLock::new();
     *AVAIL.get_or_init(|| {
@@ -68,7 +76,7 @@ fn fma_available() -> bool {
 }
 
 #[cfg(not(target_arch = "x86_64"))]
-fn fma_available() -> bool {
+pub(crate) fn simd_available() -> bool {
     false
 }
 
@@ -78,9 +86,21 @@ fn fma_available() -> bool {
 /// call sites); dispatches to the blocked kernel and fans out across
 /// M-panels when the product is large enough to amortize the threads.
 pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_f32: lhs size");
-    assert_eq!(b.len(), k * n, "matmul_f32: rhs size");
-    matmul_f32_threads(a, b, m, k, n, gemm_threads(m, k, n))
+    let mut c = vec![0.0f32; m * n];
+    matmul_f32_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// [`matmul_f32`] into a caller-provided (workspace) buffer — the
+/// allocation-free entry the model hot paths use.  `c` is overwritten.
+pub fn matmul_f32_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_f32_into: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_f32_into: rhs size");
+    assert_eq!(c.len(), m * n, "matmul_f32_into: dst size");
+    c.fill(0.0);
+    matmul_panels(c, a, m, k, n, gemm_threads(m, k, n), |cp, ap, rows| {
+        gemm_acc(cp, ap, b, rows, k, n)
+    });
 }
 
 /// [`matmul_f32`] with an explicit worker count.  Tests pin several counts
@@ -95,21 +115,33 @@ pub fn matmul_f32_threads(
 ) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_f32_threads: lhs size");
     assert_eq!(b.len(), k * n, "matmul_f32_threads: rhs size");
-    matmul_panels(a, m, k, n, threads, |cp, ap, rows| gemm_acc(cp, ap, b, rows, k, n))
+    let mut c = vec![0.0f32; m * n];
+    matmul_panels(&mut c, a, m, k, n, threads, |cp, ap, rows| gemm_acc(cp, ap, b, rows, k, n));
+    c
 }
 
 /// `C[m, n] = A[m, k] @ Bᵀ` with `bt` row-major `[n, k]` — the backward
 /// pass's `dx = dy · Wᵀ` without materializing the transpose.
 pub fn matmul_f32_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_f32_bt: lhs size");
-    assert_eq!(bt.len(), n * k, "matmul_f32_bt: rhs size");
-    matmul_panels(a, m, k, n, gemm_threads(m, k, n), |cp, ap, rows| {
+    let mut c = vec![0.0f32; m * n];
+    matmul_f32_bt_into(&mut c, a, bt, m, k, n);
+    c
+}
+
+/// [`matmul_f32_bt`] into a caller-provided buffer.  `c` is overwritten.
+pub fn matmul_f32_bt_into(c: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_f32_bt_into: lhs size");
+    assert_eq!(bt.len(), n * k, "matmul_f32_bt_into: rhs size");
+    assert_eq!(c.len(), m * n, "matmul_f32_bt_into: dst size");
+    c.fill(0.0);
+    matmul_panels(c, a, m, k, n, gemm_threads(m, k, n), |cp, ap, rows| {
         gemm_bt_acc(cp, ap, bt, rows, k, n)
-    })
+    });
 }
 
 /// Worker budget for one GEMM: below ~8 MFLOP the scoped fan-out costs more
-/// than it saves, and inside a [`parallel_map`] worker the batch fan-out
+/// than it saves, and inside a [`crate::util::threadpool::parallel_map`]
+/// worker the batch fan-out
 /// already owns the cores — nesting would only oversubscribe them.
 fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
     if in_parallel_worker() || 2 * m * k * n < 8_000_000 {
@@ -119,36 +151,31 @@ fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
     }
 }
 
-/// Split the output into contiguous M-panels and run `panel` on each across
-/// the thread pool; row results are stitched back in order.
+/// Split the (pre-zeroed) output into contiguous M-panels and run `panel`
+/// on each across scoped worker threads, writing rows in place — no
+/// per-panel buffers, no stitch copy.  Row ownership is disjoint and each
+/// row keeps its k-sequential accumulation, so results stay bitwise stable
+/// across thread counts.
 fn matmul_panels(
+    c: &mut [f32],
     a: &[f32],
     m: usize,
     k: usize,
     n: usize,
     threads: usize,
     panel: impl Fn(&mut [f32], &[f32], usize) + Sync,
-) -> Vec<f32> {
+) {
     let threads = threads.max(1).min(m.max(1));
     if threads == 1 {
-        let mut c = vec![0.0f32; m * n];
-        panel(&mut c, a, m);
-        return c;
+        panel(c, a, m);
+        return;
     }
     let rows_per = m.div_ceil(threads);
-    let panels = m.div_ceil(rows_per);
-    let chunks = parallel_map(panels, threads, |p| {
+    parallel_chunks_mut(c, rows_per * n, |p, cp| {
         let i0 = p * rows_per;
-        let rows = rows_per.min(m - i0);
-        let mut cp = vec![0.0f32; rows * n];
-        panel(&mut cp, &a[i0 * k..(i0 + rows) * k], rows);
-        cp
+        let rows = cp.len() / n;
+        panel(cp, &a[i0 * k..(i0 + rows) * k], rows);
     });
-    let mut c = Vec::with_capacity(m * n);
-    for chunk in &chunks {
-        c.extend_from_slice(chunk);
-    }
-    c
 }
 
 /// `C[m, n] += A[m, k] @ B[k, n]` (row-major), single-threaded blocked core.
@@ -187,7 +214,7 @@ fn gemm_core(
         return;
     }
     debug_assert_eq!(c.len(), m * n);
-    let use_fma = fma_available();
+    let use_fma = simd_available();
     let kc_max = KC.min(k);
     let mc_max = MC.min(m).div_ceil(MR) * MR;
     let nc_max = NC.min(n).div_ceil(NR) * NR;
@@ -256,7 +283,7 @@ fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR], us
     #[cfg(target_arch = "x86_64")]
     {
         if use_fma {
-            // SAFETY: gated on runtime AVX2+FMA detection in fma_available()
+            // SAFETY: gated on runtime AVX2+FMA detection in simd_available()
             unsafe { micro_kernel_avx2(ap, bp, kc, acc) };
             return;
         }
@@ -326,12 +353,7 @@ pub fn scale_softmax_rows(s: &mut [f32], rows: usize, cols: usize, scale: f32) {
         for &v in row.iter() {
             mx = mx.max(scale * v);
         }
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            let e = (scale * *v - mx).exp();
-            *v = e;
-            sum += e;
-        }
+        let sum = vexp_affine(row, scale, -mx, 1.0);
         let inv = 1.0 / sum;
         for v in row.iter_mut() {
             *v *= inv;
@@ -355,20 +377,14 @@ pub fn online_softmax_row(e: &mut [f32], scale: f32, mrun: &mut f32, den: &mut f
     if mx > *mrun {
         // new running max: rescale history (exp(-inf - mx) == 0 on the
         // first tile, so the zero-initialized den/z need no special case)
-        let corr = (*mrun - mx).exp();
+        let corr = exp_f32(*mrun - mx);
         *den *= corr;
         for zv in z.iter_mut() {
             *zv *= corr;
         }
         *mrun = mx;
     }
-    let mut sum = 0.0f32;
-    for v in e.iter_mut() {
-        let w = (scale * *v - mx).exp();
-        *v = w;
-        sum += w;
-    }
-    *den += sum;
+    *den += vexp_affine(e, scale, -mx, 1.0);
 }
 
 /// Replay encode attention weights from cached statistics: each `cols`-row
@@ -380,11 +396,21 @@ pub fn softmax_replay_rows(s: &mut [f32], cols: usize, scale: f32, mrun: &[f32],
         return;
     }
     for (row, (&m, &d)) in s.chunks_exact_mut(cols).zip(mrun.iter().zip(den.iter())) {
-        let inv = 1.0 / d;
-        for v in row.iter_mut() {
-            *v = (scale * *v - m).exp() * inv;
-        }
+        vexp_affine(row, scale, -m, 1.0 / d);
     }
+}
+
+/// Log-softmax statistics of one row: `(max, Σ exp(x − max))` with the sum
+/// carried in f64 — the shared helper behind the cross-entropy loss path
+/// (`model::backward`), which needs the f64 reduction for its bit-level
+/// loss-parity contract with the serving forward.
+pub fn softmax_stats_f64(row: &[f32]) -> (f32, f64) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut den = 0.0f64;
+    for &l in row {
+        den += (l as f64 - mx as f64).exp();
+    }
+    (mx, den)
 }
 
 // ---------------------------------------------------------------------------

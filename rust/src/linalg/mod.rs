@@ -12,6 +12,7 @@ pub mod eig;
 pub mod fft;
 pub mod kernel;
 pub mod matrix;
+pub mod vexp;
 
 pub use cg::{conjugate_gradient, CgResult};
 pub use eig::{sym_eig, sym_eig_default, SymEig};

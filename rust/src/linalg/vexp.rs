@@ -1,0 +1,452 @@
+//! Vectorized transcendentals for the softmax / GELU hot loops.
+//!
+//! After the blocked GEMM landed, profile weight in the native train step
+//! shifted to scalar libm calls: one `exp()` per softmax element (encode
+//! online-softmax, decode row softmax, backward replay) and one `tanh()`
+//! per GELU activation.  This module replaces them with a polynomial
+//! `exp` evaluated eight lanes at a time:
+//!
+//! * **Algorithm** — Cody–Waite range reduction `x = k·ln2 + r` with the
+//!   two-part constant (`LN2_HI` exact in f32 for |k| ≤ 128), a degree-7
+//!   Horner polynomial for `e^r` on `[-ln2/2, ln2/2]`, and a split
+//!   `2^k = 2^⌊k/2⌋ · 2^⌈k/2⌉` exponent reconstruction so the scale factors
+//!   stay representable over the whole `k ∈ [-126, 128]` range.  Measured
+//!   accuracy: ≤ 1 ulp from the correctly-rounded result over `[-87, 87]`
+//!   (so ≤ 2 ulp from libm), pinned by `rust/tests/vexp_parity.rs`.
+//! * **Dispatch** — same pattern as the GEMM micro-kernel: an AVX2+FMA path
+//!   behind `is_x86_feature_detected!` with `FLARE_NO_SIMD=1` forcing the
+//!   scalar fallback, which is written over fixed 8-lane chunks so LLVM can
+//!   autovectorize it on stable Rust.
+//! * **Edges** — `+inf → inf`, `NaN → NaN`, inputs above `ln(f32::MAX)`
+//!   return `inf`; inputs below `ln(f32::MIN_POSITIVE)` (incl. `-inf`)
+//!   flush to `0` (the subnormal tail is not reproduced — softmax weights
+//!   that small are dead anyway).
+//!
+//! On top of the exp core sit the fused helpers the kernels consume:
+//! [`vexp_affine`] (`x ← exp(a·x + b) · post`, returning the pre-`post`
+//! sum — the body of every softmax row) and the GELU forward/backward
+//! pair [`vgelu_add`] / [`vgelu_grad_mul`] with `tanh(u)` computed as
+//! `(e^{2u} − 1)/(e^{2u} + 1)` from the same exp core.
+
+#[cfg(target_arch = "x86_64")]
+use crate::linalg::kernel::simd_available;
+
+/// `ln(f32::MAX)`: inputs above this overflow to `inf`.
+pub const EXP_HI: f32 = 88.72284;
+/// `ln(f32::MIN_POSITIVE)`: inputs below this flush to `0`.
+pub const EXP_LO: f32 = -87.33654;
+
+const LOG2E: f32 = std::f32::consts::LOG2_E;
+// two-part ln2: HI has 9 mantissa bits, so k·LN2_HI is exact for |k| ≤ 128
+const LN2_HI: f32 = 0.693359375;
+const LN2_LO: f32 = -2.121_944_4e-4;
+// 1.5 · 2^23: adding and subtracting rounds to the nearest integer
+const ROUND_MAGIC: f32 = 12_582_912.0;
+// degree-7 Taylor coefficients for e^r on [-ln2/2, ln2/2]; truncation error
+// ~(ln2/2)^8/8! ≈ 5e-9 relative, far below half an ulp
+const C7: f32 = 1.0 / 5040.0;
+const C6: f32 = 1.0 / 720.0;
+const C5: f32 = 1.0 / 120.0;
+const C4: f32 = 1.0 / 24.0;
+const C3: f32 = 1.0 / 6.0;
+const C2: f32 = 0.5;
+
+/// One scalar lane of the polynomial exp (shared by the autovectorizable
+/// fallback, the AVX2 remainder handling, and [`exp_f32`]).
+#[inline(always)]
+fn exp_lane(x: f32) -> f32 {
+    // compute on the clamped value so the exponent arithmetic stays in
+    // range; specials are restored by the selects at the end (NaN survives
+    // clamp and propagates through the polynomial)
+    let xc = x.clamp(EXP_LO, EXP_HI);
+    let kf = (xc * LOG2E + ROUND_MAGIC) - ROUND_MAGIC;
+    let r = (xc - kf * LN2_HI) - kf * LN2_LO;
+    let mut p = C7;
+    p = p * r + C6;
+    p = p * r + C5;
+    p = p * r + C4;
+    p = p * r + C3;
+    p = p * r + C2;
+    p = p * r + 1.0;
+    p = p * r + 1.0;
+    let k = kf as i32;
+    let k1 = k >> 1;
+    let k2 = k - k1;
+    let s1 = f32::from_bits(((k1 + 127) as u32) << 23);
+    let s2 = f32::from_bits(((k2 + 127) as u32) << 23);
+    let y = (p * s1) * s2;
+    if x > EXP_HI {
+        f32::INFINITY
+    } else if x < EXP_LO {
+        0.0
+    } else {
+        y // in-range values and NaN (both comparisons are false on NaN)
+    }
+}
+
+/// Scalar polynomial `exp` with the module's edge conventions — the
+/// one-lane entry point (e.g. the online-softmax history correction).
+#[inline]
+pub fn exp_f32(x: f32) -> f32 {
+    exp_lane(x)
+}
+
+/// Fixed-order horizontal sum shared by both dispatch paths, so the lane
+/// accumulation order (and therefore softmax denominators) does not depend
+/// on slice length beyond the 8-lane phase.
+#[inline(always)]
+fn hsum8(a: &[f32; 8]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// `xs[i] = exp(a·xs[i] + b) · post`; returns `Σ exp(a·xs[i] + b)` (the
+/// pre-`post` sum).  The single workhorse behind every softmax row:
+/// `a = scale`, `b = -rowmax` and `post` either `1` (caller normalizes
+/// after accumulating the denominator) or `1/den` (backward replay).
+pub fn vexp_affine(xs: &mut [f32], a: f32, b: f32, post: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: gated on runtime AVX2+FMA detection
+            return unsafe { vexp_affine_avx2(xs, a, b, post) };
+        }
+    }
+    vexp_affine_scalar(xs, a, b, post)
+}
+
+/// In-place `xs[i] = exp(xs[i])`.
+pub fn vexp(xs: &mut [f32]) {
+    vexp_affine(xs, 1.0, 0.0, 1.0);
+}
+
+fn vexp_affine_scalar(xs: &mut [f32], a: f32, b: f32, post: f32) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut chunks = xs.chunks_exact_mut(8);
+    for ch in &mut chunks {
+        for (s, v) in acc.iter_mut().zip(ch.iter_mut()) {
+            let e = exp_lane(a * *v + b);
+            *s += e;
+            *v = e * post;
+        }
+    }
+    let mut tail = 0.0f32;
+    for v in chunks.into_remainder() {
+        let e = exp_lane(a * *v + b);
+        tail += e;
+        *v = e * post;
+    }
+    hsum8(&acc) + tail
+}
+
+/// Eight-lane AVX2+FMA exp core: identical algorithm to [`exp_lane`], with
+/// the products contracted through FMA (≤ 1 ulp like the scalar path).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+#[inline]
+unsafe fn exp8_avx2(x: std::arch::x86_64::__m256) -> std::arch::x86_64::__m256 {
+    use std::arch::x86_64::*;
+    let hi = _mm256_set1_ps(EXP_HI);
+    let lo = _mm256_set1_ps(EXP_LO);
+    // min(hi, max(lo, x)): this operand order lets NaN in x propagate
+    // (minps/maxps return the second source when either operand is NaN)
+    let xc = _mm256_min_ps(hi, _mm256_max_ps(lo, x));
+    let magic = _mm256_set1_ps(ROUND_MAGIC);
+    let kf = _mm256_sub_ps(_mm256_fmadd_ps(xc, _mm256_set1_ps(LOG2E), magic), magic);
+    let r = _mm256_fnmadd_ps(kf, _mm256_set1_ps(LN2_HI), xc);
+    let r = _mm256_fnmadd_ps(kf, _mm256_set1_ps(LN2_LO), r);
+    let mut p = _mm256_set1_ps(C7);
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(C6));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(C5));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(C4));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(C3));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(C2));
+    let one = _mm256_set1_ps(1.0);
+    p = _mm256_fmadd_ps(p, r, one);
+    p = _mm256_fmadd_ps(p, r, one);
+    let k = _mm256_cvttps_epi32(kf);
+    let k1 = _mm256_srai_epi32(k, 1);
+    let k2 = _mm256_sub_epi32(k, k1);
+    let bias = _mm256_set1_epi32(127);
+    let s1 = _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_add_epi32(k1, bias), 23));
+    let s2 = _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_add_epi32(k2, bias), 23));
+    let y = _mm256_mul_ps(_mm256_mul_ps(p, s1), s2);
+    // restore specials: x > hi → inf, x < lo → 0 (NaN fails both compares
+    // and keeps the propagated NaN in y)
+    let gt = _mm256_cmp_ps(x, hi, _CMP_GT_OQ);
+    let lt = _mm256_cmp_ps(x, lo, _CMP_LT_OQ);
+    let y = _mm256_blendv_ps(y, _mm256_set1_ps(f32::INFINITY), gt);
+    _mm256_andnot_ps(lt, y) // lt lanes → +0.0
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn vexp_affine_avx2(xs: &mut [f32], a: f32, b: f32, post: f32) -> f32 {
+    use std::arch::x86_64::*;
+    let av = _mm256_set1_ps(a);
+    let bv = _mm256_set1_ps(b);
+    let pv = _mm256_set1_ps(post);
+    let mut accv = _mm256_setzero_ps();
+    let n8 = xs.len() / 8 * 8;
+    let ptr = xs.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let v = _mm256_loadu_ps(ptr.add(i));
+        let e = exp8_avx2(_mm256_fmadd_ps(av, v, bv));
+        accv = _mm256_add_ps(accv, e);
+        _mm256_storeu_ps(ptr.add(i), _mm256_mul_ps(e, pv));
+        i += 8;
+    }
+    let mut acc = [0.0f32; 8];
+    _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    let mut tail = 0.0f32;
+    for v in xs[n8..].iter_mut() {
+        let e = exp_lane(a * *v + b);
+        tail += e;
+        *v = e * post;
+    }
+    hsum8(&acc) + tail
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation) on the same exp core
+// ---------------------------------------------------------------------------
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_A: f32 = 0.044_715;
+// tanh argument clamp: at |2u| = 88, (e^{2u}−1)/(e^{2u}+1) is exactly ±1
+// in f32, so clamping changes nothing while keeping the quotient finite
+const TANH_ARG_CLAMP: f32 = 88.0;
+
+#[inline(always)]
+fn tanh_lane(u: f32) -> f32 {
+    let a = (2.0 * u).clamp(-TANH_ARG_CLAMP, TANH_ARG_CLAMP);
+    let e = exp_lane(a);
+    (e - 1.0) / (e + 1.0)
+}
+
+/// GELU, tanh approximation (the `jax.nn.gelu` default) — scalar lane.
+#[inline]
+pub fn gelu_f32(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_A * x * x * x);
+    0.5 * x * (1.0 + tanh_lane(u))
+}
+
+/// d/dx of [`gelu_f32`] — scalar lane.
+#[inline]
+pub fn gelu_grad_f32(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_A * x * x * x);
+    let t = tanh_lane(u);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// `h[i] += gelu(t[i])` — the ResMLP gelu-residual update, fused so the
+/// training and serving forward run the identical code path (their f32
+/// outputs must match bitwise for the loss-parity tests).
+pub fn vgelu_add(h: &mut [f32], t: &[f32]) {
+    assert_eq!(h.len(), t.len(), "vgelu_add: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: gated on runtime AVX2+FMA detection
+            unsafe { vgelu_add_avx2(h, t) };
+            return;
+        }
+    }
+    for (hv, &tv) in h.iter_mut().zip(t) {
+        *hv += gelu_f32(tv);
+    }
+}
+
+/// `dt[i] = dh[i] · gelu'(t[i])` — the backward mirror of [`vgelu_add`].
+pub fn vgelu_grad_mul(dt: &mut [f32], dh: &[f32], t: &[f32]) {
+    assert!(dt.len() == dh.len() && dt.len() == t.len(), "vgelu_grad_mul: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: gated on runtime AVX2+FMA detection
+            unsafe { vgelu_grad_mul_avx2(dt, dh, t) };
+            return;
+        }
+    }
+    for ((dv, &hv), &tv) in dt.iter_mut().zip(dh).zip(t) {
+        *dv = hv * gelu_grad_f32(tv);
+    }
+}
+
+/// `tanh(2u)`-ready vector helper: clamped `2u`, exp, quotient.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+#[inline]
+unsafe fn tanh8_avx2(u: std::arch::x86_64::__m256) -> std::arch::x86_64::__m256 {
+    use std::arch::x86_64::*;
+    let two_u = _mm256_add_ps(u, u);
+    let clamp = _mm256_set1_ps(TANH_ARG_CLAMP);
+    let a = _mm256_min_ps(clamp, _mm256_max_ps(_mm256_sub_ps(_mm256_setzero_ps(), clamp), two_u));
+    let e = exp8_avx2(a);
+    let one = _mm256_set1_ps(1.0);
+    _mm256_div_ps(_mm256_sub_ps(e, one), _mm256_add_ps(e, one))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+#[inline]
+unsafe fn gelu_u8_avx2(x: std::arch::x86_64::__m256) -> std::arch::x86_64::__m256 {
+    use std::arch::x86_64::*;
+    // u = c · (x + A·x³)
+    let x2 = _mm256_mul_ps(x, x);
+    let ax3 = _mm256_mul_ps(_mm256_mul_ps(_mm256_set1_ps(GELU_A), x2), x);
+    _mm256_mul_ps(_mm256_set1_ps(SQRT_2_OVER_PI), _mm256_add_ps(x, ax3))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn vgelu_add_avx2(h: &mut [f32], t: &[f32]) {
+    use std::arch::x86_64::*;
+    let n8 = h.len() / 8 * 8;
+    let hp = h.as_mut_ptr();
+    let tp = t.as_ptr();
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_ps(tp.add(i));
+        let th = tanh8_avx2(gelu_u8_avx2(x));
+        let g = _mm256_mul_ps(_mm256_mul_ps(half, x), _mm256_add_ps(one, th));
+        _mm256_storeu_ps(hp.add(i), _mm256_add_ps(_mm256_loadu_ps(hp.add(i)), g));
+        i += 8;
+    }
+    for (hv, &tv) in h[n8..].iter_mut().zip(&t[n8..]) {
+        *hv += gelu_f32(tv);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn vgelu_grad_mul_avx2(dt: &mut [f32], dh: &[f32], t: &[f32]) {
+    use std::arch::x86_64::*;
+    let n8 = dt.len() / 8 * 8;
+    let dtp = dt.as_mut_ptr();
+    let dhp = dh.as_ptr();
+    let tp = t.as_ptr();
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let c = _mm256_set1_ps(SQRT_2_OVER_PI);
+    let a3 = _mm256_set1_ps(3.0 * GELU_A);
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_ps(tp.add(i));
+        let th = tanh8_avx2(gelu_u8_avx2(x));
+        // 0.5(1+t) + 0.5·x·(1−t²)·c·(1 + 3A·x²)
+        let sech2 = _mm256_fnmadd_ps(th, th, one); // 1 − t²
+        let x2 = _mm256_mul_ps(x, x);
+        let inner = _mm256_fmadd_ps(a3, x2, one);
+        let rhs = _mm256_mul_ps(
+            _mm256_mul_ps(_mm256_mul_ps(half, x), sech2),
+            _mm256_mul_ps(c, inner),
+        );
+        let g = _mm256_fmadd_ps(half, _mm256_add_ps(one, th), rhs);
+        _mm256_storeu_ps(dtp.add(i), _mm256_mul_ps(_mm256_loadu_ps(dhp.add(i)), g));
+        i += 8;
+    }
+    for ((dv, &hv), &tv) in dt[n8..].iter_mut().zip(&dh[n8..]).zip(&t[n8..]) {
+        *dv = hv * gelu_grad_f32(tv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_lane_basics() {
+        assert_eq!(exp_f32(0.0), 1.0);
+        assert_eq!(exp_f32(-0.0), 1.0);
+        assert!((exp_f32(1.0) - std::f32::consts::E).abs() < 1e-6);
+        assert!((exp_f32(-1.0) - 1.0 / std::f32::consts::E).abs() < 1e-7);
+    }
+
+    #[test]
+    fn exp_edges() {
+        assert_eq!(exp_f32(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_f32(f32::INFINITY), f32::INFINITY);
+        assert!(exp_f32(f32::NAN).is_nan());
+        assert_eq!(exp_f32(89.0), f32::INFINITY);
+        assert_eq!(exp_f32(-100.0), 0.0);
+    }
+
+    #[test]
+    fn vexp_matches_lane() {
+        // slice path vs scalar lane; tolerance covers the FMA/non-FMA split
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 3.7).collect();
+        let mut buf = xs.clone();
+        vexp(&mut buf);
+        for (x, got) in xs.iter().zip(buf.iter()) {
+            let want = exp_f32(*x);
+            let rel = ((got - want) / want.max(f32::MIN_POSITIVE)).abs();
+            assert!(rel < 1e-6, "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn vexp_affine_sum_and_post() {
+        let base: Vec<f32> = (0..19).map(|i| i as f32 * 0.3 - 3.0).collect();
+        let mut buf = base.clone();
+        let sum = vexp_affine(&mut buf, 2.0, -1.0, 0.5);
+        let mut want_sum = 0.0f64;
+        for (x, got) in base.iter().zip(buf.iter()) {
+            let e = ((2.0 * x - 1.0) as f64).exp();
+            want_sum += e;
+            assert!(((*got as f64) - e * 0.5).abs() < 1e-5 * e.max(1.0), "{got} vs {e}");
+        }
+        assert!((sum as f64 - want_sum).abs() < 1e-4 * want_sum, "{sum} vs {want_sum}");
+    }
+
+    #[test]
+    fn gelu_matches_goldens() {
+        // same pins as model::forward's gelu test (jax.nn.gelu approximate)
+        assert!((gelu_f32(1.0) - 0.841_192).abs() < 1e-6);
+        assert!((gelu_f32(-2.0) - (-0.045_402_348)).abs() < 1e-6);
+        assert!((gelu_f32(0.5) - 0.345_714).abs() < 1e-6);
+        assert_eq!(gelu_f32(0.0), 0.0);
+        // saturation: tanh path must not generate NaN at extreme inputs
+        assert_eq!(gelu_f32(200.0), 200.0);
+        assert_eq!(gelu_f32(-200.0).abs(), 0.0);
+        assert!(gelu_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn vgelu_matches_scalar() {
+        let t: Vec<f32> = (0..29).map(|i| (i as f32 - 14.0) * 0.6).collect();
+        let mut h = vec![1.0f32; t.len()];
+        vgelu_add(&mut h, &t);
+        for (hv, &tv) in h.iter().zip(&t) {
+            let want = 1.0 + gelu_f32(tv);
+            assert!((hv - want).abs() < 1e-6, "t={tv}: {hv} vs {want}");
+        }
+        let dh: Vec<f32> = (0..29).map(|i| 0.1 * i as f32 - 1.0).collect();
+        let mut dt = vec![0.0f32; t.len()];
+        vgelu_grad_mul(&mut dt, &dh, &t);
+        for ((dv, &hv), &tv) in dt.iter().zip(&dh).zip(&t) {
+            let want = hv * gelu_grad_f32(tv);
+            assert!((dv - want).abs() < 1e-5, "t={tv}: {dv} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gelu_grad_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.3, 0.0, 0.4, 1.0, 2.5] {
+            let eps = 1e-3f64;
+            let fd = (gelu_f32((x as f64 + eps) as f32) as f64
+                - gelu_f32((x as f64 - eps) as f32) as f64)
+                / (2.0 * eps);
+            let an = gelu_grad_f32(x) as f64;
+            assert!((an - fd).abs() < 1e-3, "x={x}: {an} vs {fd}");
+        }
+    }
+}

@@ -91,6 +91,9 @@ fn print_help() {
                     default case core_darcy_flare)\n\
                     [--steps N] [--eval-every K] [--ckpt FILE] [--quiet]\n\
                     [--resume FILE]    continue from a --ckpt checkpoint\n\
+                    [--accum K]        sum gradients over K micro-batches\n\
+                                       per optimizer step (native backend)\n\
+                    [--ckpt-every K]   also write --ckpt every K steps\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
@@ -222,19 +225,33 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
+    let accum = args.get_usize("accum")?.unwrap_or(1).max(1);
+    let ckpt_every = args.get_usize("ckpt-every")?.unwrap_or(0);
+    anyhow::ensure!(
+        ckpt_every == 0 || args.get("ckpt").is_some(),
+        "--ckpt-every needs --ckpt FILE to know where to write"
+    );
     let opts = TrainOpts {
         steps: args.get_usize("steps")?,
         eval_every: args.get_usize("eval-every")?.unwrap_or(0),
         sample_seed: 0x5EED,
         log_every: if args.has_flag("quiet") { 0 } else { 25 },
         resume,
+        accum,
+        ckpt_every,
+        ckpt_path: args.get("ckpt").map(std::path::PathBuf::from),
     };
     println!(
-        "training {name} on {} backend: {} params, dataset {}, batch {}",
+        "training {name} on {} backend: {} params, dataset {}, batch {}{}",
         backend.name(),
         case.param_count,
         case.dataset,
-        case.batch
+        case.batch,
+        if accum > 1 {
+            format!(" (x{accum} accumulated = {} effective)", accum * case.batch)
+        } else {
+            String::new()
+        }
     );
     let out = train_case(backend.as_ref(), &m, case, &opts)?;
     println!(
@@ -451,7 +468,15 @@ fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
                 eprintln!("REGRESSION {r}");
             }
             anyhow::bail!(
-                "{} of {compared} benchmark(s) regressed more than {max_reg}x vs {base_path:?}",
+                "{} of {compared} benchmark(s) regressed more than {max_reg}x vs {base_path:?}.\n\
+                 If this change is a deliberate perf trade (or the baseline is stale), refresh \
+                 the baseline: download the BENCH_native artifact from a green bench-smoke run \
+                 on main — or regenerate locally on comparable hardware with\n\
+                 \x20 FLARE_BENCH_QUICK=1 cargo bench -p flare --bench fig2_scaling\n\
+                 \x20 FLARE_BENCH_QUICK=1 cargo bench -p flare --bench train_step\n\
+                 \x20 cargo run -p flare --release -- bench-report --results rust/results \
+                 --out BENCH_native.json\n\
+                 — and commit the result as BENCH_baseline.json (see README \"Performance\").",
                 regressions.len()
             );
         }

@@ -13,17 +13,28 @@
 //! attention matrix is ever materialized, which is what keeps training
 //! memory at O(M·D) per head just like inference (the FlashAttention recipe
 //! applied to FLARE's two-SDPA factorization, on the blocked GEMM kernels).
+//!
+//! Buffer discipline: every activation cache, score tile and gradient
+//! buffer is a [`WsBuf`] from [`crate::util::workspace`], cache structs
+//! hold *concatenated* per-layer buffers rather than `Vec`s of `Vec`s, and
+//! parameter names format on the stack — so a steady-state forward +
+//! backward performs **zero transient heap allocations** (pinned by
+//! `rust/tests/alloc_steady.rs` with a counting global allocator).
 
 use std::collections::BTreeMap;
 
 use crate::config::{ModelCfg, ParamEntry};
 use crate::linalg::kernel::{
-    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32_bt, scale_softmax_rows, softmax_replay_rows,
+    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32_bt_into, scale_softmax_rows,
+    softmax_replay_rows, softmax_stats_f64,
 };
+use crate::linalg::vexp::{gelu_grad_f32, vgelu_add, vgelu_grad_mul};
 use crate::model::forward::{
-    self, affine, check_native_supported, merge_heads, mixer_decode, mixer_encode, split_heads,
-    MIXER_TILE, ParamTable,
+    self, affine_into, check_native_supported, layernorm_into, merge_heads, mixer_decode,
+    mixer_encode, split_heads, MIXER_TILE, ParamTable,
 };
+use crate::pname;
+use crate::util::workspace::{take, WsBuf};
 
 /// Named mutable views into a flat gradient vector (the mirror image of
 /// [`ParamTable`]): `acc` hands out the slice for one parameter so op
@@ -52,19 +63,17 @@ impl<'a> GradTable<'a> {
     }
 }
 
-/// d/dx of [`forward::gelu`] (tanh approximation).
+/// d/dx of [`forward::gelu`] (tanh approximation) — one lane of the
+/// vectorized kernel; the bulk loops use [`vgelu_grad_mul`] directly.
 #[inline]
 pub fn gelu_grad(x: f32) -> f32 {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
-    const A: f32 = 0.044_715;
-    let u = SQRT_2_OVER_PI * (x + A * x * x * x);
-    let t = u.tanh();
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * A * x * x)
+    gelu_grad_f32(x)
 }
 
 /// Backward of `y = x W + b`: accumulates `dW += x^T dy`, `db += sum_r dy`,
-/// returns `dx = dy W^T`.
-fn affine_bwd(
+/// writes `dx = dy W^T` into `dx`.
+#[allow(clippy::too_many_arguments)]
+fn affine_bwd_into(
     p: &ParamTable,
     g: &mut GradTable,
     wname: &str,
@@ -74,9 +83,11 @@ fn affine_bwd(
     rows: usize,
     c_in: usize,
     c_out: usize,
-) -> anyhow::Result<Vec<f32>> {
+    dx: &mut [f32],
+) -> anyhow::Result<()> {
     debug_assert_eq!(x.len(), rows * c_in);
     debug_assert_eq!(dy.len(), rows * c_out);
+    debug_assert_eq!(dx.len(), rows * c_in);
     {
         // dW[c_in, c_out] += xᵀ · dy — transposed-A GEMM, no transpose copy
         let dw = g.acc(wname)?;
@@ -92,7 +103,8 @@ fn affine_bwd(
     }
     // dx[rows, c_in] = dy · Wᵀ — transposed-B GEMM
     let w = p.get(wname)?;
-    Ok(matmul_f32_bt(dy, w, rows, c_out, c_in))
+    matmul_f32_bt_into(dx, dy, w, rows, c_out, c_in);
+    Ok(())
 }
 
 /// Backward of [`forward::linear`].
@@ -105,18 +117,21 @@ pub fn linear_bwd(
     rows: usize,
     c_in: usize,
     c_out: usize,
-) -> anyhow::Result<Vec<f32>> {
-    affine_bwd(
+) -> anyhow::Result<WsBuf> {
+    let mut dx = take(rows * c_in);
+    affine_bwd_into(
         p,
         g,
-        &format!("{prefix}.w"),
-        &format!("{prefix}.b"),
+        pname!("{prefix}.w").as_str(),
+        pname!("{prefix}.b").as_str(),
         x,
         dy,
         rows,
         c_in,
         c_out,
-    )
+        &mut dx,
+    )?;
+    Ok(dx)
 }
 
 /// Backward of [`forward::layernorm`]: recomputes the per-row statistics
@@ -130,16 +145,16 @@ pub fn layernorm_bwd(
     dy: &[f32],
     rows: usize,
     c: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     debug_assert_eq!(x.len(), rows * c);
     debug_assert_eq!(dy.len(), rows * c);
-    let gamma = p.get(&format!("{prefix}.gamma"))?;
-    let mut dx = vec![0.0f32; rows * c];
-    let mut xhat = vec![0.0f32; c];
-    let mut dxhat = vec![0.0f32; c];
+    let gamma = p.get(pname!("{prefix}.gamma").as_str())?;
+    let mut dx = take(rows * c);
+    let mut xhat = take(c);
+    let mut dxhat = take(c);
     // accumulate locally; one name lookup per parameter, not per row
-    let mut dgamma = vec![0.0f32; c];
-    let mut dbeta = vec![0.0f32; c];
+    let mut dgamma = take(c);
+    let mut dbeta = take(c);
     for r in 0..rows {
         let row = &x[r * c..(r + 1) * c];
         let dyr = &dy[r * c..(r + 1) * c];
@@ -153,30 +168,47 @@ pub fn layernorm_bwd(
             dbeta[j] += dyr[j];
         }
         let m1 = dxhat.iter().sum::<f32>() / c as f32;
-        let m2 = dxhat.iter().zip(&xhat).map(|(a, b)| a * b).sum::<f32>() / c as f32;
+        let m2 = dxhat.iter().zip(xhat.iter()).map(|(a, b)| a * b).sum::<f32>() / c as f32;
         let dxr = &mut dx[r * c..(r + 1) * c];
         for j in 0..c {
             dxr[j] = inv * (dxhat[j] - m1 - xhat[j] * m2);
         }
     }
-    for (dst, &src) in g.acc(&format!("{prefix}.gamma"))?.iter_mut().zip(&dgamma) {
+    for (dst, &src) in g.acc(pname!("{prefix}.gamma").as_str())?.iter_mut().zip(dgamma.iter()) {
         *dst += src;
     }
-    for (dst, &src) in g.acc(&format!("{prefix}.beta"))?.iter_mut().zip(&dbeta) {
+    for (dst, &src) in g.acc(pname!("{prefix}.beta").as_str())?.iter_mut().zip(dbeta.iter()) {
         *dst += src;
     }
     Ok(dx)
 }
 
-/// Activations [`resmlp_fwd`] keeps for the backward: the hidden state after
-/// the input affine (+entry residual) and after each gelu-residual layer
-/// (`h[0..=layers]`), plus each layer's pre-activation (`t[0..layers]`).
+/// Activations [`resmlp_fwd`] keeps for the backward: the hidden state
+/// after the input affine (+entry residual) and after each gelu-residual
+/// layer (`h(0..=layers)`), plus each layer's pre-activation
+/// (`t(0..layers)`) — stored as two *concatenated* workspace buffers, not
+/// per-layer `Vec`s, so cache construction is allocation-free.
 pub struct ResMlpCache {
-    h: Vec<Vec<f32>>,
-    t: Vec<Vec<f32>>,
+    rows: usize,
+    ch: usize,
+    layers: usize,
+    h_all: WsBuf,
+    t_all: WsBuf,
+}
+
+impl ResMlpCache {
+    fn h(&self, l: usize) -> &[f32] {
+        debug_assert!(l <= self.layers);
+        &self.h_all[l * self.rows * self.ch..(l + 1) * self.rows * self.ch]
+    }
+    fn t(&self, l: usize) -> &[f32] {
+        debug_assert!(l < self.layers);
+        &self.t_all[l * self.rows * self.ch..(l + 1) * self.rows * self.ch]
+    }
 }
 
 /// [`forward::resmlp`] with activation caching.
+#[allow(clippy::too_many_arguments)]
 pub fn resmlp_fwd(
     p: &ParamTable,
     prefix: &str,
@@ -186,53 +218,64 @@ pub fn resmlp_fwd(
     c_hidden: usize,
     c_out: usize,
     layers: usize,
-) -> anyhow::Result<(Vec<f32>, ResMlpCache)> {
-    let mut h = affine(
-        p,
-        &format!("{prefix}.win"),
-        &format!("{prefix}.bin"),
-        x,
+) -> anyhow::Result<(WsBuf, ResMlpCache)> {
+    let rc = rows * c_hidden;
+    let mut cache = ResMlpCache {
         rows,
-        c_in,
-        c_hidden,
-    )?;
-    if c_in == c_hidden {
-        for (hv, xv) in h.iter_mut().zip(x) {
-            *hv += xv;
+        ch: c_hidden,
+        layers,
+        h_all: take((layers + 1) * rc),
+        t_all: take(layers * rc),
+    };
+    {
+        let h0 = &mut cache.h_all[..rc];
+        affine_into(
+            p,
+            pname!("{prefix}.win").as_str(),
+            pname!("{prefix}.bin").as_str(),
+            x,
+            rows,
+            c_in,
+            c_hidden,
+            h0,
+        )?;
+        if c_in == c_hidden {
+            for (hv, xv) in h0.iter_mut().zip(x) {
+                *hv += xv;
+            }
         }
     }
-    let mut cache = ResMlpCache {
-        h: Vec::with_capacity(layers + 1),
-        t: Vec::with_capacity(layers),
-    };
-    cache.h.push(h.clone());
     for l in 0..layers {
-        let t = affine(
+        let t = &mut cache.t_all[l * rc..(l + 1) * rc];
+        let (lo, hi) = cache.h_all.split_at_mut((l + 1) * rc);
+        let prev = &lo[l * rc..];
+        let next = &mut hi[..rc];
+        affine_into(
             p,
-            &format!("{prefix}.w{l}"),
-            &format!("{prefix}.b{l}"),
-            &h,
+            pname!("{prefix}.w{l}").as_str(),
+            pname!("{prefix}.b{l}").as_str(),
+            prev,
             rows,
             c_hidden,
             c_hidden,
+            t,
         )?;
-        for (hv, tv) in h.iter_mut().zip(&t) {
-            *hv += forward::gelu(*tv);
-        }
-        cache.t.push(t);
-        cache.h.push(h.clone());
+        next.copy_from_slice(prev);
+        vgelu_add(next, t);
     }
-    let mut y = affine(
+    let mut y = take(rows * c_out);
+    affine_into(
         p,
-        &format!("{prefix}.wout"),
-        &format!("{prefix}.bout"),
-        &h,
+        pname!("{prefix}.wout").as_str(),
+        pname!("{prefix}.bout").as_str(),
+        cache.h(layers),
         rows,
         c_hidden,
         c_out,
+        &mut y,
     )?;
     if c_hidden == c_out {
-        for (yv, hv) in y.iter_mut().zip(&h) {
+        for (yv, hv) in y.iter_mut().zip(cache.h(layers)) {
             *yv += hv;
         }
     }
@@ -240,6 +283,7 @@ pub fn resmlp_fwd(
 }
 
 /// Backward of [`forward::resmlp`]; `x` is the forward input.
+#[allow(clippy::too_many_arguments)]
 pub fn resmlp_bwd(
     p: &ParamTable,
     g: &mut GradTable,
@@ -252,18 +296,20 @@ pub fn resmlp_bwd(
     c_hidden: usize,
     c_out: usize,
     layers: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     // exit affine (+ residual when c_hidden == c_out)
-    let mut dh = affine_bwd(
+    let mut dh = take(rows * c_hidden);
+    affine_bwd_into(
         p,
         g,
-        &format!("{prefix}.wout"),
-        &format!("{prefix}.bout"),
-        &cache.h[layers],
+        pname!("{prefix}.wout").as_str(),
+        pname!("{prefix}.bout").as_str(),
+        cache.h(layers),
         dy,
         rows,
         c_hidden,
         c_out,
+        &mut dh,
     )?;
     if c_hidden == c_out {
         for (hv, dv) in dh.iter_mut().zip(dy) {
@@ -271,38 +317,42 @@ pub fn resmlp_bwd(
         }
     }
     // gelu-residual stack, reversed
+    let mut dt = take(rows * c_hidden);
+    let mut da = take(rows * c_hidden);
     for l in (0..layers).rev() {
-        let t = &cache.t[l];
-        let dt: Vec<f32> = dh.iter().zip(t).map(|(&d, &tv)| d * gelu_grad(tv)).collect();
-        let da = affine_bwd(
+        vgelu_grad_mul(&mut dt, &dh, cache.t(l)); // dt = dh ⊙ gelu'(t)
+        affine_bwd_into(
             p,
             g,
-            &format!("{prefix}.w{l}"),
-            &format!("{prefix}.b{l}"),
-            &cache.h[l],
+            pname!("{prefix}.w{l}").as_str(),
+            pname!("{prefix}.b{l}").as_str(),
+            cache.h(l),
             &dt,
             rows,
             c_hidden,
             c_hidden,
+            &mut da,
         )?;
-        for (hv, av) in dh.iter_mut().zip(&da) {
+        for (hv, &av) in dh.iter_mut().zip(da.iter()) {
             *hv += av;
         }
     }
     // entry affine (+ residual when c_in == c_hidden)
-    let mut dx = affine_bwd(
+    let mut dx = take(rows * c_in);
+    affine_bwd_into(
         p,
         g,
-        &format!("{prefix}.win"),
-        &format!("{prefix}.bin"),
+        pname!("{prefix}.win").as_str(),
+        pname!("{prefix}.bin").as_str(),
         x,
         &dh,
         rows,
         c_in,
         c_hidden,
+        &mut dx,
     )?;
     if c_in == c_hidden {
-        for (xv, hv) in dx.iter_mut().zip(&dh) {
+        for (xv, hv) in dx.iter_mut().zip(dh.iter()) {
             *xv += hv;
         }
     }
@@ -312,12 +362,13 @@ pub fn resmlp_bwd(
 /// Per-head encode statistics cached by [`flare_mixer_fwd`]: running max
 /// `mrun [H, M]`, denominator `den [H, M]`, normalized summary `z [H, M, D]`.
 pub struct MixerCache {
-    mrun: Vec<f32>,
-    den: Vec<f32>,
-    z: Vec<f32>,
+    mrun: WsBuf,
+    den: WsBuf,
+    z: WsBuf,
 }
 
 /// [`forward::flare_mixer`] keeping the encode statistics per head.
+#[allow(clippy::too_many_arguments)]
 pub fn flare_mixer_fwd(
     q: &[f32],
     k: &[f32],
@@ -327,15 +378,15 @@ pub fn flare_mixer_fwd(
     n: usize,
     d: usize,
     scale: f32,
-) -> (Vec<f32>, MixerCache) {
+) -> (WsBuf, MixerCache) {
     assert_eq!(q.len(), h * m * d, "flare_mixer_fwd: q shape");
     assert_eq!(k.len(), h * n * d, "flare_mixer_fwd: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer_fwd: v shape");
-    let mut y = vec![0.0f32; h * n * d];
+    let mut y = take(h * n * d);
     let mut cache = MixerCache {
-        mrun: vec![0.0f32; h * m],
-        den: vec![0.0f32; h * m],
-        z: vec![0.0f32; h * m * d],
+        mrun: take(h * m),
+        den: take(h * m),
+        z: take(h * m * d),
     };
     for hh in 0..h {
         let qh = &q[hh * m * d..(hh + 1) * m * d];
@@ -386,10 +437,10 @@ fn mixer_head_bwd(
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
-    let mut sa = vec![0.0f32; m * MIXER_TILE]; // softmax weights tile
-    let mut sb = vec![0.0f32; m * MIXER_TILE]; // d-score tile
-    let mut dz = vec![0.0f32; m * d];
-    let mut rowdot = vec![0.0f32; m];
+    let mut sa = take(m * MIXER_TILE); // softmax weights tile
+    let mut sb = take(m * MIXER_TILE); // d-score tile
+    let mut dz = take(m * d);
+    let mut rowdot = take(m);
 
     // pass 1: decode backward, dZ accumulation
     for t0 in (0..n).step_by(MIXER_TILE) {
@@ -455,6 +506,7 @@ fn mixer_head_bwd(
 
 /// Backward of [`forward::flare_mixer`]: returns `(dq, dk, dv)` with the
 /// forward shapes, using the cached encode statistics.
+#[allow(clippy::too_many_arguments)]
 pub fn flare_mixer_bwd(
     q: &[f32],
     k: &[f32],
@@ -466,11 +518,11 @@ pub fn flare_mixer_bwd(
     scale: f32,
     cache: &MixerCache,
     dy: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+) -> (WsBuf, WsBuf, WsBuf) {
     assert_eq!(dy.len(), h * n * d, "flare_mixer_bwd: dy shape");
-    let mut dq = vec![0.0f32; h * m * d];
-    let mut dk = vec![0.0f32; h * n * d];
-    let mut dv = vec![0.0f32; h * n * d];
+    let mut dq = take(h * m * d);
+    let mut dk = take(h * n * d);
+    let mut dv = take(h * n * d);
     for hh in 0..h {
         mixer_head_bwd(
             &q[hh * m * d..(hh + 1) * m * d],
@@ -497,13 +549,13 @@ pub struct FlareLayerCache {
     kproj: ResMlpCache,
     vproj: ResMlpCache,
     /// per-head keys/values `[H, N, D]` (mixer backward inputs)
-    kh: Vec<f32>,
-    vh: Vec<f32>,
+    kh: WsBuf,
+    vh: WsBuf,
     /// latent queries `[H, M, D]` as fed to the mixer
-    q: Vec<f32>,
+    q: WsBuf,
     mixer: MixerCache,
     /// merged mixer output `[N, C]` (input of the out linear)
-    ymerged: Vec<f32>,
+    ymerged: WsBuf,
 }
 
 /// [`forward::flare_layer`] with activation caching.
@@ -513,25 +565,26 @@ pub fn flare_layer_fwd(
     x: &[f32],
     n: usize,
     cfg: &ModelCfg,
-) -> anyhow::Result<(Vec<f32>, FlareLayerCache)> {
+) -> anyhow::Result<(WsBuf, FlareLayerCache)> {
     let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
-    let (k, kproj) = resmlp_fwd(p, &format!("{prefix}.kproj"), x, n, c, c, c, cfg.kv_layers)?;
-    let (v, vproj) = resmlp_fwd(p, &format!("{prefix}.vproj"), x, n, c, c, c, cfg.kv_layers)?;
+    let (k, kproj) =
+        resmlp_fwd(p, pname!("{prefix}.kproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
+    let (v, vproj) =
+        resmlp_fwd(p, pname!("{prefix}.vproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
     let kh = split_heads(&k, n, h, d);
     let vh = split_heads(&v, n, h, d);
-    let lat = p.get(&format!("{prefix}.latents"))?;
-    let q: Vec<f32> = if cfg.shared_latents {
-        let mut q = Vec::with_capacity(h * m * d);
-        for _ in 0..h {
-            q.extend_from_slice(lat);
+    let lat = p.get(pname!("{prefix}.latents").as_str())?;
+    let mut q = take(h * m * d);
+    if cfg.shared_latents {
+        for qh in q.chunks_exact_mut(m * d) {
+            qh.copy_from_slice(lat);
         }
-        q
     } else {
-        lat.to_vec()
-    };
+        q.copy_from_slice(lat);
+    }
     let (yh, mixer) = flare_mixer_fwd(&q, &kh, &vh, h, m, n, d, cfg.scale as f32);
     let ymerged = merge_heads(&yh, n, h, d);
-    let out = forward::linear(p, &format!("{prefix}.out"), &ymerged, n, c, c)?;
+    let out = forward::linear(p, pname!("{prefix}.out").as_str(), &ymerged, n, c, c)?;
     Ok((
         out,
         FlareLayerCache {
@@ -556,9 +609,10 @@ pub fn flare_layer_bwd(
     dout: &[f32],
     n: usize,
     cfg: &ModelCfg,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
-    let dymerged = linear_bwd(p, g, &format!("{prefix}.out"), &cache.ymerged, dout, n, c, c)?;
+    let dymerged =
+        linear_bwd(p, g, pname!("{prefix}.out").as_str(), &cache.ymerged, dout, n, c, c)?;
     let dyh = split_heads(&dymerged, n, h, d);
     let (dq, dkh, dvh) = flare_mixer_bwd(
         &cache.q,
@@ -573,7 +627,7 @@ pub fn flare_layer_bwd(
         &dyh,
     );
     {
-        let dlat = g.acc(&format!("{prefix}.latents"))?;
+        let dlat = g.acc(pname!("{prefix}.latents").as_str())?;
         if cfg.shared_latents {
             // the shared [M, D] slice fed every head: sum head gradients
             for hh in 0..h {
@@ -582,7 +636,7 @@ pub fn flare_layer_bwd(
                 }
             }
         } else {
-            for (dst, &src) in dlat.iter_mut().zip(&dq) {
+            for (dst, &src) in dlat.iter_mut().zip(dq.iter()) {
                 *dst += src;
             }
         }
@@ -592,7 +646,7 @@ pub fn flare_layer_bwd(
     let mut dx = resmlp_bwd(
         p,
         g,
-        &format!("{prefix}.kproj"),
+        pname!("{prefix}.kproj").as_str(),
         x,
         &cache.kproj,
         &dk,
@@ -605,7 +659,7 @@ pub fn flare_layer_bwd(
     let dxv = resmlp_bwd(
         p,
         g,
-        &format!("{prefix}.vproj"),
+        pname!("{prefix}.vproj").as_str(),
         x,
         &cache.vproj,
         &dv,
@@ -615,7 +669,7 @@ pub fn flare_layer_bwd(
         c,
         cfg.kv_layers,
     )?;
-    for (a, b) in dx.iter_mut().zip(&dxv) {
+    for (a, &b) in dx.iter_mut().zip(dxv.iter()) {
         *a += b;
     }
     Ok(dx)
@@ -624,44 +678,87 @@ pub fn flare_layer_bwd(
 /// Activations of one pre-norm trunk block.
 struct BlockCache {
     /// block input `[N, C]`
-    h_in: Vec<f32>,
+    h_in: WsBuf,
     /// ln1 output (mixing-layer input)
-    hn1: Vec<f32>,
+    hn1: WsBuf,
     mix: FlareLayerCache,
     /// state after the mixing residual (ln2 input)
-    h_mid: Vec<f32>,
+    h_mid: WsBuf,
     /// ln2 output (ffn input)
-    hn2: Vec<f32>,
+    hn2: WsBuf,
     ffn: ResMlpCache,
+}
+
+/// Per-block caches without a per-step heap `Vec`: the first
+/// [`INLINE_BLOCKS`] blocks live inline (every builtin case fits), deeper
+/// models spill to the heap.
+const INLINE_BLOCKS: usize = 8;
+
+struct BlockList {
+    inline: [Option<BlockCache>; INLINE_BLOCKS],
+    spill: Vec<BlockCache>,
+    len: usize,
+}
+
+impl BlockList {
+    fn new() -> BlockList {
+        BlockList {
+            inline: std::array::from_fn(|_| None),
+            spill: Vec::new(), // does not allocate while empty
+            len: 0,
+        }
+    }
+    fn push(&mut self, bc: BlockCache) {
+        if self.len < INLINE_BLOCKS {
+            self.inline[self.len] = Some(bc);
+        } else {
+            self.spill.push(bc);
+        }
+        self.len += 1;
+    }
+    fn get(&self, i: usize) -> &BlockCache {
+        if i < INLINE_BLOCKS {
+            self.inline[i].as_ref().expect("BlockList slot")
+        } else {
+            &self.spill[i - INLINE_BLOCKS]
+        }
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
 }
 
 /// Shared-trunk activations for one sample.
 struct TrunkCache {
-    blocks: Vec<BlockCache>,
+    blocks: BlockList,
     /// trunk output `[N, C]` (out_ln input)
-    h_final: Vec<f32>,
+    h_final: WsBuf,
 }
 
 fn trunk_fwd(
     cfg: &ModelCfg,
     p: &ParamTable,
-    mut h: Vec<f32>,
+    mut h: WsBuf,
     n: usize,
 ) -> anyhow::Result<TrunkCache> {
     let c = cfg.c;
-    let mut blocks = Vec::with_capacity(cfg.blocks);
+    let mut blocks = BlockList::new();
     for b in 0..cfg.blocks {
-        let h_in = h.clone();
-        let hn1 = forward::layernorm(p, &format!("blk{b}.ln1"), &h, n, c)?;
-        let (mix_out, mix) = flare_layer_fwd(p, &format!("blk{b}.mix"), &hn1, n, cfg)?;
-        for (hv, mv) in h.iter_mut().zip(&mix_out) {
+        let mut h_in = take(n * c);
+        h_in.copy_from_slice(&h);
+        let mut hn1 = take(n * c);
+        layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn1)?;
+        let (mix_out, mix) = flare_layer_fwd(p, pname!("blk{b}.mix").as_str(), &hn1, n, cfg)?;
+        for (hv, &mv) in h.iter_mut().zip(mix_out.iter()) {
             *hv += mv;
         }
-        let h_mid = h.clone();
-        let hn2 = forward::layernorm(p, &format!("blk{b}.ln2"), &h, n, c)?;
+        let mut h_mid = take(n * c);
+        h_mid.copy_from_slice(&h);
+        let mut hn2 = take(n * c);
+        layernorm_into(p, pname!("blk{b}.ln2").as_str(), &h, n, c, &mut hn2)?;
         let (ffn_out, ffn) =
-            resmlp_fwd(p, &format!("blk{b}.ffn"), &hn2, n, c, c, c, cfg.ffn_layers)?;
-        for (hv, fv) in h.iter_mut().zip(&ffn_out) {
+            resmlp_fwd(p, pname!("blk{b}.ffn").as_str(), &hn2, n, c, c, c, cfg.ffn_layers)?;
+        for (hv, &fv) in h.iter_mut().zip(ffn_out.iter()) {
             *hv += fv;
         }
         blocks.push(BlockCache {
@@ -685,16 +782,17 @@ fn trunk_bwd(
     p: &ParamTable,
     g: &mut GradTable,
     cache: &TrunkCache,
-    mut dh: Vec<f32>,
+    mut dh: WsBuf,
     n: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     let c = cfg.c;
-    for (b, blk) in cache.blocks.iter().enumerate().rev() {
+    for b in (0..cache.blocks.len()).rev() {
+        let blk = cache.blocks.get(b);
         // h_out = h_mid + ffn(ln2(h_mid))
         let dhn2 = resmlp_bwd(
             p,
             g,
-            &format!("blk{b}.ffn"),
+            pname!("blk{b}.ffn").as_str(),
             &blk.hn2,
             &blk.ffn,
             &dh,
@@ -704,14 +802,15 @@ fn trunk_bwd(
             c,
             cfg.ffn_layers,
         )?;
-        let dmid_ln = layernorm_bwd(p, g, &format!("blk{b}.ln2"), &blk.h_mid, &dhn2, n, c)?;
-        for (a, bv) in dh.iter_mut().zip(&dmid_ln) {
+        let dmid_ln = layernorm_bwd(p, g, pname!("blk{b}.ln2").as_str(), &blk.h_mid, &dhn2, n, c)?;
+        for (a, &bv) in dh.iter_mut().zip(dmid_ln.iter()) {
             *a += bv;
         }
         // h_mid = h_in + mix(ln1(h_in))
-        let dhn1 = flare_layer_bwd(p, g, &format!("blk{b}.mix"), &blk.hn1, &blk.mix, &dh, n, cfg)?;
-        let din_ln = layernorm_bwd(p, g, &format!("blk{b}.ln1"), &blk.h_in, &dhn1, n, c)?;
-        for (a, bv) in dh.iter_mut().zip(&din_ln) {
+        let dhn1 =
+            flare_layer_bwd(p, g, pname!("blk{b}.mix").as_str(), &blk.hn1, &blk.mix, &dh, n, cfg)?;
+        let din_ln = layernorm_bwd(p, g, pname!("blk{b}.ln1").as_str(), &blk.h_in, &dhn1, n, c)?;
+        for (a, &bv) in dh.iter_mut().zip(din_ln.iter()) {
             *a += bv;
         }
     }
@@ -720,7 +819,7 @@ fn trunk_bwd(
 
 /// Per-sample relative-L2 loss (paper Eq. 21/22, the training objective of
 /// `compile.train.rel_l2_loss`) and its gradient w.r.t. `pred`.
-fn rel_l2_loss_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
+fn rel_l2_loss_grad(pred: &[f32], target: &[f32]) -> (f64, WsBuf) {
     debug_assert_eq!(pred.len(), target.len());
     let mut num2 = 0.0f64;
     let mut den2 = 0.0f64;
@@ -731,7 +830,7 @@ fn rel_l2_loss_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
     let num = num2.sqrt();
     let den = den2.sqrt() + 1e-12;
     let loss = num / den;
-    let mut grad = vec![0.0f32; pred.len()];
+    let mut grad = take(pred.len());
     if num > 1e-30 {
         let s = 1.0 / (num * den);
         for (gv, (p, t)) in grad.iter_mut().zip(pred.iter().zip(target)) {
@@ -742,18 +841,18 @@ fn rel_l2_loss_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
 }
 
 /// Softmax cross-entropy on one logit row and its gradient
-/// (`compile.train.cross_entropy_loss` for batch size 1).
-fn cross_entropy_loss_grad(logits: &[f32], label: usize) -> (f64, Vec<f32>) {
-    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let mut den = 0.0f64;
-    for &l in logits {
-        den += (l as f64 - mx).exp();
-    }
+/// (`compile.train.cross_entropy_loss` for batch size 1).  The max/sum-exp
+/// statistics come from the shared kernel helper
+/// ([`softmax_stats_f64`]) rather than an open-coded loop; the f64
+/// reduction order is part of the loss-parity contract with the serving
+/// forward (`cached_token_forward_matches_serving_forward`).
+fn cross_entropy_loss_grad(logits: &[f32], label: usize) -> (f64, WsBuf) {
+    let (mx, den) = softmax_stats_f64(logits);
     let logden = den.ln();
-    let loss = -((logits[label] as f64 - mx) - logden);
-    let mut grad = vec![0.0f32; logits.len()];
+    let loss = -((logits[label] as f64 - mx as f64) - logden);
+    let mut grad = take(logits.len());
     for (j, gv) in grad.iter_mut().enumerate() {
-        let p = (logits[j] as f64 - mx).exp() / den;
+        let p = (logits[j] as f64 - mx as f64).exp() / den;
         *gv = (p - if j == label { 1.0 } else { 0.0 }) as f32;
     }
     (loss, grad)
@@ -828,7 +927,7 @@ pub fn loss_grad_tokens(
     let n = tokens.len();
     let c = cfg.c;
     let embed = p.get("embed")?;
-    let mut h0 = vec![0.0f32; n * c];
+    let mut h0 = take(n * c);
     for (t, &tok) in tokens.iter().enumerate() {
         anyhow::ensure!(
             tok >= 0 && (tok as usize) < cfg.vocab,
@@ -839,15 +938,22 @@ pub fn loss_grad_tokens(
     }
     let trunk = trunk_fwd(cfg, p, h0, n)?;
     let hn_out = forward::layernorm(p, "out_ln", &trunk.h_final, n, c)?;
-    let pooled: Vec<f32> =
-        (0..c).map(|j| (0..n).map(|t| hn_out[t * c + j]).sum::<f32>() / n as f32).collect();
+    let mut pooled = take(c);
+    let inv_n = 1.0 / n as f32;
+    for row in hn_out.chunks_exact(c) {
+        for (pv, &hv) in pooled.iter_mut().zip(row) {
+            *pv += hv;
+        }
+    }
+    for pv in pooled.iter_mut() {
+        *pv *= inv_n;
+    }
     let logits = forward::linear(p, "cls_head", &pooled, 1, c, cfg.num_classes)?;
 
     let (loss, dlogits) = cross_entropy_loss_grad(&logits, label as usize);
 
     let dpooled = linear_bwd(p, g, "cls_head", &pooled, &dlogits, 1, c, cfg.num_classes)?;
-    let mut dhn_out = vec![0.0f32; n * c];
-    let inv_n = 1.0 / n as f32;
+    let mut dhn_out = take(n * c);
     for t in 0..n {
         for j in 0..c {
             dhn_out[t * c + j] = dpooled[j] * inv_n;
@@ -938,5 +1044,61 @@ mod tests {
         g.acc("l.b").unwrap()[1] = 2.5;
         assert!(g.acc("nope").is_err());
         assert_eq!(flat[2 * 3 + 1], 2.5);
+    }
+
+    #[test]
+    fn block_list_inline_and_spill() {
+        // the cache container must behave identically across the inline →
+        // spill boundary (12 blocks exercises both storage regions)
+        fn dummy() -> BlockCache {
+            BlockCache {
+                h_in: take(1),
+                hn1: take(1),
+                mix: FlareLayerCache {
+                    kproj: ResMlpCache {
+                        rows: 1,
+                        ch: 1,
+                        layers: 0,
+                        h_all: take(1),
+                        t_all: take(0),
+                    },
+                    vproj: ResMlpCache {
+                        rows: 1,
+                        ch: 1,
+                        layers: 0,
+                        h_all: take(1),
+                        t_all: take(0),
+                    },
+                    kh: take(1),
+                    vh: take(1),
+                    q: take(1),
+                    mixer: MixerCache {
+                        mrun: take(1),
+                        den: take(1),
+                        z: take(1),
+                    },
+                    ymerged: take(1),
+                },
+                h_mid: take(1),
+                hn2: take(1),
+                ffn: ResMlpCache {
+                    rows: 1,
+                    ch: 1,
+                    layers: 0,
+                    h_all: take(1),
+                    t_all: take(0),
+                },
+            }
+        }
+        let mut list = BlockList::new();
+        for i in 0..INLINE_BLOCKS + 4 {
+            let mut bc = dummy();
+            bc.h_in[0] = i as f32;
+            list.push(bc);
+        }
+        assert_eq!(list.len(), INLINE_BLOCKS + 4);
+        for i in 0..list.len() {
+            assert_eq!(list.get(i).h_in[0], i as f32, "slot {i}");
+        }
     }
 }

@@ -8,13 +8,24 @@
 //! resident and `K`/`V` streamed, so the dominant cost is O(N·M·D) per head
 //! and no M×N score matrix is ever materialized — the same schedule as the
 //! Pallas kernel in `python/compile/kernels/flare_mixer.py`.
+//!
+//! Buffer discipline: every op has an `*_into` form writing into a
+//! caller-provided slice, and the owning forms return [`WsBuf`] scratch
+//! buffers from [`crate::util::workspace`] instead of fresh `Vec`s.
+//! Parameter names are formatted on the stack ([`crate::pname!`]).  After
+//! warmup a forward pass touches the heap **zero** times — the same
+//! contract the training pass in `model::backward` extends to gradients
+//! (pinned by `rust/tests/alloc_steady.rs`).
 
 use std::collections::BTreeMap;
 
 use crate::config::{ModelCfg, ParamEntry};
 use crate::linalg::kernel::{
-    gemm_acc, gemm_bt_acc, matmul_f32, online_softmax_row, scale_softmax_rows,
+    gemm_acc, gemm_bt_acc, matmul_f32_into, online_softmax_row, scale_softmax_rows,
 };
+use crate::linalg::vexp::{gelu_f32, vgelu_add};
+use crate::pname;
+use crate::util::workspace::{take, WsBuf};
 
 /// Named views into a flat parameter vector.
 pub struct ParamTable<'a> {
@@ -45,11 +56,36 @@ impl<'a> ParamTable<'a> {
 }
 
 /// GELU, tanh approximation — the `jax.nn.gelu` default used by the models.
+/// One lane of the vectorized kernel in [`crate::linalg::vexp`]; the bulk
+/// loops below use the 8-lane [`vgelu_add`] directly.
 #[inline]
 pub fn gelu(x: f32) -> f32 {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
-    let inner = SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x);
-    0.5 * x * (1.0 + inner.tanh())
+    gelu_f32(x)
+}
+
+/// `y[rows, c_out] = x[rows, c_in] @ W + b` into a caller buffer.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn affine_into(
+    p: &ParamTable,
+    wname: &str,
+    bname: &str,
+    x: &[f32],
+    rows: usize,
+    c_in: usize,
+    c_out: usize,
+    y: &mut [f32],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(x.len() == rows * c_in, "affine {wname}: input shape");
+    anyhow::ensure!(y.len() == rows * c_out, "affine {wname}: output shape");
+    let w = p.get(wname)?;
+    let b = p.get(bname)?;
+    matmul_f32_into(y, x, w, rows, c_in, c_out);
+    for row in y.chunks_mut(c_out) {
+        for (v, &bv) in row.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+    Ok(())
 }
 
 /// `y[rows, c_out] = x[rows, c_in] @ W + b` with explicit weight names.
@@ -61,16 +97,9 @@ pub(crate) fn affine(
     rows: usize,
     c_in: usize,
     c_out: usize,
-) -> anyhow::Result<Vec<f32>> {
-    anyhow::ensure!(x.len() == rows * c_in, "affine {wname}: input shape");
-    let w = p.get(wname)?;
-    let b = p.get(bname)?;
-    let mut y = matmul_f32(x, w, rows, c_in, c_out);
-    for row in y.chunks_mut(c_out) {
-        for (v, &bv) in row.iter_mut().zip(b) {
-            *v += bv;
-        }
-    }
+) -> anyhow::Result<WsBuf> {
+    let mut y = take(rows * c_out);
+    affine_into(p, wname, bname, x, rows, c_in, c_out, &mut y)?;
     Ok(y)
 }
 
@@ -82,22 +111,23 @@ pub fn linear(
     rows: usize,
     c_in: usize,
     c_out: usize,
-) -> anyhow::Result<Vec<f32>> {
-    affine(p, &format!("{prefix}.w"), &format!("{prefix}.b"), x, rows, c_in, c_out)
+) -> anyhow::Result<WsBuf> {
+    affine(p, pname!("{prefix}.w").as_str(), pname!("{prefix}.b").as_str(), x, rows, c_in, c_out)
 }
 
-/// LayerNorm over the last axis (eps = 1e-5, matching the JAX models).
-pub fn layernorm(
+/// LayerNorm over the last axis into a caller buffer (eps = 1e-5).
+pub(crate) fn layernorm_into(
     p: &ParamTable,
     prefix: &str,
     x: &[f32],
     rows: usize,
     c: usize,
-) -> anyhow::Result<Vec<f32>> {
+    out: &mut [f32],
+) -> anyhow::Result<()> {
     anyhow::ensure!(x.len() == rows * c, "layernorm {prefix}: input shape");
-    let gamma = p.get(&format!("{prefix}.gamma"))?;
-    let beta = p.get(&format!("{prefix}.beta"))?;
-    let mut out = vec![0.0f32; x.len()];
+    anyhow::ensure!(out.len() == rows * c, "layernorm {prefix}: output shape");
+    let gamma = p.get(pname!("{prefix}.gamma").as_str())?;
+    let beta = p.get(pname!("{prefix}.beta").as_str())?;
     for r in 0..rows {
         let row = &x[r * c..(r + 1) * c];
         let dst = &mut out[r * c..(r + 1) * c];
@@ -108,6 +138,19 @@ pub fn layernorm(
             dst[j] = (row[j] - mu) * inv * gamma[j] + beta[j];
         }
     }
+    Ok(())
+}
+
+/// LayerNorm over the last axis (eps = 1e-5, matching the JAX models).
+pub fn layernorm(
+    p: &ParamTable,
+    prefix: &str,
+    x: &[f32],
+    rows: usize,
+    c: usize,
+) -> anyhow::Result<WsBuf> {
+    let mut out = take(x.len());
+    layernorm_into(p, prefix, x, rows, c, &mut out)?;
     Ok(out)
 }
 
@@ -121,11 +164,11 @@ pub fn resmlp(
     c_hidden: usize,
     c_out: usize,
     layers: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     let mut h = affine(
         p,
-        &format!("{prefix}.win"),
-        &format!("{prefix}.bin"),
+        pname!("{prefix}.win").as_str(),
+        pname!("{prefix}.bin").as_str(),
         x,
         rows,
         c_in,
@@ -136,41 +179,41 @@ pub fn resmlp(
             *hv += xv;
         }
     }
+    let mut t = take(rows * c_hidden);
     for l in 0..layers {
-        let t = affine(
+        affine_into(
             p,
-            &format!("{prefix}.w{l}"),
-            &format!("{prefix}.b{l}"),
+            pname!("{prefix}.w{l}").as_str(),
+            pname!("{prefix}.b{l}").as_str(),
             &h,
             rows,
             c_hidden,
             c_hidden,
+            &mut t,
         )?;
-        for (hv, tv) in h.iter_mut().zip(&t) {
-            *hv += gelu(*tv);
-        }
+        vgelu_add(&mut h, &t);
     }
     let mut y = affine(
         p,
-        &format!("{prefix}.wout"),
-        &format!("{prefix}.bout"),
+        pname!("{prefix}.wout").as_str(),
+        pname!("{prefix}.bout").as_str(),
         &h,
         rows,
         c_hidden,
         c_out,
     )?;
     if c_hidden == c_out {
-        for (yv, hv) in y.iter_mut().zip(&h) {
+        for (yv, hv) in y.iter_mut().zip(h.iter()) {
             *yv += hv;
         }
     }
     Ok(y)
 }
 
-/// `[N, H*D] -> [H, N, D]` head split (row-major throughout).
-pub fn split_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
+/// `[N, H*D] -> [H, N, D]` head split into a caller buffer.
+pub(crate) fn split_heads_into(x: &[f32], n: usize, h: usize, d: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), n * h * d);
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), n * h * d);
     for t in 0..n {
         for hh in 0..h {
             let src = &x[(t * h + hh) * d..(t * h + hh + 1) * d];
@@ -178,13 +221,19 @@ pub fn split_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
             dst.copy_from_slice(src);
         }
     }
+}
+
+/// `[N, H*D] -> [H, N, D]` head split (row-major throughout).
+pub fn split_heads(x: &[f32], n: usize, h: usize, d: usize) -> WsBuf {
+    let mut out = take(x.len());
+    split_heads_into(x, n, h, d, &mut out);
     out
 }
 
-/// `[H, N, D] -> [N, H*D]` head merge.
-pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
+/// `[H, N, D] -> [N, H*D]` head merge into a caller buffer.
+pub(crate) fn merge_heads_into(x: &[f32], n: usize, h: usize, d: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), n * h * d);
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), n * h * d);
     for hh in 0..h {
         for t in 0..n {
             let src = &x[(hh * n + t) * d..(hh * n + t + 1) * d];
@@ -192,6 +241,12 @@ pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> Vec<f32> {
             dst.copy_from_slice(src);
         }
     }
+}
+
+/// `[H, N, D] -> [N, H*D]` head merge.
+pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> WsBuf {
+    let mut out = take(x.len());
+    merge_heads_into(x, n, h, d, &mut out);
     out
 }
 
@@ -227,7 +282,7 @@ pub fn mixer_encode(
     mrun.fill(f32::NEG_INFINITY);
     den.fill(0.0);
     z.fill(0.0);
-    let mut s = vec![0.0f32; m * MIXER_TILE];
+    let mut s = take(m * MIXER_TILE);
     for t0 in (0..n).step_by(MIXER_TILE) {
         let tn = MIXER_TILE.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
@@ -269,7 +324,7 @@ pub fn mixer_decode(
     scale: f32,
     yh: &mut [f32],
 ) {
-    let mut s = vec![0.0f32; MIXER_TILE * m];
+    let mut s = take(MIXER_TILE * m);
     for t0 in (0..n).step_by(MIXER_TILE) {
         let tn = MIXER_TILE.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
@@ -297,14 +352,14 @@ pub fn flare_mixer(
     n: usize,
     d: usize,
     scale: f32,
-) -> Vec<f32> {
+) -> WsBuf {
     assert_eq!(q.len(), h * m * d, "flare_mixer: q shape");
     assert_eq!(k.len(), h * n * d, "flare_mixer: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer: v shape");
-    let mut y = vec![0.0f32; h * n * d];
-    let mut mrun = vec![0.0f32; m];
-    let mut den = vec![0.0f32; m];
-    let mut z = vec![0.0f32; m * d];
+    let mut y = take(h * n * d);
+    let mut mrun = take(m);
+    let mut den = take(m);
+    let mut z = take(m * d);
     for hh in 0..h {
         let qh = &q[hh * m * d..(hh + 1) * m * d];
         let kh = &k[hh * n * d..(hh + 1) * n * d];
@@ -323,7 +378,7 @@ pub fn flare_layer(
     x: &[f32],
     n: usize,
     cfg: &ModelCfg,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     Ok(flare_layer_with_keys(p, prefix, x, n, cfg)?.0)
 }
 
@@ -336,28 +391,28 @@ pub fn flare_layer_with_keys(
     x: &[f32],
     n: usize,
     cfg: &ModelCfg,
-) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+) -> anyhow::Result<(WsBuf, WsBuf)> {
     anyhow::ensure!(
         cfg.latent_sa_blocks == 0,
         "native backend does not implement the Figure-11 hybrid (latent_sa_blocks > 0)"
     );
     let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
-    let k = resmlp(p, &format!("{prefix}.kproj"), x, n, c, c, c, cfg.kv_layers)?;
-    let v = resmlp(p, &format!("{prefix}.vproj"), x, n, c, c, c, cfg.kv_layers)?;
+    let k = resmlp(p, pname!("{prefix}.kproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
+    let v = resmlp(p, pname!("{prefix}.vproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
     let kh = split_heads(&k, n, h, d);
     let vh = split_heads(&v, n, h, d);
-    let lat = p.get(&format!("{prefix}.latents"))?;
+    let lat = p.get(pname!("{prefix}.latents").as_str())?;
     let yh = if cfg.shared_latents {
-        let mut q = Vec::with_capacity(h * m * d);
-        for _ in 0..h {
-            q.extend_from_slice(lat);
+        let mut q = take(h * m * d);
+        for qh in q.chunks_exact_mut(m * d) {
+            qh.copy_from_slice(lat);
         }
         flare_mixer(&q, &kh, &vh, h, m, n, d, cfg.scale as f32)
     } else {
         flare_mixer(lat, &kh, &vh, h, m, n, d, cfg.scale as f32)
     };
     let y = merge_heads(&yh, n, h, d);
-    let out = linear(p, &format!("{prefix}.out"), &y, n, c, c)?;
+    let out = linear(p, pname!("{prefix}.out").as_str(), &y, n, c, c)?;
     Ok((out, kh))
 }
 
@@ -381,19 +436,20 @@ pub fn check_native_supported(cfg: &ModelCfg) -> anyhow::Result<()> {
 fn apply_blocks(
     cfg: &ModelCfg,
     p: &ParamTable,
-    mut h: Vec<f32>,
+    mut h: WsBuf,
     n: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     let c = cfg.c;
+    let mut hn = take(n * c);
     for b in 0..cfg.blocks {
-        let hn = layernorm(p, &format!("blk{b}.ln1"), &h, n, c)?;
-        let mix = flare_layer(p, &format!("blk{b}.mix"), &hn, n, cfg)?;
-        for (hv, mv) in h.iter_mut().zip(&mix) {
+        layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn)?;
+        let mix = flare_layer(p, pname!("blk{b}.mix").as_str(), &hn, n, cfg)?;
+        for (hv, mv) in h.iter_mut().zip(mix.iter()) {
             *hv += mv;
         }
-        let hn = layernorm(p, &format!("blk{b}.ln2"), &h, n, c)?;
-        let ffn = resmlp(p, &format!("blk{b}.ffn"), &hn, n, c, c, c, cfg.ffn_layers)?;
-        for (hv, fv) in h.iter_mut().zip(&ffn) {
+        layernorm_into(p, pname!("blk{b}.ln2").as_str(), &h, n, c, &mut hn)?;
+        let ffn = resmlp(p, pname!("blk{b}.ffn").as_str(), &hn, n, c, c, c, cfg.ffn_layers)?;
+        for (hv, fv) in h.iter_mut().zip(ffn.iter()) {
             *hv += fv;
         }
     }
@@ -404,7 +460,7 @@ fn apply_blocks(
 ///
 /// `n` is taken from the input length — the native path has no static shape
 /// specialization, so any point count works with one set of weights.
-pub fn forward_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+pub fn forward_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Result<WsBuf> {
     check_native_supported(cfg)?;
     anyhow::ensure!(!cfg.is_classification(), "use forward_tokens_sample for token tasks");
     anyhow::ensure!(cfg.d_in > 0 && x.len() % cfg.d_in == 0, "input not a multiple of d_in");
@@ -421,13 +477,13 @@ pub fn forward_tokens_sample(
     cfg: &ModelCfg,
     p: &ParamTable,
     tokens: &[i32],
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<WsBuf> {
     check_native_supported(cfg)?;
     anyhow::ensure!(cfg.is_classification(), "use forward_sample for field tasks");
     let n = tokens.len();
     let c = cfg.c;
     let embed = p.get("embed")?;
-    let mut h = vec![0.0f32; n * c];
+    let mut h = take(n * c);
     for (t, &tok) in tokens.iter().enumerate() {
         anyhow::ensure!(
             tok >= 0 && (tok as usize) < cfg.vocab,
@@ -439,8 +495,16 @@ pub fn forward_tokens_sample(
     }
     let h = apply_blocks(cfg, p, h, n)?;
     let h = layernorm(p, "out_ln", &h, n, c)?;
-    let pooled: Vec<f32> =
-        (0..c).map(|j| (0..n).map(|t| h[t * c + j]).sum::<f32>() / n as f32).collect();
+    let mut pooled = take(c);
+    let inv_n = 1.0 / n as f32;
+    for row in h.chunks_exact(c) {
+        for (pv, &hv) in pooled.iter_mut().zip(row) {
+            *pv += hv;
+        }
+    }
+    for pv in pooled.iter_mut() {
+        *pv *= inv_n;
+    }
     linear(p, "cls_head", &pooled, 1, c, cfg.num_classes)
 }
 
@@ -453,18 +517,19 @@ pub fn qk_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Result<Ve
     let n = x.len() / cfg.d_in;
     let (c, heads, d) = (cfg.c, cfg.heads, cfg.head_dim());
     let mut h = resmlp(p, "in_proj", x, n, cfg.d_in, c, c, cfg.io_layers)?;
+    let mut hn = take(n * c);
     let mut ks = Vec::with_capacity(cfg.blocks);
     for b in 0..cfg.blocks {
-        let hn = layernorm(p, &format!("blk{b}.ln1"), &h, n, c)?;
-        let (mix, kh) = flare_layer_with_keys(p, &format!("blk{b}.mix"), &hn, n, cfg)?;
+        layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn)?;
+        let (mix, kh) = flare_layer_with_keys(p, pname!("blk{b}.mix").as_str(), &hn, n, cfg)?;
         debug_assert_eq!(kh.len(), heads * n * d);
-        ks.push(kh);
-        for (hv, mv) in h.iter_mut().zip(&mix) {
+        ks.push(kh.into_vec());
+        for (hv, mv) in h.iter_mut().zip(mix.iter()) {
             *hv += mv;
         }
-        let hn = layernorm(p, &format!("blk{b}.ln2"), &h, n, c)?;
-        let ffn = resmlp(p, &format!("blk{b}.ffn"), &hn, n, c, c, c, cfg.ffn_layers)?;
-        for (hv, fv) in h.iter_mut().zip(&ffn) {
+        layernorm_into(p, pname!("blk{b}.ln2").as_str(), &h, n, c, &mut hn)?;
+        let ffn = resmlp(p, pname!("blk{b}.ffn").as_str(), &hn, n, c, c, c, cfg.ffn_layers)?;
+        for (hv, fv) in h.iter_mut().zip(ffn.iter()) {
             *hv += fv;
         }
     }
@@ -581,7 +646,7 @@ mod tests {
         let k: Vec<f32> = (0..h * n * d).map(|_| rng.normal() as f32).collect();
         let v = vec![2.5f32; h * n * d];
         let y = flare_mixer(&q, &k, &v, h, m, n, d, 1.0);
-        for &yv in &y {
+        for &yv in y.iter() {
             assert!((yv - 2.5).abs() < 1e-5, "{yv}");
         }
     }
@@ -620,5 +685,46 @@ mod tests {
         let x = vec![1.0f32, -2.0, 0.5];
         let y = resmlp(&p, "mlp", &x, 1, 3, 3, 3, 1).unwrap();
         assert_eq!(y, x); // 0 + x residual, gelu(0)=0, then 0 + h residual
+    }
+
+    #[test]
+    fn forward_is_allocation_free_after_warmup() {
+        // the workspace pool must absorb every transient buffer of a
+        // steady-state forward (the training-path sibling is pinned by the
+        // alloc_steady integration test with a counting global allocator)
+        use crate::model::spec::index_by_name;
+        use crate::util::workspace::pool_allocs;
+        let cfg = ModelCfg {
+            mixer: "flare".into(),
+            n: 16,
+            d_in: 3,
+            d_out: 1,
+            c: 8,
+            heads: 2,
+            m: 4,
+            blocks: 1,
+            kv_layers: 1,
+            ffn_layers: 1,
+            io_layers: 1,
+            latent_sa_blocks: 0,
+            shared_latents: false,
+            scale: 1.0,
+            task: "regression".into(),
+            vocab: 0,
+            num_classes: 0,
+        };
+        let (entries, total) = crate::model::build_spec(&cfg).unwrap();
+        let map = index_by_name(&entries);
+        let params = crate::model::init_params(&entries, total, 3);
+        let p = ParamTable::new(&params, &map);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..cfg.n * cfg.d_in).map(|_| rng.normal() as f32).collect();
+        for _ in 0..2 {
+            forward_sample(&cfg, &p, &x).unwrap(); // warm the pool
+        }
+        let misses = pool_allocs();
+        let y = forward_sample(&cfg, &p, &x).unwrap();
+        assert_eq!(y.len(), cfg.n * cfg.d_out);
+        assert_eq!(pool_allocs(), misses, "steady-state forward hit the allocator");
     }
 }

@@ -97,6 +97,55 @@ pub trait Backend {
         )
     }
 
+    /// Whether [`Backend::grad_batch`] / [`Backend::apply_update`] are
+    /// available — the split train step gradient accumulation needs
+    /// (`train::train_case` with `accum > 1`).  The XLA step artifact fuses
+    /// gradient + update into one executable, so it cannot accumulate.
+    fn supports_grad_accum(&self) -> bool {
+        false
+    }
+
+    /// Accumulate the **sum** of per-sample parameter gradients for one
+    /// micro-batch into `grad_acc` (length = case param count) and return
+    /// `(loss_sum, samples)`.  Callers average by scaling once after the
+    /// last micro-batch (or fold the average into the optimizer update, as
+    /// [`Backend::apply_update`] does).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        manifest: &Manifest,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        target: BatchTarget<'_>,
+        grad_acc: &mut [f32],
+    ) -> anyhow::Result<(f64, usize)> {
+        let _ = (manifest, case, params, input, target, grad_acc);
+        anyhow::bail!(
+            "the {:?} backend does not implement grad_batch (gradient accumulation)",
+            self.name()
+        )
+    }
+
+    /// Apply one optimizer step from the **sum** of per-sample gradients
+    /// over `samples` samples (the backend folds the `1/samples` average
+    /// into the fused update).
+    fn apply_update(
+        &self,
+        case: &CaseCfg,
+        state: &mut OptState,
+        grad_sum: &[f32],
+        samples: usize,
+        step: usize,
+        lr: f64,
+    ) -> anyhow::Result<()> {
+        let _ = (case, state, grad_sum, samples, step, lr);
+        anyhow::bail!(
+            "the {:?} backend does not implement apply_update (gradient accumulation)",
+            self.name()
+        )
+    }
+
     /// Metric over one evaluation batch (mean rel-L2 for regression,
     /// accuracy for classification).  The default routes through
     /// [`Backend::forward`] plus host-side metrics; the XLA backend

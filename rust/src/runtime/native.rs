@@ -3,15 +3,19 @@
 //! No artifacts, no PJRT, no shape specialization — plans are built from
 //! the manifest's packing spec (or re-declared from the model config via
 //! [`crate::model::build_spec`] when the manifest carries none), and batches
-//! fan out across OS threads with [`crate::util::threadpool::parallel_map`].
+//! fan out across OS threads with [`crate::util::threadpool`].
 //!
-//! Training is native too: each sample's loss + full parameter gradient is
-//! computed by the reverse pass in [`crate::model::backward`] (batch
-//! members in parallel, gradients averaged on the host), then the fused
-//! [`AdamW`] step updates the flat optimizer state in place.  This makes
-//! `cargo build && cargo test` — and the whole train-then-serve lifecycle —
-//! work on a clean machine; the XLA path stays available behind
-//! `--features xla` for the AOT artifacts and baseline mixers.
+//! Training is native too, and allocation-conscious: per-sample reverse
+//! passes ([`crate::model::backward`]) accumulate **in place** into
+//! per-worker gradient shards taken from [`crate::util::workspace`]
+//! ([`parallel_sharded`] gives each worker exclusive ownership of one
+//! shard), the shards are reduced tree-wise, and the fused
+//! [`AdamW`] update folds the `1/batch` average into its scale factor — no
+//! per-sample gradient buffers, no averaging pass.  The split
+//! [`Backend::grad_batch`] / [`Backend::apply_update`] entry points expose
+//! the same machinery to the trainer's gradient-accumulation loop
+//! (`--accum K`).  Under `FLARE_THREADS=1` everything runs inline in
+//! sample order, keeping the bitwise determinism contract.
 //!
 //! Capability errors route through `forward::check_native_supported`, so an
 //! unsupported configuration names the offending field (mixer kind,
@@ -27,7 +31,8 @@ use crate::model::forward::{self, ParamTable};
 use crate::model::{build_spec, index_by_name};
 use crate::runtime::backend::{Backend, BatchInput, BatchTarget, OptState};
 use crate::train::AdamW;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_map, parallel_sharded};
+use crate::util::workspace::{take, WsBuf};
 
 /// Resolved execution plan for one case.
 struct Plan {
@@ -60,6 +65,15 @@ impl Plan {
     }
 }
 
+/// One worker's gradient shard during the batch fan-out: per-sample
+/// gradients accumulate into `grad`, losses into `loss`; the first error
+/// aborts that worker's remaining samples.
+struct GradShard<'a> {
+    grad: &'a mut [f32],
+    loss: f64,
+    err: Option<anyhow::Error>,
+}
+
 /// Pure-Rust execution backend (the default).
 pub struct NativeBackend {
     plans: RefCell<HashMap<String, Rc<Plan>>>,
@@ -89,6 +103,79 @@ impl NativeBackend {
         let plan = Rc::new(Plan::build(case)?);
         self.plans.borrow_mut().insert(case.name.clone(), Rc::clone(&plan));
         Ok(plan)
+    }
+
+    /// Fan `batch` per-sample reverse passes across gradient shards and
+    /// tree-reduce them into `grad_acc` (which receives the **sum** on top
+    /// of whatever it already holds — the accumulation contract).  Returns
+    /// the summed loss.  `sample(i, grads)` runs one sample's forward +
+    /// backward, accumulating into its worker's shard.
+    fn sharded_grads(
+        &self,
+        plan: &Plan,
+        batch: usize,
+        grad_acc: &mut [f32],
+        sample: impl Fn(usize, &mut GradTable) -> anyhow::Result<f64> + Sync,
+    ) -> anyhow::Result<f64> {
+        let threads = self.threads.clamp(1, batch.max(1));
+        if threads == 1 {
+            // inline in sample order: the FLARE_THREADS=1 bitwise path
+            let mut grads = GradTable::new(grad_acc, &plan.entries);
+            let mut loss_sum = 0.0f64;
+            for i in 0..batch {
+                loss_sum += sample(i, &mut grads)?;
+            }
+            return Ok(loss_sum);
+        }
+        // shard 0 accumulates straight into grad_acc; extra shards come
+        // from the workspace pool (zeroed)
+        let mut extra: Vec<WsBuf> = (1..threads).map(|_| take(plan.param_count)).collect();
+        let mut shards: Vec<GradShard> = Vec::with_capacity(threads);
+        shards.push(GradShard {
+            grad: grad_acc,
+            loss: 0.0,
+            err: None,
+        });
+        for buf in extra.iter_mut() {
+            shards.push(GradShard {
+                grad: &mut buf[..],
+                loss: 0.0,
+                err: None,
+            });
+        }
+        parallel_sharded(batch, &mut shards, |shard, i| {
+            if shard.err.is_some() {
+                return;
+            }
+            let mut grads = GradTable::new(shard.grad, &plan.entries);
+            match sample(i, &mut grads) {
+                Ok(loss) => shard.loss += loss,
+                Err(e) => shard.err = Some(e),
+            }
+        });
+        // tree-wise in-place reduction: gap-doubling pairwise merges
+        let mut gap = 1;
+        while gap < shards.len() {
+            let mut i = 0;
+            while i + gap < shards.len() {
+                let (head, tail) = shards.split_at_mut(i + gap);
+                let (dst, src) = (&mut head[i], &mut tail[0]);
+                for (a, &b) in dst.grad.iter_mut().zip(src.grad.iter()) {
+                    *a += b;
+                }
+                dst.loss += src.loss;
+                if dst.err.is_none() {
+                    dst.err = src.err.take();
+                }
+                i += 2 * gap;
+            }
+            gap *= 2;
+        }
+        let root = &mut shards[0];
+        if let Some(e) = root.err.take() {
+            return Err(e);
+        }
+        Ok(root.loss)
     }
 }
 
@@ -123,7 +210,7 @@ impl Backend for NativeBackend {
             plan.param_count
         );
         anyhow::ensure!(batch > 0, "empty batch");
-        let outs: Vec<anyhow::Result<Vec<f32>>> = match input {
+        let outs: Vec<anyhow::Result<WsBuf>> = match input {
             BatchInput::Fields(x) => {
                 anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
                 let per = x.len() / batch;
@@ -147,7 +234,7 @@ impl Backend for NativeBackend {
         };
         let mut y = Vec::new();
         for out in outs {
-            y.extend(out?);
+            y.extend_from_slice(&out?);
         }
         Ok(y)
     }
@@ -156,30 +243,36 @@ impl Backend for NativeBackend {
         true
     }
 
-    /// One native AdamW step: per-sample reverse passes in parallel,
-    /// gradients averaged over the batch, fused optimizer update in place.
-    fn train_step(
+    fn supports_grad_accum(&self) -> bool {
+        true
+    }
+
+    /// Sum of per-sample gradients for one micro-batch, accumulated into
+    /// `grad_acc` in place via per-worker shards.
+    fn grad_batch(
         &self,
         _manifest: &Manifest,
         case: &CaseCfg,
-        state: &mut OptState,
-        step: usize,
-        lr: f64,
+        params: &[f32],
         input: BatchInput<'_>,
         target: BatchTarget<'_>,
-    ) -> anyhow::Result<f64> {
+        grad_acc: &mut [f32],
+    ) -> anyhow::Result<(f64, usize)> {
         let plan_rc = self.plan(case)?;
         let plan: &Plan = plan_rc.as_ref();
         anyhow::ensure!(
-            state.params.len() == plan.param_count
-                && state.m.len() == plan.param_count
-                && state.v.len() == plan.param_count,
-            "optimizer state length {} != expected {}",
-            state.params.len(),
+            params.len() == plan.param_count,
+            "params length {} != expected {}",
+            params.len(),
             plan.param_count
         );
-        let params = &state.params;
-        let results: Vec<anyhow::Result<(f64, Vec<f32>)>> = match (&input, &target) {
+        anyhow::ensure!(
+            grad_acc.len() == plan.param_count,
+            "gradient buffer length {} != expected {}",
+            grad_acc.len(),
+            plan.param_count
+        );
+        match (&input, &target) {
             (BatchInput::Fields(x), BatchTarget::Fields(y)) => {
                 // the gathered batch holds exactly case.batch samples (the
                 // trait contract, same as the XLA step artifact's shapes);
@@ -196,57 +289,89 @@ impl Backend for NativeBackend {
                 anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
                 let per_y = y.len() / batch;
                 let per_x = x.len() / batch;
-                parallel_map(batch, self.threads, |i| {
+                let loss_sum = self.sharded_grads(plan, batch, grad_acc, |i, grads| {
                     let table = ParamTable::new(params, &plan.entries);
-                    let mut gflat = vec![0.0f32; plan.param_count];
-                    let mut grads = GradTable::new(&mut gflat, &plan.entries);
-                    let loss = loss_grad_fields(
+                    loss_grad_fields(
                         &plan.model,
                         &table,
-                        &mut grads,
+                        grads,
                         &x[i * per_x..(i + 1) * per_x],
                         &y[i * per_y..(i + 1) * per_y],
-                    )?;
-                    Ok((loss, gflat))
-                })
+                    )
+                })?;
+                Ok((loss_sum, batch))
             }
             (BatchInput::Tokens(tokens), BatchTarget::Labels(labels)) => {
                 let batch = labels.len();
                 anyhow::ensure!(batch > 0, "empty training batch");
                 anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
                 let per = tokens.len() / batch;
-                parallel_map(batch, self.threads, |i| {
+                let loss_sum = self.sharded_grads(plan, batch, grad_acc, |i, grads| {
                     let table = ParamTable::new(params, &plan.entries);
-                    let mut gflat = vec![0.0f32; plan.param_count];
-                    let mut grads = GradTable::new(&mut gflat, &plan.entries);
-                    let loss = loss_grad_tokens(
+                    loss_grad_tokens(
                         &plan.model,
                         &table,
-                        &mut grads,
+                        grads,
                         &tokens[i * per..(i + 1) * per],
                         labels[i],
-                    )?;
-                    Ok((loss, gflat))
-                })
+                    )
+                })?;
+                Ok((loss_sum, batch))
             }
             _ => anyhow::bail!("mismatched input/target kinds for case {}", case.name),
-        };
-        let mut grad = vec![0.0f32; plan.param_count];
-        let mut loss_sum = 0.0f64;
-        let count = results.len();
-        for r in results {
-            let (loss, gflat) = r?;
-            loss_sum += loss;
-            for (a, &b) in grad.iter_mut().zip(&gflat) {
-                *a += b;
-            }
         }
-        let inv = 1.0 / count as f32;
-        for gv in grad.iter_mut() {
-            *gv *= inv;
-        }
-        AdamW::default().step(state, &grad, step, lr);
-        Ok(loss_sum / count as f64)
+    }
+
+    /// Fused AdamW step from summed gradients (`1/samples` folded into the
+    /// update's f64 scale factor — no pre-scaling pass).
+    fn apply_update(
+        &self,
+        case: &CaseCfg,
+        state: &mut OptState,
+        grad_sum: &[f32],
+        samples: usize,
+        step: usize,
+        lr: f64,
+    ) -> anyhow::Result<()> {
+        let plan_rc = self.plan(case)?;
+        let plan: &Plan = plan_rc.as_ref();
+        anyhow::ensure!(
+            state.params.len() == plan.param_count
+                && state.m.len() == plan.param_count
+                && state.v.len() == plan.param_count,
+            "optimizer state length {} != expected {}",
+            state.params.len(),
+            plan.param_count
+        );
+        anyhow::ensure!(
+            grad_sum.len() == plan.param_count,
+            "gradient length {} != expected {}",
+            grad_sum.len(),
+            plan.param_count
+        );
+        anyhow::ensure!(samples > 0, "apply_update with zero samples");
+        AdamW::default().step_summed(state, grad_sum, samples, step, lr);
+        Ok(())
+    }
+
+    /// One native AdamW step: [`Backend::grad_batch`] into a pooled buffer,
+    /// then [`Backend::apply_update`].
+    fn train_step(
+        &self,
+        manifest: &Manifest,
+        case: &CaseCfg,
+        state: &mut OptState,
+        step: usize,
+        lr: f64,
+        input: BatchInput<'_>,
+        target: BatchTarget<'_>,
+    ) -> anyhow::Result<f64> {
+        let plan_rc = self.plan(case)?;
+        let mut grad = take(plan_rc.param_count);
+        let (loss_sum, samples) =
+            self.grad_batch(manifest, case, &state.params, input, target, &mut grad)?;
+        self.apply_update(case, state, &grad, samples, step, lr)?;
+        Ok(loss_sum / samples as f64)
     }
 
     fn qk_keys(

@@ -6,8 +6,11 @@
 //! loss.  Every backend trains: the native backend computes gradients with
 //! the pure-Rust reverse pass (`model::backward`) and applies the fused
 //! [`AdamW`] step; the XLA backend executes the AOT step artifact.
-//! Evaluation goes through [`Backend::eval_batch`], which defaults to
-//! forward + host-side metrics.
+//! With gradient accumulation (`TrainOpts::accum > 1`) each optimizer step
+//! instead sums gradients over several micro-batches through the split
+//! [`Backend::grad_batch`] / [`Backend::apply_update`] path (native only —
+//! the XLA artifact fuses gradient and update).  Evaluation goes through
+//! [`Backend::eval_batch`], which defaults to forward + host-side metrics.
 
 pub mod optim;
 pub mod schedule;
@@ -41,6 +44,21 @@ pub struct TrainOpts {
     /// *first* segment (already trained) followed its own shorter cycle —
     /// split runs are resumable, not bitwise equal to one long run
     pub resume: Option<(OptState, usize)>,
+    /// gradient accumulation: each optimizer step sums gradients over
+    /// `accum` micro-batches of `case.batch` samples before one fused
+    /// update — the effective batch is `accum * case.batch` without the
+    /// memory of a bigger gather.  Needs `Backend::supports_grad_accum`
+    /// when > 1 (the native backend; the XLA step artifact fuses
+    /// gradient + update and cannot split them).  A `resume` of an
+    /// accumulated run must pass the same `accum` so the sampler
+    /// fast-forward lines up with the consumed micro-batch stream.
+    pub accum: usize,
+    /// write a checkpoint to `ckpt_path` every `ckpt_every` optimizer
+    /// steps (0 = only whatever the caller writes at the end); pairs with
+    /// `resume` so long runs survive interruption
+    pub ckpt_every: usize,
+    /// mid-run checkpoint destination (required when `ckpt_every > 0`)
+    pub ckpt_path: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainOpts {
@@ -51,6 +69,9 @@ impl Default for TrainOpts {
             sample_seed: 0x5EED,
             log_every: 0,
             resume: None,
+            accum: 1,
+            ckpt_every: 0,
+            ckpt_path: None,
         }
     }
 }
@@ -179,6 +200,17 @@ pub fn train_case(
         backend.name(),
         case.name
     );
+    let accum = opts.accum.max(1);
+    anyhow::ensure!(
+        accum == 1 || backend.supports_grad_accum(),
+        "the {:?} backend cannot accumulate gradients (--accum {accum} needs the split \
+         grad_batch/apply_update path; the native backend supports it)",
+        backend.name()
+    );
+    anyhow::ensure!(
+        opts.ckpt_every == 0 || opts.ckpt_path.is_some(),
+        "ckpt_every > 0 requires a checkpoint path"
+    );
     let ds = data::build(&case.dataset, &case.dataset_meta, manifest.seed)?;
     let steps = opts.steps.unwrap_or(case.train_steps);
     let (mut st, start) = match &opts.resume {
@@ -205,28 +237,56 @@ pub fn train_case(
 
     let mut sampler = BatchSampler::new(ds.train_len(), opts.sample_seed);
     // fast-forward past the batches the checkpointed run already consumed so
-    // a resumed run continues the sample stream instead of replaying it
-    for _ in 0..start {
+    // a resumed run continues the sample stream instead of replaying it.
+    // Each completed optimizer step drew `accum` micro-batches, so a resumed
+    // run must pass the same `accum` as the interrupted one to line up.
+    for _ in 0..start * accum {
         sampler.next(case.batch);
     }
     let mut losses = Vec::with_capacity(steps);
     let mut evals = Vec::new();
     let mut step_times = Vec::with_capacity(steps);
     let wall = Timer::start();
+    // gradient-accumulation buffer, allocated once per run (accum > 1 only)
+    let mut grad_acc = vec![0.0f32; if accum > 1 { case.param_count } else { 0 }];
 
     for step in start..total {
-        let idx = sampler.next(case.batch);
-        let batch = gather_batch(case, &ds, &idx, true);
         let t = Timer::start();
-        let loss = backend.train_step(
-            manifest,
-            case,
-            &mut st,
-            step,
-            sched.lr(step),
-            batch.input(),
-            batch.target(),
-        )?;
+        let loss = if accum == 1 {
+            let idx = sampler.next(case.batch);
+            let batch = gather_batch(case, &ds, &idx, true);
+            backend.train_step(
+                manifest,
+                case,
+                &mut st,
+                step,
+                sched.lr(step),
+                batch.input(),
+                batch.target(),
+            )?
+        } else {
+            // sum gradients over `accum` micro-batches in place, then one
+            // fused update over the combined sample count
+            grad_acc.fill(0.0);
+            let mut loss_sum = 0.0f64;
+            let mut samples = 0usize;
+            for _ in 0..accum {
+                let idx = sampler.next(case.batch);
+                let batch = gather_batch(case, &ds, &idx, true);
+                let (ls, ns) = backend.grad_batch(
+                    manifest,
+                    case,
+                    &st.params,
+                    batch.input(),
+                    batch.target(),
+                    &mut grad_acc,
+                )?;
+                loss_sum += ls;
+                samples += ns;
+            }
+            backend.apply_update(case, &mut st, &grad_acc, samples, step, sched.lr(step))?;
+            loss_sum / samples as f64
+        };
         step_times.push(t.elapsed_ms());
         losses.push(loss);
         if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == total) {
@@ -239,6 +299,24 @@ pub fn train_case(
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             let metric = evaluate(backend, manifest, case, &ds, &st.params)?;
             evals.push((step + 1, metric));
+        }
+        if opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0 {
+            if let Some(path) = &opts.ckpt_path {
+                crate::model::save_checkpoint(
+                    path,
+                    &crate::model::Checkpoint {
+                        case: case.name.clone(),
+                        step: step + 1,
+                        params: st.params.clone(),
+                        m: st.m.clone(),
+                        v: st.v.clone(),
+                        train_loss: loss,
+                    },
+                )?;
+                if opts.log_every > 0 {
+                    crate::info!("[{}] checkpoint at step {} -> {path:?}", case.name, step + 1);
+                }
+            }
         }
     }
     let final_metric = evaluate(backend, manifest, case, &ds, &st.params)?;
@@ -357,6 +435,70 @@ mod tests {
         assert_eq!(out.opt_m.len(), case.param_count);
         assert_eq!(out.opt_v.len(), case.param_count);
         assert!(out.opt_v.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn accumulated_training_runs_and_counts_optimizer_steps() {
+        use crate::runtime::make_backend;
+        let backend = make_backend("native").unwrap();
+        let (manifest, case) = tiny_manifest_and_case("accum");
+        let out = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(2),
+                accum: 3, // effective batch = 3 * case.batch per update
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.steps, 2, "steps count optimizer updates, not micro-batches");
+        assert_eq!(out.losses.len(), 2);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        let init = init_params(&case.params, case.param_count, manifest.seed);
+        assert_ne!(out.params, init, "accumulated updates must move parameters");
+    }
+
+    #[test]
+    fn periodic_checkpointing_writes_midrun_state() {
+        use crate::model::load_checkpoint;
+        use crate::runtime::make_backend;
+        let backend = make_backend("native").unwrap();
+        let (manifest, case) = tiny_manifest_and_case("ckpt_every");
+        let path = std::env::temp_dir().join("flare_ckpt_every_test.ckpt");
+        std::fs::remove_file(&path).ok();
+        let out = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(5),
+                ckpt_every: 2,
+                ckpt_path: Some(path.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // last periodic write happened at step 4 (steps 2 and 4)
+        let ck = load_checkpoint(&path).unwrap();
+        assert_eq!(ck.step, 4);
+        assert_eq!(ck.params.len(), case.param_count);
+        assert_eq!(ck.m.len(), case.param_count);
+        assert_ne!(ck.params, out.params, "mid-run state must predate the final step");
+        // a missing path with ckpt_every set is rejected up front
+        let bad = train_case(
+            backend.as_ref(),
+            &manifest,
+            &case,
+            &TrainOpts {
+                steps: Some(1),
+                ckpt_every: 1,
+                ..Default::default()
+            },
+        );
+        assert!(bad.is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

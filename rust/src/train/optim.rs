@@ -40,8 +40,27 @@ impl AdamW {
     /// and parameters in `state` in place.  `step` is 0-based (bias
     /// correction uses `t = step + 1`), matching the python train step.
     pub fn step(&self, state: &mut OptState, grad: &[f32], step: usize, lr: f64) {
-        assert_eq!(grad.len(), state.params.len(), "grad/param length mismatch");
-        let gnorm = grad.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt();
+        self.step_summed(state, grad, 1, step, lr);
+    }
+
+    /// [`AdamW::step`] on the **sum** of per-sample gradients over
+    /// `samples` samples.  The `1/samples` average is folded into the fused
+    /// element update's scale factor (in f64, together with the clip), so
+    /// no separate O(P) pre-scaling pass over the gradient buffer runs —
+    /// this is the entry the native gradient-accumulation path uses.
+    pub fn step_summed(
+        &self,
+        state: &mut OptState,
+        grad_sum: &[f32],
+        samples: usize,
+        step: usize,
+        lr: f64,
+    ) {
+        assert_eq!(grad_sum.len(), state.params.len(), "grad/param length mismatch");
+        let inv = 1.0 / samples.max(1) as f64;
+        // ‖g_avg‖ = ‖g_sum‖ / samples, so the clip factor of the averaged
+        // gradient comes straight off the summed norm
+        let gnorm = grad_sum.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt() * inv;
         let clip = (self.grad_clip / (gnorm + 1e-12)).min(1.0);
         let t = (step + 1) as f64;
         let bc1 = 1.0 - self.beta1.powf(t);
@@ -50,8 +69,8 @@ impl AdamW {
             &mut state.params,
             &mut state.m,
             &mut state.v,
-            grad,
-            clip,
+            grad_sum,
+            clip * inv,
             self.beta1,
             self.beta2,
             self.eps,
@@ -102,6 +121,24 @@ mod tests {
             AdamW::default().step(&mut b, &grad, s, 1e-3);
         }
         assert_eq!(a.params, b.params);
+        assert_eq!(a.v, b.v);
+    }
+
+    #[test]
+    fn step_summed_matches_prescaled_average() {
+        // summed gradients over 4 samples must produce the same update as
+        // averaging first (1/4 is exact in f32/f64, so this is bitwise)
+        let sum = vec![0.4f32, -1.2, 2.0];
+        let avg: Vec<f32> = sum.iter().map(|g| g / 4.0).collect();
+        let mut a = OptState::new(vec![0.1, 0.2, -0.3]);
+        let mut b = OptState::new(vec![0.1, 0.2, -0.3]);
+        let opt = AdamW::default();
+        for s in 0..3 {
+            opt.step_summed(&mut a, &sum, 4, s, 1e-3);
+            opt.step(&mut b, &avg, s, 1e-3);
+        }
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.m, b.m);
         assert_eq!(a.v, b.v);
     }
 

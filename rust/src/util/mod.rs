@@ -7,6 +7,8 @@
 
 pub mod json;
 pub mod log;
+pub mod name;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod workspace;

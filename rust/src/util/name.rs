@@ -1,0 +1,108 @@
+//! Stack-allocated parameter-name formatting.
+//!
+//! The model forward/backward address parameters by name
+//! (`"blk3.mix.kproj.w0"`); building those names with `format!` put dozens
+//! of transient `String` allocations on every train step.  [`NameBuf`]
+//! formats into a fixed on-stack byte buffer instead, so name construction
+//! is allocation-free (part of the zero-transient-allocation contract
+//! pinned by `rust/tests/alloc_steady.rs`).
+//!
+//! Use through the [`crate::pname!`] macro:
+//!
+//! ```ignore
+//! let w = params.get(pname!("{prefix}.w{l}").as_str())?;
+//! ```
+
+use std::fmt::{self, Write};
+
+/// Byte capacity of a [`NameBuf`].  The longest spec name today is
+/// ~24 bytes (`"blk10.mix.kproj.wout"`); 128 leaves generous headroom for
+/// user-supplied prefixes.
+pub const NAME_CAP: usize = 128;
+
+/// A parameter name formatted into a fixed stack buffer.
+pub struct NameBuf {
+    buf: [u8; NAME_CAP],
+    len: usize,
+}
+
+impl Write for NameBuf {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        let end = self.len.checked_add(s.len()).filter(|&e| e <= NAME_CAP);
+        let Some(end) = end else {
+            return Err(fmt::Error);
+        };
+        self.buf[self.len..end].copy_from_slice(s.as_bytes());
+        self.len = end;
+        Ok(())
+    }
+}
+
+impl NameBuf {
+    /// Format a name; panics if it exceeds [`NAME_CAP`] bytes (parameter
+    /// names are spec-internal and short — an overflow is a programming
+    /// error, not an input condition).
+    pub fn format(args: fmt::Arguments<'_>) -> NameBuf {
+        let mut b = NameBuf {
+            buf: [0u8; NAME_CAP],
+            len: 0,
+        };
+        b.write_fmt(args)
+            .unwrap_or_else(|_| panic!("parameter name longer than {NAME_CAP} bytes"));
+        b
+    }
+
+    pub fn as_str(&self) -> &str {
+        // SAFETY: the buffer is only ever filled through write_str with
+        // whole &str chunks, so 0..len is a concatenation of valid UTF-8
+        unsafe { std::str::from_utf8_unchecked(&self.buf[..self.len]) }
+    }
+}
+
+impl std::ops::Deref for NameBuf {
+    type Target = str;
+    fn deref(&self) -> &str {
+        self.as_str()
+    }
+}
+
+/// `format!` for parameter names without the heap: expands to a [`NameBuf`]
+/// temporary (lives to the end of the enclosing statement).
+#[macro_export]
+macro_rules! pname {
+    ($($arg:tt)*) => {
+        $crate::util::name::NameBuf::format(core::format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_like_format() {
+        let prefix = "blk3.mix";
+        let l = 2usize;
+        let n = pname!("{prefix}.kproj.w{l}");
+        assert_eq!(n.as_str(), format!("{prefix}.kproj.w{l}"));
+    }
+
+    #[test]
+    fn plain_and_numeric() {
+        assert_eq!(pname!("embed").as_str(), "embed");
+        assert_eq!(pname!("blk{}.ln{}.gamma", 10, 2).as_str(), "blk10.ln2.gamma");
+    }
+
+    #[test]
+    #[should_panic(expected = "parameter name longer")]
+    fn overflow_panics() {
+        let long = "x".repeat(NAME_CAP + 1);
+        let _ = pname!("{long}");
+    }
+
+    #[test]
+    fn exact_capacity_fits() {
+        let exact = "y".repeat(NAME_CAP);
+        assert_eq!(pname!("{exact}").as_str(), exact);
+    }
+}

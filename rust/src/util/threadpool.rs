@@ -88,15 +88,23 @@ impl Drop for ThreadPool {
 /// `FLARE_NATIVE_THREADS`, then the machine's available parallelism.
 /// `FLARE_THREADS=1` is the CI determinism leg — every parallel path must
 /// produce bitwise-identical results under it.
+///
+/// Resolved once per process: the GEMM dispatcher consults this on every
+/// call, and `std::env::var` allocates (which would break the hot path's
+/// zero-allocation contract) besides costing a lock.
 pub fn default_threads() -> usize {
-    for var in ["FLARE_THREADS", "FLARE_NATIVE_THREADS"] {
-        if let Ok(v) = std::env::var(var) {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        for var in ["FLARE_THREADS", "FLARE_NATIVE_THREADS"] {
+            if let Ok(v) = std::env::var(var) {
+                if let Ok(n) = v.parse::<usize>() {
+                    return n.max(1);
+                }
             }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Apply `f` to every index in `0..n` across `threads` OS threads and
@@ -140,6 +148,76 @@ where
         }
     });
     out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Split `data` into consecutive `chunk_len` pieces (the last may be
+/// short) and run `f(chunk_index, chunk)` on each across scoped worker
+/// threads, one per chunk.  The in-place sibling of [`parallel_map`]: the
+/// blocked GEMM uses it to write output M-panels directly into the caller's
+/// buffer instead of allocating per-panel chunks and stitching them.  A
+/// single chunk runs inline on the caller (which then keeps its non-worker
+/// status, so nested kernels may still fan out).
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    if chunk_len >= data.len() {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
+                f(i, chunk);
+            });
+        }
+    });
+}
+
+/// Fan indices `0..n` out over `shards.len()` workers with a fixed
+/// contiguous assignment (worker `w` owns `[w·⌈n/W⌉, (w+1)·⌈n/W⌉)`); each
+/// worker has exclusive `&mut` access to its shard and visits its indices
+/// in order.  The gradient fan-out uses this to accumulate per-sample
+/// gradients **in place** into pre-allocated shards (reduced tree-wise by
+/// the caller) instead of allocating one gradient buffer per sample.
+///
+/// With a single shard the loop runs inline on the caller in index order —
+/// the bitwise-deterministic `FLARE_THREADS=1` path.
+pub fn parallel_sharded<S, F>(n: usize, shards: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(&mut S, usize) + Sync,
+{
+    if n == 0 || shards.is_empty() {
+        return;
+    }
+    if shards.len() == 1 {
+        let shard = &mut shards[0];
+        for i in 0..n {
+            f(shard, i);
+        }
+        return;
+    }
+    let per = n.div_ceil(shards.len());
+    std::thread::scope(|scope| {
+        for (w, shard) in shards.iter_mut().enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
+                let i0 = w * per;
+                for i in i0..n.min(i0 + per) {
+                    f(shard, i);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -186,5 +264,57 @@ mod tests {
     fn parallel_map_more_threads_than_items() {
         let out = parallel_map(3, 16, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_covers_all_in_place() {
+        let mut data: Vec<usize> = vec![0; 103];
+        parallel_chunks_mut(&mut data, 10, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 10 + j + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i + 1, "index {i}");
+        }
+        // single chunk runs inline
+        let mut small = vec![0usize; 4];
+        parallel_chunks_mut(&mut small, 100, |ci, chunk| {
+            assert_eq!(ci, 0);
+            chunk.fill(7);
+        });
+        assert_eq!(small, vec![7; 4]);
+        parallel_chunks_mut(&mut [] as &mut [usize], 4, |_, _| panic!("empty"));
+    }
+
+    #[test]
+    fn parallel_sharded_partitions_indices() {
+        for workers in [1usize, 2, 3, 8] {
+            let n = 11usize;
+            let mut shards: Vec<Vec<usize>> = vec![Vec::new(); workers];
+            parallel_sharded(n, &mut shards, |shard, i| shard.push(i));
+            let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "workers={workers}");
+            // contiguous ownership: each shard is sorted and gap-free
+            for s in &shards {
+                for w in s.windows(2) {
+                    assert_eq!(w[1], w[0] + 1);
+                }
+            }
+        }
+        let mut empty_shards = [0usize; 2];
+        parallel_sharded(0, &mut empty_shards, |_, _| panic!("n == 0 must not call f"));
+    }
+
+    #[test]
+    fn workers_see_parallel_flag() {
+        let mut shards = vec![false; 4];
+        parallel_sharded(4, &mut shards, |s, _| *s = in_parallel_worker());
+        assert!(shards.iter().all(|&v| v), "workers must set the nested-GEMM guard");
+        // single-shard inline path keeps the caller's status
+        let mut one = vec![true];
+        parallel_sharded(1, &mut one, |s, _| *s = in_parallel_worker());
+        assert!(!one[0], "inline path must not mark the caller as a worker");
     }
 }

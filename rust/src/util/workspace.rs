@@ -1,0 +1,300 @@
+//! Size-classed scratch-buffer reuse for the train/serve hot paths.
+//!
+//! One train step used to perform ~45 transient `Vec<f32>` allocations
+//! (activations, score tiles, gradient buffers); after warmup they all come
+//! from this pool instead.  [`take`] hands out a zero-filled [`WsBuf`] whose
+//! `Drop` returns the backing storage to the pool, so steady-state forward +
+//! backward passes perform **zero transient heap allocations** (pinned by
+//! `rust/tests/alloc_steady.rs` with a counting global allocator).
+//!
+//! Structure:
+//!
+//! * **Per-thread free lists, size-classed.**  Buffer capacities are rounded
+//!   up to a power of two (min [`MIN_CLASS`]); each thread keeps a free list
+//!   per class behind a `thread_local`, so the common take/drop cycle is a
+//!   plain `Vec` pop/push with no synchronization.
+//! * **Global reservoir.**  [`crate::util::threadpool::parallel_map`] and
+//!   friends spawn *fresh* scoped threads per call, so a purely thread-local
+//!   pool would never warm up across train steps.  When a worker thread
+//!   exits, its free lists drain into a `Mutex`-guarded reservoir; a take
+//!   that misses locally refills from the reservoir before touching the
+//!   allocator.
+//! * **Test hook.**  [`pool_allocs`] counts buffers actually allocated from
+//!   the heap (pool misses).  A steady-state step must not move it.
+//!
+//! Buffers are always returned zero-filled: callers accumulate into them
+//! (`gemm_*_acc` semantics), and zeroing also guarantees that reuse cannot
+//! leak state between steps — two identical steps stay bitwise equal.
+
+use std::cell::{Cell, RefCell};
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+/// Smallest pooled capacity; anything shorter shares this class.
+const MIN_CLASS: usize = 64;
+/// Number of size classes: class `i` holds capacity `MIN_CLASS << i`
+/// (class 25 = 2 Gi floats).  Larger requests bypass the pool.
+const NCLASSES: usize = 26;
+/// Free-list length bound per class (caps reservoir growth when a workload
+/// burst retires many buffers at once).
+const MAX_CACHED: usize = 128;
+
+struct Pool {
+    classes: [Vec<Vec<f32>>; NCLASSES],
+}
+
+impl Pool {
+    const fn new() -> Pool {
+        Pool {
+            classes: [const { Vec::new() }; NCLASSES],
+        }
+    }
+}
+
+impl Drop for Pool {
+    // worker threads are short-lived (one scoped spawn per parallel
+    // section): park their warmed buffers in the reservoir so the next
+    // step's workers start warm instead of re-allocating
+    fn drop(&mut self) {
+        if let Ok(mut res) = RESERVOIR.lock() {
+            for (class, list) in self.classes.iter_mut().enumerate() {
+                let room = MAX_CACHED.saturating_sub(res.classes[class].len());
+                for buf in list.drain(..).take(room) {
+                    res.classes[class].push(buf);
+                }
+            }
+        }
+    }
+}
+
+static RESERVOIR: Mutex<Pool> = Mutex::new(Pool::new());
+
+thread_local! {
+    static POOL: RefCell<Pool> = const { RefCell::new(Pool::new()) };
+    // per-thread so tests can assert on it without racing the parallel
+    // test harness (the alloc_steady integration test additionally pins
+    // the global picture with a counting global allocator)
+    static POOL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn count_miss() {
+    let _ = POOL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Size class for a requested length, or `None` when it is too large to
+/// pool (handed straight to the allocator, freed on drop).
+fn class_of(len: usize) -> Option<usize> {
+    let cap = len.max(MIN_CLASS).next_power_of_two();
+    let class = (cap.trailing_zeros() - MIN_CLASS.trailing_zeros()) as usize;
+    (class < NCLASSES).then_some(class)
+}
+
+fn class_capacity(class: usize) -> usize {
+    MIN_CLASS << class
+}
+
+/// Heap allocations the pool has performed **on the calling thread** (its
+/// miss count) — the steady-state test hook: two identical train steps must
+/// leave it unchanged after the first.
+pub fn pool_allocs() -> u64 {
+    POOL_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// A zero-filled scratch buffer of the requested length.  Steady state this
+/// is a thread-local free-list pop plus an O(len) zero fill; only a cold
+/// pool (or a request past the largest size class) touches the allocator.
+pub fn take(len: usize) -> WsBuf {
+    if len == 0 {
+        return WsBuf { buf: Vec::new() };
+    }
+    let mut buf = match class_of(len) {
+        Some(class) => POOL
+            .try_with(|p| p.borrow_mut().classes[class].pop())
+            .ok()
+            .flatten()
+            .or_else(|| RESERVOIR.lock().ok().and_then(|mut r| r.classes[class].pop()))
+            .unwrap_or_else(|| {
+                count_miss();
+                Vec::with_capacity(class_capacity(class))
+            }),
+        None => {
+            count_miss();
+            Vec::with_capacity(len)
+        }
+    };
+    buf.clear();
+    buf.resize(len, 0.0); // within capacity: zero fill, no allocation
+    WsBuf { buf }
+}
+
+/// An `[f32]` scratch buffer on loan from the pool; `Drop` returns the
+/// backing storage.  Derefs to `[f32]`, so it passes anywhere a slice does.
+pub struct WsBuf {
+    buf: Vec<f32>,
+}
+
+impl WsBuf {
+    /// Escape the pool: hand the backing `Vec` to the caller.  The storage
+    /// is *not* returned on drop, so reserve this for cold paths that must
+    /// hand ownership across an API boundary (e.g. spectral key export).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Drop for WsBuf {
+    fn drop(&mut self) {
+        if self.buf.capacity() == 0 {
+            return;
+        }
+        let buf = std::mem::take(&mut self.buf);
+        // only pool buffers whose capacity still matches a class (into_vec
+        // leaves an empty Vec behind; foreign capacities would poison the
+        // class invariant)
+        let Some(class) = class_of(buf.capacity()) else {
+            return;
+        };
+        if class_capacity(class) != buf.capacity() {
+            return;
+        }
+        let mut slot = Some(buf);
+        let _ = POOL.try_with(|p| {
+            let mut p = p.borrow_mut();
+            if p.classes[class].len() < MAX_CACHED {
+                p.classes[class].push(slot.take().expect("drop slot"));
+            }
+        });
+        // thread-local list full, or TLS already torn down (drop during
+        // thread exit): park the buffer in the reservoir instead
+        if let Some(buf) = slot.take() {
+            if let Ok(mut r) = RESERVOIR.lock() {
+                if r.classes[class].len() < MAX_CACHED {
+                    r.classes[class].push(buf);
+                }
+            }
+        }
+    }
+}
+
+impl Deref for WsBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for WsBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl AsRef<[f32]> for WsBuf {
+    fn as_ref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::fmt::Debug for WsBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self.buf, f)
+    }
+}
+
+impl PartialEq for WsBuf {
+    fn eq(&self, other: &WsBuf) -> bool {
+        self.buf == other.buf
+    }
+}
+
+impl PartialEq<Vec<f32>> for WsBuf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        &self.buf == other
+    }
+}
+
+impl PartialEq<WsBuf> for Vec<f32> {
+    fn eq(&self, other: &WsBuf) -> bool {
+        self == &other.buf
+    }
+}
+
+impl PartialEq<[f32]> for WsBuf {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.buf.as_slice() == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_reuses() {
+        let mut a = take(100);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[3] = 7.0;
+        drop(a);
+        let misses = pool_allocs();
+        let b = take(100); // same class: must come back from the pool, zeroed
+        assert_eq!(pool_allocs(), misses, "reuse must not touch the allocator");
+        assert!(b.iter().all(|&v| v == 0.0), "pooled buffer not re-zeroed");
+    }
+
+    #[test]
+    fn class_rounding() {
+        assert_eq!(class_of(1), Some(0));
+        assert_eq!(class_of(64), Some(0));
+        assert_eq!(class_of(65), Some(1));
+        assert_eq!(class_of(128), Some(1));
+        assert_eq!(class_of(129), Some(2));
+        assert_eq!(class_of(usize::MAX / 2), None);
+    }
+
+    #[test]
+    fn zero_len_is_free() {
+        let misses = pool_allocs();
+        let b = take(0);
+        assert!(b.is_empty());
+        drop(b);
+        assert_eq!(pool_allocs(), misses);
+    }
+
+    #[test]
+    fn into_vec_escapes_pool() {
+        let b = take(32);
+        let v = b.into_vec();
+        assert_eq!(v.len(), 32);
+    }
+
+    #[test]
+    fn cross_thread_drop_reaches_reservoir() {
+        // take on a worker thread, let the thread die: its pool must drain
+        // into the reservoir so later takes (any thread) can reuse it.
+        // An oddball size keeps the class private to this test even though
+        // the whole suite shares the reservoir.
+        const LEN: usize = 3_000_000;
+        std::thread::spawn(|| {
+            let b = take(LEN);
+            drop(b);
+        })
+        .join()
+        .unwrap();
+        let found = RESERVOIR
+            .lock()
+            .map(|r| r.classes[class_of(LEN).unwrap()].iter().any(|b| b.capacity() >= LEN))
+            .unwrap_or(false);
+        assert!(found, "worker buffers must land in the reservoir");
+    }
+
+    #[test]
+    fn equality_impls() {
+        let mut a = take(3);
+        a.copy_from_slice(&[1.0, 2.0, 3.0]);
+        let v = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(a, v);
+        assert_eq!(v, a);
+        assert_eq!(a, *v.as_slice());
+    }
+}

@@ -1,0 +1,141 @@
+//! The zero-transient-allocation gate for the train hot path: after
+//! warmup, one full forward + backward (`loss_grad_fields` /
+//! `loss_grad_tokens`) must perform **zero** heap allocations — every
+//! activation, score tile and gradient buffer comes from the workspace
+//! pool, and parameter names format on the stack.
+//!
+//! Measured with a counting global allocator wrapping `System`.  This file
+//! deliberately holds a single `#[test]`: the counter is process-global,
+//! so a concurrent test allocating on another thread would make the
+//! steady-state window flaky.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_forward_backward_is_allocation_free() {
+    use flare::config::ModelCfg;
+    use flare::model::backward::{loss_grad_fields, loss_grad_tokens, GradTable};
+    use flare::model::forward::ParamTable;
+    use flare::model::{build_spec, index_by_name, init_params};
+    use flare::util::rng::Rng;
+
+    // ---- regression path ---------------------------------------------
+    let cfg = ModelCfg {
+        mixer: "flare".into(),
+        n: 16,
+        d_in: 3,
+        d_out: 1,
+        c: 8,
+        heads: 2,
+        m: 4,
+        blocks: 2,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    };
+    let (entries, total) = build_spec(&cfg).unwrap();
+    let map = index_by_name(&entries);
+    let params = init_params(&entries, total, 11);
+    let p = ParamTable::new(&params, &map);
+    let mut rng = Rng::new(13);
+    let x: Vec<f32> = (0..cfg.n * cfg.d_in).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..cfg.n * cfg.d_out).map(|_| rng.normal() as f32).collect();
+    let mut gflat = vec![0.0f32; total];
+
+    // warmup: populates the workspace pool, the GEMM pack scratch, the
+    // SIMD-dispatch OnceLocks and the thread-budget cache
+    for _ in 0..3 {
+        gflat.fill(0.0);
+        let mut g = GradTable::new(&mut gflat, &map);
+        loss_grad_fields(&cfg, &p, &mut g, &x, &y).unwrap();
+    }
+
+    gflat.fill(0.0);
+    let before = allocs();
+    let loss = {
+        let mut g = GradTable::new(&mut gflat, &map);
+        loss_grad_fields(&cfg, &p, &mut g, &x, &y).unwrap()
+    };
+    let after = allocs();
+    assert!(loss.is_finite());
+    assert!(gflat.iter().any(|&v| v != 0.0), "no gradient accumulated");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward+backward (fields) performed heap allocations"
+    );
+
+    // ---- classification path -----------------------------------------
+    let cfg_cls = ModelCfg {
+        n: 12,
+        d_in: 0,
+        d_out: 0,
+        blocks: 1,
+        task: "classification".into(),
+        vocab: 11,
+        num_classes: 5,
+        ..cfg
+    };
+    let (entries_cls, total_cls) = build_spec(&cfg_cls).unwrap();
+    let map_cls = index_by_name(&entries_cls);
+    let params_cls = init_params(&entries_cls, total_cls, 7);
+    let p_cls = ParamTable::new(&params_cls, &map_cls);
+    let tokens: Vec<i32> = (0..cfg_cls.n as i32).map(|i| i % cfg_cls.vocab as i32).collect();
+    let mut gflat_cls = vec![0.0f32; total_cls];
+
+    for _ in 0..3 {
+        gflat_cls.fill(0.0);
+        let mut g = GradTable::new(&mut gflat_cls, &map_cls);
+        loss_grad_tokens(&cfg_cls, &p_cls, &mut g, &tokens, 3).unwrap();
+    }
+
+    gflat_cls.fill(0.0);
+    let before = allocs();
+    let loss = {
+        let mut g = GradTable::new(&mut gflat_cls, &map_cls);
+        loss_grad_tokens(&cfg_cls, &p_cls, &mut g, &tokens, 3).unwrap()
+    };
+    let after = allocs();
+    assert!(loss.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward+backward (tokens) performed heap allocations"
+    );
+}

@@ -1,0 +1,235 @@
+//! Gradient-accumulation equivalence and workspace-reuse determinism for
+//! the native training path:
+//!
+//! * summing `grad_batch` over 4 micro-batches of 8 must match one
+//!   `grad_batch` over the same 32 samples (different shard/summation
+//!   order → tolerance, not bitwise);
+//! * a full `train_case` run with `--accum 4` at batch 8 must land within
+//!   tolerance of batch 32 after the optimizer step;
+//! * two identical train steps through the reused workspace pool must be
+//!   **bitwise** equal (buffer reuse may not leak state between steps).
+
+use flare::config::{CaseCfg, Manifest, ModelCfg};
+use flare::model::{build_spec, init_params};
+use flare::runtime::{make_backend, BatchInput, BatchTarget, OptState};
+use flare::train::{train_case, TrainOpts};
+use flare::util::rng::Rng;
+
+fn model() -> ModelCfg {
+    ModelCfg {
+        mixer: "flare".into(),
+        n: 16,
+        d_in: 3,
+        d_out: 1,
+        c: 8,
+        heads: 2,
+        m: 4,
+        blocks: 1,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    }
+}
+
+fn case_with_batch(name: &str, batch: usize, train: usize) -> CaseCfg {
+    let model = model();
+    let (entries, param_count) = build_spec(&model).unwrap();
+    CaseCfg {
+        name: name.into(),
+        group: "test".into(),
+        dataset: "darcy".into(),
+        // test split must cover the largest batch used here (train_case
+        // evaluates one full test batch at the end of every run)
+        dataset_meta: flare::util::json::parse(&format!(
+            r#"{{"kind":"darcy","n":16,"grid":4,"train":{train},"test":32}}"#
+        ))
+        .unwrap(),
+        batch,
+        train_steps: 4,
+        lr: 1e-3,
+        model,
+        param_count,
+        artifacts: Default::default(),
+        params: entries,
+    }
+}
+
+fn manifest(tag: &str) -> Manifest {
+    let dir = std::env::temp_dir().join(format!("flare_train_accum_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"seed": 5, "cases": [], "mixers": [], "layers": []}"#,
+    )
+    .unwrap();
+    Manifest::load(&dir).unwrap()
+}
+
+fn max_rel_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let (x, y) = (x as f64, y as f64);
+            (x - y).abs() / x.abs().max(y.abs()).max(1e-6)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn accumulated_micro_batches_match_one_large_batch_gradient() {
+    let backend = make_backend("native").unwrap();
+    let m = manifest("grad");
+    let case8 = case_with_batch("accum8", 8, 64);
+    let case32 = case_with_batch("accum32", 32, 64);
+    let params = init_params(&case8.params, case8.param_count, m.seed);
+
+    // one fixed pool of 32 samples, shared by both splits
+    let mut rng = Rng::new(99);
+    let x: Vec<f32> = (0..32 * 16 * 3).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..32 * 16).map(|_| rng.normal() as f32).collect();
+
+    let mut grad_acc = vec![0.0f32; case8.param_count];
+    let mut loss_acc = 0.0f64;
+    let mut samples_acc = 0usize;
+    for micro in 0..4 {
+        let xs = &x[micro * 8 * 16 * 3..(micro + 1) * 8 * 16 * 3];
+        let ys = &y[micro * 8 * 16..(micro + 1) * 8 * 16];
+        let (ls, ns) = backend
+            .grad_batch(
+                &m,
+                &case8,
+                &params,
+                BatchInput::Fields(xs),
+                BatchTarget::Fields(ys),
+                &mut grad_acc,
+            )
+            .unwrap();
+        loss_acc += ls;
+        samples_acc += ns;
+    }
+    assert_eq!(samples_acc, 32);
+
+    let mut grad_big = vec![0.0f32; case32.param_count];
+    let (loss_big, samples_big) = backend
+        .grad_batch(
+            &m,
+            &case32,
+            &params,
+            BatchInput::Fields(&x),
+            BatchTarget::Fields(&y),
+            &mut grad_big,
+        )
+        .unwrap();
+    assert_eq!(samples_big, 32);
+
+    // same 32 per-sample gradients, summed in different orders
+    let rel = max_rel_diff(&grad_acc, &grad_big);
+    assert!(rel < 1e-4, "accumulated vs large-batch gradient: max rel diff {rel:.2e}");
+    assert!(
+        (loss_acc - loss_big).abs() < 1e-9 * loss_big.abs().max(1.0),
+        "loss sums differ: {loss_acc} vs {loss_big}"
+    );
+}
+
+#[test]
+fn train_case_accum4_matches_batch32_after_one_step() {
+    let backend = make_backend("native").unwrap();
+    let m = manifest("step");
+    // same sample_seed → the batch-8 sampler's four next(8) draws are the
+    // batch-32 sampler's one next(32), in order
+    let case8 = case_with_batch("step8", 8, 64);
+    let case32 = case_with_batch("step32", 32, 64);
+    let out8 = train_case(
+        backend.as_ref(),
+        &m,
+        &case8,
+        &TrainOpts {
+            steps: Some(1),
+            accum: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let out32 = train_case(
+        backend.as_ref(),
+        &m,
+        &case32,
+        &TrainOpts {
+            steps: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // compare the AdamW moments, which are proportional to the averaged
+    // clipped gradient: params after one step are all ±lr-sized and would
+    // amplify a last-ulp summation difference into a sign flip near zero
+    let rel_m = max_rel_diff(&out8.opt_m, &out32.opt_m);
+    assert!(rel_m < 1e-3, "accum-4/batch-8 vs batch-32 first moment: max rel diff {rel_m:.2e}");
+    assert!(
+        (out8.losses[0] - out32.losses[0]).abs() < 1e-7,
+        "step losses differ: {} vs {}",
+        out8.losses[0],
+        out32.losses[0]
+    );
+}
+
+#[test]
+fn workspace_reuse_keeps_train_steps_bitwise_deterministic() {
+    // two identical steps through the (now warm) workspace pool: pooled
+    // buffer reuse must not leak state — gradients, loss and updated
+    // parameters must be bitwise equal
+    let backend = make_backend("native").unwrap();
+    let m = manifest("determinism");
+    let case = case_with_batch("det", 4, 16);
+    let params = init_params(&case.params, case.param_count, m.seed);
+    let mut rng = Rng::new(1234);
+    let x: Vec<f32> = (0..4 * 16 * 3).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..4 * 16).map(|_| rng.normal() as f32).collect();
+
+    let run_grad = || {
+        let mut grad = vec![0.0f32; case.param_count];
+        let (loss, _) = backend
+            .grad_batch(
+                &m,
+                &case,
+                &params,
+                BatchInput::Fields(&x),
+                BatchTarget::Fields(&y),
+                &mut grad,
+            )
+            .unwrap();
+        (loss, grad)
+    };
+    let (loss_cold, grad_cold) = run_grad(); // cold pool: allocates buffers
+    let (loss_warm, grad_warm) = run_grad(); // warm pool: reuses them
+    let (loss_warm2, grad_warm2) = run_grad();
+    assert_eq!(loss_cold.to_bits(), loss_warm.to_bits(), "loss must be bitwise stable");
+    assert_eq!(loss_warm.to_bits(), loss_warm2.to_bits());
+    assert_eq!(grad_cold, grad_warm, "gradients must be bitwise stable across pool reuse");
+    assert_eq!(grad_warm, grad_warm2);
+
+    // and through the full optimizer step
+    let mut st_a = OptState::new(params.clone());
+    let mut st_b = OptState::new(params.clone());
+    for st in [&mut st_a, &mut st_b] {
+        backend
+            .train_step(
+                &m,
+                &case,
+                st,
+                0,
+                1e-3,
+                BatchInput::Fields(&x),
+                BatchTarget::Fields(&y),
+            )
+            .unwrap();
+    }
+    assert_eq!(st_a.params, st_b.params, "train_step must be deterministic");
+    assert_eq!(st_a.v, st_b.v);
+}

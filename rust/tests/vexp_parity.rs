@@ -1,0 +1,188 @@
+//! Parity gate for the vectorized polynomial exp (`linalg::vexp`): within
+//! 2 ulp of libm over `[-87, 87]` on both the scalar-lane and the slice
+//! (AVX2 when available) paths, defined edge behavior at ±inf/NaN and the
+//! overflow/flush thresholds, and batch-GELU consistency with the scalar
+//! lane used by the serving forward.
+
+use flare::linalg::vexp::{exp_f32, gelu_f32, gelu_grad_f32, vexp, vexp_affine, EXP_HI, EXP_LO};
+use flare::util::rng::Rng;
+
+/// Map a finite f32 onto a monotonic integer line (sign-magnitude to
+/// two's-complement) so ulp distance is an integer subtraction.
+fn ordered(x: f32) -> i64 {
+    let i = x.to_bits() as i32;
+    if i >= 0 {
+        i as i64
+    } else {
+        -((i & 0x7fff_ffff) as i64)
+    }
+}
+
+fn ulp_distance(a: f32, b: f32) -> i64 {
+    if a == b {
+        return 0; // covers +0 vs -0
+    }
+    (ordered(a) - ordered(b)).abs()
+}
+
+/// Deterministic test points: a dense sweep plus random fill over the
+/// accuracy-gated range, with extra density near 0 where exp ≈ 1.
+fn test_points() -> Vec<f32> {
+    let mut rng = Rng::new(0xE4B);
+    let mut xs: Vec<f32> = Vec::new();
+    let n = 60_000;
+    for i in 0..n {
+        xs.push(-87.0 + 174.0 * (i as f32) / (n as f32 - 1.0));
+    }
+    for _ in 0..60_000 {
+        xs.push((rng.normal() as f32) * 30.0);
+    }
+    for _ in 0..30_000 {
+        xs.push((rng.normal() as f32) * 0.1);
+    }
+    xs.retain(|x| x.is_finite() && x.abs() <= 87.0);
+    xs.extend_from_slice(&[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        87.0,
+        -87.0,
+        std::f32::consts::LN_2 / 2.0,
+        -std::f32::consts::LN_2 / 2.0,
+    ]);
+    xs
+}
+
+#[test]
+fn exp_f32_within_2_ulp_of_libm_over_pm87() {
+    let mut worst = 0i64;
+    let mut worst_x = 0.0f32;
+    for &x in &test_points() {
+        let got = exp_f32(x);
+        let want = x.exp();
+        let d = ulp_distance(got, want);
+        if d > worst {
+            worst = d;
+            worst_x = x;
+        }
+    }
+    assert!(worst <= 2, "worst ulp distance {worst} at x = {worst_x} (gate: 2)");
+}
+
+#[test]
+fn vexp_slice_within_2_ulp_of_libm_over_pm87() {
+    // the slice path takes the AVX2 kernel when available (or the
+    // autovectorized fallback under FLARE_NO_SIMD=1 / non-x86) — both must
+    // hold the same ulp gate, including the non-multiple-of-8 tail
+    let xs = test_points();
+    let mut buf = xs.clone();
+    vexp(&mut buf);
+    let mut worst = 0i64;
+    let mut worst_x = 0.0f32;
+    for (&x, &got) in xs.iter().zip(buf.iter()) {
+        let d = ulp_distance(got, x.exp());
+        if d > worst {
+            worst = d;
+            worst_x = x;
+        }
+    }
+    assert!(worst <= 2, "worst ulp distance {worst} at x = {worst_x} (gate: 2)");
+}
+
+#[test]
+fn edge_behavior_is_defined() {
+    // scalar lane
+    assert_eq!(exp_f32(f32::INFINITY), f32::INFINITY);
+    assert_eq!(exp_f32(f32::NEG_INFINITY), 0.0);
+    assert!(exp_f32(f32::NAN).is_nan());
+    assert_eq!(exp_f32(EXP_HI + 1.0), f32::INFINITY);
+    assert_eq!(exp_f32(EXP_LO - 1.0), 0.0, "below ln(min normal) flushes to zero");
+    assert_eq!(exp_f32(200.0), f32::INFINITY);
+    assert_eq!(exp_f32(-200.0), 0.0);
+    // slice path, all specials in one buffer (exercises the blend masks)
+    let mut buf = [
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        150.0,
+        -150.0,
+        0.0,
+        1.0,
+        -1.0,
+        0.5, // 9 lanes: one full 8-lane chunk + tail
+    ];
+    vexp(&mut buf);
+    assert_eq!(buf[0], f32::INFINITY);
+    assert_eq!(buf[1], 0.0);
+    assert!(buf[2].is_nan());
+    assert_eq!(buf[3], f32::INFINITY);
+    assert_eq!(buf[4], 0.0);
+    assert_eq!(buf[5], 1.0);
+    assert!(ulp_distance(buf[6], std::f32::consts::E) <= 2);
+    assert!(ulp_distance(buf[7], (-1.0f32).exp()) <= 2);
+    assert!(ulp_distance(buf[8], 0.5f32.exp()) <= 2);
+}
+
+#[test]
+fn vexp_affine_matches_composed_scalar() {
+    // exp(a·x + b)·post must agree with composing the pieces in f64
+    let mut rng = Rng::new(7);
+    let base: Vec<f32> = (0..1001).map(|_| rng.normal() as f32 * 4.0).collect();
+    for &(a, b, post) in &[(1.0f32, 0.0f32, 1.0f32), (0.125, -3.0, 1.0), (2.0, 1.5, 0.25)] {
+        let mut buf = base.clone();
+        let sum = vexp_affine(&mut buf, a, b, post);
+        let mut want_sum = 0.0f64;
+        for (&x, &got) in base.iter().zip(buf.iter()) {
+            let e = ((a as f64) * (x as f64) + b as f64).exp();
+            want_sum += e;
+            let want = (e * post as f64) as f32;
+            let tol = (want.abs() * 1e-5).max(1e-30);
+            assert!((got - want).abs() <= tol, "x={x} a={a} b={b}: {got} vs {want}");
+        }
+        let rel = ((sum as f64) - want_sum).abs() / want_sum.abs().max(1e-30);
+        assert!(rel < 1e-5, "sum {sum} vs {want_sum}");
+    }
+}
+
+#[test]
+fn softmax_rows_still_normalize_on_vexp() {
+    // end-to-end through the kernel entry: rows sum to 1 after the fused
+    // scale+softmax, for row widths straddling the 8-lane boundary
+    use flare::linalg::kernel::scale_softmax_rows;
+    let mut rng = Rng::new(21);
+    for cols in [1usize, 7, 8, 9, 64, 65] {
+        let rows = 5;
+        let mut s: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 10.0).collect();
+        scale_softmax_rows(&mut s, rows, cols, 0.37);
+        for (r, row) in s.chunks_exact(cols).enumerate() {
+            let sum: f64 = row.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "cols={cols} row {r}: sum {sum}");
+            assert!(row.iter().all(|&v| v >= 0.0));
+        }
+    }
+}
+
+#[test]
+fn batch_gelu_consistent_with_scalar_lane() {
+    // vgelu_add / vgelu_grad_mul (AVX2 when available) vs the scalar lane
+    // the serving forward uses; FMA reassociation allows a few ulp
+    use flare::linalg::vexp::{vgelu_add, vgelu_grad_mul};
+    let mut rng = Rng::new(33);
+    let t: Vec<f32> = (0..257).map(|_| rng.normal() as f32 * 3.0).collect();
+    let mut h = vec![0.0f32; t.len()];
+    vgelu_add(&mut h, &t);
+    for (&tv, &hv) in t.iter().zip(h.iter()) {
+        let want = gelu_f32(tv);
+        let tol = (want.abs() * 1e-6).max(1e-6);
+        assert!((hv - want).abs() <= tol, "gelu({tv}): {hv} vs {want}");
+    }
+    let dh: Vec<f32> = (0..257).map(|_| rng.normal() as f32).collect();
+    let mut dt = vec![0.0f32; t.len()];
+    vgelu_grad_mul(&mut dt, &dh, &t);
+    for ((&tv, &dhv), &dv) in t.iter().zip(dh.iter()).zip(dt.iter()) {
+        let want = dhv * gelu_grad_f32(tv);
+        let tol = (want.abs() * 1e-5).max(1e-6);
+        assert!((dv - want).abs() <= tol, "gelu'({tv})·{dhv}: {dv} vs {want}");
+    }
+}

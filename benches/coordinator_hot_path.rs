@@ -14,7 +14,7 @@ use flare::bench::{quick_mode, save_results, Bench, Table};
 use flare::config::{CaseCfg, Manifest, ModelCfg};
 use flare::coordinator::{Batcher, Server, ServerConfig};
 use flare::model::{build_spec, init_params};
-use flare::runtime::{default_backend, make_backend, BatchInput};
+use flare::runtime::{default_backend, make_backend, Backend, BatchInput};
 use flare::util::json::Json;
 
 /// A Darcy-sized FLARE case declared entirely in Rust (no manifest).
@@ -94,6 +94,22 @@ fn main() -> anyhow::Result<()> {
         m2.mean_ms() / case.batch as f64
     );
     all.push(m2);
+
+    // 2b. the zero-allocation serving entry: batched forward into a reused
+    // reply buffer on the persistent worker pool
+    let mut backend_mut = flare::runtime::NativeBackend::new();
+    let mut out = Vec::new();
+    let m2b = bench.run("native_forward_batch_into", || {
+        backend_mut
+            .forward_batch(&case, &params, BatchInput::Fields(&x), case.batch, &mut out)
+            .unwrap();
+    });
+    println!(
+        "native forward_batch (reused buffer): {:.2} ms/batch ({:.2} ms/request)",
+        m2b.mean_ms(),
+        m2b.mean_ms() / case.batch as f64
+    );
+    all.push(m2b);
 
     // 3. end-to-end serving vs raw execution (coordinator overhead)
     let manifest = Manifest::load(Manifest::default_dir());

@@ -7,7 +7,9 @@
 //! * a batch never mixes buckets,
 //! * a batch never exceeds `max_batch`,
 //! * requests flush in FIFO order within a bucket,
-//! * every submitted request is eventually flushed (conservation).
+//! * every submitted request is eventually flushed (conservation),
+//! * among ready buckets, the oldest head request is served first (a hot
+//!   bucket cannot starve a cold one past its deadline).
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -46,11 +48,22 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request; returns its id.  Steady state (bucket already
+    /// known) this allocates nothing — the name is only copied when a new
+    /// bucket first appears, keeping the serving engine's contended queue
+    /// lock free of allocator traffic.
     pub fn push(&mut self, bucket: &str, payload: T) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queues.entry(bucket.to_string()).or_default().push(Pending {
+        // contains_key + get_mut instead of a single `if let Some(q) =
+        // get_mut` with an insert in the else arm: the latter is the
+        // classic NLL-rejected borrow pattern, and `entry()` would
+        // re-allocate the key on every push
+        if !self.queues.contains_key(bucket) {
+            self.queues.insert(bucket.to_string(), Vec::new());
+        }
+        let q = self.queues.get_mut(bucket).expect("bucket queue just ensured");
+        q.push(Pending {
             id,
             payload,
             enqueued: Instant::now(),
@@ -69,17 +82,25 @@ impl<T> Batcher<T> {
     }
 
     /// Pop the next ready batch: any bucket at `max_batch`, or any bucket
-    /// whose oldest entry exceeded `max_wait`.  `now` injected for tests.
+    /// whose oldest entry exceeded `max_wait`.  Among ready buckets the one
+    /// whose head request has waited **longest** wins — a continuously full
+    /// (hot) bucket cannot starve a cold bucket whose deadline expired,
+    /// because the cold head keeps aging while the hot head is always
+    /// fresh.  `now` injected for tests.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
         let bucket = self
             .queues
             .iter()
-            .find(|(_, q)| {
+            .filter(|(_, q)| {
                 q.len() >= self.max_batch
                     || q.first()
                         .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
                         .unwrap_or(false)
             })
+            .min_by_key(|(_, q)| q.first().map(|p| p.enqueued))
+            // this clone IS the returned Batch's owned bucket name — one
+            // name allocation per pop is inherent to the Batch type, not
+            // avoidable bookkeeping
             .map(|(k, _)| k.clone())?;
         let q = self.queues.get_mut(&bucket).unwrap();
         let take = q.len().min(self.max_batch);
@@ -88,6 +109,17 @@ impl<T> Batcher<T> {
             self.queues.remove(&bucket);
         }
         Some(Batch { bucket, items })
+    }
+
+    /// Earliest flush deadline over all queued buckets (oldest entry +
+    /// `max_wait`), or `None` when nothing is queued.  The serving engine
+    /// sleeps until this instant when no batch is ready, so deadline
+    /// flushes fire on time without polling.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first().map(|p| p.enqueued + self.max_wait))
+            .min()
     }
 
     /// Drain everything regardless of deadlines (shutdown path).
@@ -161,6 +193,40 @@ mod tests {
         let mut sorted = ids.clone();
         sorted.sort_unstable();
         assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn oldest_ready_bucket_wins_over_hot_bucket() {
+        // "aaa" is continuously full (always ready by size); "zzz" holds a
+        // single older request past its deadline — it must be served first
+        // even though name order and readiness-by-size favour "aaa"
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_millis(5));
+        b.push("zzz", 0);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("aaa", 1);
+        b.push("aaa", 2);
+        let later = Instant::now() + Duration::from_millis(10);
+        let first = b.pop_ready(later).unwrap();
+        assert_eq!(first.bucket, "zzz", "expired cold bucket must not be starved");
+        let second = b.pop_ready(later).unwrap();
+        assert_eq!(second.bucket, "aaa");
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_entry() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5));
+        assert!(b.next_deadline().is_none());
+        let before = Instant::now();
+        b.push("a", 1);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("b", 2);
+        let dl = b.next_deadline().unwrap();
+        // the deadline belongs to the oldest entry ("a"), max_wait ahead
+        assert!(dl >= before + b.max_wait);
+        assert!(dl <= Instant::now() + b.max_wait);
+        let later = Instant::now() + Duration::from_millis(10);
+        while b.pop_ready(later).is_some() {}
+        assert!(b.next_deadline().is_none(), "drained batcher has no deadline");
     }
 
     #[test]

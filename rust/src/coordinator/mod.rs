@@ -1,17 +1,21 @@
 //! Layer-3 coordination: request routing, shape-bucketed dynamic batching,
-//! and the channel-fed executor thread that owns the execution backend.
+//! and the concurrent serving engine.
 //!
-//! Architecture (vLLM-router-style, adapted to shape-bucketed batching —
-//! the XLA backend is shape-specialized; the native backend reuses the same
-//! buckets so batches stay dense):
+//! Architecture (TGI/vLLM-router-style, adapted to shape-bucketed batching
+//! — the XLA backend is shape-specialized; the native backend reuses the
+//! same buckets so batches stay dense).  Request decode, routing and
+//! padding run on the submitting client threads; the executor thread owns
+//! the backend and executes batches on the persistent worker pool while
+//! clients accumulate the next batch:
 //!
 //! ```text
-//!   clients ──mpsc──▶ executor thread
-//!                      ├─ Router: pick (case, N) bucket, pad input
-//!                      ├─ Batcher: per-bucket queues, size/deadline flush
-//!                      ├─ Backend: native Rust forward or cached PJRT
-//!                      │           executables, one call per flushed batch
-//!                      └─ reply channels + metrics Registry
+//!   client threads ─route/pad─▶ shared Batcher (Mutex + Condvar)
+//!                                 │ size/deadline flush
+//!                                 ▼
+//!               executor thread: cached per-bucket workspaces
+//!                 ├─ Backend::forward_batch (zero-alloc when warm,
+//!                 │  fan-out on the persistent executor pool)
+//!                 └─ reply channels + metrics Registry
 //! ```
 
 pub mod batcher;
@@ -19,5 +23,5 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, Pending};
-pub use router::{Bucket, Router};
+pub use router::{Bucket, RouteError, Router};
 pub use server::{Response, Server, ServerConfig};

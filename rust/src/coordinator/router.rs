@@ -18,6 +18,45 @@ pub struct Bucket {
     pub batch: usize,
 }
 
+impl Bucket {
+    /// Truncate a padded per-sample output `[bucket.n, d_out]` back to `n`
+    /// points — the single implementation of the trim half of the
+    /// pad/trim contract ([`Router::pad_input`] is the pad half; the
+    /// serving engine calls this per reply).
+    pub fn trim(&self, y: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.n * self.d_out);
+        y[..n * self.d_out].to_vec()
+    }
+}
+
+/// A request that no bucket can serve — carries the offending point count
+/// and the available bucket sizes so clients get an actionable message
+/// instead of a bare "no bucket".
+#[derive(Debug, Clone)]
+pub struct RouteError {
+    /// point count of the rejected request
+    pub n: usize,
+    /// `(case, max points)` for every available bucket, ascending by size
+    pub available: Vec<(String, usize)>,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.available.is_empty() {
+            return write!(f, "request n={} rejected: no serving buckets are configured", self.n);
+        }
+        write!(f, "request n={} exceeds every serving bucket (available:", self.n)?;
+        for (i, (case, n)) in self.available.iter().enumerate() {
+            let sep = if i == 0 { " " } else { ", " };
+            write!(f, "{sep}{case} up to n={n}")?;
+        }
+        let max = self.available.iter().map(|(_, n)| *n).max().unwrap_or(0);
+        write!(f, "); split the request or resubmit with n <= {max}")
+    }
+}
+
+impl std::error::Error for RouteError {}
+
 /// Router over available buckets.
 #[derive(Debug, Clone, Default)]
 pub struct Router {
@@ -34,9 +73,13 @@ impl Router {
         &self.buckets
     }
 
-    /// Smallest bucket that fits `n` points (None if the request is too big).
-    pub fn route(&self, n: usize) -> Option<&Bucket> {
-        self.buckets.iter().find(|b| b.n >= n)
+    /// Smallest bucket that fits `n` points; an oversized request gets a
+    /// structured [`RouteError`] naming `n` and every available bucket.
+    pub fn route(&self, n: usize) -> Result<&Bucket, RouteError> {
+        self.buckets.iter().find(|b| b.n >= n).ok_or_else(|| RouteError {
+            n,
+            available: self.buckets.iter().map(|b| (b.case.clone(), b.n)).collect(),
+        })
     }
 
     /// Pad `x [n, d_in]` to `bucket.n` points by repeating the final point.
@@ -52,11 +95,6 @@ impl Router {
         out
     }
 
-    /// Truncate a padded output `[bucket.n, d_out]` back to `n` points.
-    pub fn trim_output(&self, bucket: &Bucket, y: &[f32], n: usize) -> Vec<f32> {
-        assert_eq!(y.len(), bucket.n * bucket.d_out);
-        y[..n * bucket.d_out].to_vec()
-    }
 }
 
 #[cfg(test)]
@@ -88,7 +126,23 @@ mod tests {
         assert_eq!(r.route(500).unwrap().case, "small");
         assert_eq!(r.route(1024).unwrap().case, "small");
         assert_eq!(r.route(1025).unwrap().case, "big");
-        assert!(r.route(4096).is_none());
+        assert!(r.route(4096).is_err());
+    }
+
+    #[test]
+    fn oversized_route_error_names_buckets() {
+        let r = mk_router();
+        let err = r.route(4096).unwrap_err();
+        assert_eq!(err.n, 4096);
+        assert_eq!(err.available.len(), 2);
+        let msg = err.to_string();
+        assert!(msg.contains("n=4096"), "message names the request size: {msg}");
+        assert!(msg.contains("small") && msg.contains("1024"), "message lists buckets: {msg}");
+        assert!(msg.contains("big") && msg.contains("2048"), "message lists buckets: {msg}");
+        assert!(msg.contains("n <= 2048"), "message suggests the largest fit: {msg}");
+        // empty router: still a structured, non-panicking message
+        let empty = Router::new(vec![]).route(1).unwrap_err();
+        assert!(empty.to_string().contains("no serving buckets"));
     }
 
     #[test]
@@ -108,7 +162,6 @@ mod tests {
 
     #[test]
     fn trim_inverts_pad_length() {
-        let r = mk_router();
         let b = Bucket {
             case: "t".into(),
             n: 4,
@@ -117,7 +170,7 @@ mod tests {
             batch: 1,
         };
         let y = vec![9.0, 8.0, 7.0, 6.0];
-        assert_eq!(r.trim_output(&b, &y, 2), vec![9.0, 8.0]);
+        assert_eq!(b.trim(&y, 2), vec![9.0, 8.0]);
     }
 
     #[test]

@@ -1,16 +1,43 @@
-//! The serving engine: a dedicated executor thread owns the execution
-//! backend (which may be the non-`Send` PJRT runtime); clients talk to it
-//! through channels.
+//! The concurrent serving engine.
 //!
-//!   client threads -> mpsc -> [executor thread: router -> batcher ->
-//!                              Backend::forward -> reply channels]
+//! The first-generation server ran everything — request decode, routing,
+//! padding, batching, execution, reply — on one executor thread, so client
+//! ingest stalled whenever a batch was being executed.  This version splits
+//! the pipeline so batch execution overlaps with batch accumulation:
+//!
+//! ```text
+//!   client threads ──route/pad──▶ shared Batcher (Mutex + Condvar)
+//!                                   │ ready batches (size or deadline)
+//!                                   ▼
+//!                      executor thread: gather into cached per-bucket
+//!                      workspaces → Backend::forward_batch (zero-alloc,
+//!                      persistent worker pool) → reply channels
+//! ```
+//!
+//! * **Routing and padding run on the submitting client's thread** (many
+//!   clients pad concurrently; the executor never touches raw requests).
+//!   Oversized requests fail fast with a structured
+//!   [`crate::coordinator::router::RouteError`] naming the available
+//!   buckets.
+//! * **The executor thread owns the backend** (which may be the non-`Send`
+//!   PJRT runtime) and per-bucket gather/reply workspaces, so a warmed
+//!   steady-state batch performs zero transient heap allocations inside
+//!   [`Backend::forward_batch`].
+//! * **While the executor runs a batch the lock is released**, so clients
+//!   keep filling the next batch — throughput is bounded by the kernel,
+//!   not the queue.
 //!
 //! Batches flush when full (`bucket.batch`) or when the oldest request has
-//! waited `max_wait` (latency/throughput knob).  All latency, batch-size and
-//! queue-depth series land in a `metrics::Registry`.
+//! waited `max_wait` (latency/throughput knob); the executor sleeps until
+//! exactly the next deadline (`Batcher::next_deadline`), no polling.  All
+//! latency, batch-size and queue-depth series land in a
+//! `metrics::Registry`.  Replies preserve per-client FIFO order: within a
+//! bucket the engine executes requests in submission order, and stamps
+//! every reply with an execution-order [`Response::seq`] so tests (and
+//! clients) can verify it.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -25,20 +52,26 @@ use crate::runtime::{default_backend, make_backend, Backend, BatchInput};
 #[derive(Debug)]
 pub struct Response {
     pub y: Vec<f32>,
+    /// enqueue-to-completion latency of this request (queue wait + batch
+    /// execution; the `exec_ms` metric series isolates the execution part)
     pub latency: Duration,
+    /// real (unpadded) number of requests in the executed batch
     pub batch_size: usize,
+    /// bucket (case) that served the request
     pub bucket: String,
+    /// execution-order stamp, incremented by the engine as replies are
+    /// emitted: a client's sequential submissions carry strictly ascending
+    /// values **iff** the engine executed them in submission order — the
+    /// observable the FIFO integration test pins
+    pub seq: u64,
 }
 
 struct Submit {
+    /// original (untrimmed) point count
     n: usize,
+    /// input padded to the bucket's static shape
     x: Vec<f32>,
     reply: mpsc::Sender<anyhow::Result<Response>>,
-}
-
-enum Msg {
-    Submit(Submit),
-    Shutdown,
 }
 
 /// Server configuration.
@@ -65,40 +98,155 @@ impl Default for ServerConfig {
     }
 }
 
+/// Queue state shared between client threads and the executor.
+struct EngineState {
+    batcher: Batcher<Submit>,
+    shutting_down: bool,
+    /// set by [`EngineGuard`] when the executor thread exits for ANY
+    /// reason (normal shutdown, startup failure, panic): submissions fail
+    /// fast instead of parking reply senders in a queue nobody drains
+    engine_dead: bool,
+}
+
+struct Shared {
+    state: Mutex<EngineState>,
+    /// signalled on every push and on shutdown
+    work_cv: Condvar,
+}
+
+impl Shared {
+    /// Lock the queue state, surviving poison: the state is a plain queue
+    /// mutated atomically under the lock, so a panicking engine thread
+    /// cannot leave it half-updated — and clients must still be able to
+    /// fail fast afterwards rather than propagate the poison.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, EngineState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Armed at executor startup; on ANY exit path (including unwind) it marks
+/// the engine dead and fails every parked request, restoring the
+/// pre-refactor fail-fast property (where the executor owned the request
+/// receiver, so its death disconnected every client).
+struct EngineGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for EngineGuard {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock_state();
+        st.engine_dead = true;
+        st.shutting_down = true;
+        let leftovers = st.batcher.drain_all();
+        drop(st);
+        for batch in leftovers {
+            for item in batch.items {
+                let _ = item.payload.reply.send(Err(anyhow::anyhow!(
+                    "serving engine terminated before executing this request"
+                )));
+            }
+        }
+        self.shared.work_cv.notify_all();
+    }
+}
+
 /// Handle to a running server.
 pub struct Server {
-    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    router: Router,
     join: Option<JoinHandle<anyhow::Result<()>>>,
     pub metrics: Arc<Registry>,
 }
 
 impl Server {
-    /// Start the executor thread; prepares every served case up front.
+    /// Start the executor thread; prepares every served case up front and
+    /// returns once the backend is ready (or failed).
     pub fn start(manifest_dir: std::path::PathBuf, cfg: ServerConfig) -> anyhow::Result<Server> {
-        let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Registry::new());
+        let shared = Arc::new(Shared {
+            state: Mutex::new(EngineState {
+                batcher: Batcher::new(1, cfg.max_wait),
+                shutting_down: false,
+                engine_dead: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<Vec<Bucket>>>();
+        let shared_thread = Arc::clone(&shared);
         let metrics_thread = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-
         let join = std::thread::Builder::new()
             .name("flare-executor".into())
-            .spawn(move || executor_main(manifest_dir, cfg, rx, ready_tx, metrics_thread))?;
+            .spawn(move || {
+                engine_main(manifest_dir, cfg, shared_thread, ready_tx, metrics_thread)
+            })?;
 
         // wait for backend preparation to finish (or fail) before returning
-        ready_rx
+        let buckets = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
+        {
+            // the executor thread sized the batcher off the served cases;
+            // mirror the largest execution batch here
+            let mut st = shared.lock_state();
+            st.batcher.max_batch = buckets.iter().map(|b| b.batch).max().unwrap_or(1).max(1);
+        }
         Ok(Server {
-            tx,
+            shared,
+            router: Router::new(buckets),
             join: Some(join),
             metrics,
         })
     }
 
-    /// Submit asynchronously; returns the reply channel.
+    /// Submit asynchronously; returns the reply channel.  Routing and
+    /// padding happen here, on the caller's thread — the executor only sees
+    /// shape-complete batch items.
     pub fn submit(&self, x: Vec<f32>, n: usize) -> mpsc::Receiver<anyhow::Result<Response>> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Submit(Submit { n, x, reply }));
+        let bucket = match self.router.route(n) {
+            Ok(b) => b,
+            Err(e) => {
+                let _ = reply.send(Err(anyhow::Error::from(e)));
+                return rx;
+            }
+        };
+        if n == 0 {
+            let _ = reply.send(Err(anyhow::anyhow!("empty request: n must be at least 1")));
+            return rx;
+        }
+        if x.len() != n * bucket.d_in {
+            let _ = reply.send(Err(anyhow::anyhow!(
+                "input length {} does not match n={n} points of d_in={} features",
+                x.len(),
+                bucket.d_in
+            )));
+            return rx;
+        }
+        let padded = self.router.pad_input(bucket, &x, n);
+        let queued = {
+            let mut st = self.shared.lock_state();
+            if st.engine_dead {
+                let _ = reply.send(Err(anyhow::anyhow!("serving engine is not running")));
+                return rx;
+            }
+            if st.shutting_down {
+                let _ = reply.send(Err(anyhow::anyhow!("server is shutting down")));
+                return rx;
+            }
+            st.batcher.push(&bucket.case, Submit { n, x: padded, reply });
+            // wake the (single) engine waiter only when this push changed
+            // what it is waiting for: a full batch, or a first entry whose
+            // deadline the engine has not scheduled yet — every other push
+            // is covered by the already-armed deadline sleep
+            let depth = st.batcher.depth(&bucket.case);
+            if depth >= st.batcher.max_batch || depth == 1 {
+                self.shared.work_cv.notify_one();
+            }
+            st.batcher.queued()
+        };
+        // metric bookkeeping (its own lock, may grow a series Vec) stays
+        // out of the queue critical section every client + engine contend on
+        self.metrics.record("queue_depth", queued as f64);
         rx
     }
 
@@ -111,36 +259,61 @@ impl Server {
 
     /// Graceful shutdown: drains queues, joins the executor.
     pub fn shutdown(mut self) -> anyhow::Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.begin_shutdown();
         if let Some(j) = self.join.take() {
             j.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
         }
         Ok(())
     }
+
+    fn begin_shutdown(&self) {
+        let mut st = self.shared.lock_state();
+        st.shutting_down = true;
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.begin_shutdown();
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
     }
 }
 
+/// One served case on the executor: immutable plan inputs plus the cached
+/// gather/reply workspaces that make steady-state batches allocation-free.
 struct BucketState {
     bucket: Bucket,
     case: CaseCfg,
     params: Vec<f32>,
+    /// gathered batch input `[batch * n * d_in]` (capacity persists)
+    ws_x: Vec<f32>,
+    /// batch output `[batch * n * d_out]` (capacity persists)
+    ws_y: Vec<f32>,
 }
 
-fn executor_main(
+/// What the executor pulled from the queue in one wait cycle.
+enum Work {
+    One(crate::coordinator::batcher::Batch<Submit>),
+    /// shutdown observed: the final leftovers, then exit
+    Final(Vec<crate::coordinator::batcher::Batch<Submit>>),
+}
+
+fn engine_main(
     manifest_dir: std::path::PathBuf,
     cfg: ServerConfig,
-    rx: mpsc::Receiver<Msg>,
-    ready_tx: mpsc::Sender<anyhow::Result<()>>,
+    shared: Arc<Shared>,
+    ready_tx: mpsc::Sender<anyhow::Result<Vec<Bucket>>>,
     metrics: Arc<Registry>,
 ) -> anyhow::Result<()> {
+    // from here on, ANY exit (error, panic, normal return) fails parked
+    // requests instead of stranding their reply channels
+    let _guard = EngineGuard {
+        shared: Arc::clone(&shared),
+    };
     // ---- startup: manifest, backend, prepare every served case ----------
     let setup = (|| -> anyhow::Result<(Box<dyn Backend>, Vec<BucketState>)> {
         // missing manifest.json -> builtin native cases, so a clean
@@ -175,14 +348,17 @@ fn executor_main(
                 },
                 case: case.clone(),
                 params: p,
+                ws_x: Vec::new(),
+                ws_y: Vec::new(),
             });
         }
         Ok((backend, states))
     })();
 
-    let (backend, states) = match setup {
+    let (mut backend, mut states) = match setup {
         Ok(v) => {
-            let _ = ready_tx.send(Ok(()));
+            let buckets = v.1.iter().map(|s| s.bucket.clone()).collect();
+            let _ = ready_tx.send(Ok(buckets));
             v
         }
         Err(e) => {
@@ -190,103 +366,130 @@ fn executor_main(
             return Ok(());
         }
     };
-    let router = Router::new(states.iter().map(|s| s.bucket.clone()).collect());
-    let max_batch = states.iter().map(|s| s.bucket.batch).max().unwrap_or(1);
-    let mut batcher: Batcher<Submit> = Batcher::new(max_batch, cfg.max_wait);
-    // per-bucket max batch differs; track it
-    let state_of = |case: &str| states.iter().find(|s| s.bucket.case == case).unwrap();
 
-    let mut shutting_down = false;
+    let mut exec_seq: u64 = 0;
     loop {
-        // 1. ingest messages (bounded wait so deadlines stay responsive)
-        let timeout = if batcher.queued() > 0 {
-            Duration::from_millis(1)
-        } else {
-            Duration::from_millis(50)
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Submit(s)) => match router.route(s.n) {
-                Some(b) => {
-                    let padded = router.pad_input(b, &s.x, s.n);
-                    let bucket_name = b.case.clone();
-                    batcher.push(
-                        &bucket_name,
-                        Submit {
-                            n: s.n,
-                            x: padded,
-                            reply: s.reply,
-                        },
-                    );
-                    metrics.record("queue_depth", batcher.queued() as f64);
+        // 1. wait for a ready batch; the lock is held only while waiting,
+        //    never while executing, so clients accumulate the next batch
+        //    concurrently with the current forward pass
+        let work = {
+            let mut st = shared.lock_state();
+            loop {
+                if let Some(batch) = st.batcher.pop_ready(Instant::now()) {
+                    break Work::One(batch);
                 }
-                None => {
-                    let _ = s
-                        .reply
-                        .send(Err(anyhow::anyhow!("no bucket fits n={}", s.n)));
+                if st.shutting_down {
+                    break Work::Final(st.batcher.drain_all());
                 }
-            },
-            Ok(Msg::Shutdown) => shutting_down = true,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
-        }
-
-        // 2. flush ready batches (everything on shutdown)
-        let ready = if shutting_down {
-            batcher.drain_all()
-        } else {
-            let mut v = Vec::new();
-            while let Some(b) = batcher.pop_ready(Instant::now()) {
-                v.push(b);
+                // sleep until the earliest flush deadline (or a push/shutdown
+                // notification); pop_ready above guarantees any deadline is
+                // still in the future
+                st = match st.batcher.next_deadline() {
+                    Some(deadline) => {
+                        let wait = deadline.saturating_duration_since(Instant::now());
+                        shared
+                            .work_cv
+                            .wait_timeout(st, wait)
+                            .unwrap_or_else(|p| p.into_inner())
+                            .0
+                    }
+                    None => shared.work_cv.wait(st).unwrap_or_else(|p| p.into_inner()),
+                };
             }
-            v
         };
-        for batch in ready {
-            let st = state_of(&batch.bucket);
-            let b = st.bucket.clone();
-            // split oversized batches down to the bucket's execution size
-            for chunk in batch.items.chunks(b.batch) {
-                let exec_t = Instant::now();
-                let real = chunk.len();
-                let mut x = Vec::with_capacity(b.batch * b.n * b.d_in);
+        // a panicking backend fails this batch (its un-replied senders
+        // drop during unwind, disconnecting exactly those clients) but
+        // must not kill the engine — later requests keep being served
+        match work {
+            Work::One(batch) => {
+                run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq)
+            }
+            Work::Final(rest) => {
+                for batch in rest {
+                    run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq);
+                }
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// [`execute_batch`] behind a panic barrier: a backend panic is recorded
+/// as an `exec_panics` metric tick instead of tearing the engine down.
+fn run_batch(
+    backend: &mut dyn Backend,
+    states: &mut [BucketState],
+    metrics: &Registry,
+    batch: crate::coordinator::batcher::Batch<Submit>,
+    exec_seq: &mut u64,
+) {
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_batch(backend, states, metrics, batch, exec_seq);
+    }));
+    if attempt.is_err() {
+        metrics.record("exec_panics", 1.0);
+    }
+}
+
+/// Execute one flushed batch on the bucket's cached workspaces and fan the
+/// per-request replies out.
+fn execute_batch(
+    backend: &mut dyn Backend,
+    states: &mut [BucketState],
+    metrics: &Registry,
+    batch: crate::coordinator::batcher::Batch<Submit>,
+    exec_seq: &mut u64,
+) {
+    let st = states
+        .iter_mut()
+        .find(|s| s.bucket.case == batch.bucket)
+        .expect("batch routed to a served bucket");
+    let (bn, d_in, d_out, bb) = (st.bucket.n, st.bucket.d_in, st.bucket.d_out, st.bucket.batch);
+    // split oversized flushes down to the bucket's execution batch
+    for chunk in batch.items.chunks(bb.max(1)) {
+        let exec_t = Instant::now();
+        let real = chunk.len();
+        st.ws_x.clear();
+        for item in chunk {
+            st.ws_x.extend_from_slice(&item.payload.x);
+        }
+        // pad the batch dimension with zeros
+        st.ws_x.resize(bb * bn * d_in, 0.0);
+        let result = backend.forward_batch(
+            &st.case,
+            &st.params,
+            BatchInput::Fields(&st.ws_x),
+            bb,
+            &mut st.ws_y,
+        );
+        match result {
+            Ok(()) => {
+                let per = bn * d_out;
+                for (i, item) in chunk.iter().enumerate() {
+                    // trim padding back off: the first n points are real
+                    let yi = st.bucket.trim(&st.ws_y[i * per..(i + 1) * per], item.payload.n);
+                    let latency = item.enqueued.elapsed();
+                    metrics.record("latency_ms", latency.as_secs_f64() * 1e3);
+                    metrics.record("batch_size", real as f64);
+                    *exec_seq += 1;
+                    let _ = item.payload.reply.send(Ok(Response {
+                        y: yi,
+                        latency,
+                        batch_size: real,
+                        bucket: st.bucket.case.clone(),
+                        seq: *exec_seq,
+                    }));
+                }
+                metrics.record("exec_ms", exec_t.elapsed().as_secs_f64() * 1e3);
+            }
+            Err(e) => {
                 for item in chunk {
-                    x.extend_from_slice(&item.payload.x);
-                }
-                // pad the batch dimension with zeros
-                x.resize(b.batch * b.n * b.d_in, 0.0);
-                let result =
-                    backend.forward(&st.case, &st.params, BatchInput::Fields(&x), b.batch);
-                match result {
-                    Ok(y) => {
-                        let per = b.n * b.d_out;
-                        for (i, item) in chunk.iter().enumerate() {
-                            let yi =
-                                router.trim_output(&b, &y[i * per..(i + 1) * per], item.payload.n);
-                            let latency = item.enqueued.elapsed();
-                            metrics.record("latency_ms", latency.as_secs_f64() * 1e3);
-                            metrics.record("batch_size", real as f64);
-                            let _ = item.payload.reply.send(Ok(Response {
-                                y: yi,
-                                latency,
-                                batch_size: real,
-                                bucket: b.case.clone(),
-                            }));
-                        }
-                        metrics.record("exec_ms", exec_t.elapsed().as_secs_f64() * 1e3);
-                    }
-                    Err(e) => {
-                        for item in chunk {
-                            let _ = item
-                                .payload
-                                .reply
-                                .send(Err(anyhow::anyhow!("execute failed: {e}")));
-                        }
-                    }
+                    let _ = item
+                        .payload
+                        .reply
+                        .send(Err(anyhow::anyhow!("execute failed: {e}")));
                 }
             }
-        }
-
-        if shutting_down && batcher.queued() == 0 {
-            return Ok(());
         }
     }
 }

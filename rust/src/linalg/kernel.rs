@@ -139,10 +139,10 @@ pub fn matmul_f32_bt_into(c: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usi
     });
 }
 
-/// Worker budget for one GEMM: below ~8 MFLOP the scoped fan-out costs more
-/// than it saves, and inside a [`crate::util::threadpool::parallel_map`]
-/// worker the batch fan-out
-/// already owns the cores — nesting would only oversubscribe them.
+/// Worker budget for one GEMM: below ~8 MFLOP the pool fan-out costs more
+/// than it saves, and on a [`crate::util::threadpool::Executor`] worker the
+/// batch fan-out already owns the cores — nesting would only oversubscribe
+/// them (the pool never re-enters itself anyway).
 fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
     if in_parallel_worker() || 2 * m * k * n < 8_000_000 {
         1
@@ -152,10 +152,10 @@ fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
 }
 
 /// Split the (pre-zeroed) output into contiguous M-panels and run `panel`
-/// on each across scoped worker threads, writing rows in place — no
+/// on each across the persistent worker pool, writing rows in place — no
 /// per-panel buffers, no stitch copy.  Row ownership is disjoint and each
 /// row keeps its k-sequential accumulation, so results stay bitwise stable
-/// across thread counts.
+/// across thread counts (and across which pool worker runs which panel).
 fn matmul_panels(
     c: &mut [f32],
     a: &[f32],

@@ -64,6 +64,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "gen-data" => cmd_gen_data(args),
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
+        "serve-bench" => cmd_serve_bench(args),
         "spectra" => cmd_spectra(args),
         "bench-report" => cmd_bench_report(args),
         "" | "help" => {
@@ -96,6 +97,13 @@ fn print_help() {
                     [--ckpt-every K]   also write --ckpt every K steps\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
+           serve-bench                 closed-loop serving load generator:\n\
+                    [--case <name>] [--requests K] [--concurrency C]\n\
+                    [--max-wait-ms W] [--quiet] [--quick]\n\
+                                       p50/p99 latency + req/s, dumped into\n\
+                                       results/serve_bench.json for\n\
+                                       bench-report ($FLARE_BENCH_QUICK=1\n\
+                                       matches --quick)\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
                     [--steps N]\n\
            bench-report               fold results/*.json benchmark dumps\n\
@@ -326,6 +334,105 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     println!("{}", server.metrics.report());
     server.shutdown()?;
+    Ok(())
+}
+
+/// Closed-loop serving load generator: `--concurrency` client threads each
+/// issue blocking `infer` calls back to back against the serving engine and
+/// record end-to-end latency.  Reports p50/p99 latency and req/s, and dumps
+/// a bench measurement into `results/serve_bench.json` so `bench-report`
+/// folds serving into `BENCH_native.json` (and the CI perf gate covers it
+/// via the `serve_bench` entries in `BENCH_baseline.json`).
+fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
+    use std::sync::Mutex;
+    let dir = manifest_dir(args);
+    let m = Manifest::load_or_builtin(&dir)?;
+    let name = args.get_or("case", "core_darcy_flare").to_string();
+    let case = m.case(&name)?.clone();
+    let quick = args.has_flag("quick") || flare::bench::quick_mode();
+    let concurrency = args.get_usize("concurrency")?.unwrap_or(4).max(1);
+    let requests = args
+        .get_usize("requests")?
+        .unwrap_or(if quick { 16 } else { 64 })
+        .max(concurrency);
+    let max_wait = args.get_usize("max-wait-ms")?.unwrap_or(5);
+    // spread the load exactly: the first `requests % concurrency` clients
+    // issue one extra request, so nothing is silently dropped to rounding
+    let base = requests / concurrency;
+    let extra = requests % concurrency;
+
+    println!(
+        "serve-bench: {name} (n={}, batch={}), {concurrency} clients, {requests} requests, \
+         max_wait {max_wait}ms",
+        case.model.n, case.batch
+    );
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            cases: vec![name.clone()],
+            max_wait: std::time::Duration::from_millis(max_wait as u64),
+            params: vec![],
+            backend: args.get("backend").map(str::to_string),
+        },
+    )?;
+
+    let x = vec![0.25f32; case.model.n * case.model.d_in];
+    // warmup: fill the per-bucket workspaces and the worker-local pools so
+    // the timed window measures the steady state
+    for _ in 0..2usize.max(case.batch) {
+        server.infer(x.clone(), case.model.n)?;
+    }
+
+    let latencies_ms: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    let wall = Timer::start();
+    std::thread::scope(|scope| {
+        for cidx in 0..concurrency {
+            let server = &server;
+            let x = &x;
+            let latencies_ms = &latencies_ms;
+            let n = case.model.n;
+            let my_requests = base + usize::from(cidx < extra);
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(my_requests);
+                for _ in 0..my_requests {
+                    let t = Timer::start();
+                    let resp = server.infer(x.clone(), n).expect("infer");
+                    assert_eq!(resp.y.len(), n * case.model.d_out);
+                    local.push(t.elapsed_ms());
+                }
+                latencies_ms.lock().unwrap().extend_from_slice(&local);
+            });
+        }
+    });
+    let wall_s = wall.elapsed_s();
+    let latencies = latencies_ms.into_inner().unwrap();
+    let served = latencies.len();
+    let summary = flare::util::stats::Summary::of(&latencies);
+    let req_per_s = served as f64 / wall_s;
+    println!(
+        "served {served} requests in {wall_s:.2}s: {req_per_s:.1} req/s, \
+         p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        summary.p50, summary.p95, summary.p99
+    );
+    if !args.has_flag("quiet") {
+        println!("{}", server.metrics.report());
+    }
+    server.shutdown()?;
+
+    let measurement = flare::bench::Measurement {
+        name: format!("serve_closed_loop_c{concurrency}"),
+        iters: served,
+        total_s: wall_s,
+        per_iter: summary.clone(),
+        extras: vec![
+            ("req_per_s".into(), req_per_s),
+            ("p99_ms".into(), summary.p99),
+            ("clients".into(), concurrency as f64),
+            ("max_wait_ms".into(), max_wait as f64),
+        ],
+    };
+    let path = flare::bench::save_results("serve_bench", &[measurement])?;
+    println!("results written to {path:?}");
     Ok(())
 }
 

@@ -34,7 +34,7 @@ use crate::model::forward::{
     mixer_encode, split_heads, MIXER_TILE, ParamTable,
 };
 use crate::pname;
-use crate::util::workspace::{take, WsBuf};
+use crate::util::workspace::{take, take_uninit, WsBuf};
 
 /// Named mutable views into a flat gradient vector (the mirror image of
 /// [`ParamTable`]): `acc` hands out the slice for one parameter so op
@@ -118,7 +118,7 @@ pub fn linear_bwd(
     c_in: usize,
     c_out: usize,
 ) -> anyhow::Result<WsBuf> {
-    let mut dx = take(rows * c_in);
+    let mut dx = take_uninit(rows * c_in);
     affine_bwd_into(
         p,
         g,
@@ -149,9 +149,9 @@ pub fn layernorm_bwd(
     debug_assert_eq!(x.len(), rows * c);
     debug_assert_eq!(dy.len(), rows * c);
     let gamma = p.get(pname!("{prefix}.gamma").as_str())?;
-    let mut dx = take(rows * c);
-    let mut xhat = take(c);
-    let mut dxhat = take(c);
+    let mut dx = take_uninit(rows * c);
+    let mut xhat = take_uninit(c);
+    let mut dxhat = take_uninit(c);
     // accumulate locally; one name lookup per parameter, not per row
     let mut dgamma = take(c);
     let mut dbeta = take(c);
@@ -224,8 +224,8 @@ pub fn resmlp_fwd(
         rows,
         ch: c_hidden,
         layers,
-        h_all: take((layers + 1) * rc),
-        t_all: take(layers * rc),
+        h_all: take_uninit((layers + 1) * rc),
+        t_all: take_uninit(layers * rc),
     };
     {
         let h0 = &mut cache.h_all[..rc];
@@ -263,7 +263,7 @@ pub fn resmlp_fwd(
         next.copy_from_slice(prev);
         vgelu_add(next, t);
     }
-    let mut y = take(rows * c_out);
+    let mut y = take_uninit(rows * c_out);
     affine_into(
         p,
         pname!("{prefix}.wout").as_str(),
@@ -298,7 +298,7 @@ pub fn resmlp_bwd(
     layers: usize,
 ) -> anyhow::Result<WsBuf> {
     // exit affine (+ residual when c_hidden == c_out)
-    let mut dh = take(rows * c_hidden);
+    let mut dh = take_uninit(rows * c_hidden);
     affine_bwd_into(
         p,
         g,
@@ -317,8 +317,8 @@ pub fn resmlp_bwd(
         }
     }
     // gelu-residual stack, reversed
-    let mut dt = take(rows * c_hidden);
-    let mut da = take(rows * c_hidden);
+    let mut dt = take_uninit(rows * c_hidden);
+    let mut da = take_uninit(rows * c_hidden);
     for l in (0..layers).rev() {
         vgelu_grad_mul(&mut dt, &dh, cache.t(l)); // dt = dh ⊙ gelu'(t)
         affine_bwd_into(
@@ -338,7 +338,7 @@ pub fn resmlp_bwd(
         }
     }
     // entry affine (+ residual when c_in == c_hidden)
-    let mut dx = take(rows * c_in);
+    let mut dx = take_uninit(rows * c_in);
     affine_bwd_into(
         p,
         g,
@@ -382,11 +382,11 @@ pub fn flare_mixer_fwd(
     assert_eq!(q.len(), h * m * d, "flare_mixer_fwd: q shape");
     assert_eq!(k.len(), h * n * d, "flare_mixer_fwd: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer_fwd: v shape");
-    let mut y = take(h * n * d);
+    let mut y = take(h * n * d); // decode accumulates: must start at zero
     let mut cache = MixerCache {
-        mrun: take(h * m),
-        den: take(h * m),
-        z: take(h * m * d),
+        mrun: take_uninit(h * m), // encode fills all three before any read
+        den: take_uninit(h * m),
+        z: take_uninit(h * m * d),
     };
     for hh in 0..h {
         let qh = &q[hh * m * d..(hh + 1) * m * d];
@@ -437,10 +437,10 @@ fn mixer_head_bwd(
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
-    let mut sa = take(m * MIXER_TILE); // softmax weights tile
-    let mut sb = take(m * MIXER_TILE); // d-score tile
-    let mut dz = take(m * d);
-    let mut rowdot = take(m);
+    let mut sa = take_uninit(m * MIXER_TILE); // softmax weights tile (re-zeroed per tile)
+    let mut sb = take_uninit(m * MIXER_TILE); // d-score tile (re-zeroed per tile)
+    let mut dz = take(m * d); // accumulates: must start at zero
+    let mut rowdot = take(m); // accumulates: must start at zero
 
     // pass 1: decode backward, dZ accumulation
     for t0 in (0..n).step_by(MIXER_TILE) {
@@ -574,7 +574,7 @@ pub fn flare_layer_fwd(
     let kh = split_heads(&k, n, h, d);
     let vh = split_heads(&v, n, h, d);
     let lat = p.get(pname!("{prefix}.latents").as_str())?;
-    let mut q = take(h * m * d);
+    let mut q = take_uninit(h * m * d);
     if cfg.shared_latents {
         for qh in q.chunks_exact_mut(m * d) {
             qh.copy_from_slice(lat);
@@ -744,17 +744,17 @@ fn trunk_fwd(
     let c = cfg.c;
     let mut blocks = BlockList::new();
     for b in 0..cfg.blocks {
-        let mut h_in = take(n * c);
+        let mut h_in = take_uninit(n * c);
         h_in.copy_from_slice(&h);
-        let mut hn1 = take(n * c);
+        let mut hn1 = take_uninit(n * c);
         layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn1)?;
         let (mix_out, mix) = flare_layer_fwd(p, pname!("blk{b}.mix").as_str(), &hn1, n, cfg)?;
         for (hv, &mv) in h.iter_mut().zip(mix_out.iter()) {
             *hv += mv;
         }
-        let mut h_mid = take(n * c);
+        let mut h_mid = take_uninit(n * c);
         h_mid.copy_from_slice(&h);
-        let mut hn2 = take(n * c);
+        let mut hn2 = take_uninit(n * c);
         layernorm_into(p, pname!("blk{b}.ln2").as_str(), &h, n, c, &mut hn2)?;
         let (ffn_out, ffn) =
             resmlp_fwd(p, pname!("blk{b}.ffn").as_str(), &hn2, n, c, c, c, cfg.ffn_layers)?;
@@ -850,7 +850,7 @@ fn cross_entropy_loss_grad(logits: &[f32], label: usize) -> (f64, WsBuf) {
     let (mx, den) = softmax_stats_f64(logits);
     let logden = den.ln();
     let loss = -((logits[label] as f64 - mx as f64) - logden);
-    let mut grad = take(logits.len());
+    let mut grad = take_uninit(logits.len());
     for (j, gv) in grad.iter_mut().enumerate() {
         let p = (logits[j] as f64 - mx as f64).exp() / den;
         *gv = (p - if j == label { 1.0 } else { 0.0 }) as f32;
@@ -927,7 +927,7 @@ pub fn loss_grad_tokens(
     let n = tokens.len();
     let c = cfg.c;
     let embed = p.get("embed")?;
-    let mut h0 = take(n * c);
+    let mut h0 = take_uninit(n * c);
     for (t, &tok) in tokens.iter().enumerate() {
         anyhow::ensure!(
             tok >= 0 && (tok as usize) < cfg.vocab,
@@ -953,7 +953,7 @@ pub fn loss_grad_tokens(
     let (loss, dlogits) = cross_entropy_loss_grad(&logits, label as usize);
 
     let dpooled = linear_bwd(p, g, "cls_head", &pooled, &dlogits, 1, c, cfg.num_classes)?;
-    let mut dhn_out = take(n * c);
+    let mut dhn_out = take_uninit(n * c);
     for t in 0..n {
         for j in 0..c {
             dhn_out[t * c + j] = dpooled[j] * inv_n;

@@ -12,10 +12,15 @@
 //! Buffer discipline: every op has an `*_into` form writing into a
 //! caller-provided slice, and the owning forms return [`WsBuf`] scratch
 //! buffers from [`crate::util::workspace`] instead of fresh `Vec`s.
-//! Parameter names are formatted on the stack ([`crate::pname!`]).  After
-//! warmup a forward pass touches the heap **zero** times — the same
-//! contract the training pass in `model::backward` extends to gradients
-//! (pinned by `rust/tests/alloc_steady.rs`).
+//! Destinations that are fully overwritten before any read (GEMM `*_into`
+//! outputs, layernorm outputs, head split/merge targets, score tiles that
+//! re-zero per tile) come from [`take_uninit`] — no redundant O(len) memset
+//! on top of the consumer's own fill; accumulators that must start at zero
+//! (`gemm_*_acc` targets, reductions) keep [`take`].  Parameter names are
+//! formatted on the stack ([`crate::pname!`]).  After warmup a forward
+//! pass touches the heap **zero** times — the same contract the training
+//! pass in `model::backward` extends to gradients (pinned by
+//! `rust/tests/alloc_steady.rs`).
 
 use std::collections::BTreeMap;
 
@@ -25,7 +30,7 @@ use crate::linalg::kernel::{
 };
 use crate::linalg::vexp::{gelu_f32, vgelu_add};
 use crate::pname;
-use crate::util::workspace::{take, WsBuf};
+use crate::util::workspace::{take, take_uninit, WsBuf};
 
 /// Named views into a flat parameter vector.
 pub struct ParamTable<'a> {
@@ -98,7 +103,7 @@ pub(crate) fn affine(
     c_in: usize,
     c_out: usize,
 ) -> anyhow::Result<WsBuf> {
-    let mut y = take(rows * c_out);
+    let mut y = take_uninit(rows * c_out);
     affine_into(p, wname, bname, x, rows, c_in, c_out, &mut y)?;
     Ok(y)
 }
@@ -149,7 +154,7 @@ pub fn layernorm(
     rows: usize,
     c: usize,
 ) -> anyhow::Result<WsBuf> {
-    let mut out = take(x.len());
+    let mut out = take_uninit(x.len());
     layernorm_into(p, prefix, x, rows, c, &mut out)?;
     Ok(out)
 }
@@ -179,7 +184,7 @@ pub fn resmlp(
             *hv += xv;
         }
     }
-    let mut t = take(rows * c_hidden);
+    let mut t = take_uninit(rows * c_hidden);
     for l in 0..layers {
         affine_into(
             p,
@@ -225,7 +230,7 @@ pub(crate) fn split_heads_into(x: &[f32], n: usize, h: usize, d: usize, out: &mu
 
 /// `[N, H*D] -> [H, N, D]` head split (row-major throughout).
 pub fn split_heads(x: &[f32], n: usize, h: usize, d: usize) -> WsBuf {
-    let mut out = take(x.len());
+    let mut out = take_uninit(x.len());
     split_heads_into(x, n, h, d, &mut out);
     out
 }
@@ -245,7 +250,7 @@ pub(crate) fn merge_heads_into(x: &[f32], n: usize, h: usize, d: usize, out: &mu
 
 /// `[H, N, D] -> [N, H*D]` head merge.
 pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> WsBuf {
-    let mut out = take(x.len());
+    let mut out = take_uninit(x.len());
     merge_heads_into(x, n, h, d, &mut out);
     out
 }
@@ -282,7 +287,7 @@ pub fn mixer_encode(
     mrun.fill(f32::NEG_INFINITY);
     den.fill(0.0);
     z.fill(0.0);
-    let mut s = take(m * MIXER_TILE);
+    let mut s = take_uninit(m * MIXER_TILE);
     for t0 in (0..n).step_by(MIXER_TILE) {
         let tn = MIXER_TILE.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
@@ -324,7 +329,7 @@ pub fn mixer_decode(
     scale: f32,
     yh: &mut [f32],
 ) {
-    let mut s = take(MIXER_TILE * m);
+    let mut s = take_uninit(MIXER_TILE * m);
     for t0 in (0..n).step_by(MIXER_TILE) {
         let tn = MIXER_TILE.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
@@ -356,10 +361,10 @@ pub fn flare_mixer(
     assert_eq!(q.len(), h * m * d, "flare_mixer: q shape");
     assert_eq!(k.len(), h * n * d, "flare_mixer: k shape");
     assert_eq!(v.len(), h * n * d, "flare_mixer: v shape");
-    let mut y = take(h * n * d);
-    let mut mrun = take(m);
-    let mut den = take(m);
-    let mut z = take(m * d);
+    let mut y = take(h * n * d); // decode accumulates: must start at zero
+    let mut mrun = take_uninit(m); // encode fills all three before any read
+    let mut den = take_uninit(m);
+    let mut z = take_uninit(m * d);
     for hh in 0..h {
         let qh = &q[hh * m * d..(hh + 1) * m * d];
         let kh = &k[hh * n * d..(hh + 1) * n * d];
@@ -403,7 +408,7 @@ pub fn flare_layer_with_keys(
     let vh = split_heads(&v, n, h, d);
     let lat = p.get(pname!("{prefix}.latents").as_str())?;
     let yh = if cfg.shared_latents {
-        let mut q = take(h * m * d);
+        let mut q = take_uninit(h * m * d);
         for qh in q.chunks_exact_mut(m * d) {
             qh.copy_from_slice(lat);
         }
@@ -440,7 +445,7 @@ fn apply_blocks(
     n: usize,
 ) -> anyhow::Result<WsBuf> {
     let c = cfg.c;
-    let mut hn = take(n * c);
+    let mut hn = take_uninit(n * c);
     for b in 0..cfg.blocks {
         layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn)?;
         let mix = flare_layer(p, pname!("blk{b}.mix").as_str(), &hn, n, cfg)?;
@@ -483,7 +488,7 @@ pub fn forward_tokens_sample(
     let n = tokens.len();
     let c = cfg.c;
     let embed = p.get("embed")?;
-    let mut h = take(n * c);
+    let mut h = take_uninit(n * c);
     for (t, &tok) in tokens.iter().enumerate() {
         anyhow::ensure!(
             tok >= 0 && (tok as usize) < cfg.vocab,
@@ -517,7 +522,7 @@ pub fn qk_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Result<Ve
     let n = x.len() / cfg.d_in;
     let (c, heads, d) = (cfg.c, cfg.heads, cfg.head_dim());
     let mut h = resmlp(p, "in_proj", x, n, cfg.d_in, c, c, cfg.io_layers)?;
-    let mut hn = take(n * c);
+    let mut hn = take_uninit(n * c);
     let mut ks = Vec::with_capacity(cfg.blocks);
     for b in 0..cfg.blocks {
         layernorm_into(p, pname!("blk{b}.ln1").as_str(), &h, n, c, &mut hn)?;

@@ -73,6 +73,29 @@ pub trait Backend {
         batch: usize,
     ) -> anyhow::Result<Vec<f32>>;
 
+    /// Batched forward pass into a caller-owned output buffer — the
+    /// serving hot path.  `out` is cleared and resized to the batch output
+    /// (`[batch * n * d_out]` for regression, `[batch * num_classes]` for
+    /// classification); callers that reuse `out` across batches amortize
+    /// its capacity, and backends take `&mut self` so they may keep cached
+    /// per-shape workspaces.  The native backend overrides this to perform
+    /// **zero transient heap allocations** once its workspaces are warm
+    /// (pinned by `rust/tests/alloc_serving.rs`); the default routes
+    /// through [`Backend::forward`] and copies.
+    fn forward_batch(
+        &mut self,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let y = self.forward(case, params, input, batch)?;
+        out.clear();
+        out.extend_from_slice(&y);
+        Ok(())
+    }
+
     /// Whether [`Backend::train_step`] is available.
     fn supports_training(&self) -> bool {
         false

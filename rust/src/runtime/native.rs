@@ -3,11 +3,16 @@
 //! No artifacts, no PJRT, no shape specialization — plans are built from
 //! the manifest's packing spec (or re-declared from the model config via
 //! [`crate::model::build_spec`] when the manifest carries none), and batches
-//! fan out across OS threads with [`crate::util::threadpool`].
+//! fan out across the persistent worker pool in
+//! [`crate::util::threadpool`] (one long-lived executor for the whole
+//! process, so worker-local workspace pools stay warm across steps and
+//! served batches).  The serving hot path is [`Backend::forward_batch`]:
+//! per-sample outputs land in disjoint chunks of the caller's reply buffer
+//! with zero transient heap allocations once warm.
 //!
 //! Training is native too, and allocation-conscious: per-sample reverse
 //! passes ([`crate::model::backward`]) accumulate **in place** into
-//! per-worker gradient shards taken from [`crate::util::workspace`]
+//! gradient shards that persist inside the backend across steps
 //! ([`parallel_sharded`] gives each worker exclusive ownership of one
 //! shard), the shards are reduced tree-wise, and the fused
 //! [`AdamW`] update folds the `1/batch` average into its scale factor — no
@@ -24,6 +29,7 @@
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
+use std::sync::Mutex;
 
 use crate::config::{CaseCfg, Manifest, ModelCfg, ParamEntry};
 use crate::model::backward::{loss_grad_fields, loss_grad_tokens, GradTable};
@@ -31,7 +37,7 @@ use crate::model::forward::{self, ParamTable};
 use crate::model::{build_spec, index_by_name};
 use crate::runtime::backend::{Backend, BatchInput, BatchTarget, OptState};
 use crate::train::AdamW;
-use crate::util::threadpool::{parallel_map, parallel_sharded};
+use crate::util::threadpool::{parallel_chunks_mut_threads, parallel_map, parallel_sharded};
 use crate::util::workspace::{take, WsBuf};
 
 /// Resolved execution plan for one case.
@@ -78,13 +84,35 @@ struct GradShard<'a> {
 pub struct NativeBackend {
     plans: RefCell<HashMap<String, Rc<Plan>>>,
     threads: usize,
+    /// Persistent per-worker gradient shards for the batch fan-out: with
+    /// the long-lived executor pool these survive across train steps
+    /// (re-zeroed per step), so the fan-out never round-trips shard storage
+    /// through the workspace reservoir.  Entry `w` backs extra shard `w`
+    /// (shard 0 accumulates straight into the caller's buffer).
+    grad_shards: RefCell<Vec<Vec<f32>>>,
 }
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
+        NativeBackend::with_threads(crate::util::threadpool::default_threads())
+    }
+
+    /// A backend pinned to an explicit worker budget.  `with_threads(1)`
+    /// forces the inline sample-order path on any machine — the same
+    /// arithmetic as the `FLARE_THREADS=1` determinism leg, which tests use
+    /// to compare the pooled fan-out against the sequential reference
+    /// without re-launching the process.  The budget is a **cap**: effective
+    /// workers never exceed the process-wide pool size
+    /// (`default_threads()`), so `with_threads(N > default)` runs with the
+    /// pool's worker count — on a single-worker environment the fan-out
+    /// legs run inline, but a multi-shard gradient budget still exercises
+    /// the multi-shard arithmetic (shard count follows the budget, worker
+    /// count follows the pool).
+    pub fn with_threads(threads: usize) -> NativeBackend {
         NativeBackend {
             plans: RefCell::new(HashMap::new()),
-            threads: crate::util::threadpool::default_threads(),
+            threads: threads.max(1),
+            grad_shards: RefCell::new(Vec::new()),
         }
     }
 
@@ -127,16 +155,26 @@ impl NativeBackend {
             }
             return Ok(loss_sum);
         }
-        // shard 0 accumulates straight into grad_acc; extra shards come
-        // from the workspace pool (zeroed)
-        let mut extra: Vec<WsBuf> = (1..threads).map(|_| take(plan.param_count)).collect();
+        // shard 0 accumulates straight into grad_acc; extra shards are the
+        // backend's persistent per-worker buffers, re-zeroed here (they
+        // outlive the step, so no pool traffic and no reservoir locking)
+        let mut extra = self.grad_shards.borrow_mut();
+        if extra.len() < threads - 1 {
+            extra.resize(threads - 1, Vec::new());
+        }
         let mut shards: Vec<GradShard> = Vec::with_capacity(threads);
         shards.push(GradShard {
             grad: grad_acc,
             loss: 0.0,
             err: None,
         });
-        for buf in extra.iter_mut() {
+        for buf in extra.iter_mut().take(threads - 1) {
+            if buf.len() != plan.param_count {
+                buf.clear();
+                buf.resize(plan.param_count, 0.0);
+            } else {
+                buf.fill(0.0);
+            }
             shards.push(GradShard {
                 grad: &mut buf[..],
                 loss: 0.0,
@@ -182,6 +220,40 @@ impl NativeBackend {
 impl Default for NativeBackend {
     fn default() -> Self {
         NativeBackend::new()
+    }
+}
+
+/// Shared fan-out core of [`Backend::forward_batch`]: size the reply
+/// buffer, run `sample(i)` per batch element on the persistent pool and
+/// copy each result into its disjoint `per_out` chunk of `out`.  A
+/// same-length reply buffer is NOT re-zeroed (every chunk is fully
+/// overwritten — the serving-path analogue of `take_uninit`); the first
+/// per-sample error wins, and the happy path never locks competitively or
+/// allocates.
+fn batched_samples_into(
+    out: &mut Vec<f32>,
+    batch: usize,
+    per_out: usize,
+    threads: usize,
+    sample: impl Fn(usize) -> anyhow::Result<WsBuf> + Sync,
+) -> anyhow::Result<()> {
+    if out.len() != batch * per_out {
+        out.clear();
+        out.resize(batch * per_out, 0.0);
+    }
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    parallel_chunks_mut_threads(out, per_out, threads, |i, chunk| match sample(i) {
+        Ok(y) => chunk.copy_from_slice(&y),
+        Err(e) => {
+            let mut slot = err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    });
+    match err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 
@@ -237,6 +309,62 @@ impl Backend for NativeBackend {
             y.extend_from_slice(&out?);
         }
         Ok(y)
+    }
+
+    /// Zero-allocation batched forward: per-sample outputs are written
+    /// straight into disjoint chunks of `out` by the persistent worker
+    /// pool, and every transient comes from the (warm) workspace pool — a
+    /// steady-state call performs no heap allocations once `out`'s capacity
+    /// and the per-worker pools have seen the shape (pinned by
+    /// `rust/tests/alloc_serving.rs`).
+    fn forward_batch(
+        &mut self,
+        case: &CaseCfg,
+        params: &[f32],
+        input: BatchInput<'_>,
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let plan_rc = self.plan(case)?;
+        let plan: &Plan = plan_rc.as_ref();
+        anyhow::ensure!(
+            params.len() == plan.param_count,
+            "params length {} != expected {}",
+            params.len(),
+            plan.param_count
+        );
+        anyhow::ensure!(batch > 0, "empty batch");
+        match input {
+            BatchInput::Fields(x) => {
+                anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
+                let per_in = x.len() / batch;
+                anyhow::ensure!(
+                    plan.model.d_in > 0 && per_in % plan.model.d_in == 0,
+                    "sample length {per_in} not a multiple of d_in {}",
+                    plan.model.d_in
+                );
+                anyhow::ensure!(plan.model.d_out > 0, "field model with d_out 0");
+                let n = per_in / plan.model.d_in;
+                let per_out = n * plan.model.d_out;
+                batched_samples_into(out, batch, per_out, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    forward::forward_sample(&plan.model, &table, &x[i * per_in..(i + 1) * per_in])
+                })
+            }
+            BatchInput::Tokens(tokens) => {
+                anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
+                let per_in = tokens.len() / batch;
+                let per_out = plan.model.num_classes.max(1);
+                batched_samples_into(out, batch, per_out, self.threads, |i| {
+                    let table = ParamTable::new(params, &plan.entries);
+                    forward::forward_tokens_sample(
+                        &plan.model,
+                        &table,
+                        &tokens[i * per_in..(i + 1) * per_in],
+                    )
+                })
+            }
+        }
     }
 
     fn supports_training(&self) -> bool {

@@ -11,6 +11,11 @@
 //! [`Backend::grad_batch`] / [`Backend::apply_update`] path (native only —
 //! the XLA artifact fuses gradient and update).  Evaluation goes through
 //! [`Backend::eval_batch`], which defaults to forward + host-side metrics.
+//!
+//! The native batch fan-out runs on the persistent
+//! [`crate::util::threadpool::Executor`] pool: worker threads (and their
+//! warm workspace free lists and gradient shards) survive across steps, so
+//! a long run pays thread spawn and buffer warm-up exactly once.
 
 pub mod optim;
 pub mod schedule;
@@ -247,8 +252,10 @@ pub fn train_case(
     let mut evals = Vec::new();
     let mut step_times = Vec::with_capacity(steps);
     let wall = Timer::start();
-    // gradient-accumulation buffer, allocated once per run (accum > 1 only)
-    let mut grad_acc = vec![0.0f32; if accum > 1 { case.param_count } else { 0 }];
+    // gradient-accumulation buffer, on loan from the workspace pool for the
+    // whole run (accum > 1 only; zero-length loans are free)
+    let mut grad_acc =
+        crate::util::workspace::take(if accum > 1 { case.param_count } else { 0 });
 
     for step in start..total {
         let t = Timer::start();

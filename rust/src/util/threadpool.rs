@@ -1,86 +1,56 @@
-//! A small fixed-size thread pool (no tokio in the offline vendor set).
+//! Persistent executor runtime: one long-lived worker pool under every
+//! data-parallel section in the crate (no tokio/rayon in the offline
+//! vendor set).
 //!
-//! The serving coordinator uses this for its worker pool; the API is the
-//! usual `execute(closure)` plus a `scoped_map` helper for data-parallel
-//! sections in the simulators.
+//! The previous substrate spawned fresh scoped threads on every
+//! `parallel_map`/`parallel_chunks_mut`/`parallel_sharded` call — dozens of
+//! `clone()`/`mmap` syscalls per train step, and worker thread-locals
+//! (workspace free lists, GEMM pack scratch) died with each call and had to
+//! round-trip through the global reservoir.  [`Executor`] replaces that
+//! with a fixed set of workers, spawned once, with **stable worker
+//! indices**, fed through a generation-stamped job board:
+//!
+//! * the submitting thread publishes a type-erased job pointer plus a
+//!   participant count under the board mutex, bumps the generation and
+//!   wakes the workers;
+//! * worker `w` runs the job when `w < participants`, then decrements the
+//!   outstanding count; the submitter sleeps on a condvar until it hits
+//!   zero, so the borrowed closure provably outlives every use (this is
+//!   what makes the lifetime erasure sound);
+//! * one job is in flight at a time (`submit` mutex) — parallel sections
+//!   own all cores anyway, so concurrent fan-outs would only interleave
+//!   destructively.
+//!
+//! The public entry points keep their spawn-era contracts:
+//!
+//! * `FLARE_THREADS=1` (or a single item/chunk/shard) runs **inline on the
+//!   caller, in index order** — the bitwise-determinism leg never touches
+//!   the pool, and the caller keeps its non-worker status so nested kernels
+//!   may still fan out;
+//! * pool workers are flagged via [`in_parallel_worker`] for their whole
+//!   lifetime, so nested GEMM fan-out stays suppressed exactly as it was
+//!   with scoped threads (a parallel entry invoked *from* a worker also
+//!   runs inline — the pool never re-enters itself);
+//! * work assignment is pure index arithmetic (contiguous ranges for
+//!   `parallel_map`/`parallel_sharded`, strided chunks for
+//!   `parallel_chunks_mut`), so results are bitwise independent of which
+//!   worker executes what.
 
 use std::cell::Cell;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 thread_local! {
     static IN_PARALLEL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Is the current thread a [`parallel_map`] worker?  The kernel subsystem
+/// Is the current thread an [`Executor`] pool worker?  The kernel subsystem
 /// consults this to keep nested GEMMs single-threaded: when the batch
 /// fan-out already owns the cores, a per-matmul fan-out would only
-/// oversubscribe them.
+/// oversubscribe them.  The parallel entry points consult it too — a
+/// nested parallel section runs inline instead of re-entering the pool.
 pub fn in_parallel_worker() -> bool {
     IN_PARALLEL_WORKER.with(|f| f.get())
-}
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Fixed-size thread pool; drops complete outstanding work before joining.
-pub struct ThreadPool {
-    sender: Option<mpsc::Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
-}
-
-impl ThreadPool {
-    /// Spawn `size` workers (min 1).
-    pub fn new(size: usize) -> ThreadPool {
-        let size = size.max(1);
-        let (sender, receiver) = mpsc::channel::<Job>();
-        let receiver = Arc::new(Mutex::new(receiver));
-        let workers = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&receiver);
-                std::thread::Builder::new()
-                    .name(format!("flare-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool {
-            sender: Some(sender),
-            workers,
-        }
-    }
-
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
-    }
-
-    /// Number of workers.
-    pub fn size(&self) -> usize {
-        self.workers.len()
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        drop(self.sender.take()); // close channel, workers drain + exit
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
 }
 
 /// Worker-thread budget shared by the batch fan-out and the kernel
@@ -91,9 +61,9 @@ impl Drop for ThreadPool {
 ///
 /// Resolved once per process: the GEMM dispatcher consults this on every
 /// call, and `std::env::var` allocates (which would break the hot path's
-/// zero-allocation contract) besides costing a lock.
+/// zero-allocation contract) besides costing a lock.  The global
+/// [`Executor`] is sized from this value.
 pub fn default_threads() -> usize {
-    use std::sync::OnceLock;
     static CACHE: OnceLock<usize> = OnceLock::new();
     *CACHE.get_or_init(|| {
         for var in ["FLARE_THREADS", "FLARE_NATIVE_THREADS"] {
@@ -107,57 +77,256 @@ pub fn default_threads() -> usize {
     })
 }
 
-/// Apply `f` to every index in `0..n` across `threads` OS threads and
-/// collect results in order.  Spawns scoped threads, so `f` may borrow.
+/// Type-erased job on the board: `call(data, worker_index)` invokes the
+/// submitter's `&F` closure.  A thin data pointer plus a monomorphized
+/// trampoline sidesteps fat-pointer lifetime transmutes entirely.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointer is only dereferenced by pool workers between job
+// publication and the completion handshake, while the submitting thread is
+// blocked keeping the referent alive; the closure itself is `Sync`.
+unsafe impl Send for Job {}
+
+/// The generation-stamped job board (all fields guarded by one mutex).
+struct Board {
+    /// bumped once per published job; workers run a job exactly once by
+    /// comparing against the last generation they served
+    generation: u64,
+    /// workers `0..participants` must run the current job
+    participants: usize,
+    /// participants that have not yet finished the current job
+    remaining: usize,
+    job: Option<Job>,
+    /// first panic payload out of the current job, re-thrown on the
+    /// submitting thread (scoped-spawn behaviour)
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Inner {
+    board: Mutex<Board>,
+    /// workers sleep here between generations
+    work_cv: Condvar,
+    /// the submitter sleeps here until `remaining == 0`
+    done_cv: Condvar,
+    size: usize,
+}
+
+/// A fixed-size pool of persistent worker threads with stable indices,
+/// driven through a generation-stamped job board.  The crate shares one
+/// instance ([`Executor::global`], sized by [`default_threads`]); tests and
+/// embedders may build private pools.
+pub struct Executor {
+    inner: Arc<Inner>,
+    /// serializes job submission: one job in flight at a time
+    submit: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn `size` persistent workers (min 1) named `flare-exec-<i>`.
+    pub fn new(size: usize) -> Executor {
+        let size = size.max(1);
+        let inner = Arc::new(Inner {
+            board: Mutex::new(Board {
+                generation: 0,
+                participants: 0,
+                remaining: 0,
+                job: None,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            size,
+        });
+        let workers = (0..size)
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("flare-exec-{w}"))
+                    .spawn(move || worker_main(inner, w))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor {
+            inner,
+            submit: Mutex::new(()),
+            workers,
+        }
+    }
+
+    /// The process-wide pool, created on first use with
+    /// [`default_threads`] workers.  Lives for the whole process, so worker
+    /// thread-locals (workspace free lists, pack scratch) stay warm across
+    /// train steps and served batches.
+    pub fn global() -> &'static Executor {
+        static POOL: OnceLock<Executor> = OnceLock::new();
+        POOL.get_or_init(|| Executor::new(default_threads()))
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    /// Run `f(worker_index)` on workers `0..participants` and block until
+    /// every participant finished.  A panic inside `f` is re-thrown here
+    /// after the job completes on the remaining workers (matching the old
+    /// scoped-spawn behaviour).  Calling this *from* a pool worker of the
+    /// same executor would deadlock on the submit lock — the public
+    /// parallel entries guard with [`in_parallel_worker`] and run inline
+    /// instead.
+    pub fn run<F>(&self, participants: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let participants = participants.min(self.inner.size);
+        if participants == 0 {
+            return;
+        }
+        unsafe fn trampoline<F: Fn(usize) + Sync>(data: *const (), w: usize) {
+            (*(data as *const F))(w)
+        }
+        let submit = self.submit.lock().unwrap();
+        let mut b = self.inner.board.lock().unwrap();
+        b.generation = b.generation.wrapping_add(1);
+        b.participants = participants;
+        b.remaining = participants;
+        b.job = Some(Job {
+            data: f as *const F as *const (),
+            call: trampoline::<F>,
+        });
+        self.inner.work_cv.notify_all();
+        while b.remaining > 0 {
+            b = self.inner.done_cv.wait(b).unwrap();
+        }
+        b.job = None;
+        let panic = b.panic.take();
+        drop(b);
+        drop(submit);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut b = self.inner.board.lock().unwrap();
+            b.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(inner: Arc<Inner>, w: usize) {
+    // permanent: everything that ever runs on this thread is part of a
+    // parallel section, so nested kernels must not fan out again
+    IN_PARALLEL_WORKER.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let (job, generation) = {
+            let mut b = inner.board.lock().unwrap();
+            loop {
+                if b.shutdown {
+                    return;
+                }
+                if b.generation != seen {
+                    if w < b.participants {
+                        break (b.job.expect("published job"), b.generation);
+                    }
+                    // not a participant this generation: acknowledge + sleep
+                    seen = b.generation;
+                }
+                b = inner.work_cv.wait(b).unwrap();
+            }
+        };
+        seen = generation;
+        // SAFETY: the submitter blocks until `remaining == 0`, so the
+        // closure behind the pointer outlives this call.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, w)
+        }));
+        let mut b = inner.board.lock().unwrap();
+        if let Err(payload) = result {
+            if b.panic.is_none() {
+                b.panic = Some(payload);
+            }
+        }
+        b.remaining -= 1;
+        if b.remaining == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint `&mut` regions of one buffer can be
+/// handed to pool workers through a shared `Fn` closure.  Callers guarantee
+/// region disjointness by index arithmetic.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: every use partitions the pointee into disjoint index ranges, one
+// range per worker, while the owning thread is blocked in `Executor::run`.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Apply `f` to every index in `0..n` across up to `threads` pool workers
+/// and collect results in order.  `f` may borrow: the submitting thread
+/// blocks until the pool drains the job.  `threads` is a **cap**, further
+/// bounded by the process-wide pool size ([`default_threads`]) — a budget
+/// above it is not an error, it just runs with every pool worker.  With
+/// one effective worker (or from inside a pool worker) the loop runs
+/// inline on the caller, which keeps its non-worker status so nested
+/// kernels may still fan out — the `FLARE_THREADS=1` bitwise path.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 {
-        // run inline: no spawn, and the caller keeps its non-worker status,
-        // so nested kernels may still fan out (the batch == 1 case)
+    let workers = threads.max(1).min(n.max(1)).min(default_threads());
+    if workers == 1 || in_parallel_worker() {
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunks: Vec<(usize, &mut [Option<T>])> = {
-        let mut res = Vec::new();
-        let mut rest = out.as_mut_slice();
-        let mut start = 0;
-        let per = n.div_ceil(threads);
-        while !rest.is_empty() {
-            let take = per.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            res.push((start, head));
-            start += take;
-            rest = tail;
-        }
-        res
-    };
-    std::thread::scope(|scope| {
-        for (start, chunk) in chunks {
-            let f = &f;
-            scope.spawn(move || {
-                // scoped threads are fresh per call, so set-only is enough
-                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
-                for (i, slot) in chunk.iter_mut().enumerate() {
-                    *slot = Some(f(start + i));
-                }
-            });
+    let per = n.div_ceil(workers);
+    let slots = SendPtr(out.as_mut_ptr());
+    Executor::global().run(workers, &|w| {
+        let start = w * per;
+        let end = n.min(start + per);
+        for i in start..end {
+            // SAFETY: worker `w` owns exactly `[w*per, (w+1)*per)` — the
+            // contiguous ranges are disjoint across workers.
+            unsafe { *slots.0.add(i) = Some(f(i)) };
         }
     });
-    out.into_iter().map(|x| x.unwrap()).collect()
+    out.into_iter().map(|x| x.expect("parallel_map slot")).collect()
 }
 
 /// Split `data` into consecutive `chunk_len` pieces (the last may be
-/// short) and run `f(chunk_index, chunk)` on each across scoped worker
-/// threads, one per chunk.  The in-place sibling of [`parallel_map`]: the
-/// blocked GEMM uses it to write output M-panels directly into the caller's
-/// buffer instead of allocating per-panel chunks and stitching them.  A
-/// single chunk runs inline on the caller (which then keeps its non-worker
-/// status, so nested kernels may still fan out).
-pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+/// short) and run `f(chunk_index, chunk)` on each, chunks strided across up
+/// to `threads` pool workers.  The in-place sibling of [`parallel_map`]:
+/// the blocked GEMM uses it to write output M-panels directly into the
+/// caller's buffer, and the serving engine to write per-sample outputs into
+/// the batch reply buffer — no per-chunk allocations, no stitch copy.
+/// A single chunk (or one effective worker) runs inline on the caller,
+/// which keeps its non-worker status.
+pub fn parallel_chunks_mut_threads<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -166,30 +335,52 @@ where
         return;
     }
     let chunk_len = chunk_len.max(1);
-    if chunk_len >= data.len() {
-        f(0, data);
+    let nchunks = data.len().div_ceil(chunk_len);
+    let workers = threads.max(1).min(nchunks).min(default_threads());
+    if workers == 1 || in_parallel_worker() {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
         return;
     }
-    std::thread::scope(|scope| {
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
-                f(i, chunk);
-            });
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
+    Executor::global().run(workers, &|w| {
+        let mut ci = w;
+        while ci < nchunks {
+            let start = ci * chunk_len;
+            let end = len.min(start + chunk_len);
+            // SAFETY: chunk `ci` covers `[ci*chunk_len, end)`; the stride
+            // assignment gives each chunk to exactly one worker.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(ci, chunk);
+            ci += workers;
         }
     });
 }
 
-/// Fan indices `0..n` out over `shards.len()` workers with a fixed
-/// contiguous assignment (worker `w` owns `[w·⌈n/W⌉, (w+1)·⌈n/W⌉)`); each
-/// worker has exclusive `&mut` access to its shard and visits its indices
-/// in order.  The gradient fan-out uses this to accumulate per-sample
-/// gradients **in place** into pre-allocated shards (reduced tree-wise by
-/// the caller) instead of allocating one gradient buffer per sample.
+/// [`parallel_chunks_mut_threads`] with the worker budget left to the pool.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    parallel_chunks_mut_threads(data, chunk_len, usize::MAX, f)
+}
+
+/// Fan indices `0..n` out over `shards.len()` shards with a fixed
+/// contiguous assignment (shard `s` owns `[s·⌈n/S⌉, (s+1)·⌈n/S⌉)`); each
+/// shard is visited by exactly one worker with exclusive `&mut` access, its
+/// indices in order.  The gradient fan-out uses this to accumulate
+/// per-sample gradients **in place** into persistent per-worker shards
+/// (reduced tree-wise by the caller) instead of allocating one gradient
+/// buffer per sample.
 ///
-/// With a single shard the loop runs inline on the caller in index order —
-/// the bitwise-deterministic `FLARE_THREADS=1` path.
+/// Index-to-shard ownership depends only on `shards.len()`, never on the
+/// worker count, so results for a given shard layout are bitwise stable no
+/// matter how the pool schedules them.  A single shard (or one effective
+/// worker) runs inline on the caller in index order — the
+/// `FLARE_THREADS=1` bitwise path.
 pub fn parallel_sharded<S, F>(n: usize, shards: &mut [S], f: F)
 where
     S: Send,
@@ -198,24 +389,30 @@ where
     if n == 0 || shards.is_empty() {
         return;
     }
-    if shards.len() == 1 {
-        let shard = &mut shards[0];
-        for i in 0..n {
-            f(shard, i);
+    let nshards = shards.len();
+    let per = n.div_ceil(nshards);
+    let workers = nshards.min(default_threads());
+    if workers == 1 || in_parallel_worker() {
+        for (s, shard) in shards.iter_mut().enumerate() {
+            let i0 = s * per;
+            for i in i0..n.min(i0 + per) {
+                f(shard, i);
+            }
         }
         return;
     }
-    let per = n.div_ceil(shards.len());
-    std::thread::scope(|scope| {
-        for (w, shard) in shards.iter_mut().enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
-                let i0 = w * per;
-                for i in i0..n.min(i0 + per) {
-                    f(shard, i);
-                }
-            });
+    let base = SendPtr(shards.as_mut_ptr());
+    Executor::global().run(workers, &|w| {
+        let mut s = w;
+        while s < nshards {
+            // SAFETY: shard `s` is visited by exactly one worker (stride
+            // assignment), giving it exclusive access.
+            let shard = unsafe { &mut *base.0.add(s) };
+            let i0 = s * per;
+            for i in i0..n.min(i0 + per) {
+                f(shard, i);
+            }
+            s += workers;
         }
     });
 }
@@ -223,26 +420,72 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread::ThreadId;
 
     #[test]
-    fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicUsize::new(0));
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
+    fn executor_runs_all_participants() {
+        let pool = Executor::new(4);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(4, &|_w| {
+                counter.fetch_add(1, Ordering::SeqCst);
             });
         }
-        drop(pool); // join
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(counter.load(Ordering::SeqCst), 200);
     }
 
     #[test]
-    fn pool_min_one_worker() {
-        let pool = ThreadPool::new(0);
+    fn executor_min_one_worker() {
+        let pool = Executor::new(0);
         assert_eq!(pool.size(), 1);
+        let ran = AtomicUsize::new(0);
+        pool.run(8, &|w| {
+            assert_eq!(w, 0);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "participants cap at pool size");
+    }
+
+    #[test]
+    fn executor_workers_are_persistent_and_stable() {
+        // the whole point of the refactor: two runs see the SAME OS
+        // threads, with stable worker indices, none of them the caller
+        let pool = Executor::new(3);
+        let ids = |pool: &Executor| -> Vec<ThreadId> {
+            let slots: Mutex<Vec<Option<ThreadId>>> = Mutex::new(vec![None; 3]);
+            pool.run(3, &|w| {
+                slots.lock().unwrap()[w] = Some(std::thread::current().id());
+            });
+            slots.into_inner().unwrap().into_iter().map(|t| t.unwrap()).collect()
+        };
+        let first = ids(&pool);
+        let second = ids(&pool);
+        assert_eq!(first, second, "per-index worker threads must not respawn across calls");
+        let distinct = first.iter().collect::<BTreeSet<_>>().len();
+        assert_eq!(distinct, 3, "indices map to distinct threads");
+        let me = std::thread::current().id();
+        assert!(first.iter().all(|&t| t != me), "work runs on pool workers, not the caller");
+    }
+
+    #[test]
+    fn executor_propagates_panics() {
+        let pool = Executor::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|w| {
+                if w == 1 {
+                    panic!("boom from worker");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must reach the submitter");
+        // the pool must still be usable afterwards
+        let counter = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
     }
 
     #[test]
@@ -267,6 +510,21 @@ mod tests {
     }
 
     #[test]
+    fn parallel_map_from_worker_runs_inline() {
+        // a parallel entry reached from inside a pool worker must not
+        // re-enter the pool (submit-lock deadlock) — it runs inline
+        let pool = Executor::new(2);
+        let ok = Mutex::new(false);
+        pool.run(1, &|_| {
+            assert!(in_parallel_worker());
+            let out = parallel_map(4, 4, |i| i);
+            assert_eq!(out, vec![0, 1, 2, 3]);
+            *ok.lock().unwrap() = true;
+        });
+        assert!(*ok.lock().unwrap());
+    }
+
+    #[test]
     fn parallel_chunks_mut_covers_all_in_place() {
         let mut data: Vec<usize> = vec![0; 103];
         parallel_chunks_mut(&mut data, 10, |ci, chunk| {
@@ -285,6 +543,22 @@ mod tests {
         });
         assert_eq!(small, vec![7; 4]);
         parallel_chunks_mut(&mut [] as &mut [usize], 4, |_, _| panic!("empty"));
+    }
+
+    #[test]
+    fn parallel_chunks_mut_caps_at_thread_budget() {
+        // with an explicit budget of 1 the chunks run inline on the caller
+        let mut data = vec![0usize; 40];
+        let me = std::thread::current().id();
+        let on_caller = AtomicUsize::new(0);
+        parallel_chunks_mut_threads(&mut data, 10, 1, |_, chunk| {
+            if std::thread::current().id() == me {
+                on_caller.fetch_add(1, Ordering::SeqCst);
+            }
+            chunk.fill(1);
+        });
+        assert_eq!(on_caller.load(Ordering::SeqCst), 4);
+        assert!(data.iter().all(|&v| v == 1));
     }
 
     #[test]
@@ -311,8 +585,14 @@ mod tests {
     fn workers_see_parallel_flag() {
         let mut shards = vec![false; 4];
         parallel_sharded(4, &mut shards, |s, _| *s = in_parallel_worker());
-        assert!(shards.iter().all(|&v| v), "workers must set the nested-GEMM guard");
-        // single-shard inline path keeps the caller's status
+        if default_threads() > 1 {
+            assert!(shards.iter().all(|&v| v), "pool workers must set the nested-GEMM guard");
+        } else {
+            // FLARE_THREADS=1: everything runs inline on the (non-worker)
+            // caller so nested kernels keep their fan-out decision
+            assert!(shards.iter().all(|&v| !v), "threads=1 must stay inline");
+        }
+        // single-shard inline path keeps the caller's status at any budget
         let mut one = vec![true];
         parallel_sharded(1, &mut one, |s, _| *s = in_parallel_worker());
         assert!(!one[0], "inline path must not mark the caller as a worker");

@@ -12,19 +12,32 @@
 //! * **Per-thread free lists, size-classed.**  Buffer capacities are rounded
 //!   up to a power of two (min [`MIN_CLASS`]); each thread keeps a free list
 //!   per class behind a `thread_local`, so the common take/drop cycle is a
-//!   plain `Vec` pop/push with no synchronization.
-//! * **Global reservoir.**  [`crate::util::threadpool::parallel_map`] and
-//!   friends spawn *fresh* scoped threads per call, so a purely thread-local
-//!   pool would never warm up across train steps.  When a worker thread
-//!   exits, its free lists drain into a `Mutex`-guarded reservoir; a take
-//!   that misses locally refills from the reservoir before touching the
-//!   allocator.
+//!   plain `Vec` pop/push with no synchronization.  With the persistent
+//!   [`crate::util::threadpool::Executor`] pool, worker thread-locals live
+//!   for the whole process — after warmup, worker takes never leave the
+//!   thread-local fast path.
+//! * **Global reservoir.**  A shutdown-only backstop: when a thread *does*
+//!   exit (a private test executor, the serving engine's executor thread, a
+//!   raw `std::thread` helper), its free lists drain into a `Mutex`-guarded
+//!   reservoir so the storage survives; a take that misses locally refills
+//!   from the reservoir before touching the allocator.  Under the old
+//!   spawn-per-call substrate this drain ran once per parallel section and
+//!   every worker warm-up paid the reservoir lock — now it is off the hot
+//!   path entirely.
 //! * **Test hook.**  [`pool_allocs`] counts buffers actually allocated from
 //!   the heap (pool misses).  A steady-state step must not move it.
 //!
-//! Buffers are always returned zero-filled: callers accumulate into them
+//! [`take`] returns buffers zero-filled: callers accumulate into them
 //! (`gemm_*_acc` semantics), and zeroing also guarantees that reuse cannot
 //! leak state between steps — two identical steps stay bitwise equal.
+//! [`take_uninit`] skips the zero fill for destinations that are *provably
+//! fully overwritten* before any read (GEMM `*_into` outputs, head
+//! split/merge targets, layernorm outputs): those paid a redundant
+//! O(activations) memset per step, since the consuming kernel re-zeroes or
+//! overwrites every element anyway.  Contents are stale-but-valid `f32`s
+//! from earlier steps — never uninitialized memory (pooled storage is
+//! fully written at allocation) — so a consumer that writes every element
+//! stays bitwise deterministic.
 
 use std::cell::{Cell, RefCell};
 use std::ops::{Deref, DerefMut};
@@ -52,9 +65,9 @@ impl Pool {
 }
 
 impl Drop for Pool {
-    // worker threads are short-lived (one scoped spawn per parallel
-    // section): park their warmed buffers in the reservoir so the next
-    // step's workers start warm instead of re-allocating
+    // shutdown-only path with the persistent executor: when a thread does
+    // exit (private test pools, the serving engine's executor thread), park
+    // its warmed buffers in the reservoir instead of freeing them
     fn drop(&mut self) {
         if let Ok(mut res) = RESERVOIR.lock() {
             for (class, list) in self.classes.iter_mut().enumerate() {
@@ -100,10 +113,7 @@ pub fn pool_allocs() -> u64 {
     POOL_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
 }
 
-/// A zero-filled scratch buffer of the requested length.  Steady state this
-/// is a thread-local free-list pop plus an O(len) zero fill; only a cold
-/// pool (or a request past the largest size class) touches the allocator.
-pub fn take(len: usize) -> WsBuf {
+fn take_impl(len: usize, zero: bool) -> WsBuf {
     if len == 0 {
         return WsBuf { buf: Vec::new() };
     }
@@ -115,16 +125,41 @@ pub fn take(len: usize) -> WsBuf {
             .or_else(|| RESERVOIR.lock().ok().and_then(|mut r| r.classes[class].pop()))
             .unwrap_or_else(|| {
                 count_miss();
-                Vec::with_capacity(class_capacity(class))
+                // fully initialized at birth (calloc), so set_len within
+                // capacity below never exposes uninitialized memory
+                vec![0.0; class_capacity(class)]
             }),
         None => {
             count_miss();
-            Vec::with_capacity(len)
+            vec![0.0; len]
         }
     };
-    buf.clear();
-    buf.resize(len, 0.0); // within capacity: zero fill, no allocation
+    debug_assert!(buf.capacity() >= len);
+    // SAFETY: capacity >= len, and every pooled buffer was allocated as
+    // `vec![0.0; capacity]` (see above + the Drop class check), so all
+    // `len` elements are initialized (possibly stale) f32s.
+    unsafe { buf.set_len(len) };
+    if zero {
+        buf.fill(0.0);
+    }
     WsBuf { buf }
+}
+
+/// A zero-filled scratch buffer of the requested length.  Steady state this
+/// is a thread-local free-list pop plus an O(len) zero fill; only a cold
+/// pool (or a request past the largest size class) touches the allocator.
+pub fn take(len: usize) -> WsBuf {
+    take_impl(len, true)
+}
+
+/// An **unfilled** scratch buffer of the requested length: same pooling as
+/// [`take`], without the O(len) zero pass.  Contents are stale values from
+/// earlier uses (valid `f32`s, never uninitialized memory) — reserve this
+/// for destinations that are provably fully overwritten before any read
+/// (GEMM `*_into` outputs, `copy_from_slice` targets); accumulating
+/// consumers (`gemm_*_acc` from zero) must keep [`take`].
+pub fn take_uninit(len: usize) -> WsBuf {
+    take_impl(len, false)
 }
 
 /// An `[f32]` scratch buffer on loan from the pool; `Drop` returns the
@@ -250,6 +285,34 @@ mod tests {
         assert_eq!(class_of(128), Some(1));
         assert_eq!(class_of(129), Some(2));
         assert_eq!(class_of(usize::MAX / 2), None);
+    }
+
+    #[test]
+    fn take_uninit_reuses_without_memset() {
+        // an oddball class keeps this test's free list private even though
+        // the whole suite shares the per-thread pool
+        const LEN: usize = 70_000;
+        let mut a = take(LEN);
+        a[5] = 42.0;
+        drop(a);
+        let misses = pool_allocs();
+        let b = take_uninit(LEN);
+        assert_eq!(b.len(), LEN);
+        assert_eq!(pool_allocs(), misses, "reuse must not touch the allocator");
+        // LIFO pop returns the same buffer; the sentinel proves no re-zero
+        assert_eq!(b[5], 42.0, "take_uninit must skip the zero fill");
+        drop(b);
+        let c = take(LEN);
+        assert!(c.iter().all(|&v| v == 0.0), "take must still zero the same storage");
+    }
+
+    #[test]
+    fn take_uninit_zero_len() {
+        let misses = pool_allocs();
+        let z = take_uninit(0);
+        assert!(z.is_empty());
+        drop(z);
+        assert_eq!(pool_allocs(), misses);
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! The zero-transient-allocation gate for the serving hot path: after the
+//! per-bucket workspaces and the persistent worker pool are warm, a
+//! `Backend::forward_batch` call must perform **zero** heap allocations —
+//! every per-sample activation comes from the (worker-local) workspace
+//! pool, outputs land in the caller's reused reply buffer, and the
+//! executor's job board takes no per-job storage.
+//!
+//! Measured with a counting global allocator wrapping `System`.  This file
+//! deliberately holds a single `#[test]`: the counter is process-global, so
+//! a concurrent test allocating on another thread would make the
+//! steady-state window flaky.  (The training-path sibling is
+//! `rust/tests/alloc_steady.rs`.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+mod common;
+
+#[test]
+fn steady_state_forward_batch_is_allocation_free() {
+    use flare::config::ModelCfg;
+    use flare::model::init_params;
+    use flare::runtime::{Backend, BatchInput, NativeBackend};
+    use flare::util::rng::Rng;
+
+    // a serving-shaped case: batch > 1 so the batch fan-out engages the
+    // persistent pool (under FLARE_THREADS=1 it runs inline — the gate
+    // must hold on both legs); deeper + wider output than the canonical
+    // tiny model so more distinct buffer classes cycle through the pool
+    let model = ModelCfg {
+        d_out: 2,
+        blocks: 2,
+        ..common::tiny_flare_model(32)
+    };
+    let case = common::tiny_flare_case("alloc_serving", model, 4);
+    let params = init_params(&case.params, case.param_count, 7);
+    let mut rng = Rng::new(9);
+    let batch = case.batch;
+    let x: Vec<f32> = (0..batch * case.model.n * case.model.d_in)
+        .map(|_| rng.normal() as f32)
+        .collect();
+
+    let mut backend = NativeBackend::new();
+    let mut out = Vec::new();
+
+    // warmup: builds the plan, spawns the persistent pool, fills the
+    // worker-local workspace free lists and sizes the reply buffer
+    for _ in 0..3 {
+        backend
+            .forward_batch(&case, &params, BatchInput::Fields(&x), batch, &mut out)
+            .unwrap();
+    }
+    let expect = out.clone();
+
+    let before = allocs();
+    backend
+        .forward_batch(&case, &params, BatchInput::Fields(&x), batch, &mut out)
+        .unwrap();
+    let after = allocs();
+    assert_eq!(out.len(), batch * case.model.n * case.model.d_out);
+    assert_eq!(out, expect, "warmed forward_batch must stay deterministic");
+    assert!(out.iter().all(|v| v.is_finite()));
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward_batch performed heap allocations"
+    );
+
+    // the batched path must agree with the per-sample forward() path
+    let reference = backend
+        .forward(&case, &params, BatchInput::Fields(&x), batch)
+        .unwrap();
+    assert_eq!(out, reference, "forward_batch must match forward bitwise");
+}

@@ -1,0 +1,135 @@
+//! Shared helpers for the integration-test binaries (`mod common;`).
+//!
+//! The single source of truth for serializing a Rust-declared [`CaseCfg`]
+//! into an on-disk `manifest.json`: every `ModelCfg`/`CaseCfg`/`ParamEntry`
+//! field must be emitted here exactly once, so a field added to the config
+//! structs cannot silently vanish from one test binary's manifest while
+//! surviving in another's (the JSON parser would default it and the test
+//! would exercise a different model than intended).
+
+// each test binary compiles its own copy of this module and typically uses
+// only part of it
+#![allow(dead_code)]
+
+use flare::config::{CaseCfg, ModelCfg};
+use flare::model::build_spec;
+use flare::util::json::Json;
+
+/// The canonical tiny FLARE model the integration tests run on (seconds,
+/// not minutes): c=8, 2 heads, M=4 latents, one block, field regression.
+/// Tests that need variations (`d_out`, `blocks`, ...) use struct update:
+/// `ModelCfg { blocks: 2, ..tiny_flare_model(32) }`.
+pub fn tiny_flare_model(n: usize) -> ModelCfg {
+    ModelCfg {
+        mixer: "flare".into(),
+        n,
+        d_in: 3,
+        d_out: 1,
+        c: 8,
+        heads: 2,
+        m: 4,
+        blocks: 1,
+        kv_layers: 1,
+        ffn_layers: 1,
+        io_layers: 1,
+        latent_sa_blocks: 0,
+        shared_latents: false,
+        scale: 1.0,
+        task: "regression".into(),
+        vocab: 0,
+        num_classes: 0,
+    }
+}
+
+/// Wrap a model into an artifact-free [`CaseCfg`] with a freshly built
+/// packing spec — the one place the test binaries assemble case configs.
+pub fn tiny_flare_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
+    let (entries, param_count) = build_spec(&model).unwrap();
+    CaseCfg {
+        name: name.into(),
+        group: "test".into(),
+        dataset: "darcy".into(),
+        dataset_meta: Json::Null,
+        batch,
+        train_steps: 0,
+        lr: 1e-3,
+        model,
+        param_count,
+        artifacts: Default::default(),
+        params: entries,
+    }
+}
+
+/// Write a `manifest.json` holding `cases` into a temp dir; returns the dir.
+pub fn write_manifest_dir(tag: &str, cases: &[&CaseCfg]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let entries_json = |case: &CaseCfg| -> Json {
+        Json::Arr(
+            case.params
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::str(e.name.as_str())),
+                        (
+                            "shape",
+                            Json::Arr(e.shape.iter().map(|&s| Json::num(s as f64)).collect()),
+                        ),
+                        ("offset", Json::num(e.offset as f64)),
+                        ("size", Json::num(e.size as f64)),
+                        ("init", Json::str(e.init.as_str())),
+                        ("fan_in", Json::num(e.fan_in as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    let case_json = |case: &CaseCfg| -> Json {
+        Json::obj(vec![
+            ("name", Json::str(case.name.as_str())),
+            ("group", Json::str(case.group.as_str())),
+            ("dataset", Json::str(case.dataset.as_str())),
+            ("dataset_meta", case.dataset_meta.clone()),
+            ("batch", Json::num(case.batch as f64)),
+            ("train_steps", Json::num(case.train_steps as f64)),
+            ("lr", Json::num(case.lr)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("mixer", Json::str(case.model.mixer.as_str())),
+                    ("n", Json::num(case.model.n as f64)),
+                    ("d_in", Json::num(case.model.d_in as f64)),
+                    ("d_out", Json::num(case.model.d_out as f64)),
+                    ("c", Json::num(case.model.c as f64)),
+                    ("heads", Json::num(case.model.heads as f64)),
+                    ("m", Json::num(case.model.m as f64)),
+                    ("blocks", Json::num(case.model.blocks as f64)),
+                    ("kv_layers", Json::num(case.model.kv_layers as f64)),
+                    ("ffn_layers", Json::num(case.model.ffn_layers as f64)),
+                    ("io_layers", Json::num(case.model.io_layers as f64)),
+                    (
+                        "latent_sa_blocks",
+                        Json::num(case.model.latent_sa_blocks as f64),
+                    ),
+                    ("shared_latents", Json::Bool(case.model.shared_latents)),
+                    ("scale", Json::num(case.model.scale)),
+                    ("task", Json::str(case.model.task.as_str())),
+                    ("vocab", Json::num(case.model.vocab as f64)),
+                    ("num_classes", Json::num(case.model.num_classes as f64)),
+                ]),
+            ),
+            ("param_count", Json::num(case.param_count as f64)),
+            ("artifacts", Json::Obj(Default::default())),
+            ("params", entries_json(case)),
+        ])
+    };
+    let manifest = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("seed", Json::num(3.0)),
+        ("cases", Json::Arr(cases.iter().map(|&c| case_json(c)).collect())),
+        ("mixers", Json::Arr(vec![])),
+        ("layers", Json::Arr(vec![])),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string()).unwrap();
+    dir
+}

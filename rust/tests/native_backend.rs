@@ -18,6 +18,9 @@ use flare::runtime::{make_backend, BatchInput, BatchTarget, OptState};
 use flare::util::json::Json;
 use flare::util::rng::{u01, Rng};
 
+mod common;
+use common::write_manifest_dir;
+
 /// The tiny FLARE regression config the Python goldens were generated with.
 fn tiny_model() -> ModelCfg {
     ModelCfg {
@@ -396,80 +399,6 @@ fn qk_keys_shapes_and_finiteness() {
         assert_eq!(k.len(), per);
         assert!(k.iter().all(|v| v.is_finite()));
     }
-}
-
-/// Write a manifest.json holding `cases` into a temp dir; returns the dir.
-fn write_manifest_dir(tag: &str, cases: &[&CaseCfg]) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join(tag);
-    std::fs::create_dir_all(&dir).unwrap();
-    let entries_json = |case: &CaseCfg| -> Json {
-        Json::Arr(
-            case.params
-                .iter()
-                .map(|e| {
-                    Json::obj(vec![
-                        ("name", Json::str(e.name.as_str())),
-                        (
-                            "shape",
-                            Json::Arr(e.shape.iter().map(|&s| Json::num(s as f64)).collect()),
-                        ),
-                        ("offset", Json::num(e.offset as f64)),
-                        ("size", Json::num(e.size as f64)),
-                        ("init", Json::str(e.init.as_str())),
-                        ("fan_in", Json::num(e.fan_in as f64)),
-                    ])
-                })
-                .collect(),
-        )
-    };
-    let case_json = |case: &CaseCfg| -> Json {
-        Json::obj(vec![
-            ("name", Json::str(case.name.as_str())),
-            ("group", Json::str(case.group.as_str())),
-            ("dataset", Json::str(case.dataset.as_str())),
-            ("dataset_meta", case.dataset_meta.clone()),
-            ("batch", Json::num(case.batch as f64)),
-            ("train_steps", Json::num(case.train_steps as f64)),
-            ("lr", Json::num(case.lr)),
-            (
-                "model",
-                Json::obj(vec![
-                    ("mixer", Json::str(case.model.mixer.as_str())),
-                    ("n", Json::num(case.model.n as f64)),
-                    ("d_in", Json::num(case.model.d_in as f64)),
-                    ("d_out", Json::num(case.model.d_out as f64)),
-                    ("c", Json::num(case.model.c as f64)),
-                    ("heads", Json::num(case.model.heads as f64)),
-                    ("m", Json::num(case.model.m as f64)),
-                    ("blocks", Json::num(case.model.blocks as f64)),
-                    ("kv_layers", Json::num(case.model.kv_layers as f64)),
-                    ("ffn_layers", Json::num(case.model.ffn_layers as f64)),
-                    ("io_layers", Json::num(case.model.io_layers as f64)),
-                    (
-                        "latent_sa_blocks",
-                        Json::num(case.model.latent_sa_blocks as f64),
-                    ),
-                    ("shared_latents", Json::Bool(case.model.shared_latents)),
-                    ("scale", Json::num(case.model.scale)),
-                    ("task", Json::str(case.model.task.as_str())),
-                    ("vocab", Json::num(case.model.vocab as f64)),
-                    ("num_classes", Json::num(case.model.num_classes as f64)),
-                ]),
-            ),
-            ("param_count", Json::num(case.param_count as f64)),
-            ("artifacts", Json::Obj(Default::default())),
-            ("params", entries_json(case)),
-        ])
-    };
-    let manifest = Json::obj(vec![
-        ("version", Json::num(1.0)),
-        ("seed", Json::num(3.0)),
-        ("cases", Json::Arr(cases.iter().map(|&c| case_json(c)).collect())),
-        ("mixers", Json::Arr(vec![])),
-        ("layers", Json::Arr(vec![])),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.to_string()).unwrap();
-    dir
 }
 
 #[test]

@@ -1,171 +1,261 @@
-//! Serving-engine integration: correctness of batched responses under
-//! concurrent load, padding behaviour, and graceful error paths.
+//! Serving-engine integration: concurrent multi-client correctness on the
+//! native backend (per-client FIFO reply order under load, padding,
+//! structured oversize errors) plus — with `--features xla` — parity of
+//! batched responses against direct PJRT execution of the fwd artifact.
 //!
-//! Compiled only with `--features xla` (compares against direct PJRT
-//! execution of the fwd artifact); the artifact-free serving path is
-//! covered by `tests/native_backend.rs`.
-
-#![cfg(feature = "xla")]
+//! The native tests run on every CI leg, including the dedicated
+//! `FLARE_THREADS=1` determinism run; they need no artifacts.
 
 use std::time::Duration;
 
-use flare::config::Manifest;
+use flare::config::CaseCfg;
 use flare::coordinator::{Server, ServerConfig};
-use flare::data;
-use flare::model::init_params;
-use flare::runtime::literal::{lit_f32, to_vec_f32};
-use flare::runtime::Runtime;
 
-fn manifest() -> Option<Manifest> {
-    let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(dir).expect("manifest parses"))
-    } else {
-        eprintln!("skipping: artifacts/ not built");
-        None
-    }
-}
+mod common;
+use common::{tiny_flare_case, tiny_flare_model, write_manifest_dir};
 
-/// Direct (unbatched) reference execution of the fwd artifact.
-fn direct_forward(m: &Manifest, case_name: &str, x: &[f32]) -> Vec<f32> {
-    let case = m.case(case_name).unwrap();
-    let rt = Runtime::cpu().unwrap();
-    let exe = rt
-        .load("ref_fwd", m.artifact_path(case, "fwd").unwrap())
-        .unwrap();
-    let params = init_params(&case.params, case.param_count, m.seed);
-    // pad batch with zeros like the server does
-    let mut xb = x.to_vec();
-    xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
-    let outs = rt
-        .run(
-            &exe,
-            &[
-                lit_f32(&params, &[case.param_count as i64]).unwrap(),
-                lit_f32(
-                    &xb,
-                    &[
-                        case.batch as i64,
-                        case.model.n as i64,
-                        case.model.d_in as i64,
-                    ],
-                )
-                .unwrap(),
-            ],
-        )
-        .unwrap();
-    let y = to_vec_f32(&outs[0]).unwrap();
-    y[..case.model.n * case.model.d_out].to_vec()
-}
-
-#[test]
-fn concurrent_responses_match_direct_execution() {
-    let Some(m) = manifest() else { return };
-    let name = "core_darcy_flare";
-    let case = m.case(name).unwrap().clone();
-    let ds = data::build(&case.dataset, &case.dataset_meta, m.seed).unwrap();
-
+fn start_tiny_server(tag: &str, n: usize, batch: usize) -> (Server, CaseCfg) {
+    let case = tiny_flare_case("serve_tiny", tiny_flare_model(n), batch);
+    let dir = write_manifest_dir(tag, &[&case]);
     let server = Server::start(
-        m.dir.clone(),
+        dir,
         ServerConfig {
-            cases: vec![name.into()],
-            max_wait: Duration::from_millis(5),
-            params: vec![],
-            backend: None,
-        },
-    )
-    .unwrap();
-
-    // submit several distinct inputs concurrently
-    let sample_count = 4.min(ds.test_len());
-    let receivers: Vec<_> = (0..sample_count)
-        .map(|i| {
-            let x = ds.test_fields[i].x.clone();
-            (i, server.submit(x, case.model.n))
-        })
-        .collect();
-    for (i, rx) in receivers {
-        let resp = rx.recv().unwrap().unwrap();
-        assert_eq!(resp.y.len(), case.model.n * case.model.d_out);
-        // responses must match a direct single-input execution because the
-        // model is applied per-sample along the batch axis (vmapped)
-        let expect = direct_forward(&m, name, &ds.test_fields[i].x);
-        let max_err = resp
-            .y
-            .iter()
-            .zip(&expect)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_err < 1e-4, "sample {i}: max err {max_err}");
-    }
-    server.shutdown().unwrap();
-}
-
-#[test]
-fn short_requests_are_padded_and_trimmed() {
-    let Some(m) = manifest() else { return };
-    let name = "core_darcy_flare";
-    let case = m.case(name).unwrap().clone();
-    let server = Server::start(
-        m.dir.clone(),
-        ServerConfig {
-            cases: vec![name.into()],
-            max_wait: Duration::from_millis(5),
-            params: vec![],
-            backend: None,
-        },
-    )
-    .unwrap();
-    let short_n = case.model.n / 2;
-    let x = vec![0.25f32; short_n * case.model.d_in];
-    let resp = server.infer(x, short_n).unwrap();
-    assert_eq!(resp.y.len(), short_n * case.model.d_out);
-    server.shutdown().unwrap();
-}
-
-#[test]
-fn oversized_request_rejected() {
-    let Some(m) = manifest() else { return };
-    let name = "core_darcy_flare";
-    let case = m.case(name).unwrap().clone();
-    let server = Server::start(
-        m.dir.clone(),
-        ServerConfig {
-            cases: vec![name.into()],
-            max_wait: Duration::from_millis(5),
-            params: vec![],
-            backend: None,
-        },
-    )
-    .unwrap();
-    let big_n = case.model.n * 4;
-    let x = vec![0.0f32; big_n * case.model.d_in];
-    assert!(server.infer(x, big_n).is_err());
-    server.shutdown().unwrap();
-}
-
-#[test]
-fn metrics_recorded_under_load() {
-    let Some(m) = manifest() else { return };
-    let name = "core_darcy_flare";
-    let case = m.case(name).unwrap().clone();
-    let server = Server::start(
-        m.dir.clone(),
-        ServerConfig {
-            cases: vec![name.into()],
+            cases: vec![case.name.clone()],
             max_wait: Duration::from_millis(2),
             params: vec![],
-            backend: None,
+            backend: Some("native".into()),
         },
     )
     .unwrap();
-    let x = vec![0.1f32; case.model.n * case.model.d_in];
-    for _ in 0..6 {
-        server.infer(x.clone(), case.model.n).unwrap();
-    }
+    (server, case)
+}
+
+#[test]
+fn concurrent_clients_get_fifo_replies_under_load() {
+    // several clients pipeline submissions concurrently; each client's
+    // replies must come back in its own submission order (ascending seq
+    // stamps prove the engine executed them FIFO within the bucket), with
+    // correct per-request shapes despite batching + padding across clients
+    let (server, case) = start_tiny_server("flare_serving_fifo_test", 64, 4);
+    let clients = 4usize;
+    let per_client = 6usize;
+    let d_in = case.model.d_in;
+    let d_out = case.model.d_out;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = &server;
+            scope.spawn(move || {
+                // every client mixes full-size and short (padded) requests
+                let sizes = [64usize, 40, 64, 17, 64, 33];
+                let receivers: Vec<_> = (0..per_client)
+                    .map(|i| {
+                        let n = sizes[i % sizes.len()];
+                        let x = vec![0.1 + c as f32 * 0.05; n * d_in];
+                        (n, server.submit(x, n))
+                    })
+                    .collect();
+                let mut last_seq = None;
+                for (n, rx) in receivers {
+                    let resp = rx.recv().expect("reply").expect("inference ok");
+                    assert_eq!(resp.y.len(), n * d_out);
+                    assert!(resp.y.iter().all(|v| v.is_finite()));
+                    assert!((1..=4).contains(&resp.batch_size));
+                    if let Some(prev) = last_seq {
+                        assert!(
+                            resp.seq > prev,
+                            "client {c}: replies out of order (seq {} after {prev})",
+                            resp.seq
+                        );
+                    }
+                    last_seq = Some(resp.seq);
+                }
+            });
+        }
+    });
+    // every request was recorded exactly once
     let lat = server.metrics.summary("latency_ms").unwrap();
-    assert_eq!(lat.count, 6);
-    assert!(lat.mean > 0.0);
-    assert!(server.metrics.summary("batch_size").is_some());
+    assert_eq!(lat.count, clients * per_client);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn oversized_request_gets_structured_error() {
+    let (server, case) = start_tiny_server("flare_serving_route_err_test", 64, 2);
+    let big_n = case.model.n * 4;
+    let x = vec![0.0f32; big_n * case.model.d_in];
+    let err = server.infer(x, big_n).unwrap_err().to_string();
+    assert!(err.contains("n=256"), "error names the request size: {err}");
+    assert!(err.contains("serve_tiny"), "error names the available bucket: {err}");
+    assert!(err.contains("n <= 64"), "error suggests the largest fit: {err}");
+    // a mismatched payload is rejected before it can wedge the batcher
+    let bad = server.infer(vec![0.0f32; 5], 4).unwrap_err().to_string();
+    assert!(bad.contains("does not match"), "length mismatch is reported: {bad}");
+    server.shutdown().unwrap();
+}
+
+/// XLA-artifact parity tests (direct PJRT execution as the oracle).
+#[cfg(feature = "xla")]
+mod xla {
+    use std::time::Duration;
+
+    use flare::config::Manifest;
+    use flare::coordinator::{Server, ServerConfig};
+    use flare::data;
+    use flare::model::init_params;
+    use flare::runtime::literal::{lit_f32, to_vec_f32};
+    use flare::runtime::Runtime;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).expect("manifest parses"))
+        } else {
+            eprintln!("skipping: artifacts/ not built");
+            None
+        }
+    }
+
+    /// Direct (unbatched) reference execution of the fwd artifact.
+    fn direct_forward(m: &Manifest, case_name: &str, x: &[f32]) -> Vec<f32> {
+        let case = m.case(case_name).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load("ref_fwd", m.artifact_path(case, "fwd").unwrap())
+            .unwrap();
+        let params = init_params(&case.params, case.param_count, m.seed);
+        // pad batch with zeros like the server does
+        let mut xb = x.to_vec();
+        xb.resize(case.batch * case.model.n * case.model.d_in, 0.0);
+        let outs = rt
+            .run(
+                &exe,
+                &[
+                    lit_f32(&params, &[case.param_count as i64]).unwrap(),
+                    lit_f32(
+                        &xb,
+                        &[
+                            case.batch as i64,
+                            case.model.n as i64,
+                            case.model.d_in as i64,
+                        ],
+                    )
+                    .unwrap(),
+                ],
+            )
+            .unwrap();
+        let y = to_vec_f32(&outs[0]).unwrap();
+        y[..case.model.n * case.model.d_out].to_vec()
+    }
+
+    #[test]
+    fn concurrent_responses_match_direct_execution() {
+        let Some(m) = manifest() else { return };
+        let name = "core_darcy_flare";
+        let case = m.case(name).unwrap().clone();
+        let ds = data::build(&case.dataset, &case.dataset_meta, m.seed).unwrap();
+
+        let server = Server::start(
+            m.dir.clone(),
+            ServerConfig {
+                cases: vec![name.into()],
+                max_wait: Duration::from_millis(5),
+                params: vec![],
+                backend: None,
+            },
+        )
+        .unwrap();
+
+        // submit several distinct inputs concurrently
+        let sample_count = 4.min(ds.test_len());
+        let receivers: Vec<_> = (0..sample_count)
+            .map(|i| {
+                let x = ds.test_fields[i].x.clone();
+                (i, server.submit(x, case.model.n))
+            })
+            .collect();
+        for (i, rx) in receivers {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.y.len(), case.model.n * case.model.d_out);
+            // responses must match a direct single-input execution because
+            // the model is applied per-sample along the batch axis (vmapped)
+            let expect = direct_forward(&m, name, &ds.test_fields[i].x);
+            let max_err = resp
+                .y
+                .iter()
+                .zip(&expect)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 1e-4, "sample {i}: max err {max_err}");
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn short_requests_are_padded_and_trimmed() {
+        let Some(m) = manifest() else { return };
+        let name = "core_darcy_flare";
+        let case = m.case(name).unwrap().clone();
+        let server = Server::start(
+            m.dir.clone(),
+            ServerConfig {
+                cases: vec![name.into()],
+                max_wait: Duration::from_millis(5),
+                params: vec![],
+                backend: None,
+            },
+        )
+        .unwrap();
+        let short_n = case.model.n / 2;
+        let x = vec![0.25f32; short_n * case.model.d_in];
+        let resp = server.infer(x, short_n).unwrap();
+        assert_eq!(resp.y.len(), short_n * case.model.d_out);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let Some(m) = manifest() else { return };
+        let name = "core_darcy_flare";
+        let case = m.case(name).unwrap().clone();
+        let server = Server::start(
+            m.dir.clone(),
+            ServerConfig {
+                cases: vec![name.into()],
+                max_wait: Duration::from_millis(5),
+                params: vec![],
+                backend: None,
+            },
+        )
+        .unwrap();
+        let big_n = case.model.n * 4;
+        let x = vec![0.0f32; big_n * case.model.d_in];
+        assert!(server.infer(x, big_n).is_err());
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_recorded_under_load() {
+        let Some(m) = manifest() else { return };
+        let name = "core_darcy_flare";
+        let case = m.case(name).unwrap().clone();
+        let server = Server::start(
+            m.dir.clone(),
+            ServerConfig {
+                cases: vec![name.into()],
+                max_wait: Duration::from_millis(2),
+                params: vec![],
+                backend: None,
+            },
+        )
+        .unwrap();
+        let x = vec![0.1f32; case.model.n * case.model.d_in];
+        for _ in 0..6 {
+            server.infer(x.clone(), case.model.n).unwrap();
+        }
+        let lat = server.metrics.summary("latency_ms").unwrap();
+        assert_eq!(lat.count, 6);
+        assert!(lat.mean > 0.0);
+        assert!(server.metrics.summary("batch_size").is_some());
+        server.shutdown().unwrap();
+    }
 }

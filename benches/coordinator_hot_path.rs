@@ -45,6 +45,7 @@ fn synthetic_case() -> anyhow::Result<CaseCfg> {
         dataset: "darcy".into(),
         dataset_meta: Json::Null,
         batch: 2,
+        max_batch: 2,
         train_steps: 0,
         lr: 1e-3,
         model,
@@ -148,6 +149,7 @@ fn main() -> anyhow::Result<()> {
                         max_wait: Duration::from_millis(wait_ms),
                         params: vec![],
                         backend: None,
+                        ..ServerConfig::default()
                     },
                 )?;
                 let requests: usize = if quick_mode() { 16 } else { 64 };

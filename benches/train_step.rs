@@ -45,6 +45,7 @@ fn make_case(name: &str, n: usize, c: usize, m: usize, blocks: usize) -> CaseCfg
         dataset: "darcy".into(),
         dataset_meta: Json::Null,
         batch: 2,
+        max_batch: 2,
         train_steps: 0,
         lr: 1e-3,
         model,

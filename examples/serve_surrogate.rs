@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(8),
             params: vec![(case.name.clone(), trained.params.clone())],
             backend: None,
+            ..ServerConfig::default()
         },
     )?;
 

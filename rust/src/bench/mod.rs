@@ -4,6 +4,8 @@
 //! table printer that mirrors the paper's tables, and JSON result dumps
 //! under `results/` so EXPERIMENTS.md numbers are regenerable.
 
+pub mod report;
+
 use std::time::Duration;
 
 use crate::util::json::Json;

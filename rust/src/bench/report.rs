@@ -1,0 +1,424 @@
+//! The BENCH artifact pipeline behind `flare bench-report`.
+//!
+//! Four operations over the perf artifacts CI passes around:
+//!
+//! * [`fold`] — merge the `results/*.json` dumps written by the benches
+//!   into one `BENCH_native.json` (per-op median ns + the measurement
+//!   extras, worker threads, git sha), self-validated after writing.
+//! * [`check`] — schema validation of a folded artifact, replacing the
+//!   shell `jq` probes bench-smoke used to run: top-level fields, every
+//!   op well-formed, and `serve_open_loop_*` ops carrying the open-loop
+//!   contract (`goodput_req_s`, `load_factor`, `p99_ms`).
+//! * [`compare`] — the perf-regression gate: fail when any shared
+//!   `(bench, name)` median regresses past the bound vs a baseline.
+//! * [`calibrate`] — rewrite `BENCH_baseline.json` from a fresh
+//!   `BENCH_native.json`, preserving the baseline schema and stamping a
+//!   provenance note (which sha it was calibrated from).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// What [`fold`] produced: enough for `--compare` without re-parsing.
+pub struct FoldOutcome {
+    pub path: PathBuf,
+    pub ops: usize,
+    /// flat `(bench, name, median_ns)` rows for the perf gate
+    pub measured: Vec<(String, String, f64)>,
+}
+
+/// Merge bench dump files from `dirs` into the `BENCH_native.json` schema
+/// at `out_path`.  Non-array JSON files are skipped (results/ also holds
+/// e2e records); measurement `extras` are carried into the op entries so
+/// [`check`] can validate bench-specific contracts downstream.
+pub fn fold(
+    dirs: &[PathBuf],
+    out_path: &Path,
+    threads: usize,
+    sha: &str,
+) -> anyhow::Result<FoldOutcome> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in dirs {
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            files.extend(
+                rd.filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false)),
+            );
+        }
+    }
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no *.json bench dumps in {dirs:?}");
+    let mut ops: Vec<Json> = Vec::new();
+    let mut measured: Vec<(String, String, f64)> = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let parsed =
+            parse(&text).map_err(|e| anyhow::anyhow!("malformed bench dump {path:?}: {e}"))?;
+        let Some(arr) = parsed.as_arr() else {
+            eprintln!("skipping {path:?}: not a bench measurement array");
+            continue;
+        };
+        let bench = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("bench")
+            .to_string();
+        for m in arr {
+            let name = m
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("measurement without name in {path:?}"))?;
+            let p50 = m.get("p50_ms").as_f64().ok_or_else(|| {
+                anyhow::anyhow!("measurement {name:?} without p50_ms in {path:?}")
+            })?;
+            anyhow::ensure!(
+                p50.is_finite() && p50 >= 0.0,
+                "measurement {name:?} has invalid p50_ms {p50}"
+            );
+            let iters = m.get("iters").as_f64().unwrap_or(0.0);
+            measured.push((bench.clone(), name.to_string(), p50 * 1e6));
+            let mut fields = vec![
+                ("bench", Json::str(&bench)),
+                ("name", Json::str(name)),
+                ("median_ns", Json::num(p50 * 1e6)),
+                ("iters", Json::num(iters)),
+            ];
+            // carry measurement extras through the fold — bench-specific
+            // contracts (the open-loop goodput fields) live there
+            if let Some(extras) = m.get("extras").as_obj() {
+                if !extras.is_empty() {
+                    fields.push(("extras", Json::Obj(extras.clone())));
+                }
+            }
+            ops.push(Json::obj(fields));
+        }
+    }
+    anyhow::ensure!(!ops.is_empty(), "bench dumps contained no measurements");
+    let count = ops.len();
+    let report = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("backend", Json::str("native")),
+        ("git_sha", Json::str(sha)),
+        ("threads", Json::num(threads as f64)),
+        ("ops", Json::Arr(ops)),
+    ]);
+    std::fs::write(out_path, report.to_string())?;
+    // self-check: the artifact must round-trip through the validator
+    let n = check(out_path)?;
+    anyhow::ensure!(n == count, "written {out_path:?} failed validation");
+    Ok(FoldOutcome {
+        path: out_path.to_path_buf(),
+        ops: count,
+        measured,
+    })
+}
+
+/// Validate a folded BENCH artifact; returns the op count.  This is the
+/// one schema contract bench-smoke enforces (formerly four `jq` lines).
+pub fn check(path: &Path) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| anyhow::anyhow!("malformed {path:?}: {e}"))?;
+    anyhow::ensure!(
+        v.get("schema").as_usize() == Some(1),
+        "{path:?}: schema must be 1"
+    );
+    anyhow::ensure!(
+        !v.req_str("backend")?.is_empty(),
+        "{path:?}: backend must be a non-empty string"
+    );
+    anyhow::ensure!(
+        !v.req_str("git_sha")?.is_empty(),
+        "{path:?}: git_sha must be a non-empty string"
+    );
+    anyhow::ensure!(
+        v.req_usize("threads")? >= 1,
+        "{path:?}: threads must be >= 1"
+    );
+    let ops = v
+        .get("ops")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing ops array"))?;
+    anyhow::ensure!(!ops.is_empty(), "{path:?}: ops must be non-empty");
+    for op in ops {
+        let name = op.req_str("name")?;
+        op.req_str("bench")?;
+        let med = op.req_f64("median_ns")?;
+        anyhow::ensure!(
+            med.is_finite() && med >= 0.0,
+            "{path:?}: op {name:?} has invalid median_ns {med}"
+        );
+        anyhow::ensure!(
+            op.req_f64("iters")? >= 0.0,
+            "{path:?}: op {name:?} has invalid iters"
+        );
+        // the open-loop serving ops must report the overload contract
+        if name.starts_with("serve_open_loop") {
+            let extras = op.get("extras");
+            for key in ["goodput_req_s", "load_factor", "p99_ms"] {
+                let x = extras.get(key).as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("{path:?}: open-loop op {name:?} lacks extras.{key}")
+                })?;
+                anyhow::ensure!(
+                    x.is_finite() && x >= 0.0,
+                    "{path:?}: open-loop op {name:?} has invalid {key} = {x}"
+                );
+            }
+            anyhow::ensure!(
+                extras.get("load_factor").as_f64().unwrap_or(0.0) > 0.0,
+                "{path:?}: open-loop op {name:?} must have load_factor > 0"
+            );
+        }
+    }
+    Ok(ops.len())
+}
+
+/// Perf-regression gate: every `(bench, name)` shared between `measured`
+/// and the baseline must stay within `max_reg`x of the baseline median.
+pub fn compare(
+    measured: &[(String, String, f64)],
+    base_path: &Path,
+    max_reg: f64,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(max_reg > 0.0, "--max-regression must be positive");
+    let base = parse(&std::fs::read_to_string(base_path)?)
+        .map_err(|e| anyhow::anyhow!("malformed baseline {base_path:?}: {e}"))?;
+    let mut baseline: BTreeMap<(String, String), f64> = Default::default();
+    if let Some(arr) = base.get("ops").as_arr() {
+        for op in arr {
+            if let (Some(b), Some(nm), Some(med)) = (
+                op.get("bench").as_str(),
+                op.get("name").as_str(),
+                op.get("median_ns").as_f64(),
+            ) {
+                baseline.insert((b.to_string(), nm.to_string()), med);
+            }
+        }
+    }
+    let mut compared = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for (bench, op_name, median_ns) in measured {
+        let Some(&base_ns) = baseline.get(&(bench.clone(), op_name.clone())) else {
+            continue;
+        };
+        if base_ns <= 0.0 {
+            continue;
+        }
+        compared += 1;
+        let ratio = median_ns / base_ns;
+        if ratio > max_reg {
+            regressions.push(format!(
+                "{bench}/{op_name}: {median_ns:.0} ns vs baseline {base_ns:.0} ns \
+                 ({ratio:.2}x > {max_reg:.2}x)"
+            ));
+        }
+    }
+    anyhow::ensure!(
+        compared > 0,
+        "perf gate compared 0 ops against {base_path:?} — baseline and run share no \
+         benchmark names; recalibrate with `flare bench-report --calibrate` (see README)"
+    );
+    if regressions.is_empty() {
+        println!("perf gate: {compared} shared ops within {max_reg:.2}x of {base_path:?}");
+        Ok(())
+    } else {
+        for r in &regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        anyhow::bail!(
+            "{} of {compared} benchmark(s) regressed more than {max_reg}x vs {base_path:?}.\n\
+             If this change is a deliberate perf trade (or the baseline is stale), refresh \
+             the baseline from a green bench-smoke run on comparable hardware:\n\
+             \x20 cargo run -p flare --release -- bench-report --calibrate BENCH_native.json \
+             --out BENCH_baseline.json\n\
+             — and commit the result (see README \"Performance\", or the workflow_dispatch \
+             `calibrate-baseline` CI job which uploads a refreshed baseline artifact).",
+            regressions.len()
+        );
+    }
+}
+
+/// Rewrite the committed perf baseline from a fresh, validated
+/// `BENCH_native.json`: same schema (so [`compare`] keeps working), plus a
+/// provenance note recording which run it was calibrated from.  Returns
+/// the op count.
+pub fn calibrate(native_path: &Path, baseline_path: &Path) -> anyhow::Result<usize> {
+    let count = check(native_path)?;
+    let v = parse(&std::fs::read_to_string(native_path)?)?;
+    let sha = v.req_str("git_sha")?.to_string();
+    let threads = v.req_usize("threads")?;
+    // strip per-run extras: the baseline carries only what compare() reads,
+    // so recalibration diffs stay reviewable
+    let mut ops: Vec<Json> = Vec::new();
+    for op in v.get("ops").as_arr().unwrap_or(&[]) {
+        ops.push(Json::obj(vec![
+            ("bench", Json::str(op.req_str("bench")?)),
+            ("name", Json::str(op.req_str("name")?)),
+            ("median_ns", Json::num(op.req_f64("median_ns")?)),
+            ("iters", Json::num(op.req_f64("iters")?)),
+        ]));
+    }
+    let note = format!(
+        "Calibrated from BENCH_native.json at {sha} ({threads} threads). Regenerate with \
+         `flare bench-report --calibrate BENCH_native.json --out BENCH_baseline.json` or the \
+         workflow_dispatch calibrate-baseline CI job."
+    );
+    let report = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("backend", Json::str(v.req_str("backend")?)),
+        ("git_sha", Json::str(&sha)),
+        ("threads", Json::num(threads as f64)),
+        ("note", Json::str(&note)),
+        ("ops", Json::Arr(ops)),
+    ]);
+    std::fs::write(baseline_path, report.to_string())?;
+    // the freshly written baseline must itself validate
+    check(baseline_path)?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("flare_report_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_dump(dir: &Path, bench: &str, body: &str) {
+        std::fs::write(dir.join(format!("{bench}.json")), body).unwrap();
+    }
+
+    #[test]
+    fn fold_preserves_extras_and_validates() {
+        let dir = tmp("fold");
+        write_dump(
+            &dir,
+            "serve_open_loop",
+            r#"[{"name": "serve_open_loop_x1", "iters": 10, "total_s": 1.0,
+                 "p50_ms": 2.0, "p95_ms": 3.0,
+                 "extras": {"goodput_req_s": 9.5, "load_factor": 1.0, "p99_ms": 4.0}}]"#,
+        );
+        write_dump(
+            &dir,
+            "fig2_scaling",
+            r#"[{"name": "flare_n1024_m64", "iters": 5, "p50_ms": 1.5, "extras": {}}]"#,
+        );
+        // a non-array dump must be skipped, not fatal
+        write_dump(&dir, "e2e_record", r#"{"kind": "e2e", "loss": 0.1}"#);
+        let out = dir.join("BENCH_native.json");
+        let f = fold(&[dir.clone()], &out, 4, "abc123").unwrap();
+        assert_eq!(f.ops, 2);
+        assert_eq!(f.measured.len(), 2);
+        let v = parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let ops = v.get("ops").as_arr().unwrap();
+        let open = ops
+            .iter()
+            .find(|o| o.get("name").as_str() == Some("serve_open_loop_x1"))
+            .unwrap();
+        assert_eq!(open.get("extras").get("goodput_req_s").as_f64(), Some(9.5));
+        assert_eq!(open.get("median_ns").as_f64(), Some(2.0e6));
+        // empty extras objects are dropped from the artifact
+        let fig = ops
+            .iter()
+            .find(|o| o.get("name").as_str() == Some("flare_n1024_m64"))
+            .unwrap();
+        assert_eq!(fig.get("extras"), &Json::Null);
+        assert_eq!(check(&out).unwrap(), 2);
+    }
+
+    #[test]
+    fn check_rejects_open_loop_ops_missing_contract_fields() {
+        let dir = tmp("check_open");
+        write_dump(
+            &dir,
+            "serve_open_loop",
+            r#"[{"name": "serve_open_loop_x2", "iters": 10, "p50_ms": 2.0,
+                 "extras": {"goodput_req_s": 9.5, "load_factor": 2.0}}]"#,
+        );
+        let out = dir.join("BENCH_native.json");
+        let err = fold(&[dir.clone()], &out, 4, "abc").unwrap_err().to_string();
+        assert!(err.contains("p99_ms"), "validator names the missing field: {err}");
+    }
+
+    #[test]
+    fn check_rejects_schema_violations() {
+        let dir = tmp("check_bad");
+        let p = dir.join("x.json");
+        for (body, needle) in [
+            (r#"{"schema": 2, "backend": "native", "git_sha": "s", "threads": 4,
+                 "ops": [{"bench": "b", "name": "n", "median_ns": 1, "iters": 1}]}"#, "schema"),
+            (r#"{"schema": 1, "backend": "native", "git_sha": "s", "threads": 4,
+                 "ops": []}"#, "non-empty"),
+            (r#"{"schema": 1, "backend": "native", "git_sha": "s", "threads": 4,
+                 "ops": [{"bench": "b", "name": "n", "median_ns": -5, "iters": 1}]}"#,
+             "median_ns"),
+            (r#"{"schema": 1, "backend": "native", "git_sha": "", "threads": 4,
+                 "ops": [{"bench": "b", "name": "n", "median_ns": 1, "iters": 1}]}"#, "git_sha"),
+        ] {
+            std::fs::write(&p, body).unwrap();
+            let err = check(&p).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected {needle:?} in: {err}");
+        }
+    }
+
+    #[test]
+    fn compare_gates_on_shared_ops_only() {
+        let dir = tmp("compare");
+        let base = dir.join("base.json");
+        std::fs::write(
+            &base,
+            r#"{"schema": 1, "backend": "native", "git_sha": "s", "threads": 4, "ops": [
+                 {"bench": "b", "name": "fast", "median_ns": 1000, "iters": 5},
+                 {"bench": "b", "name": "other", "median_ns": 1000, "iters": 5}]}"#,
+        )
+        .unwrap();
+        let ok = vec![("b".to_string(), "fast".to_string(), 1400.0)];
+        compare(&ok, &base, 1.5).unwrap();
+        let slow = vec![("b".to_string(), "fast".to_string(), 2000.0)];
+        let err = compare(&slow, &base, 1.5).unwrap_err().to_string();
+        assert!(err.contains("regressed"), "{err}");
+        // nothing shared -> the gate must fail loudly, not silently pass
+        let disjoint = vec![("b".to_string(), "new_op".to_string(), 10.0)];
+        let err = compare(&disjoint, &base, 1.5).unwrap_err().to_string();
+        assert!(err.contains("compared 0 ops"), "{err}");
+    }
+
+    #[test]
+    fn calibrate_rewrites_baseline_with_provenance() {
+        let dir = tmp("calibrate");
+        let native = dir.join("BENCH_native.json");
+        std::fs::write(
+            &native,
+            r#"{"schema": 1, "backend": "native", "git_sha": "deadbeef", "threads": 4, "ops": [
+                 {"bench": "serve_open_loop", "name": "serve_open_loop_x1", "median_ns": 5e6,
+                  "iters": 10,
+                  "extras": {"goodput_req_s": 9.0, "load_factor": 1.0, "p99_ms": 7.0}},
+                 {"bench": "fig2_scaling", "name": "flare_n1024_m64", "median_ns": 2e6,
+                  "iters": 5}]}"#,
+        )
+        .unwrap();
+        let baseline = dir.join("BENCH_baseline.json");
+        assert_eq!(calibrate(&native, &baseline).unwrap(), 2);
+        let v = parse(&std::fs::read_to_string(&baseline).unwrap()).unwrap();
+        assert_eq!(v.get("schema").as_usize(), Some(1));
+        assert_eq!(v.get("git_sha").as_str(), Some("deadbeef"));
+        let note = v.get("note").as_str().unwrap();
+        assert!(note.contains("deadbeef"), "provenance names the source sha: {note}");
+        let ops = v.get("ops").as_arr().unwrap();
+        assert_eq!(ops.len(), 2);
+        // baseline ops are stripped to exactly what compare() reads
+        assert_eq!(ops[0].get("extras"), &Json::Null);
+        // and the result must be usable as a compare() baseline
+        let m = vec![(
+            "fig2_scaling".to_string(),
+            "flare_n1024_m64".to_string(),
+            2.5e6,
+        )];
+        compare(&m, &baseline, 1.5).unwrap();
+    }
+}

@@ -104,6 +104,10 @@ pub struct CaseCfg {
     pub dataset: String,
     pub dataset_meta: Json,
     pub batch: usize,
+    /// serving accumulation limit: how many queued requests the batcher may
+    /// gather per flush for this case (defaults to `batch`; the engine
+    /// splits each flush back down to `batch`-sized executions)
+    pub max_batch: usize,
     pub train_steps: usize,
     pub lr: f64,
     pub model: ModelCfg,
@@ -176,6 +180,10 @@ impl Manifest {
                 dataset: c.req_str("dataset")?.to_string(),
                 dataset_meta: c.get("dataset_meta").clone(),
                 batch: c.req_usize("batch")?,
+                max_batch: {
+                    let batch = c.req_usize("batch")?;
+                    c.get("max_batch").as_usize().unwrap_or(batch).max(batch)
+                },
                 train_steps: c.get("train_steps").as_usize().unwrap_or(100),
                 lr: c.get("lr").as_f64().unwrap_or(1e-3),
                 model: ModelCfg::from_json(c.get("model"))?,
@@ -291,6 +299,7 @@ impl Manifest {
                 dataset: dataset.to_string(),
                 dataset_meta,
                 batch: 2,
+                max_batch: 2,
                 train_steps: 20,
                 lr: 1e-3,
                 model,
@@ -375,7 +384,7 @@ mod tests {
             "name": "t", "group": "core", "dataset": "darcy",
             "dataset_meta": {"kind": "darcy", "n": 16, "grid": 4,
                              "train": 1, "test": 1},
-            "batch": 2, "train_steps": 10, "lr": 0.001,
+            "batch": 2, "max_batch": 6, "train_steps": 10, "lr": 0.001,
             "model": {"mixer": "flare", "n": 16, "d_in": 3, "d_out": 1,
                       "c": 8, "heads": 2, "m": 4, "blocks": 1,
                       "kv_layers": 1, "ffn_layers": 1, "io_layers": 1,
@@ -404,6 +413,7 @@ mod tests {
         assert_eq!(m.seed, 7);
         assert_eq!(m.cases.len(), 1);
         let c = m.case("t").unwrap();
+        assert_eq!(c.max_batch, 6, "serving max_batch parses from the manifest");
         assert_eq!(c.model.mixer, "flare");
         assert_eq!(c.model.head_dim(), 4);
         assert_eq!(c.model.io_layers, 1);
@@ -433,6 +443,8 @@ mod tests {
             assert_eq!(covered, c.param_count, "case {}", c.name);
             assert!(c.artifacts.is_empty());
             assert!(c.train_steps > 0 && c.batch > 0);
+            // absent from the builtin: serving limit defaults to batch
+            assert_eq!(c.max_batch, c.batch);
         }
         // a directory with no manifest.json falls back to the builtin
         let dir = std::env::temp_dir().join("flare_no_artifacts_here");

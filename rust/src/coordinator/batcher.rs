@@ -1,11 +1,16 @@
 //! Shape-bucketed dynamic batcher (pure logic; no runtime dependency).
 //!
 //! Requests are routed into buckets (one per compiled artifact shape); a
-//! bucket flushes when it reaches `max_batch` or when its oldest request has
-//! waited `max_wait`.  Invariants (property-tested below):
+//! bucket flushes when it reaches its **own** `max_batch` (per-bucket
+//! limits via [`Batcher::set_limit`]; the global `max_batch` is only the
+//! fallback for unregistered buckets), when its oldest request has waited
+//! `max_wait`, or — continuous-batching policy — when the waiting pool
+//! justifies folding into service relative to what the engine is currently
+//! serving (`waiting_served_ratio`, TGI-style; see [`Batcher::pop_ready`]).
+//! Invariants (property-tested below):
 //!
 //! * a batch never mixes buckets,
-//! * a batch never exceeds `max_batch`,
+//! * a batch never exceeds its bucket's `max_batch`,
 //! * requests flush in FIFO order within a bucket,
 //! * every submitted request is eventually flushed (conservation),
 //! * among ready buckets, the oldest head request is served first (a hot
@@ -33,8 +38,24 @@ pub struct Batch<T> {
 #[derive(Debug)]
 pub struct Batcher<T> {
     queues: BTreeMap<String, Vec<Pending<T>>>,
+    /// fallback execution batch for buckets without a registered limit
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// per-bucket execution batch sizes ([`Batcher::set_limit`]) — each
+    /// served case flushes at its own `max_batch` instead of the
+    /// max-over-buckets compromise
+    limits: BTreeMap<String, usize>,
+    /// continuous-batching fold-in policy (TGI's `waiting_served_ratio`,
+    /// adapted to a discrete-batch engine): when > 0, a partially filled
+    /// bucket is ready as soon as its queue depth reaches
+    /// `ratio * (size of the batch most recently dispatched from it)` —
+    /// under sustained load waiting requests fold into service as soon as
+    /// the engine frees up, without stalling until the deadline.  0 (the
+    /// default) disables the policy; size/deadline flushes still apply.
+    pub waiting_served_ratio: f64,
+    /// size of the batch most recently popped per bucket (the "served"
+    /// denominator of the ratio policy); updated inside `pop_ready`
+    served: BTreeMap<String, usize>,
     next_id: u64,
 }
 
@@ -44,8 +65,22 @@ impl<T> Batcher<T> {
             queues: BTreeMap::new(),
             max_batch: max_batch.max(1),
             max_wait,
+            limits: BTreeMap::new(),
+            waiting_served_ratio: 0.0,
+            served: BTreeMap::new(),
             next_id: 0,
         }
+    }
+
+    /// Register a per-bucket execution batch; overrides `max_batch` for
+    /// that bucket only.
+    pub fn set_limit(&mut self, bucket: &str, max_batch: usize) {
+        self.limits.insert(bucket.to_string(), max_batch.max(1));
+    }
+
+    /// Execution batch size for one bucket.
+    pub fn limit(&self, bucket: &str) -> usize {
+        self.limits.get(bucket).copied().unwrap_or(self.max_batch)
     }
 
     /// Enqueue a request; returns its id.  Steady state (bucket already
@@ -81,18 +116,47 @@ impl<T> Batcher<T> {
         self.queues.get(bucket).map_or(0, |q| q.len())
     }
 
-    /// Pop the next ready batch: any bucket at `max_batch`, or any bucket
-    /// whose oldest entry exceeded `max_wait`.  Among ready buckets the one
-    /// whose head request has waited **longest** wins — a continuously full
-    /// (hot) bucket cannot starve a cold bucket whose deadline expired,
-    /// because the cold head keeps aging while the hot head is always
-    /// fresh.  `now` injected for tests.
+    /// Should the push that just landed in `bucket` wake the engine?
+    /// True when it made the bucket dispatchable (size limit or the
+    /// ratio fold-in) or armed a fresh deadline (first entry); every other
+    /// push is already covered by the engine's armed deadline sleep.
+    pub fn push_should_wake(&self, bucket: &str) -> bool {
+        let depth = self.depth(bucket);
+        depth == 1
+            || depth >= self.limit(bucket)
+            || (self.waiting_served_ratio > 0.0
+                && self
+                    .served
+                    .get(bucket)
+                    .map(|&s| s > 0 && depth as f64 >= self.waiting_served_ratio * s as f64)
+                    .unwrap_or(false))
+    }
+
+    /// Pop the next ready batch: any bucket at its own `max_batch`, any
+    /// bucket whose oldest entry exceeded `max_wait`, or — with
+    /// `waiting_served_ratio > 0` — any bucket whose queue depth reaches
+    /// `ratio` times the batch most recently dispatched from it (the
+    /// continuous-batching fold-in: once the engine has served a batch,
+    /// enough waiting requests justify dispatch without a deadline stall).
+    /// Among ready buckets the one whose head request has waited
+    /// **longest** wins — a continuously full (hot) bucket cannot starve a
+    /// cold bucket whose deadline expired, because the cold head keeps
+    /// aging while the hot head is always fresh.  `now` injected for tests.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
         let bucket = self
             .queues
             .iter()
-            .filter(|(_, q)| {
-                q.len() >= self.max_batch
+            .filter(|(name, q)| {
+                let ratio_ready = self.waiting_served_ratio > 0.0
+                    && self
+                        .served
+                        .get(*name)
+                        .map(|&s| {
+                            s > 0 && q.len() as f64 >= self.waiting_served_ratio * s as f64
+                        })
+                        .unwrap_or(false);
+                q.len() >= self.limit(name)
+                    || ratio_ready
                     || q.first()
                         .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
                         .unwrap_or(false)
@@ -102,11 +166,18 @@ impl<T> Batcher<T> {
             // name allocation per pop is inherent to the Batch type, not
             // avoidable bookkeeping
             .map(|(k, _)| k.clone())?;
+        let take = self.limit(&bucket);
         let q = self.queues.get_mut(&bucket).unwrap();
-        let take = q.len().min(self.max_batch);
+        let take = q.len().min(take);
         let items: Vec<Pending<T>> = q.drain(..take).collect();
         if q.is_empty() {
             self.queues.remove(&bucket);
+        }
+        // steady state the bucket is already known here: no allocation
+        if let Some(s) = self.served.get_mut(&bucket) {
+            *s = items.len();
+        } else {
+            self.served.insert(bucket.clone(), items.len());
         }
         Some(Batch { bucket, items })
     }
@@ -122,14 +193,16 @@ impl<T> Batcher<T> {
             .min()
     }
 
-    /// Drain everything regardless of deadlines (shutdown path).
+    /// Drain everything regardless of deadlines (shutdown path); batches
+    /// still respect each bucket's execution limit.
     pub fn drain_all(&mut self) -> Vec<Batch<T>> {
         let mut out = Vec::new();
         let buckets: Vec<String> = self.queues.keys().cloned().collect();
         for bucket in buckets {
             let mut q = self.queues.remove(&bucket).unwrap();
+            let limit = self.limit(&bucket);
             while !q.is_empty() {
-                let take = q.len().min(self.max_batch);
+                let take = q.len().min(limit);
                 out.push(Batch {
                     bucket: bucket.clone(),
                     items: q.drain(..take).collect(),
@@ -256,6 +329,63 @@ mod tests {
             flushed.sort_unstable();
             assert_eq!(pushed, flushed, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn per_bucket_limits_override_fallback() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_secs(100));
+        b.set_limit("small", 2);
+        assert_eq!(b.limit("small"), 2);
+        assert_eq!(b.limit("other"), 8);
+        b.push("small", 1);
+        assert!(b.pop_ready(Instant::now()).is_none());
+        b.push("small", 2);
+        // flushes at the bucket's own limit, not the global fallback
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        // an oversized backlog drains in limit-sized chunks
+        for i in 0..5 {
+            b.push("small", i);
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|bt| bt.items.len() <= 2));
+    }
+
+    #[test]
+    fn waiting_served_ratio_folds_waiting_into_service() {
+        let far = Duration::from_secs(100);
+        let mut b: Batcher<u32> = Batcher::new(4, far);
+        b.waiting_served_ratio = 0.5;
+        // nothing served yet: the policy stays silent, size/deadline govern
+        b.push("a", 1);
+        b.push("a", 2);
+        assert!(b.pop_ready(Instant::now()).is_none());
+        b.push("a", 3);
+        b.push("a", 4);
+        let first = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(first.items.len(), 4);
+        // a batch of 4 was just dispatched: 2 waiting (>= 0.5 * 4) flush
+        // immediately instead of stalling until the deadline
+        b.push("a", 5);
+        assert!(b.pop_ready(Instant::now()).is_none(), "1 < 0.5 * 4");
+        b.push("a", 6);
+        let folded = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(folded.items.len(), 2);
+        // the served hint tracked the smaller batch: now 1 >= 0.5 * 2
+        b.push("a", 7);
+        assert!(b.pop_ready(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn ratio_zero_disables_fold_in() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(100));
+        b.push("a", 1);
+        b.push("a", 2);
+        assert!(b.pop_ready(Instant::now()).is_some());
+        b.push("a", 3);
+        // default ratio 0.0: a partial bucket waits for size or deadline
+        assert!(b.pop_ready(Instant::now()).is_none());
     }
 
     #[test]

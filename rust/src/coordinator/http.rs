@@ -1,0 +1,903 @@
+//! HTTP/1.1 ingress for the serving engine — the network front end that
+//! turns the in-process [`Server`] into a deployable endpoint.
+//!
+//! Hand-rolled over `std::net` (the vendor set carries no HTTP crate, and
+//! the protocol subset we need is small):
+//!
+//! ```text
+//!   TcpListener accept loop ──▶ conn queue (Mutex<VecDeque> + Condvar)
+//!                                 │ long-lived handler pool (N threads)
+//!                                 ▼
+//!            per-connection parse → dispatch → Server::try_submit
+//!                                 ▼
+//!            typed SubmitError → status code + structured JSON error
+//! ```
+//!
+//! * **Endpoints**: `POST /v1/infer` (JSON body `{"x": [...], "n": N,
+//!   "case": "..."?}`), `GET /healthz`, `GET /metrics`.
+//! * **Strict limits**: max header bytes, max body bytes and a read
+//!   timeout bound every connection; oversize requests get `413`, parse
+//!   failures `400`, and a stuck peer only ever costs one handler slot
+//!   for `read_timeout`.
+//! * **Status mapping**: every [`SubmitError`] variant has a fixed code —
+//!   `400` invalid payload, `422` routing (body embeds the structured
+//!   [`RouteError`]), `429` admission, `503` draining/engine-dead — so
+//!   overload is communicated by cheap rejections instead of queueing
+//!   collapse.
+//! * **Graceful drain**: [`HttpServer::shutdown`] flips the engine to
+//!   draining (new submissions bounce with `503`), stops accepting,
+//!   unblocks idle keep-alive reads (read half only, so in-flight
+//!   responses still go out), joins the pool, then joins the engine —
+//!   zero admitted requests are dropped.
+//!
+//! Keep-alive and pipelining are supported: the parser preserves unread
+//! bytes across requests on one connection.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::server::{Server, SubmitError};
+use crate::util::json::{parse, Json};
+
+// ---------------------------------------------------------------------------
+// Limits + request parsing
+// ---------------------------------------------------------------------------
+
+/// Per-connection protocol limits.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// maximum size of the request line + header block
+    pub max_header_bytes: usize,
+    /// maximum declared `Content-Length`
+    pub max_body_bytes: usize,
+    /// socket read timeout (bounds idle keep-alive and slow-loris peers)
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 8 * 1024 * 1024,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One parsed HTTP/1.1 request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `(name, value)` in arrival order; use [`Request::header`] for
+    /// case-insensitive lookup
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// true for HTTP/1.1 (keep-alive by default), false for HTTP/1.0
+    pub http11: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless the peer asked to close.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => self.http11,
+        }
+    }
+}
+
+/// Why a request could not be parsed off the wire.
+#[derive(Debug)]
+pub enum ParseError {
+    /// malformed request line, header or framing — answered 400, then close
+    Malformed(String),
+    /// header block exceeds [`Limits::max_header_bytes`] — 413, close
+    HeadersTooLarge { max: usize },
+    /// declared body exceeds [`Limits::max_body_bytes`] — 413, close
+    BodyTooLarge { len: usize, max: usize },
+    /// socket error or read timeout — the connection is closed silently
+    Io(std::io::ErrorKind),
+}
+
+impl ParseError {
+    /// `(status, body)` for errors that deserve a response (Io does not).
+    fn to_response(&self) -> Option<(u16, String)> {
+        match self {
+            ParseError::Malformed(msg) => Some((400, error_body("bad_request", msg, None))),
+            ParseError::HeadersTooLarge { max } => Some((
+                413,
+                error_body(
+                    "headers_too_large",
+                    &format!("request headers exceed {max} bytes"),
+                    None,
+                ),
+            )),
+            ParseError::BodyTooLarge { len, max } => Some((
+                413,
+                error_body(
+                    "payload_too_large",
+                    &format!("request body of {len} bytes exceeds the {max} byte limit"),
+                    None,
+                ),
+            )),
+            ParseError::Io(_) => None,
+        }
+    }
+}
+
+/// Incremental request reader over one connection.  Owns a buffer that
+/// survives across requests, so pipelined requests (several requests
+/// arriving in one TCP segment) are each returned in order.
+pub struct Conn<R: Read> {
+    reader: R,
+    limits: Limits,
+    buf: Vec<u8>,
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+impl<R: Read> Conn<R> {
+    pub fn new(reader: R, limits: Limits) -> Conn<R> {
+        Conn {
+            reader,
+            limits,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Next request on the connection; `Ok(None)` on clean EOF at a
+    /// request boundary.  EOF mid-request is a framing error.
+    pub fn next_request(&mut self) -> Result<Option<Request>, ParseError> {
+        // ---- read until the header terminator ---------------------------
+        let head_end = loop {
+            if let Some(pos) = find_subsequence(&self.buf, b"\r\n\r\n") {
+                if pos > self.limits.max_header_bytes {
+                    return Err(ParseError::HeadersTooLarge {
+                        max: self.limits.max_header_bytes,
+                    });
+                }
+                break pos;
+            }
+            if self.buf.len() > self.limits.max_header_bytes {
+                return Err(ParseError::HeadersTooLarge {
+                    max: self.limits.max_header_bytes,
+                });
+            }
+            if self.fill()? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None); // clean EOF between requests
+                }
+                return Err(ParseError::Malformed("connection closed mid-headers".into()));
+            }
+        };
+
+        // ---- request line + headers -------------------------------------
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| ParseError::Malformed("headers are not valid UTF-8".into()))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || path.is_empty() || parts.next().is_some() {
+            return Err(ParseError::Malformed(format!(
+                "malformed request line {request_line:?}"
+            )));
+        }
+        let http11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            other => {
+                return Err(ParseError::Malformed(format!(
+                    "unsupported protocol version {other:?}"
+                )))
+            }
+        };
+        let mut headers = Vec::new();
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(ParseError::Malformed(format!("malformed header line {line:?}")));
+            };
+            headers.push((name.trim().to_string(), value.trim().to_string()));
+        }
+        let req_head = Request {
+            method,
+            path,
+            headers,
+            body: Vec::new(),
+            http11,
+        };
+
+        // ---- body framing ------------------------------------------------
+        if req_head.header("transfer-encoding").is_some() {
+            return Err(ParseError::Malformed(
+                "transfer-encoding is not supported; send Content-Length".into(),
+            ));
+        }
+        let content_length = match req_head.header("content-length") {
+            Some(v) => v.trim().parse::<usize>().map_err(|_| {
+                ParseError::Malformed(format!("invalid content-length {v:?}"))
+            })?,
+            None => 0,
+        };
+        if content_length > self.limits.max_body_bytes {
+            return Err(ParseError::BodyTooLarge {
+                len: content_length,
+                max: self.limits.max_body_bytes,
+            });
+        }
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            if self.fill()? == 0 {
+                return Err(ParseError::Malformed(
+                    "connection closed before the declared body arrived".into(),
+                ));
+            }
+        }
+        let body = self.buf[head_end + 4..total].to_vec();
+        // keep any pipelined follow-up bytes for the next call
+        self.buf.drain(..total);
+        Ok(Some(Request { body, ..req_head }))
+    }
+
+    /// One socket read appended to the buffer; returns the byte count.
+    fn fill(&mut self) -> Result<usize, ParseError> {
+        let mut chunk = [0u8; 4096];
+        match self.reader.read(&mut chunk) {
+            Ok(k) => {
+                self.buf.extend_from_slice(&chunk[..k]);
+                Ok(k)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => self.fill(),
+            Err(e) => Err(ParseError::Io(e.kind())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response writing
+// ---------------------------------------------------------------------------
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// The one error-body schema every non-200 JSON response uses:
+/// `{"error": {"code": ..., "message": ..., "detail"?: ...}}`.
+fn error_body(code: &str, message: &str, detail: Option<Json>) -> String {
+    let mut fields = vec![("code", Json::str(code)), ("message", Json::str(message))];
+    if let Some(d) = detail {
+        fields.push(("detail", d));
+    }
+    Json::obj(vec![("error", Json::obj(fields))]).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint dispatch
+// ---------------------------------------------------------------------------
+
+fn dispatch(server: &Server, req: &Request) -> (u16, String, &'static str) {
+    const JSON: &str = "application/json";
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let (status, body) = healthz(server);
+            (status, body, JSON)
+        }
+        ("GET", "/metrics") => (200, server.metrics.report(), "text/plain; charset=utf-8"),
+        ("POST", "/v1/infer") => {
+            let (status, body) = infer(server, &req.body);
+            (status, body, JSON)
+        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/infer") => (
+            405,
+            error_body(
+                "method_not_allowed",
+                &format!("{} is not supported on {}", req.method, req.path),
+                None,
+            ),
+            JSON,
+        ),
+        _ => (
+            404,
+            error_body(
+                "not_found",
+                &format!("no route for {} {}", req.method, req.path),
+                None,
+            ),
+            JSON,
+        ),
+    }
+}
+
+fn healthz(server: &Server) -> (u16, String) {
+    let draining = server.is_draining();
+    let cases = server.router().case_names().into_iter().map(Json::Str).collect();
+    let body = Json::obj(vec![
+        ("status", Json::str(if draining { "draining" } else { "ok" })),
+        ("draining", Json::Bool(draining)),
+        ("in_flight", Json::num(server.in_flight() as f64)),
+        ("cases", Json::Arr(cases)),
+    ])
+    .to_string();
+    // a draining node reports unhealthy so load balancers stop routing to it
+    (if draining { 503 } else { 200 }, body)
+}
+
+fn infer(server: &Server, body: &[u8]) -> (u16, String) {
+    let bad = |msg: &str| (400, error_body("bad_request", msg, None));
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return bad("request body is not valid UTF-8"),
+    };
+    let v = match parse(text) {
+        Ok(v) => v,
+        Err(e) => return bad(&format!("invalid JSON body: {e}")),
+    };
+    let Some(arr) = v.get("x").as_arr() else {
+        return bad("missing array field \"x\"");
+    };
+    let mut x = Vec::with_capacity(arr.len());
+    for e in arr {
+        match e.as_f64() {
+            Some(f) => x.push(f as f32),
+            None => return bad("\"x\" must contain only numbers"),
+        }
+    }
+    let Some(n) = v.get("n").as_usize() else {
+        return bad("missing numeric field \"n\" (number of points)");
+    };
+    let case = v.get("case").as_str();
+    match server.try_submit(case, x, n) {
+        Err(e) => submit_error_response(&e),
+        Ok(rx) => match rx.recv() {
+            Ok(Ok(resp)) => {
+                let body = Json::obj(vec![
+                    ("y", Json::arr_f32(&resp.y)),
+                    ("n", Json::num(n as f64)),
+                    ("bucket", Json::str(resp.bucket)),
+                    ("batch_size", Json::num(resp.batch_size as f64)),
+                    ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+                    ("seq", Json::num(resp.seq as f64)),
+                ])
+                .to_string();
+                (200, body)
+            }
+            Ok(Err(e)) => (500, error_body("execute_failed", &e.to_string(), None)),
+            Err(_) => (
+                500,
+                error_body("dropped", "the engine dropped this request", None),
+            ),
+        },
+    }
+}
+
+/// The typed-error-to-status contract (also exercised directly by tests).
+pub fn submit_error_response(e: &SubmitError) -> (u16, String) {
+    match e {
+        SubmitError::Route(r) => (422, error_body("no_bucket", &e.to_string(), Some(r.to_json()))),
+        SubmitError::UnknownCase { available, .. } => {
+            let names = available.iter().map(|c| Json::str(c.clone())).collect();
+            let detail = Json::obj(vec![("available", Json::Arr(names))]);
+            (422, error_body("unknown_case", &e.to_string(), Some(detail)))
+        }
+        SubmitError::Invalid(_) => (400, error_body("bad_request", &e.to_string(), None)),
+        SubmitError::Admission {
+            in_flight,
+            max_concurrent,
+        } => {
+            let detail = Json::obj(vec![
+                ("in_flight", Json::num(*in_flight as f64)),
+                ("max_concurrent_requests", Json::num(*max_concurrent as f64)),
+            ]);
+            (429, error_body("over_capacity", &e.to_string(), Some(detail)))
+        }
+        SubmitError::Draining => (503, error_body("draining", &e.to_string(), None)),
+        SubmitError::EngineDead => (503, error_body("engine_dead", &e.to_string(), None)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling + server lifecycle
+// ---------------------------------------------------------------------------
+
+/// HTTP front-end configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`HttpServer::addr`])
+    pub addr: String,
+    /// connection-handler pool size
+    pub handlers: usize,
+    pub limits: Limits,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            handlers: 4,
+            limits: Limits::default(),
+        }
+    }
+}
+
+struct HttpShared {
+    server: Arc<Server>,
+    limits: Limits,
+    conns: Mutex<VecDeque<TcpStream>>,
+    conns_cv: Condvar,
+    stop: AtomicBool,
+    /// read-half handles of connections currently being served, so
+    /// shutdown can unblock idle keep-alive reads without cutting off
+    /// in-flight response writes
+    active: Mutex<BTreeMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+}
+
+/// A running HTTP front end over a [`Server`].  Owns the engine: dropping
+/// or [`HttpServer::shutdown`]ting the front end drains and joins it.
+pub struct HttpServer {
+    shared: Option<Arc<HttpShared>>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    pool: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind, spawn the handler pool and the accept loop.
+    pub fn start(server: Server, cfg: HttpConfig) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(HttpShared {
+            server: Arc::new(server),
+            limits: cfg.limits,
+            conns: Mutex::new(VecDeque::new()),
+            conns_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            active: Mutex::new(BTreeMap::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let mut pool = Vec::new();
+        for i in 0..cfg.handlers.max(1) {
+            let sh = Arc::clone(&shared);
+            pool.push(
+                std::thread::Builder::new()
+                    .name(format!("flare-http-{i}"))
+                    .spawn(move || handler_main(sh))?,
+            );
+        }
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("flare-http-accept".into())
+            .spawn(move || accept_main(listener, sh))?;
+        Ok(HttpServer {
+            shared: Some(shared),
+            local_addr,
+            accept: Some(accept),
+            pool,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The engine behind this front end.
+    pub fn server(&self) -> &Server {
+        &self.shared.as_ref().expect("server not shut down").server
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight requests, bounce
+    /// parked connections with 503, join handlers and the engine.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        self.shutdown_impl()
+    }
+
+    fn shutdown_impl(&mut self) -> anyhow::Result<()> {
+        let Some(shared) = self.shared.take() else {
+            return Ok(());
+        };
+        // 1. engine rejects new submissions (503 Draining) but keeps
+        //    executing everything already admitted
+        shared.server.begin_drain();
+        shared.stop.store(true, Ordering::SeqCst);
+        // 2. wake the accept loop (blocked in accept()) with a self-connect
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // 3. serialize against any handler mid-claim (claims happen under
+        //    the conns lock), then unblock idle keep-alive reads; the write
+        //    half stays open so in-flight responses still go out
+        drop(shared.conns.lock().unwrap_or_else(|p| p.into_inner()));
+        for stream in shared.active.lock().unwrap_or_else(|p| p.into_inner()).values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        shared.conns_cv.notify_all();
+        for h in self.pool.drain(..) {
+            let _ = h.join();
+        }
+        // 4. accepted-but-unclaimed connections get an honest 503
+        let parked: Vec<TcpStream> = shared
+            .conns
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+            .collect();
+        for mut s in parked {
+            let body = error_body("draining", "server is shutting down", None);
+            let _ = write_response(&mut s, 503, "application/json", body.as_bytes(), false);
+        }
+        // 5. join the engine; every admitted request has been replied to
+        match Arc::try_unwrap(shared) {
+            Ok(sh) => match Arc::try_unwrap(sh.server) {
+                Ok(server) => server.shutdown(),
+                Err(_) => Ok(()), // a leaked clone; Server::drop joins it
+            },
+            Err(_) => Ok(()),
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        let _ = self.shutdown_impl();
+    }
+}
+
+fn accept_main(listener: TcpListener, shared: Arc<HttpShared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(s) = stream {
+            let mut q = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
+            q.push_back(s);
+            drop(q);
+            shared.conns_cv.notify_one();
+        }
+    }
+}
+
+fn handler_main(shared: Arc<HttpShared>) {
+    loop {
+        // claim a connection and register its read-half handle atomically
+        // (both under the conns lock) so shutdown either sees the claim in
+        // `active` or observes the connection still parked
+        let (id, stream) = {
+            let mut q = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(s) = q.pop_front() {
+                    let id = shared.next_conn_id.fetch_add(1, Ordering::SeqCst);
+                    if let Ok(clone) = s.try_clone() {
+                        shared
+                            .active
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .insert(id, clone);
+                    }
+                    break (id, s);
+                }
+                q = shared.conns_cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        handle_conn(&shared.server, stream, shared.limits, &shared.stop);
+        shared
+            .active
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&id);
+    }
+}
+
+fn handle_conn(server: &Server, mut stream: TcpStream, limits: Limits, stop: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(limits.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut conn = Conn::new(read_half, limits);
+    loop {
+        match conn.next_request() {
+            Ok(Some(req)) => {
+                // during drain, finish this request but do not linger on
+                // the keep-alive connection
+                let keep = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                let (status, body, ctype) = dispatch(server, &req);
+                if write_response(&mut stream, status, ctype, body.as_bytes(), keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            Ok(None) => return, // peer closed cleanly
+            Err(e) => {
+                // framing errors leave the stream unsynchronized: answer
+                // (when answerable) and close; timeouts close silently
+                if let Some((status, body)) = e.to_response() {
+                    let _ =
+                        write_response(&mut stream, status, "application/json", body.as_bytes(),
+                                       false);
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Signal-driven shutdown flag (for `flare serve`)
+// ---------------------------------------------------------------------------
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn handle_signal(_sig: i32) {
+    // only async-signal-safe work here: a single atomic store
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+/// Install SIGINT/SIGTERM handlers (first call) and return the flag they
+/// set; `flare serve` polls it to trigger a graceful drain.  On non-unix
+/// targets the flag exists but nothing sets it.
+pub fn shutdown_flag() -> &'static AtomicBool {
+    #[cfg(unix)]
+    unsafe {
+        signal(2, handle_signal); // SIGINT
+        signal(15, handle_signal); // SIGTERM
+    }
+    &SHUTDOWN
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn conn(bytes: &[u8]) -> Conn<Cursor<Vec<u8>>> {
+        Conn::new(Cursor::new(bytes.to_vec()), Limits::default())
+    }
+
+    fn conn_with(bytes: &[u8], limits: Limits) -> Conn<Cursor<Vec<u8>>> {
+        Conn::new(Cursor::new(bytes.to_vec()), limits)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        let req = conn(raw).next_request().unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert!(req.http11);
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"), "header lookup is case-insensitive");
+        assert_eq!(req.body, b"hello world");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn pipelined_requests_come_back_in_order() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nPOST /v1/infer HTTP/1.1\r\nContent-Length: 2\r\n\
+\r\nhiGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut c = conn(raw);
+        let r1 = c.next_request().unwrap().unwrap();
+        assert_eq!((r1.method.as_str(), r1.path.as_str()), ("GET", "/healthz"));
+        let r2 = c.next_request().unwrap().unwrap();
+        assert_eq!(r2.path, "/v1/infer");
+        assert_eq!(r2.body, b"hi");
+        let r3 = c.next_request().unwrap().unwrap();
+        assert_eq!(r3.path, "/metrics");
+        assert!(!r3.keep_alive(), "Connection: close is honored");
+        assert!(c.next_request().unwrap().is_none(), "clean EOF after the last request");
+    }
+
+    #[test]
+    fn header_block_over_limit_is_rejected() {
+        let limits = Limits {
+            max_header_bytes: 64,
+            ..Limits::default()
+        };
+        let raw = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "a".repeat(200));
+        match conn_with(raw.as_bytes(), limits).next_request() {
+            Err(ParseError::HeadersTooLarge { max: 64 }) => {}
+            other => panic!("expected HeadersTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn declared_body_over_limit_is_rejected() {
+        let limits = Limits {
+            max_body_bytes: 16,
+            ..Limits::default()
+        };
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 1000\r\n\r\n";
+        match conn_with(raw, limits).next_request() {
+            Err(ParseError::BodyTooLarge { len: 1000, max: 16 }) => {}
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_content_length_is_malformed() {
+        for cl in ["abc", "-4", "1e3"] {
+            let raw = format!("POST / HTTP/1.1\r\nContent-Length: {cl}\r\n\r\n");
+            match conn(raw.as_bytes()).next_request() {
+                Err(ParseError::Malformed(msg)) => {
+                    assert!(msg.contains("content-length"), "{msg}");
+                }
+                other => panic!("expected Malformed for {cl:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nonly a few bytes";
+        match conn(raw).next_request() {
+            Err(ParseError::Malformed(msg)) => assert!(msg.contains("closed"), "{msg}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_headers_are_malformed_but_empty_is_clean_eof() {
+        match conn(b"GET / HTT").next_request() {
+            Err(ParseError::Malformed(msg)) => assert!(msg.contains("mid-headers"), "{msg}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(conn(b"").next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_request_lines_are_rejected() {
+        for raw in [
+            "FOO\r\n\r\n".to_string(),
+            "GET /x HTTP/1.1 extra\r\n\r\n".to_string(),
+            "GET /x HTTP/2.0\r\n\r\n".to_string(),
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n".to_string(),
+        ] {
+            assert!(
+                matches!(conn(raw.as_bytes()).next_request(), Err(ParseError::Malformed(_))),
+                "{raw:?} must be malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_transfer_encoding_is_rejected() {
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        match conn(raw).next_request() {
+            Err(ParseError::Malformed(msg)) => assert!(msg.contains("transfer-encoding"), "{msg}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let req = conn(b"GET / HTTP/1.0\r\n\r\n").next_request().unwrap().unwrap();
+        assert!(!req.http11);
+        assert!(!req.keep_alive());
+        let req = conn(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .next_request()
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn response_writer_frames_correctly() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+
+    #[test]
+    fn error_body_schema_is_stable() {
+        let body = error_body("over_capacity", "too busy", Some(Json::num(3.0)));
+        let v = parse(&body).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("over_capacity"));
+        assert_eq!(v.get("error").get("message").as_str(), Some("too busy"));
+        assert_eq!(v.get("error").get("detail").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn submit_errors_map_to_contracted_status_codes() {
+        use crate::coordinator::router::RouteError;
+        let route = SubmitError::Route(RouteError {
+            n: 4096,
+            available: vec![("tiny".into(), 64)],
+        });
+        let (status, body) = submit_error_response(&route);
+        assert_eq!(status, 422);
+        let v = parse(&body).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("no_bucket"));
+        let detail = v.get("error").get("detail");
+        assert_eq!(detail.get("n").as_usize(), Some(4096));
+        assert_eq!(detail.get("available").as_arr().unwrap().len(), 1);
+
+        let adm = SubmitError::Admission {
+            in_flight: 8,
+            max_concurrent: 8,
+        };
+        let (status, body) = submit_error_response(&adm);
+        assert_eq!(status, 429);
+        let v = parse(&body).unwrap();
+        assert_eq!(
+            v.get("error").get("detail").get("max_concurrent_requests").as_usize(),
+            Some(8)
+        );
+
+        assert_eq!(submit_error_response(&SubmitError::Draining).0, 503);
+        assert_eq!(submit_error_response(&SubmitError::EngineDead).0, 503);
+        assert_eq!(submit_error_response(&SubmitError::Invalid("x".into())).0, 400);
+        let unk = SubmitError::UnknownCase {
+            case: "nope".into(),
+            available: vec!["tiny".into()],
+        };
+        assert_eq!(submit_error_response(&unk).0, 422);
+    }
+}

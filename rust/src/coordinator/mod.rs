@@ -19,9 +19,11 @@
 //! ```
 
 pub mod batcher;
+pub mod http;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, Pending};
+pub use http::{HttpConfig, HttpServer, Limits};
 pub use router::{Bucket, RouteError, Router};
-pub use server::{Response, Server, ServerConfig};
+pub use server::{Response, Server, ServerConfig, SubmitError};

@@ -15,7 +15,12 @@ pub struct Bucket {
     pub n: usize,
     pub d_in: usize,
     pub d_out: usize,
+    /// execution batch (the compiled/blocked batch dimension)
     pub batch: usize,
+    /// serving accumulation limit: how many queued requests the batcher may
+    /// gather into one flush for this bucket (≥ `batch`; the engine splits
+    /// oversized flushes back down to `batch`-sized executions)
+    pub max_batch: usize,
 }
 
 impl Bucket {
@@ -55,6 +60,23 @@ impl std::fmt::Display for RouteError {
     }
 }
 
+impl RouteError {
+    /// Structured form for transport layers: the HTTP ingress embeds this
+    /// object in its 422 body so clients can re-split programmatically
+    /// instead of parsing the prose message.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let buckets = self
+            .available
+            .iter()
+            .map(|(case, n)| {
+                Json::obj(vec![("case", Json::str(case.clone())), ("max_n", Json::num(*n as f64))])
+            })
+            .collect();
+        Json::obj(vec![("n", Json::num(self.n as f64)), ("available", Json::Arr(buckets))])
+    }
+}
+
 impl std::error::Error for RouteError {}
 
 /// Router over available buckets.
@@ -71,6 +93,16 @@ impl Router {
 
     pub fn buckets(&self) -> &[Bucket] {
         &self.buckets
+    }
+
+    /// Bucket serving the named case, if any.
+    pub fn bucket_named(&self, case: &str) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.case == case)
+    }
+
+    /// Served case names, ascending by bucket size.
+    pub fn case_names(&self) -> Vec<String> {
+        self.buckets.iter().map(|b| b.case.clone()).collect()
     }
 
     /// Smallest bucket that fits `n` points; an oversized request gets a
@@ -109,6 +141,7 @@ mod tests {
                 d_in: 3,
                 d_out: 1,
                 batch: 1,
+                max_batch: 1,
             },
             Bucket {
                 case: "small".into(),
@@ -116,6 +149,7 @@ mod tests {
                 d_in: 3,
                 d_out: 1,
                 batch: 2,
+                max_batch: 2,
             },
         ])
     }
@@ -154,6 +188,7 @@ mod tests {
             d_in: 2,
             d_out: 1,
             batch: 1,
+            max_batch: 1,
         };
         let x = vec![1.0, 2.0, 3.0, 4.0]; // two points
         let padded = r.pad_input(&b, &x, 2);
@@ -168,6 +203,7 @@ mod tests {
             d_in: 2,
             d_out: 1,
             batch: 1,
+            max_batch: 1,
         };
         let y = vec![9.0, 8.0, 7.0, 6.0];
         assert_eq!(b.trim(&y, 2), vec![9.0, 8.0]);

@@ -43,7 +43,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{CaseCfg, Manifest};
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::router::{Bucket, Router};
+use crate::coordinator::router::{Bucket, RouteError, Router};
 use crate::metrics::Registry;
 use crate::model::init_params;
 use crate::runtime::{default_backend, make_backend, Backend, BatchInput};
@@ -85,6 +85,13 @@ pub struct ServerConfig {
     pub params: Vec<(String, Vec<f32>)>,
     /// execution backend name ("native" / "xla"); None picks the default
     pub backend: Option<String>,
+    /// admission control: maximum requests in flight (queued + executing)
+    /// before submissions are rejected with [`SubmitError::Admission`];
+    /// 0 disables the limit
+    pub max_concurrent: usize,
+    /// continuous-batching fold-in policy (TGI-style `waiting_served_ratio`
+    /// — see [`crate::coordinator::batcher::Batcher`]); 0.0 disables it
+    pub waiting_served_ratio: f64,
 }
 
 impl Default for ServerConfig {
@@ -94,9 +101,56 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(20),
             params: vec![],
             backend: None,
+            max_concurrent: 0,
+            waiting_served_ratio: 0.0,
         }
     }
 }
+
+/// A submission rejected before reaching the execution queue.  Typed (not
+/// a flattened message) so front ends can map each class to the right
+/// transport response — the HTTP ingress turns these into 400/422/429/503.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// no bucket fits the request — 422, names n + available buckets
+    Route(crate::coordinator::router::RouteError),
+    /// explicitly named case is not served — 422
+    UnknownCase { case: String, available: Vec<String> },
+    /// malformed payload (empty request, length mismatch) — 400
+    Invalid(String),
+    /// admission controller is at `max_concurrent_requests` — 429
+    Admission { in_flight: usize, max_concurrent: usize },
+    /// server is draining; in-flight requests finish, new ones bounce — 503
+    Draining,
+    /// the engine thread is gone (startup failure or crash) — 503
+    EngineDead,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Route(e) => e.fmt(f),
+            SubmitError::UnknownCase { case, available } => write!(
+                f,
+                "case {case:?} is not served (available: {})",
+                available.join(", ")
+            ),
+            SubmitError::Invalid(msg) => f.write_str(msg),
+            SubmitError::Admission {
+                in_flight,
+                max_concurrent,
+            } => write!(
+                f,
+                "server over capacity: {in_flight} requests in flight \
+                 (max_concurrent_requests {max_concurrent}); retry later"
+            ),
+            SubmitError::Draining => f.write_str("server is shutting down"),
+            SubmitError::EngineDead => f.write_str("serving engine is not running"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Queue state shared between client threads and the executor.
 struct EngineState {
@@ -106,6 +160,10 @@ struct EngineState {
     /// reason (normal shutdown, startup failure, panic): submissions fail
     /// fast instead of parking reply senders in a queue nobody drains
     engine_dead: bool,
+    /// admitted requests not yet replied to (queued + executing); the
+    /// admission controller compares this against
+    /// `ServerConfig::max_concurrent` under the queue lock
+    in_flight: usize,
 }
 
 struct Shared {
@@ -137,6 +195,7 @@ impl Drop for EngineGuard {
         let mut st = self.shared.lock_state();
         st.engine_dead = true;
         st.shutting_down = true;
+        st.in_flight = 0;
         let leftovers = st.batcher.drain_all();
         drop(st);
         for batch in leftovers {
@@ -155,6 +214,7 @@ pub struct Server {
     shared: Arc<Shared>,
     router: Router,
     join: Option<JoinHandle<anyhow::Result<()>>>,
+    max_concurrent: usize,
     pub metrics: Arc<Registry>,
 }
 
@@ -163,11 +223,14 @@ impl Server {
     /// returns once the backend is ready (or failed).
     pub fn start(manifest_dir: std::path::PathBuf, cfg: ServerConfig) -> anyhow::Result<Server> {
         let metrics = Arc::new(Registry::new());
+        let max_concurrent = cfg.max_concurrent;
+        let waiting_served_ratio = cfg.waiting_served_ratio;
         let shared = Arc::new(Shared {
             state: Mutex::new(EngineState {
                 batcher: Batcher::new(1, cfg.max_wait),
                 shutting_down: false,
                 engine_dead: false,
+                in_flight: 0,
             }),
             work_cv: Condvar::new(),
         });
@@ -185,61 +248,104 @@ impl Server {
             .recv()
             .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
         {
-            // the executor thread sized the batcher off the served cases;
-            // mirror the largest execution batch here
+            // register each case's own serving limit with the batcher (the
+            // old code collapsed them to max-over-buckets, over-batching
+            // small cases in a multi-case deployment); the fallback limit
+            // only covers buckets that somehow bypassed registration
             let mut st = shared.lock_state();
-            st.batcher.max_batch = buckets.iter().map(|b| b.batch).max().unwrap_or(1).max(1);
+            for b in &buckets {
+                st.batcher.set_limit(&b.case, b.max_batch);
+            }
+            st.batcher.max_batch = buckets.iter().map(|b| b.max_batch).max().unwrap_or(1).max(1);
+            st.batcher.waiting_served_ratio = waiting_served_ratio;
         }
         Ok(Server {
             shared,
             router: Router::new(buckets),
             join: Some(join),
+            max_concurrent,
             metrics,
         })
     }
 
     /// Submit asynchronously; returns the reply channel.  Routing and
     /// padding happen here, on the caller's thread — the executor only sees
-    /// shape-complete batch items.
+    /// shape-complete batch items.  Rejections arrive through the channel
+    /// as flattened messages; transport front ends use
+    /// [`Server::try_submit`] to keep the rejection class.
     pub fn submit(&self, x: Vec<f32>, n: usize) -> mpsc::Receiver<anyhow::Result<Response>> {
-        let (reply, rx) = mpsc::channel();
-        let bucket = match self.router.route(n) {
-            Ok(b) => b,
+        match self.try_submit(None, x, n) {
+            Ok(rx) => rx,
             Err(e) => {
-                let _ = reply.send(Err(anyhow::Error::from(e)));
-                return rx;
+                let (reply, rx) = mpsc::channel();
+                let _ = reply.send(Err(anyhow::anyhow!("{e}")));
+                rx
             }
-        };
-        if n == 0 {
-            let _ = reply.send(Err(anyhow::anyhow!("empty request: n must be at least 1")));
-            return rx;
         }
+    }
+
+    /// Typed submission: validate, admit and enqueue, or say exactly why
+    /// not.  The vendored error shim flattens causes to strings, so this
+    /// typed path — not downcasting — is how the rejection class survives
+    /// to the edge (the HTTP ingress maps each variant to a status code).
+    /// `case` pins the request to a named bucket; `None` routes by size.
+    pub fn try_submit(
+        &self,
+        case: Option<&str>,
+        x: Vec<f32>,
+        n: usize,
+    ) -> Result<mpsc::Receiver<anyhow::Result<Response>>, SubmitError> {
+        if n == 0 {
+            return Err(SubmitError::Invalid("empty request: n must be at least 1".into()));
+        }
+        let bucket = match case {
+            Some(name) => match self.router.bucket_named(name) {
+                Some(b) if b.n >= n => b,
+                Some(b) => {
+                    return Err(SubmitError::Route(RouteError {
+                        n,
+                        available: vec![(b.case.clone(), b.n)],
+                    }))
+                }
+                None => {
+                    return Err(SubmitError::UnknownCase {
+                        case: name.to_string(),
+                        available: self.router.case_names(),
+                    })
+                }
+            },
+            None => self.router.route(n).map_err(SubmitError::Route)?,
+        };
         if x.len() != n * bucket.d_in {
-            let _ = reply.send(Err(anyhow::anyhow!(
+            return Err(SubmitError::Invalid(format!(
                 "input length {} does not match n={n} points of d_in={} features",
                 x.len(),
                 bucket.d_in
             )));
-            return rx;
         }
         let padded = self.router.pad_input(bucket, &x, n);
+        let (reply, rx) = mpsc::channel();
         let queued = {
             let mut st = self.shared.lock_state();
             if st.engine_dead {
-                let _ = reply.send(Err(anyhow::anyhow!("serving engine is not running")));
-                return rx;
+                return Err(SubmitError::EngineDead);
             }
             if st.shutting_down {
-                let _ = reply.send(Err(anyhow::anyhow!("server is shutting down")));
-                return rx;
+                return Err(SubmitError::Draining);
             }
+            if self.max_concurrent > 0 && st.in_flight >= self.max_concurrent {
+                return Err(SubmitError::Admission {
+                    in_flight: st.in_flight,
+                    max_concurrent: self.max_concurrent,
+                });
+            }
+            st.in_flight += 1;
             st.batcher.push(&bucket.case, Submit { n, x: padded, reply });
             // wake the (single) engine waiter only when this push changed
-            // what it is waiting for: a full batch, or a first entry whose
-            // deadline the engine has not scheduled yet — every other push
-            // is covered by the already-armed deadline sleep
-            let depth = st.batcher.depth(&bucket.case);
-            if depth >= st.batcher.max_batch || depth == 1 {
+            // what it is waiting for: a full batch, a ratio-ready queue, or
+            // a first entry whose deadline the engine has not scheduled yet
+            // — every other push is covered by the armed deadline sleep
+            if st.batcher.push_should_wake(&bucket.case) {
                 self.shared.work_cv.notify_one();
             }
             st.batcher.queued()
@@ -247,7 +353,7 @@ impl Server {
         // metric bookkeeping (its own lock, may grow a series Vec) stays
         // out of the queue critical section every client + engine contend on
         self.metrics.record("queue_depth", queued as f64);
-        rx
+        Ok(rx)
     }
 
     /// Blocking inference convenience.
@@ -271,6 +377,30 @@ impl Server {
         st.shutting_down = true;
         drop(st);
         self.shared.work_cv.notify_all();
+    }
+
+    /// Flip to draining without blocking: every already-admitted request
+    /// still executes and gets its reply (zero dropped in flight), new
+    /// submissions are rejected with [`SubmitError::Draining`].  Call
+    /// [`Server::shutdown`] afterwards to join the engine.
+    pub fn begin_drain(&self) {
+        self.begin_shutdown();
+    }
+
+    /// True once draining (or shutdown) has begun.
+    pub fn is_draining(&self) -> bool {
+        self.shared.lock_state().shutting_down
+    }
+
+    /// Admitted requests not yet replied to (queued + executing).
+    pub fn in_flight(&self) -> usize {
+        self.shared.lock_state().in_flight
+    }
+
+    /// The bucket set this server routes over, for front-end introspection
+    /// (the HTTP health endpoint reports served cases from here).
+    pub fn router(&self) -> &Router {
+        &self.router
     }
 }
 
@@ -345,6 +475,7 @@ fn engine_main(
                     d_in: case.model.d_in,
                     d_out: case.model.d_out,
                     batch: case.batch,
+                    max_batch: case.max_batch.max(case.batch).max(1),
                 },
                 case: case.clone(),
                 params: p,
@@ -402,11 +533,19 @@ fn engine_main(
         // must not kill the engine — later requests keep being served
         match work {
             Work::One(batch) => {
-                run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq)
+                let served = batch.items.len();
+                run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq);
+                // release the admission slots only after replies went out,
+                // so max_concurrent bounds queued + executing work
+                let mut st = shared.lock_state();
+                st.in_flight = st.in_flight.saturating_sub(served);
             }
             Work::Final(rest) => {
                 for batch in rest {
+                    let served = batch.items.len();
                     run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq);
+                    let mut st = shared.lock_state();
+                    st.in_flight = st.in_flight.saturating_sub(served);
                 }
                 return Ok(());
             }

@@ -4,9 +4,14 @@
 //!   info                         manifest + artifact summary
 //!   gen-data   --dataset <name>  run a simulator, print dataset statistics
 //!   train      --case <name>     train a case end-to-end, report metrics
-//!   serve      --case <name>     start the serving engine, drive demo load
+//!   serve      --case <name>     serving engine: demo load, or an HTTP
+//!                                front end with --addr (drains on SIGTERM)
+//!   serve-bench                  closed-loop latency bench; --open-loop
+//!                                runs the socket-level overload bench
 //!   spectra    --case <name>     Algorithm-1 eigenanalysis of a model
 //!   bench-report                 fold results/*.json into BENCH_native.json
+//!                                (--check validates, --calibrate refreshes
+//!                                BENCH_baseline.json)
 //!
 //! Without an `artifacts/manifest.json`, commands fall back to the builtin
 //! CPU-sized cases and the native backend trains them directly — a clean
@@ -97,6 +102,13 @@ fn print_help() {
                     [--ckpt-every K]   also write --ckpt every K steps\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
+                    [--addr HOST:PORT] HTTP/1.1 front end instead of demo\n\
+                                       load: POST /v1/infer, GET /healthz,\n\
+                                       GET /metrics; SIGTERM/ctrl-c drains\n\
+                    [--cases a,b,c]    serve several shape buckets\n\
+                    [--handlers H] [--max-wait-ms W]\n\
+                    [--max-concurrent N]        admission bound (0 = off)\n\
+                    [--waiting-served-ratio R]  eager-flush ratio (0 = off)\n\
            serve-bench                 closed-loop serving load generator:\n\
                     [--case <name>] [--requests K] [--concurrency C]\n\
                     [--max-wait-ms W] [--quiet] [--quick]\n\
@@ -104,6 +116,12 @@ fn print_help() {
                                        results/serve_bench.json for\n\
                                        bench-report ($FLARE_BENCH_QUICK=1\n\
                                        matches --quick)\n\
+                    [--open-loop]      overload bench over real sockets:\n\
+                                       fixed arrival rates at 0.5x/1x/2x of\n\
+                                       probed capacity; goodput + p50/p99 +\n\
+                                       429 counts per load factor, dumped\n\
+                                       into results/serve_open_loop.json\n\
+                    [--max-concurrent N]  admission bound for --open-loop\n\
            spectra  --case <name>      eigenanalysis (paper Algorithm 1)\n\
                     [--steps N]\n\
            bench-report               fold results/*.json benchmark dumps\n\
@@ -111,6 +129,11 @@ fn print_help() {
                     [--compare BASELINE.json [--max-regression R]]\n\
                                        exit non-zero when any shared op's\n\
                                        median ns/op regresses past R (1.5)\n\
+                    [--check FILE]     validate a BENCH artifact's schema\n\
+                                       (replaces the old jq probes in CI)\n\
+                    [--calibrate BENCH_native.json [--out BASELINE]]\n\
+                                       rewrite BENCH_baseline.json from a\n\
+                                       fresh run, stamping provenance\n\
          \n\
          GLOBAL: --artifacts <dir>     artifacts directory (missing manifest\n\
                                        falls back to builtin native cases)\n\
@@ -292,7 +315,54 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = manifest_dir(args);
     let m = Manifest::load_or_builtin(&dir)?;
-    let name = args.get_or("case", "core_darcy_flare").to_string();
+    // --cases a,b,c serves several shape buckets; --case serves one
+    let cases: Vec<String> = match args.get("cases") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => vec![args.get_or("case", "core_darcy_flare").to_string()],
+    };
+    anyhow::ensure!(!cases.is_empty(), "--cases must name at least one case");
+    for c in &cases {
+        m.case(c)?;
+    }
+    let cfg = ServerConfig {
+        cases: cases.clone(),
+        max_wait: std::time::Duration::from_millis(
+            args.get_usize("max-wait-ms")?.unwrap_or(10) as u64
+        ),
+        params: vec![],
+        backend: args.get("backend").map(str::to_string),
+        max_concurrent: args.get_usize("max-concurrent")?.unwrap_or(0),
+        waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
+    };
+
+    if let Some(addr) = args.get("addr") {
+        // network mode: HTTP/1.1 front end, drained on SIGTERM/ctrl-c
+        let server = Server::start(dir, cfg)?;
+        let http = flare::coordinator::HttpServer::start(
+            server,
+            flare::coordinator::HttpConfig {
+                addr: addr.to_string(),
+                handlers: args.get_usize("handlers")?.unwrap_or(4).max(1),
+                limits: flare::coordinator::Limits::default(),
+            },
+        )?;
+        println!("serving {} on http://{}", cases.join(", "), http.addr());
+        println!("endpoints: POST /v1/infer, GET /healthz, GET /metrics");
+        let stop = flare::coordinator::http::shutdown_flag();
+        while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        println!("signal received: draining (in-flight finish; new requests get 503)");
+        http.shutdown()?;
+        println!("drained cleanly");
+        return Ok(());
+    }
+
+    let name = cases[0].clone();
     let case = m.case(&name)?.clone();
     let requests = args.get_usize("requests")?.unwrap_or(16);
     let concurrency = args.get_usize("concurrency")?.unwrap_or(4).max(1);
@@ -301,15 +371,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "starting server for {name} (n={}, batch={})",
         case.model.n, case.batch
     );
-    let server = Server::start(
-        dir,
-        ServerConfig {
-            cases: vec![name.clone()],
-            max_wait: std::time::Duration::from_millis(10),
-            params: vec![],
-            backend: args.get("backend").map(str::to_string),
-        },
-    )?;
+    let server = Server::start(dir, cfg)?;
     let ds = data::build(&case.dataset, &case.dataset_meta, m.seed)?;
     let t = Timer::start();
     std::thread::scope(|scope| {
@@ -345,6 +407,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// via the `serve_bench` entries in `BENCH_baseline.json`).
 fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     use std::sync::Mutex;
+    if args.has_flag("open-loop") {
+        return cmd_serve_bench_open_loop(args);
+    }
     let dir = manifest_dir(args);
     let m = Manifest::load_or_builtin(&dir)?;
     let name = args.get_or("case", "core_darcy_flare").to_string();
@@ -373,6 +438,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             max_wait: std::time::Duration::from_millis(max_wait as u64),
             params: vec![],
             backend: args.get("backend").map(str::to_string),
+            ..ServerConfig::default()
         },
     )?;
 
@@ -436,11 +502,198 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Fold the `results/*.json` dumps written by the benches into one
-/// `BENCH_native.json` perf artifact: per-op median ns, worker threads and
-/// the git sha, validated after writing so CI fails on malformed output.
+/// One blocking HTTP request against the serving front end; returns the
+/// status code.  `Connection: close` so read-to-EOF frames the response.
+fn http_post_infer(addr: std::net::SocketAddr, body: &str) -> anyhow::Result<u16> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    let req = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: flare\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    resp.strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split(' ').next())
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| {
+            anyhow::anyhow!("malformed HTTP response: {:?}", &resp[..resp.len().min(64)])
+        })
+}
+
+/// Open-loop overload bench over real sockets (the closed-loop bench above
+/// can never overload the engine — each client waits for its reply).  A
+/// short closed-loop probe estimates capacity, then fixed Poisson-free
+/// arrival schedules at 0.5x/1x/2x of that capacity are replayed by sender
+/// threads; latency is measured from the *scheduled* arrival time, so
+/// queueing delay under overload is visible, and 429 rejections count
+/// against goodput rather than hanging the run.
+fn cmd_serve_bench_open_loop(args: &Args) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+    let dir = manifest_dir(args);
+    let m = Manifest::load_or_builtin(&dir)?;
+    let name = args.get_or("case", "core_darcy_flare").to_string();
+    let case = m.case(&name)?.clone();
+    let quick = args.has_flag("quick") || flare::bench::quick_mode();
+    let max_wait = args.get_usize("max-wait-ms")?.unwrap_or(5);
+    let per_factor = args
+        .get_usize("requests")?
+        .unwrap_or(if quick { 32 } else { 160 })
+        .max(8);
+    let senders = if quick { 8 } else { 16 };
+    // admission bound: one accumulating batch + one executing, so overload
+    // turns into fast 429s instead of an unbounded queue
+    let max_concurrent = args
+        .get_usize("max-concurrent")?
+        .unwrap_or(2 * case.max_batch.max(case.batch))
+        .max(1);
+
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            cases: vec![name.clone()],
+            max_wait: Duration::from_millis(max_wait as u64),
+            params: vec![],
+            backend: args.get("backend").map(str::to_string),
+            max_concurrent,
+            waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
+        },
+    )?;
+    let http = flare::coordinator::HttpServer::start(
+        server,
+        flare::coordinator::HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            handlers: senders,
+            limits: flare::coordinator::Limits::default(),
+        },
+    )?;
+    let addr = http.addr();
+    println!(
+        "serve-bench --open-loop: {name} (n={}, batch={}, max_batch={}) on http://{addr}, \
+         max_concurrent {max_concurrent}, {per_factor} requests per load factor",
+        case.model.n, case.batch, case.max_batch
+    );
+    let numbers = vec!["0.25"; case.model.n * case.model.d_in].join(",");
+    let body = format!("{{\"x\": [{numbers}], \"n\": {}}}", case.model.n);
+
+    // capacity estimate: a short closed-loop burst over the same socket path
+    let probe_clients = 4usize;
+    let probe = (if quick { 12 } else { 32 }) / probe_clients;
+    for _ in 0..2usize.max(case.batch) {
+        anyhow::ensure!(http_post_infer(addr, &body)? == 200, "warmup infer failed");
+    }
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for _ in 0..probe_clients {
+            let body = &body;
+            scope.spawn(move || {
+                for _ in 0..probe {
+                    assert_eq!(http_post_infer(addr, body).expect("probe"), 200);
+                }
+            });
+        }
+    });
+    let capacity = (probe * probe_clients) as f64 / t.elapsed_s();
+    println!(
+        "estimated capacity {capacity:.1} req/s (closed-loop probe, {} requests)",
+        probe * probe_clients
+    );
+
+    let mut measurements = Vec::new();
+    for factor in [0.5, 1.0, 2.0] {
+        let rate = (capacity * factor).max(1.0);
+        let ok = AtomicUsize::new(0);
+        let rejected = AtomicUsize::new(0);
+        let failed = AtomicUsize::new(0);
+        let lat_ms: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(per_factor));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for tid in 0..senders {
+                let (body, ok, rejected, failed, lat_ms) =
+                    (&body, &ok, &rejected, &failed, &lat_ms);
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    let mut i = tid;
+                    while i < per_factor {
+                        let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+                        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                            std::thread::sleep(wait);
+                        }
+                        match http_post_infer(addr, body) {
+                            Ok(200) => {
+                                ok.fetch_add(1, Ordering::Relaxed);
+                                local.push((Instant::now() - due).as_secs_f64() * 1e3);
+                            }
+                            Ok(429) => {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(_) | Err(_) => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        i += senders;
+                    }
+                    lat_ms.lock().unwrap().extend_from_slice(&local);
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let served = ok.load(Ordering::Relaxed);
+        let rej = rejected.load(Ordering::Relaxed);
+        let errs = failed.load(Ordering::Relaxed);
+        anyhow::ensure!(errs == 0, "{errs} requests failed with non-200/429 status");
+        let lat = lat_ms.into_inner().unwrap();
+        let summary = flare::util::stats::Summary::of(&lat);
+        let goodput = served as f64 / wall_s;
+        println!(
+            "x{factor}: offered {rate:.1} req/s -> goodput {goodput:.1} req/s, {rej} rejected \
+             (429), p50 {:.2} ms, p99 {:.2} ms",
+            summary.p50, summary.p99
+        );
+        measurements.push(flare::bench::Measurement {
+            name: format!("serve_open_loop_x{factor}"),
+            iters: served,
+            total_s: wall_s,
+            per_iter: summary.clone(),
+            extras: vec![
+                ("goodput_req_s".into(), goodput),
+                ("load_factor".into(), factor),
+                ("p99_ms".into(), summary.p99),
+                ("offered_req_s".into(), rate),
+                ("rejected_429".into(), rej as f64),
+                ("requests".into(), per_factor as f64),
+            ],
+        });
+    }
+    http.shutdown()?;
+    let path = flare::bench::save_results("serve_open_loop", &measurements)?;
+    println!("results written to {path:?}");
+    Ok(())
+}
+
+/// Bench artifact tooling, dispatching to [`flare::bench::report`]:
+///   bench-report                      fold results/*.json -> BENCH_native.json
+///   bench-report --compare BASE       ... then gate medians against BASE
+///   bench-report --check FILE         validate an artifact's schema/contract
+///   bench-report --calibrate NATIVE   rewrite BENCH_baseline.json from NATIVE
 fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
-    use flare::util::json::{parse, Json};
+    use flare::bench::report;
+    if let Some(path) = args.get("check") {
+        let n = report::check(std::path::Path::new(path))?;
+        println!("check OK: {path} ({n} ops)");
+        return Ok(());
+    }
+    if let Some(native) = args.get("calibrate") {
+        let out = args.get_or("out", "BENCH_baseline.json").to_string();
+        let n = report::calibrate(std::path::Path::new(native), std::path::Path::new(&out))?;
+        println!("calibrated {out} from {native} ({n} ops)");
+        return Ok(());
+    }
     // default: $FLARE_RESULTS (what save_results honors), else the union of
     // ./results and rust/results — cargo run keeps the invoker's cwd while
     // cargo bench runs the dump-writing binaries from the package root, so
@@ -453,140 +706,20 @@ fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
         },
     };
     let out_path = std::path::PathBuf::from(args.get_or("out", "BENCH_native.json"));
-    let mut files: Vec<std::path::PathBuf> = Vec::new();
-    for dir in &dirs {
-        if let Ok(rd) = std::fs::read_dir(dir) {
-            files.extend(
-                rd.filter_map(|e| e.ok().map(|e| e.path()))
-                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false)),
-            );
-        }
-    }
-    files.sort();
-    anyhow::ensure!(!files.is_empty(), "no *.json bench dumps in {dirs:?}");
-    let mut ops: Vec<Json> = Vec::new();
-    // (bench, name, median_ns) kept flat for the --compare perf gate
-    let mut measured: Vec<(String, String, f64)> = Vec::new();
-    for path in &files {
-        let text = std::fs::read_to_string(path)?;
-        let parsed =
-            parse(&text).map_err(|e| anyhow::anyhow!("malformed bench dump {path:?}: {e}"))?;
-        let Some(arr) = parsed.as_arr() else {
-            // results/ also collects non-bench dumps (e.g. the train_darcy
-            // example's e2e record); only measurement arrays are folded
-            eprintln!("skipping {path:?}: not a bench measurement array");
-            continue;
-        };
-        let bench = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("bench")
-            .to_string();
-        for m in arr {
-            let name = m
-                .get("name")
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("measurement without name in {path:?}"))?;
-            let p50 = m.get("p50_ms").as_f64().ok_or_else(|| {
-                anyhow::anyhow!("measurement {name:?} without p50_ms in {path:?}")
-            })?;
-            anyhow::ensure!(
-                p50.is_finite() && p50 >= 0.0,
-                "measurement {name:?} has invalid p50_ms {p50}"
-            );
-            let iters = m.get("iters").as_f64().unwrap_or(0.0);
-            measured.push((bench.clone(), name.to_string(), p50 * 1e6));
-            ops.push(Json::obj(vec![
-                ("bench", Json::str(&bench)),
-                ("name", Json::str(name)),
-                ("median_ns", Json::num(p50 * 1e6)),
-                ("iters", Json::num(iters)),
-            ]));
-        }
-    }
-    anyhow::ensure!(!ops.is_empty(), "bench dumps contained no measurements");
     let threads = flare::runtime::NativeBackend::new().threads();
     let sha = std::env::var("GITHUB_SHA")
         .ok()
         .filter(|s| !s.is_empty())
         .or_else(git_head_sha)
         .unwrap_or_else(|| "unknown".to_string());
-    let count = ops.len();
-    let report = Json::obj(vec![
-        ("schema", Json::num(1.0)),
-        ("backend", Json::str("native")),
-        ("git_sha", Json::str(&sha)),
-        ("threads", Json::num(threads as f64)),
-        ("ops", Json::Arr(ops)),
-    ]);
-    std::fs::write(&out_path, report.to_string())?;
-    // self-check: the artifact must re-parse with a non-empty ops list
-    let back = parse(&std::fs::read_to_string(&out_path)?)?;
-    let n = back.get("ops").as_arr().map(|a| a.len()).unwrap_or(0);
-    anyhow::ensure!(n == count, "written {out_path:?} failed validation");
-    println!("wrote {out_path:?}: {n} ops, {threads} threads, sha {sha}");
-
-    // perf-regression gate: compare every shared (bench, name) against the
-    // committed baseline and fail when the median regresses past the bound
+    let outcome = report::fold(&dirs, &out_path, threads, &sha)?;
+    println!(
+        "wrote {:?}: {} ops, {threads} threads, sha {sha}",
+        outcome.path, outcome.ops
+    );
     if let Some(base_path) = args.get("compare") {
         let max_reg = args.get_f64("max-regression")?.unwrap_or(1.5);
-        anyhow::ensure!(max_reg > 0.0, "--max-regression must be positive");
-        let base = parse(&std::fs::read_to_string(base_path)?)
-            .map_err(|e| anyhow::anyhow!("malformed baseline {base_path:?}: {e}"))?;
-        let mut baseline: std::collections::BTreeMap<(String, String), f64> = Default::default();
-        if let Some(arr) = base.get("ops").as_arr() {
-            for op in arr {
-                if let (Some(b), Some(nm), Some(med)) = (
-                    op.get("bench").as_str(),
-                    op.get("name").as_str(),
-                    op.get("median_ns").as_f64(),
-                ) {
-                    baseline.insert((b.to_string(), nm.to_string()), med);
-                }
-            }
-        }
-        let mut compared = 0usize;
-        let mut regressions: Vec<String> = Vec::new();
-        for (bench, op_name, median_ns) in &measured {
-            let Some(&base_ns) = baseline.get(&(bench.clone(), op_name.clone())) else {
-                continue;
-            };
-            if base_ns <= 0.0 {
-                continue;
-            }
-            compared += 1;
-            let ratio = median_ns / base_ns;
-            if ratio > max_reg {
-                regressions.push(format!(
-                    "{bench}/{op_name}: {median_ns:.0} ns vs baseline {base_ns:.0} ns \
-                     ({ratio:.2}x > {max_reg:.2}x)"
-                ));
-            }
-        }
-        anyhow::ensure!(
-            compared > 0,
-            "perf gate compared 0 ops against {base_path:?} — baseline and run share no \
-             benchmark names; refresh the baseline (see README)"
-        );
-        if regressions.is_empty() {
-            println!("perf gate: {compared} shared ops within {max_reg:.2}x of {base_path:?}");
-        } else {
-            for r in &regressions {
-                eprintln!("REGRESSION {r}");
-            }
-            anyhow::bail!(
-                "{} of {compared} benchmark(s) regressed more than {max_reg}x vs {base_path:?}.\n\
-                 If this change is a deliberate perf trade (or the baseline is stale), refresh \
-                 the baseline: download the BENCH_native artifact from a green bench-smoke run \
-                 on main — or regenerate locally on comparable hardware with\n\
-                 \x20 FLARE_BENCH_QUICK=1 cargo bench -p flare --bench fig2_scaling\n\
-                 \x20 FLARE_BENCH_QUICK=1 cargo bench -p flare --bench train_step\n\
-                 \x20 cargo run -p flare --release -- bench-report --results rust/results \
-                 --out BENCH_native.json\n\
-                 — and commit the result as BENCH_baseline.json (see README \"Performance\").",
-                regressions.len()
-            );
-        }
+        report::compare(&outcome.measured, std::path::Path::new(base_path), max_reg)?;
     }
     Ok(())
 }

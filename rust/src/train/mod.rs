@@ -415,6 +415,7 @@ mod tests {
             )
             .unwrap(),
             batch: 1,
+            max_batch: 1,
             train_steps: 3,
             lr: 1e-3,
             model,

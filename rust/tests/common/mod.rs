@@ -51,6 +51,7 @@ pub fn tiny_flare_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
         dataset: "darcy".into(),
         dataset_meta: Json::Null,
         batch,
+        max_batch: batch,
         train_steps: 0,
         lr: 1e-3,
         model,
@@ -91,6 +92,7 @@ pub fn write_manifest_dir(tag: &str, cases: &[&CaseCfg]) -> std::path::PathBuf {
             ("dataset", Json::str(case.dataset.as_str())),
             ("dataset_meta", case.dataset_meta.clone()),
             ("batch", Json::num(case.batch as f64)),
+            ("max_batch", Json::num(case.max_batch as f64)),
             ("train_steps", Json::num(case.train_steps as f64)),
             ("lr", Json::num(case.lr)),
             (

@@ -556,6 +556,7 @@ fn darcy_training_loss_trends_monotonically_down_over_20_steps() {
         )
         .unwrap(),
         batch: 4,
+        max_batch: 4,
         train_steps: 20,
         lr: 1e-3,
         model,

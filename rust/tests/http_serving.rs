@@ -1,0 +1,425 @@
+//! End-to-end tests of the HTTP serving front end over real sockets:
+//! protocol round-trips, the structured error contract (400/413/422/429),
+//! admission control under a saturating burst, and graceful drain with
+//! zero dropped in-flight requests.
+//!
+//! Each test runs a tiny FLARE case (seconds, not minutes) behind
+//! `HttpServer` on an ephemeral loopback port.  Client sockets carry read
+//! timeouts so a regression hangs a test, not CI.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use flare::config::Manifest;
+use flare::coordinator::{HttpConfig, HttpServer, Limits, Server, ServerConfig};
+use flare::util::json::parse;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Manifest dir holding one tiny case named `tag` (n points, d_in = 3).
+fn tiny_manifest(tag: &str, n: usize, batch: usize, max_batch: usize) -> PathBuf {
+    let mut case = common::tiny_flare_case(tag, common::tiny_flare_model(n), batch);
+    case.max_batch = max_batch;
+    common::write_manifest_dir(&format!("flare_http_{tag}"), &[&case])
+}
+
+fn start_http(dir: PathBuf, cfg: ServerConfig, http_cfg: HttpConfig) -> HttpServer {
+    let server = Server::start(dir, cfg).expect("server start");
+    HttpServer::start(server, http_cfg).expect("http start")
+}
+
+fn server_cfg(cases: &[&str]) -> ServerConfig {
+    ServerConfig {
+        cases: cases.iter().map(|s| s.to_string()).collect(),
+        max_wait: Duration::from_millis(20),
+        backend: Some("native".into()),
+        ..ServerConfig::default()
+    }
+}
+
+/// JSON infer body for `n` points of d_in = 3.
+fn infer_body(n: usize) -> String {
+    format!("{{\"x\": [{}], \"n\": {n}}}", vec!["0.1"; n * 3].join(","))
+}
+
+/// One raw request; returns every `(status, body)` response on the socket
+/// (Connection: close on the final request frames the stream with EOF).
+fn raw_roundtrip(addr: SocketAddr, raw: &str) -> Vec<(u16, String)> {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(raw.as_bytes()).expect("write");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    split_responses(&buf)
+}
+
+/// Parse a stream of HTTP/1.1 responses framed by Content-Length.
+fn split_responses(mut rest: &str) -> Vec<(u16, String)> {
+    let mut out = Vec::new();
+    while !rest.is_empty() {
+        let head_end = rest.find("\r\n\r\n").expect("complete header block");
+        let head = &rest[..head_end];
+        let status: u16 = head
+            .strip_prefix("HTTP/1.1 ")
+            .and_then(|h| h.split(' ').next())
+            .and_then(|c| c.parse().ok())
+            .expect("status line");
+        let len: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .expect("content-length header");
+        let body_start = head_end + 4;
+        out.push((status, rest[body_start..body_start + len].to_string()));
+        rest = &rest[body_start + len..];
+    }
+    out
+}
+
+fn post_infer(addr: SocketAddr, body: &str) -> (u16, String) {
+    let raw = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    raw_roundtrip(addr, &raw).remove(0)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    raw_roundtrip(addr, &raw).remove(0)
+}
+
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+// ---------------------------------------------------------------------------
+// protocol round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn infer_healthz_and_metrics_roundtrip() {
+    let dir = tiny_manifest("http_rt", 32, 2, 2);
+    let http = start_http(dir, server_cfg(&["http_rt"]), HttpConfig::default());
+    let addr = http.addr();
+
+    let (status, body) = post_infer(addr, &infer_body(32));
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("n").as_usize(), Some(32));
+    assert_eq!(v.get("bucket").as_str(), Some("http_rt"));
+    assert_eq!(v.get("y").as_arr().unwrap().len(), 32, "trimmed to n * d_out");
+    assert!(v.get("latency_ms").as_f64().unwrap() >= 0.0);
+    assert!(v.get("seq").as_usize().unwrap() >= 1);
+
+    // a partial request (n < bucket.n) is padded in and trimmed back out
+    let (status, body) = post_infer(addr, &infer_body(20));
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("y").as_arr().unwrap().len(), 20);
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    assert_eq!(v.get("cases").as_arr().unwrap().len(), 1);
+
+    let (status, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(body.contains("latency_ms"), "metrics report serving series: {body}");
+
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, body) = raw_roundtrip(
+        addr,
+        "DELETE /v1/infer HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    )
+    .remove(0);
+    assert_eq!(status, 405, "{body}");
+    http.shutdown().unwrap();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let dir = tiny_manifest("http_pipe", 32, 2, 2);
+    let http = start_http(dir, server_cfg(&["http_pipe"]), HttpConfig::default());
+    let body = infer_body(32);
+    // three requests in one write: healthz, infer, then metrics with close
+    let raw = format!(
+        "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+         POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}\
+         GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let responses = raw_roundtrip(http.addr(), &raw);
+    assert_eq!(responses.len(), 3, "one response per pipelined request");
+    assert_eq!(responses[0].0, 200);
+    assert_eq!(parse(&responses[0].1).unwrap().get("status").as_str(), Some("ok"));
+    assert_eq!(responses[1].0, 200);
+    assert_eq!(parse(&responses[1].1).unwrap().get("bucket").as_str(), Some("http_pipe"));
+    assert_eq!(responses[2].0, 200);
+    assert!(responses[2].1.contains("latency_ms"));
+    http.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// the structured error contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bad_json_and_bad_payloads_get_400() {
+    let dir = tiny_manifest("http_400", 32, 2, 2);
+    let http = start_http(dir, server_cfg(&["http_400"]), HttpConfig::default());
+    let addr = http.addr();
+    for body in ["{not json", "{\"n\": 32}", "{\"x\": [1, \"two\"], \"n\": 32}"] {
+        let (status, resp) = post_infer(addr, body);
+        assert_eq!(status, 400, "{body} -> {resp}");
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad_request"), "{resp}");
+    }
+    // length mismatch is rejected by the engine's typed Invalid path
+    let (status, resp) = post_infer(addr, "{\"x\": [1, 2, 3], \"n\": 32}");
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("does not match"), "{resp}");
+    http.shutdown().unwrap();
+}
+
+#[test]
+fn oversize_body_gets_413_and_oversize_n_gets_structured_422() {
+    let dir = tiny_manifest("http_413", 32, 2, 2);
+    let http = start_http(
+        dir,
+        server_cfg(&["http_413"]),
+        HttpConfig {
+            limits: Limits {
+                max_body_bytes: 256,
+                ..Limits::default()
+            },
+            ..HttpConfig::default()
+        },
+    );
+    let addr = http.addr();
+    let (status, resp) = post_infer(addr, &infer_body(32)); // > 256 bytes
+    assert_eq!(status, 413, "{resp}");
+    assert_eq!(
+        parse(&resp).unwrap().get("error").get("code").as_str(),
+        Some("payload_too_large")
+    );
+    // under the body limit but over every bucket: the 422 body embeds the
+    // structured RouteError (n + available buckets with max_n)
+    let (status, resp) = post_infer(addr, "{\"x\": [0.1], \"n\": 256}");
+    assert_eq!(status, 422, "{resp}");
+    let v = parse(&resp).unwrap();
+    assert_eq!(v.get("error").get("code").as_str(), Some("no_bucket"));
+    let detail = v.get("error").get("detail");
+    assert_eq!(detail.get("n").as_usize(), Some(256));
+    let avail = detail.get("available").as_arr().unwrap();
+    assert_eq!(avail.len(), 1);
+    assert_eq!(avail[0].get("case").as_str(), Some("http_413"));
+    assert_eq!(avail[0].get("max_n").as_usize(), Some(32));
+    http.shutdown().unwrap();
+}
+
+#[test]
+fn multi_case_routing_and_unknown_case_422() {
+    let mut small = common::tiny_flare_case("http_s32", common::tiny_flare_model(32), 1);
+    small.max_batch = 2;
+    let big = common::tiny_flare_case("http_b64", common::tiny_flare_model(64), 1);
+    let dir = common::write_manifest_dir("flare_http_multi", &[&small, &big]);
+    let http = start_http(dir, server_cfg(&["http_s32", "http_b64"]), HttpConfig::default());
+    let addr = http.addr();
+
+    // size routing picks the smallest fitting bucket
+    let (status, resp) = post_infer(addr, &infer_body(40));
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(parse(&resp).unwrap().get("bucket").as_str(), Some("http_b64"));
+
+    // an explicit case pins the bucket even though the request would fit both
+    let body = format!(
+        "{{\"x\": [{}], \"n\": 16, \"case\": \"http_b64\"}}",
+        vec!["0.1"; 16 * 3].join(",")
+    );
+    let (status, resp) = post_infer(addr, &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(parse(&resp).unwrap().get("bucket").as_str(), Some("http_b64"));
+
+    // unknown case: 422 naming what IS served
+    let body = format!(
+        "{{\"x\": [{}], \"n\": 16, \"case\": \"nope\"}}",
+        vec!["0.1"; 16 * 3].join(",")
+    );
+    let (status, resp) = post_infer(addr, &body);
+    assert_eq!(status, 422, "{resp}");
+    let v = parse(&resp).unwrap();
+    assert_eq!(v.get("error").get("code").as_str(), Some("unknown_case"));
+    let avail = v.get("error").get("detail").get("available").as_arr().unwrap();
+    assert_eq!(avail.len(), 2, "{resp}");
+    http.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// admission control + graceful drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn saturating_burst_gets_exact_429s_and_never_hangs() {
+    let dir = tiny_manifest("http_429", 32, 8, 8);
+    // admission bound 2 with a batch that can only flush on the (long)
+    // deadline: the first two submissions hold their slots for the full
+    // max_wait, so the other six of the synchronized burst MUST see 429
+    let http = start_http(
+        dir,
+        ServerConfig {
+            cases: vec!["http_429".into()],
+            max_wait: Duration::from_millis(2000),
+            backend: Some("native".into()),
+            max_concurrent: 2,
+            ..ServerConfig::default()
+        },
+        HttpConfig {
+            handlers: 8,
+            ..HttpConfig::default()
+        },
+    );
+    let addr = http.addr();
+    let body = infer_body(32);
+    let barrier = Barrier::new(8);
+    let ok = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let (barrier, ok, rejected, body) = (&barrier, &ok, &rejected, &body);
+            scope.spawn(move || {
+                barrier.wait();
+                let (status, resp) = post_infer(addr, body);
+                match status {
+                    200 => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    429 => {
+                        let v = parse(&resp).unwrap();
+                        assert_eq!(v.get("error").get("code").as_str(), Some("over_capacity"));
+                        let d = v.get("error").get("detail");
+                        assert_eq!(d.get("max_concurrent_requests").as_usize(), Some(2));
+                        assert_eq!(d.get("in_flight").as_usize(), Some(2));
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    other => panic!("unexpected status {other}: {resp}"),
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::Relaxed), 2, "exactly max_concurrent succeed");
+    assert_eq!(rejected.load(Ordering::Relaxed), 6, "the rest are rejected fast");
+    http.shutdown().unwrap();
+}
+
+#[test]
+fn draining_server_reports_unhealthy_and_rejects_with_503() {
+    let dir = tiny_manifest("http_drain503", 32, 2, 2);
+    let http = start_http(dir, server_cfg(&["http_drain503"]), HttpConfig::default());
+    let addr = http.addr();
+    assert_eq!(get(addr, "/healthz").0, 200);
+    http.server().begin_drain();
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 503, "draining nodes report unhealthy: {body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").as_str(), Some("draining"));
+    assert_eq!(v.get("draining").as_bool(), Some(true));
+
+    let (status, body) = post_infer(addr, &infer_body(32));
+    assert_eq!(status, 503, "{body}");
+    assert_eq!(parse(&body).unwrap().get("error").get("code").as_str(), Some("draining"));
+    http.shutdown().unwrap();
+}
+
+#[test]
+fn graceful_drain_completes_every_admitted_request() {
+    let dir = tiny_manifest("http_drain0", 32, 4, 4);
+    // batch 4 + a long deadline: three queued requests cannot flush on
+    // their own, so only the drain path can answer them
+    let http = start_http(
+        dir,
+        ServerConfig {
+            cases: vec!["http_drain0".into()],
+            max_wait: Duration::from_secs(30),
+            backend: Some("native".into()),
+            ..ServerConfig::default()
+        },
+        HttpConfig::default(),
+    );
+    let addr = http.addr();
+    let body = infer_body(32);
+    let served = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            let (body, served) = (&body, &served);
+            scope.spawn(move || {
+                let (status, resp) = post_infer(addr, body);
+                assert_eq!(status, 200, "admitted request dropped in drain: {resp}");
+                assert_eq!(parse(&resp).unwrap().get("y").as_arr().unwrap().len(), 32);
+                served.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // wait for all three to be admitted (queued behind the deadline),
+        // then drain: every one of them must still get its 200
+        assert!(
+            wait_until(Duration::from_secs(10), || http.server().in_flight() == 3),
+            "requests were not admitted in time"
+        );
+        http.shutdown().unwrap();
+    });
+    assert_eq!(served.load(Ordering::Relaxed), 3, "zero dropped in-flight requests");
+}
+
+// ---------------------------------------------------------------------------
+// config plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn max_batch_survives_the_manifest_roundtrip() {
+    let mut case = common::tiny_flare_case("http_mb", common::tiny_flare_model(32), 4);
+    case.max_batch = 8;
+    let dir = common::write_manifest_dir("flare_http_maxbatch", &[&case]);
+    let m = Manifest::load_or_builtin(&dir).unwrap();
+    let loaded = m.case("http_mb").unwrap();
+    assert_eq!(loaded.batch, 4);
+    assert_eq!(loaded.max_batch, 8, "max_batch must survive serialize + parse");
+
+    // and the serving engine exposes it on the routed bucket
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            cases: vec!["http_mb".into()],
+            backend: Some("native".into()),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let bucket = server.router().bucket_named("http_mb").unwrap();
+    assert_eq!((bucket.batch, bucket.max_batch), (4, 8));
+    server.shutdown().unwrap();
+}

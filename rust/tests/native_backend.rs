@@ -53,6 +53,7 @@ fn make_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
         dataset: "darcy".into(),
         dataset_meta: Json::Null,
         batch,
+        max_batch: batch,
         train_steps: 0,
         lr: 1e-3,
         model,
@@ -424,6 +425,7 @@ fn native_serving_end_to_end() {
             max_wait: std::time::Duration::from_millis(5),
             params: vec![],
             backend: Some("native".into()),
+            ..ServerConfig::default()
         },
     )
     .unwrap();

@@ -24,6 +24,7 @@ fn start_tiny_server(tag: &str, n: usize, batch: usize) -> (Server, CaseCfg) {
             max_wait: Duration::from_millis(2),
             params: vec![],
             backend: Some("native".into()),
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -161,6 +162,7 @@ mod xla {
                 max_wait: Duration::from_millis(5),
                 params: vec![],
                 backend: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -202,6 +204,7 @@ mod xla {
                 max_wait: Duration::from_millis(5),
                 params: vec![],
                 backend: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -224,6 +227,7 @@ mod xla {
                 max_wait: Duration::from_millis(5),
                 params: vec![],
                 backend: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -245,6 +249,7 @@ mod xla {
                 max_wait: Duration::from_millis(2),
                 params: vec![],
                 backend: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();

@@ -51,6 +51,7 @@ fn case_with_batch(name: &str, batch: usize, train: usize) -> CaseCfg {
         ))
         .unwrap(),
         batch,
+        max_batch: batch,
         train_steps: 4,
         lr: 1e-3,
         model,

@@ -167,6 +167,25 @@ pub fn save_results(file: &str, results: &[Measurement]) -> anyhow::Result<std::
     Ok(path)
 }
 
+/// Attach the gated memory columns ([`report::GATED_MEMORY_KEYS`]) to a
+/// measurement: `peak_rss_gb` from a scoped RSS probe
+/// ([`crate::util::stats::RssScope`], started at case setup) and
+/// `bytes_per_token` from the workspace loan high-water mark (reset at
+/// case setup via [`crate::util::workspace::reset_high_water`]) divided
+/// by the token count.  Values are floored at a small positive epsilon —
+/// `bench-report --check` requires the columns strictly positive, and a
+/// fully pool-warm quick run can legitimately see a zero RSS delta.
+pub fn push_memory_extras(
+    m: &mut Measurement,
+    scope: &crate::util::stats::RssScope,
+    tokens: usize,
+) {
+    let peak_gb = scope.peak_delta_bytes() as f64 / (1u64 << 30) as f64;
+    let bpt = crate::util::workspace::high_water_bytes() as f64 / tokens.max(1) as f64;
+    m.extras.push(("peak_rss_gb".into(), peak_gb.max(1e-6)));
+    m.extras.push(("bytes_per_token".into(), bpt.max(1.0)));
+}
+
 /// Are we running in quick mode (`FLARE_BENCH_QUICK=1`)? Benches use this to
 /// shrink sweeps for smoke runs while `cargo bench` defaults to full scale.
 pub fn quick_mode() -> bool {
@@ -264,6 +283,28 @@ mod tests {
         assert_eq!(j.get("extras").get("tput").as_f64(), Some(3.5));
         assert_eq!(m.extra("tput"), Some(3.5));
         assert_eq!(m.extra("none"), None);
+    }
+
+    #[test]
+    fn memory_extras_are_positive_and_complete() {
+        let scope = crate::util::stats::RssScope::start();
+        crate::util::workspace::reset_high_water();
+        let buf = crate::util::workspace::take(100_000);
+        std::hint::black_box(&buf);
+        let mut m = Measurement {
+            name: "fig5_n100".into(),
+            iters: 1,
+            total_s: 0.1,
+            per_iter: Summary::of(&[0.1]),
+            extras: vec![],
+        };
+        push_memory_extras(&mut m, &scope, 100);
+        for key in report::GATED_MEMORY_KEYS {
+            let x = m.extra(key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(x > 0.0 && x.is_finite(), "{key} = {x}");
+        }
+        // 100k floats over 100 tokens is ≥ 4000 loaned bytes per token
+        assert!(m.extra("bytes_per_token").unwrap() >= 4000.0);
     }
 
     #[test]

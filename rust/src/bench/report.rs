@@ -7,25 +7,45 @@
 //!   extras, worker threads, git sha), self-validated after writing.
 //! * [`check`] — schema validation of a folded artifact, replacing the
 //!   shell `jq` probes bench-smoke used to run: top-level fields, every
-//!   op well-formed, and `serve_open_loop_*` ops carrying the open-loop
-//!   contract (`goodput_req_s`, `load_factor`, `p99_ms`).
-//! * [`compare`] — the perf-regression gate: fail when any shared
-//!   `(bench, name)` median regresses past the bound vs a baseline.
+//!   op well-formed, `serve_open_loop_*` ops carrying the open-loop
+//!   contract (`goodput_req_s`, `load_factor`, `p99_ms`), and `fig5_*`
+//!   ops carrying the memory contract ([`GATED_MEMORY_KEYS`]).
+//! * [`compare`] — the regression gate: fail when any shared
+//!   `(bench, name)` median regresses past the bound vs a baseline —
+//!   and likewise for the gated memory columns, which also fail when a
+//!   baseline op carries them but the fresh run dropped them.
 //! * [`calibrate`] — rewrite `BENCH_baseline.json` from a fresh
-//!   `BENCH_native.json`, preserving the baseline schema and stamping a
-//!   provenance note (which sha it was calibrated from).
+//!   `BENCH_native.json`, preserving the baseline schema (including the
+//!   gated memory columns) and stamping a provenance note (which sha it
+//!   was calibrated from).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::{parse, Json};
 
+/// Measurement extras that gate like time: memory regressions on these
+/// keys fail [`compare`] exactly as median regressions do, [`check`]
+/// requires them on `fig5_*` ops, and [`calibrate`] preserves them (and
+/// only them) in the committed baseline.
+pub const GATED_MEMORY_KEYS: [&str; 2] = ["peak_rss_gb", "bytes_per_token"];
+
+/// One folded measurement row, carrying what the regression gate reads.
+pub struct MeasuredOp {
+    pub bench: String,
+    pub name: String,
+    pub median_ns: f64,
+    /// gated memory columns present on this op (subset of
+    /// [`GATED_MEMORY_KEYS`])
+    pub memory: Vec<(String, f64)>,
+}
+
 /// What [`fold`] produced: enough for `--compare` without re-parsing.
 pub struct FoldOutcome {
     pub path: PathBuf,
     pub ops: usize,
-    /// flat `(bench, name, median_ns)` rows for the perf gate
-    pub measured: Vec<(String, String, f64)>,
+    /// per-op rows for the perf + memory gate
+    pub measured: Vec<MeasuredOp>,
 }
 
 /// Merge bench dump files from `dirs` into the `BENCH_native.json` schema
@@ -50,7 +70,7 @@ pub fn fold(
     files.sort();
     anyhow::ensure!(!files.is_empty(), "no *.json bench dumps in {dirs:?}");
     let mut ops: Vec<Json> = Vec::new();
-    let mut measured: Vec<(String, String, f64)> = Vec::new();
+    let mut measured: Vec<MeasuredOp> = Vec::new();
     for path in &files {
         let text = std::fs::read_to_string(path)?;
         let parsed =
@@ -77,7 +97,18 @@ pub fn fold(
                 "measurement {name:?} has invalid p50_ms {p50}"
             );
             let iters = m.get("iters").as_f64().unwrap_or(0.0);
-            measured.push((bench.clone(), name.to_string(), p50 * 1e6));
+            let mut memory: Vec<(String, f64)> = Vec::new();
+            for key in GATED_MEMORY_KEYS {
+                if let Some(x) = m.get("extras").get(key).as_f64() {
+                    memory.push((key.to_string(), x));
+                }
+            }
+            measured.push(MeasuredOp {
+                bench: bench.clone(),
+                name: name.to_string(),
+                median_ns: p50 * 1e6,
+                memory,
+            });
             let mut fields = vec![
                 ("bench", Json::str(&bench)),
                 ("name", Json::str(name)),
@@ -170,21 +201,33 @@ pub fn check(path: &Path) -> anyhow::Result<usize> {
                 "{path:?}: open-loop op {name:?} must have load_factor > 0"
             );
         }
+        // the fig5 scaling ops must report the memory contract
+        if name.starts_with("fig5_") {
+            let extras = op.get("extras");
+            for key in GATED_MEMORY_KEYS {
+                let x = extras.get(key).as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("{path:?}: fig5 op {name:?} lacks extras.{key}")
+                })?;
+                anyhow::ensure!(
+                    x.is_finite() && x > 0.0,
+                    "{path:?}: fig5 op {name:?} has invalid {key} = {x}"
+                );
+            }
+        }
     }
     Ok(ops.len())
 }
 
-/// Perf-regression gate: every `(bench, name)` shared between `measured`
-/// and the baseline must stay within `max_reg`x of the baseline median.
-pub fn compare(
-    measured: &[(String, String, f64)],
-    base_path: &Path,
-    max_reg: f64,
-) -> anyhow::Result<()> {
+/// Regression gate: every `(bench, name)` shared between `measured` and
+/// the baseline must stay within `max_reg`x of the baseline median — and
+/// within `max_reg`x on every gated memory column the baseline records.
+/// A baseline memory column the fresh run no longer reports fails too:
+/// silently dropping `peak_rss_gb` must not read as a pass.
+pub fn compare(measured: &[MeasuredOp], base_path: &Path, max_reg: f64) -> anyhow::Result<()> {
     anyhow::ensure!(max_reg > 0.0, "--max-regression must be positive");
     let base = parse(&std::fs::read_to_string(base_path)?)
         .map_err(|e| anyhow::anyhow!("malformed baseline {base_path:?}: {e}"))?;
-    let mut baseline: BTreeMap<(String, String), f64> = Default::default();
+    let mut baseline: BTreeMap<(String, String), (f64, Vec<(String, f64)>)> = Default::default();
     if let Some(arr) = base.get("ops").as_arr() {
         for op in arr {
             if let (Some(b), Some(nm), Some(med)) = (
@@ -192,17 +235,25 @@ pub fn compare(
                 op.get("name").as_str(),
                 op.get("median_ns").as_f64(),
             ) {
-                baseline.insert((b.to_string(), nm.to_string()), med);
+                let mut mem: Vec<(String, f64)> = Vec::new();
+                for key in GATED_MEMORY_KEYS {
+                    if let Some(x) = op.get("extras").get(key).as_f64() {
+                        mem.push((key.to_string(), x));
+                    }
+                }
+                baseline.insert((b.to_string(), nm.to_string()), (med, mem));
             }
         }
     }
     let mut compared = 0usize;
     let mut regressions: Vec<String> = Vec::new();
-    for (bench, op_name, median_ns) in measured {
-        let Some(&base_ns) = baseline.get(&(bench.clone(), op_name.clone())) else {
+    for op in measured {
+        let Some((base_ns, base_mem)) = baseline.get(&(op.bench.clone(), op.name.clone()))
+        else {
             continue;
         };
-        if base_ns <= 0.0 {
+        let (bench, op_name, median_ns) = (&op.bench, &op.name, op.median_ns);
+        if *base_ns <= 0.0 {
             continue;
         }
         compared += 1;
@@ -212,6 +263,25 @@ pub fn compare(
                 "{bench}/{op_name}: {median_ns:.0} ns vs baseline {base_ns:.0} ns \
                  ({ratio:.2}x > {max_reg:.2}x)"
             ));
+        }
+        for (key, base_x) in base_mem {
+            if *base_x <= 0.0 {
+                continue;
+            }
+            let Some((_, x)) = op.memory.iter().find(|(k, _)| k == key) else {
+                regressions.push(format!(
+                    "{bench}/{op_name}: baseline records memory column {key} \
+                     but this run did not report it"
+                ));
+                continue;
+            };
+            let r = x / base_x;
+            if r > max_reg {
+                regressions.push(format!(
+                    "{bench}/{op_name}: {key} {x:.4} vs baseline {base_x:.4} \
+                     ({r:.2}x > {max_reg:.2}x)"
+                ));
+            }
         }
     }
     anyhow::ensure!(
@@ -248,16 +318,26 @@ pub fn calibrate(native_path: &Path, baseline_path: &Path) -> anyhow::Result<usi
     let v = parse(&std::fs::read_to_string(native_path)?)?;
     let sha = v.req_str("git_sha")?.to_string();
     let threads = v.req_usize("threads")?;
-    // strip per-run extras: the baseline carries only what compare() reads,
-    // so recalibration diffs stay reviewable
+    // strip per-run extras down to what compare() reads — median plus the
+    // gated memory columns — so recalibration diffs stay reviewable
     let mut ops: Vec<Json> = Vec::new();
     for op in v.get("ops").as_arr().unwrap_or(&[]) {
-        ops.push(Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::str(op.req_str("bench")?)),
             ("name", Json::str(op.req_str("name")?)),
             ("median_ns", Json::num(op.req_f64("median_ns")?)),
             ("iters", Json::num(op.req_f64("iters")?)),
-        ]));
+        ];
+        let mut mem: BTreeMap<String, Json> = Default::default();
+        for key in GATED_MEMORY_KEYS {
+            if let Some(x) = op.get("extras").get(key).as_f64() {
+                mem.insert(key.to_string(), Json::num(x));
+            }
+        }
+        if !mem.is_empty() {
+            fields.push(("extras", Json::Obj(mem)));
+        }
+        ops.push(Json::obj(fields));
     }
     let note = format!(
         "Calibrated from BENCH_native.json at {sha} ({threads} threads). Regenerate with \
@@ -291,6 +371,22 @@ mod tests {
 
     fn write_dump(dir: &Path, bench: &str, body: &str) {
         std::fs::write(dir.join(format!("{bench}.json")), body).unwrap();
+    }
+
+    fn mop(bench: &str, name: &str, median_ns: f64) -> MeasuredOp {
+        MeasuredOp {
+            bench: bench.to_string(),
+            name: name.to_string(),
+            median_ns,
+            memory: Vec::new(),
+        }
+    }
+
+    fn mop_mem(bench: &str, name: &str, median_ns: f64, mem: &[(&str, f64)]) -> MeasuredOp {
+        MeasuredOp {
+            memory: mem.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            ..mop(bench, name, median_ns)
+        }
     }
 
     #[test]
@@ -377,15 +473,68 @@ mod tests {
                  {"bench": "b", "name": "other", "median_ns": 1000, "iters": 5}]}"#,
         )
         .unwrap();
-        let ok = vec![("b".to_string(), "fast".to_string(), 1400.0)];
+        let ok = vec![mop("b", "fast", 1400.0)];
         compare(&ok, &base, 1.5).unwrap();
-        let slow = vec![("b".to_string(), "fast".to_string(), 2000.0)];
+        let slow = vec![mop("b", "fast", 2000.0)];
         let err = compare(&slow, &base, 1.5).unwrap_err().to_string();
         assert!(err.contains("regressed"), "{err}");
         // nothing shared -> the gate must fail loudly, not silently pass
-        let disjoint = vec![("b".to_string(), "new_op".to_string(), 10.0)];
+        let disjoint = vec![mop("b", "new_op", 10.0)];
         let err = compare(&disjoint, &base, 1.5).unwrap_err().to_string();
         assert!(err.contains("compared 0 ops"), "{err}");
+    }
+
+    #[test]
+    fn compare_gates_memory_columns() {
+        let dir = tmp("compare_mem");
+        let base = dir.join("base.json");
+        std::fs::write(
+            &base,
+            r#"{"schema": 1, "backend": "native", "git_sha": "s", "threads": 4, "ops": [
+                 {"bench": "fig5_million", "name": "fig5_n65536", "median_ns": 1e9, "iters": 3,
+                  "extras": {"peak_rss_gb": 0.5, "bytes_per_token": 8000}}]}"#,
+        )
+        .unwrap();
+        // within bound on time and both memory columns: pass
+        let ok = vec![mop_mem(
+            "fig5_million",
+            "fig5_n65536",
+            1.2e9,
+            &[("peak_rss_gb", 0.6), ("bytes_per_token", 9000.0)],
+        )];
+        compare(&ok, &base, 1.5).unwrap();
+        // memory regression past the bound fails even with time flat
+        let fat = vec![mop_mem(
+            "fig5_million",
+            "fig5_n65536",
+            1.0e9,
+            &[("peak_rss_gb", 0.9), ("bytes_per_token", 8000.0)],
+        )];
+        let err = compare(&fat, &base, 1.5).unwrap_err().to_string();
+        assert!(err.contains("regressed"), "{err}");
+        // a dropped memory column fails: silence must not read as a pass
+        let silent = vec![mop_mem(
+            "fig5_million",
+            "fig5_n65536",
+            1.0e9,
+            &[("peak_rss_gb", 0.5)],
+        )];
+        let err = compare(&silent, &base, 1.5).unwrap_err().to_string();
+        assert!(err.contains("did not report"), "{err}");
+    }
+
+    #[test]
+    fn check_rejects_fig5_ops_missing_memory_contract() {
+        let dir = tmp("check_fig5");
+        write_dump(
+            &dir,
+            "fig5_million",
+            r#"[{"name": "fig5_n65536", "iters": 3, "p50_ms": 1000.0,
+                 "extras": {"peak_rss_gb": 0.5}}]"#,
+        );
+        let out = dir.join("BENCH_native.json");
+        let err = fold(&[dir.clone()], &out, 4, "abc").unwrap_err().to_string();
+        assert!(err.contains("bytes_per_token"), "validator names the missing field: {err}");
     }
 
     #[test]
@@ -414,11 +563,36 @@ mod tests {
         // baseline ops are stripped to exactly what compare() reads
         assert_eq!(ops[0].get("extras"), &Json::Null);
         // and the result must be usable as a compare() baseline
-        let m = vec![(
-            "fig2_scaling".to_string(),
-            "flare_n1024_m64".to_string(),
-            2.5e6,
-        )];
+        let m = vec![mop("fig2_scaling", "flare_n1024_m64", 2.5e6)];
         compare(&m, &baseline, 1.5).unwrap();
+    }
+
+    #[test]
+    fn calibrate_preserves_gated_memory_columns() {
+        let dir = tmp("calibrate_mem");
+        let native = dir.join("BENCH_native.json");
+        std::fs::write(
+            &native,
+            r#"{"schema": 1, "backend": "native", "git_sha": "cafe", "threads": 4, "ops": [
+                 {"bench": "fig5_million", "name": "fig5_n65536", "median_ns": 1e9, "iters": 3,
+                  "extras": {"peak_rss_gb": 0.5, "bytes_per_token": 8000, "n": 65536}}]}"#,
+        )
+        .unwrap();
+        let baseline = dir.join("BENCH_baseline.json");
+        assert_eq!(calibrate(&native, &baseline).unwrap(), 1);
+        let v = parse(&std::fs::read_to_string(&baseline).unwrap()).unwrap();
+        let op = &v.get("ops").as_arr().unwrap()[0];
+        // gated memory keys survive calibration; incidental extras do not
+        assert_eq!(op.get("extras").get("peak_rss_gb").as_f64(), Some(0.5));
+        assert_eq!(op.get("extras").get("bytes_per_token").as_f64(), Some(8000.0));
+        assert_eq!(op.get("extras").get("n"), &Json::Null);
+        // and the memory gate reads it back
+        let fat = vec![mop_mem(
+            "fig5_million",
+            "fig5_n65536",
+            1.0e9,
+            &[("peak_rss_gb", 1.0), ("bytes_per_token", 8000.0)],
+        )];
+        assert!(compare(&fat, &baseline, 1.5).is_err());
     }
 }

@@ -337,8 +337,81 @@ unsafe fn micro_kernel_avx2(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; 
 }
 
 // ---------------------------------------------------------------------------
+// Cache-size probe (mixer tile selection)
+// ---------------------------------------------------------------------------
+
+/// Parse a sysfs cache `size` string ("512K", "16M", "32768") into bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let t = s.trim();
+    let (num, mult) = match t.as_bytes().last()? {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&t[..t.len() - 1], 1024 * 1024 * 1024),
+        _ => (t, 1),
+    };
+    num.trim().parse::<usize>().ok().map(|n| n * mult)
+}
+
+/// Largest cache of `level` visible to cpu0 via sysfs, in bytes.
+fn sysfs_cache_bytes(level: u32) -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut best = None;
+    for idx in 0..8u32 {
+        let dir = base.join(format!("index{idx}"));
+        let Ok(lvl) = std::fs::read_to_string(dir.join("level")) else {
+            continue;
+        };
+        if lvl.trim().parse::<u32>().ok() != Some(level) {
+            continue;
+        }
+        if let Some(bytes) =
+            std::fs::read_to_string(dir.join("size")).ok().and_then(|s| parse_cache_size(&s))
+        {
+            best = Some(best.map_or(bytes, |b: usize| b.max(bytes)));
+        }
+    }
+    best
+}
+
+/// Per-core L2 data-cache size in bytes (sysfs probe, cached; 1 MiB
+/// fallback when sysfs is unavailable).  The mixer's tile-size heuristic
+/// targets keeping one score tile plus its K/V panels inside half of this.
+pub fn l2_cache_bytes() -> usize {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| sysfs_cache_bytes(2).unwrap_or(1 << 20))
+}
+
+/// Shared L3 size in bytes (sysfs probe, cached; 16 MiB fallback).  Not
+/// used for tile selection directly — exposed so benches can report the
+/// cache geometry a measurement ran under.
+pub fn l3_cache_bytes() -> usize {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| sysfs_cache_bytes(3).unwrap_or(16 << 20))
+}
+
+// ---------------------------------------------------------------------------
 // Fused softmax row kernels (the two-SDPA mixer loops)
 // ---------------------------------------------------------------------------
+
+/// One row of the decode softmax: `row = softmax(scale * row)` in place,
+/// returning the `(max, denominator)` statistics it derived — shared by
+/// [`scale_softmax_rows`] and [`scale_softmax_rows_stats`] so the stats the
+/// fused mixer caches are bitwise the ones this computation used.
+#[inline]
+fn scale_softmax_row(row: &mut [f32], scale: f32) -> (f32, f32) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in row.iter() {
+        mx = mx.max(scale * v);
+    }
+    let sum = vexp_affine(row, scale, -mx, 1.0);
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+    (mx, sum)
+}
 
 /// Fused scale + row softmax in place: each `cols`-row of `s` becomes
 /// `softmax(scale * row)` — the decode-side kernel (softmax over the fully
@@ -349,15 +422,33 @@ pub fn scale_softmax_rows(s: &mut [f32], rows: usize, cols: usize, scale: f32) {
         return;
     }
     for row in s[..rows * cols].chunks_exact_mut(cols) {
-        let mut mx = f32::NEG_INFINITY;
-        for &v in row.iter() {
-            mx = mx.max(scale * v);
-        }
-        let sum = vexp_affine(row, scale, -mx, 1.0);
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+        scale_softmax_row(row, scale);
+    }
+}
+
+/// [`scale_softmax_rows`] that also exports each row's statistics: the
+/// scaled row maximum into `mx_out` and the exp-sum denominator into
+/// `den_out`.  The fused mixer's decode phase stores these per token, so the
+/// streaming backward can replay the decode softmax with
+/// [`softmax_replay_rows`] (`exp(scale·s − mx)/den`, bitwise the forward's
+/// probabilities) instead of recomputing the max/sum reductions.
+pub fn scale_softmax_rows_stats(
+    s: &mut [f32],
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    mx_out: &mut [f32],
+    den_out: &mut [f32],
+) {
+    debug_assert!(s.len() >= rows * cols);
+    debug_assert!(mx_out.len() >= rows && den_out.len() >= rows);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    for (r, row) in s[..rows * cols].chunks_exact_mut(cols).enumerate() {
+        let (mx, den) = scale_softmax_row(row, scale);
+        mx_out[r] = mx;
+        den_out[r] = den;
     }
 }
 
@@ -533,6 +624,43 @@ mod tests {
         let (mut mr, mut dn) = (f32::NEG_INFINITY, 0.0f32);
         online_softmax_row(&mut [], 1.0, &mut mr, &mut dn, &mut []);
         assert_eq!(dn, 0.0);
+    }
+
+    #[test]
+    fn cache_probe_returns_plausible_sizes() {
+        assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("16M"), Some(16 * 1024 * 1024));
+        assert_eq!(parse_cache_size(" 32768 "), Some(32768));
+        assert_eq!(parse_cache_size("x"), None);
+        let l2 = l2_cache_bytes();
+        let l3 = l3_cache_bytes();
+        assert!((64 * 1024..=512 * 1024 * 1024).contains(&l2), "L2 {l2}");
+        assert!(l3 >= l2, "L3 {l3} < L2 {l2}");
+    }
+
+    #[test]
+    fn softmax_stats_match_plain_rows_bitwise() {
+        let mut rng = Rng::new(7);
+        let (rows, cols, scale) = (9, 13, 0.37f32);
+        let base = randv(&mut rng, rows * cols);
+        let mut plain = base.clone();
+        scale_softmax_rows(&mut plain, rows, cols, scale);
+        let mut with_stats = base.clone();
+        let mut mx = vec![0.0f32; rows];
+        let mut den = vec![0.0f32; rows];
+        scale_softmax_rows_stats(&mut with_stats, rows, cols, scale, &mut mx, &mut den);
+        for (a, b) in plain.iter().zip(&with_stats) {
+            assert_eq!(a.to_bits(), b.to_bits(), "stats variant must not perturb the softmax");
+        }
+        // replay from the exported stats reproduces the probabilities bitwise
+        let mut replay = base.clone();
+        softmax_replay_rows(&mut replay, cols, scale, &mx, &den);
+        for (a, b) in plain.iter().zip(&replay) {
+            assert_eq!(a.to_bits(), b.to_bits(), "replay must be bitwise the forward softmax");
+        }
+        for (&m, &d) in mx.iter().zip(&den) {
+            assert!(m.is_finite() && d > 0.0);
+        }
     }
 
     #[test]

@@ -25,13 +25,13 @@ use std::collections::BTreeMap;
 
 use crate::config::{ModelCfg, ParamEntry};
 use crate::linalg::kernel::{
-    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32_bt_into, scale_softmax_rows,
-    softmax_replay_rows, softmax_stats_f64,
+    gemm_acc, gemm_at_acc, gemm_bt_acc, matmul_f32_bt_into, softmax_replay_rows,
+    softmax_stats_f64,
 };
 use crate::linalg::vexp::{gelu_grad_f32, vgelu_add, vgelu_grad_mul};
 use crate::model::forward::{
-    self, affine_into, check_native_supported, layernorm_into, merge_heads, mixer_decode,
-    mixer_encode, split_heads, MIXER_TILE, ParamTable,
+    self, affine_into, check_native_supported, layernorm_into, merge_heads, mixer_head_fused,
+    mixer_tile, split_heads, ParamTable,
 };
 use crate::pname;
 use crate::util::workspace::{take, take_uninit, WsBuf};
@@ -359,15 +359,24 @@ pub fn resmlp_bwd(
     Ok(dx)
 }
 
-/// Per-head encode statistics cached by [`flare_mixer_fwd`]: running max
-/// `mrun [H, M]`, denominator `den [H, M]`, normalized summary `z [H, M, D]`.
+/// Per-head statistics cached by [`flare_mixer_fwd`]: encode running max
+/// `mrun [H, M]`, denominator `den [H, M]`, normalized summary
+/// `z [H, M, D]`, plus the per-token *decode* softmax scaled max
+/// `dmax [H, N]` and denominator `dden [H, N]` exported by the fused
+/// forward — the backward's pass 1 replays the decode weights from them
+/// bitwise instead of recomputing max/sum reductions over every tile.
 pub struct MixerCache {
     mrun: WsBuf,
     den: WsBuf,
     z: WsBuf,
+    dmax: WsBuf,
+    dden: WsBuf,
 }
 
-/// [`forward::flare_mixer`] keeping the encode statistics per head.
+/// [`forward::flare_mixer`] keeping the per-head encode and decode
+/// statistics, via the same fused single-pass head as inference
+/// ([`mixer_head_fused`]) — forward-with-cache is the identical
+/// computation with the statistics buffers handed over.
 #[allow(clippy::too_many_arguments)]
 pub fn flare_mixer_fwd(
     q: &[f32],
@@ -384,9 +393,11 @@ pub fn flare_mixer_fwd(
     assert_eq!(v.len(), h * n * d, "flare_mixer_fwd: v shape");
     let mut y = take(h * n * d); // decode accumulates: must start at zero
     let mut cache = MixerCache {
-        mrun: take_uninit(h * m), // encode fills all three before any read
+        mrun: take_uninit(h * m), // the fused head fills every stat before any read
         den: take_uninit(h * m),
         z: take_uninit(h * m * d),
+        dmax: take_uninit(h * n),
+        dden: take_uninit(h * n),
     };
     for hh in 0..h {
         let qh = &q[hh * m * d..(hh + 1) * m * d];
@@ -396,8 +407,9 @@ pub fn flare_mixer_fwd(
         let mrun = &mut cache.mrun[hh * m..(hh + 1) * m];
         let den = &mut cache.den[hh * m..(hh + 1) * m];
         let z = &mut cache.z[hh * m * d..(hh + 1) * m * d];
-        mixer_encode(qh, kh, vh, m, n, d, scale, mrun, den, z);
-        mixer_decode(qh, kh, z, m, n, d, scale, yh);
+        let dmax = &mut cache.dmax[hh * n..(hh + 1) * n];
+        let dden = &mut cache.dden[hh * n..(hh + 1) * n];
+        mixer_head_fused(qh, kh, vh, m, n, d, scale, mrun, den, z, yh, Some((dmax, dden)));
     }
     (y, cache)
 }
@@ -406,11 +418,13 @@ pub fn flare_mixer_fwd(
 ///
 /// With `S = scale * Q K^T`, `A = softmax_N(S)` (encode, rows), `Z = A V`,
 /// `B = softmax_M(S)` (decode, columns) and `Y = B^T Z`, two passes over
-/// [`MIXER_TILE`]-token tiles recompute `A` / `B` blocks from the cached
+/// [`mixer_tile`]-token tiles recompute `A` / `B` blocks from the cached
 /// statistics (every O(N·M·D) contraction is a blocked GEMM; scratch stays
 /// O(M·TILE), no `[M, N]` buffer):
 ///
-/// 1. decode backward — per tile `S = Kt·Qᵀ`, fused scale+softmax to `B`,
+/// 1. decode backward — per tile `S = Kt·Qᵀ`, then `B` *replayed* bitwise
+///    from the cached per-token stats (`dmax`/`dden`, exported by the
+///    fused forward) via [`softmax_replay_rows`] — no max/sum reductions;
 ///    `dB = dYt·Zᵀ`, then `dZ += Bᵀ·dYt` and the `dS_dec` pieces
 ///    `dQ += dSᵀ·Kt`, `dKt += dS·Q` (needs `Z`, `dY` only);
 /// 2. encode backward — with the complete `dZ`, the softmax row-sum
@@ -432,25 +446,28 @@ fn mixer_head_bwd(
     mrun: &[f32],
     den: &[f32],
     z: &[f32],
+    dmax: &[f32],
+    dden: &[f32],
     dyh: &[f32],
     dq: &mut [f32],
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
-    let mut sa = take_uninit(m * MIXER_TILE); // softmax weights tile (re-zeroed per tile)
-    let mut sb = take_uninit(m * MIXER_TILE); // d-score tile (re-zeroed per tile)
+    let tile = mixer_tile(m, d);
+    let mut sa = take_uninit(m * tile); // softmax weights tile (re-zeroed per tile)
+    let mut sb = take_uninit(m * tile); // d-score tile (re-zeroed per tile)
     let mut dz = take(m * d); // accumulates: must start at zero
     let mut rowdot = take(m); // accumulates: must start at zero
 
     // pass 1: decode backward, dZ accumulation
-    for t0 in (0..n).step_by(MIXER_TILE) {
-        let tn = MIXER_TILE.min(n - t0);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
         let dyt = &dyh[t0 * d..(t0 + tn) * d];
         let bw = &mut sa[..tn * m];
         bw.fill(0.0);
         gemm_bt_acc(bw, kt, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
-        scale_softmax_rows(bw, tn, m, scale); // B[tn, m]
+        softmax_replay_rows(bw, m, scale, &dmax[t0..t0 + tn], &dden[t0..t0 + tn]); // B[tn, m]
         let db = &mut sb[..tn * m];
         db.fill(0.0);
         gemm_bt_acc(db, dyt, z, tn, d, m); // dB[t, mi] = <dY_t, Z_mi>
@@ -480,8 +497,8 @@ fn mixer_head_bwd(
 
     // pass 2: encode backward — dV and dS_enc = A (dA - rowdot) * scale in
     // one tile sweep
-    for t0 in (0..n).step_by(MIXER_TILE) {
-        let tn = MIXER_TILE.min(n - t0);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
         let vt = &vh[t0 * d..(t0 + tn) * d];
         let aw = &mut sa[..m * tn];
@@ -535,6 +552,8 @@ pub fn flare_mixer_bwd(
             &cache.mrun[hh * m..(hh + 1) * m],
             &cache.den[hh * m..(hh + 1) * m],
             &cache.z[hh * m * d..(hh + 1) * m * d],
+            &cache.dmax[hh * n..(hh + 1) * n],
+            &cache.dden[hh * n..(hh + 1) * n],
             &dy[hh * n * d..(hh + 1) * n * d],
             &mut dq[hh * m * d..(hh + 1) * m * d],
             &mut dk[hh * n * d..(hh + 1) * n * d],
@@ -573,6 +592,11 @@ pub fn flare_layer_fwd(
         resmlp_fwd(p, pname!("{prefix}.vproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
     let kh = split_heads(&k, n, h, d);
     let vh = split_heads(&v, n, h, d);
+    // the [N, C] projections are dead once split into heads (the resmlp
+    // caches keep what their backward needs); returning them to the pool
+    // now keeps two fewer N-sized activations resident through the mixer
+    drop(k);
+    drop(v);
     let lat = p.get(pname!("{prefix}.latents").as_str())?;
     let mut q = take_uninit(h * m * d);
     if cfg.shared_latents {
@@ -1006,6 +1030,10 @@ mod tests {
         assert_eq!(cache.den.len(), h * m);
         assert_eq!(cache.z.len(), h * m * d);
         assert!(cache.den.iter().all(|&x| x > 0.0));
+        assert_eq!(cache.dmax.len(), h * n);
+        assert_eq!(cache.dden.len(), h * n);
+        assert!(cache.dden.iter().all(|&x| x > 0.0));
+        assert!(cache.dmax.iter().all(|x| x.is_finite()));
     }
 
     #[test]
@@ -1076,6 +1104,8 @@ mod tests {
                         mrun: take(1),
                         den: take(1),
                         z: take(1),
+                        dmax: take(1),
+                        dden: take(1),
                     },
                     ymerged: take(1),
                 },

@@ -23,10 +23,12 @@
 //! `rust/tests/alloc_steady.rs`).
 
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 use crate::config::{ModelCfg, ParamEntry};
 use crate::linalg::kernel::{
-    gemm_acc, gemm_bt_acc, matmul_f32_into, online_softmax_row, scale_softmax_rows,
+    gemm_acc, gemm_bt_acc, l2_cache_bytes, matmul_f32_into, online_softmax_row,
+    scale_softmax_rows, scale_softmax_rows_stats,
 };
 use crate::linalg::vexp::{gelu_f32, vgelu_add};
 use crate::pname;
@@ -255,15 +257,110 @@ pub fn merge_heads(x: &[f32], n: usize, h: usize, d: usize) -> WsBuf {
     out
 }
 
-/// Tokens per tile in the tiled mixer kernels.  A tile's score block is
-/// `[M, TILE]` (encode) or `[TILE, M]` (decode) f32 scratch — small enough
-/// to stay cache-resident while giving the blocked GEMM full panels.  The
-/// streaming backward replays scores with the same tile size, so cached
-/// statistics match bitwise.
+/// Floor (and granularity) of the mixer tile size: tiles are always a
+/// multiple of 64 tokens so the blocked GEMM sees full panels.
 pub(crate) const MIXER_TILE: usize = 64;
 
+/// Tokens per tile in the tiled mixer kernels — cache-aware.
+///
+/// A tile's working set is its score block (`[M, T]` encode / `[T, M]`
+/// decode) plus the streamed `K`/`V` (or `K`/`Y`) tile rows `[T, D]`:
+/// about `4·(M·T + 2·T·D)` bytes of f32.  The tile is sized so that fits
+/// in half of L2 (probed via sysfs, [`l2_cache_bytes`]), leaving the rest
+/// for the resident latent state and GEMM panels; the result is clamped
+/// to `[64, 1024]` and rounded down to a multiple of [`MIXER_TILE`].
+/// `FLARE_MIXER_TILE=<n>` overrides the heuristic (read once per
+/// process, clamped to ≥ 1).  Encode, decode, the fused single-pass head
+/// and the streaming backward all tile through this one function, so
+/// cached softmax statistics replay bitwise across passes.
+pub fn mixer_tile(m: usize, d: usize) -> usize {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    let ov = OVERRIDE.get_or_init(|| {
+        std::env::var("FLARE_MIXER_TILE").ok().and_then(|s| s.trim().parse::<usize>().ok())
+    });
+    if let Some(t) = *ov {
+        return t.max(1);
+    }
+    let budget = l2_cache_bytes() / 2;
+    let per_token_bytes = 4 * (m + 2 * d).max(1);
+    let t = budget / per_token_bytes;
+    (t.clamp(MIXER_TILE, 16 * MIXER_TILE) / MIXER_TILE) * MIXER_TILE
+}
+
+/// One encode tile: `S[m, tn] = Q·Ktᵀ`, fused scale+online-softmax row
+/// update, `Z += E·Vt`.  Shared verbatim by [`mixer_encode`] and
+/// [`mixer_head_fused`] so the two paths are bitwise identical.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn encode_tile(
+    qh: &[f32],
+    kt: &[f32],
+    vt: &[f32],
+    m: usize,
+    tn: usize,
+    d: usize,
+    scale: f32,
+    st: &mut [f32],
+    mrun: &mut [f32],
+    den: &mut [f32],
+    z: &mut [f32],
+) {
+    st.fill(0.0);
+    gemm_bt_acc(st, qh, kt, m, d, tn); // S[m, tn] = Q · Ktᵀ
+    for mi in 0..m {
+        online_softmax_row(
+            &mut st[mi * tn..(mi + 1) * tn],
+            scale,
+            &mut mrun[mi],
+            &mut den[mi],
+            &mut z[mi * d..(mi + 1) * d],
+        );
+    }
+    gemm_acc(z, st, vt, m, tn, d); // Z += E · Vt
+}
+
+/// Finish the encode pass: divide each latent row by its softmax
+/// denominator so `z` holds the normalized summary.
+#[inline]
+fn normalize_latents(den: &[f32], z: &mut [f32], m: usize, d: usize) {
+    for mi in 0..m {
+        let inv = 1.0 / den[mi];
+        for zv in z[mi * d..(mi + 1) * d].iter_mut() {
+            *zv *= inv;
+        }
+    }
+}
+
+/// One decode tile: `S[tn, m] = Kt·Qᵀ`, fused scale+row-softmax, `Y +=
+/// P·Z`.  With `stats` the per-row softmax max/denominator are exported
+/// (same arithmetic, [`scale_softmax_rows_stats`]) so the backward pass
+/// can replay `P` bitwise without redoing the reductions.  Shared by
+/// [`mixer_decode`] and [`mixer_head_fused`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn decode_tile(
+    qh: &[f32],
+    kt: &[f32],
+    z: &[f32],
+    m: usize,
+    tn: usize,
+    d: usize,
+    scale: f32,
+    st: &mut [f32],
+    yt: &mut [f32],
+    stats: Option<(&mut [f32], &mut [f32])>,
+) {
+    st.fill(0.0);
+    gemm_bt_acc(st, kt, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
+    match stats {
+        Some((mx, dn)) => scale_softmax_rows_stats(st, tn, m, scale, mx, dn),
+        None => scale_softmax_rows(st, tn, m, scale), // P[tn, m]
+    }
+    gemm_acc(yt, st, z, tn, m, d); // Y += P · Z
+}
+
 /// Encode pass of one head: `z = softmax_N(Q K^T) V` via an online softmax
-/// streamed over N in [`MIXER_TILE`]-token tiles.  Each tile is one
+/// streamed over N in [`mixer_tile`]-token tiles.  Each tile is one
 /// `S = Q·Ktᵀ` GEMM, a fused scale+online-softmax row update
 /// ([`online_softmax_row`]) and one `Z += E·Vt` GEMM.  Writes the running
 /// max `mrun [M]`, denominator `den [M]` and the *normalized* latent
@@ -287,31 +384,15 @@ pub fn mixer_encode(
     mrun.fill(f32::NEG_INFINITY);
     den.fill(0.0);
     z.fill(0.0);
-    let mut s = take_uninit(m * MIXER_TILE);
-    for t0 in (0..n).step_by(MIXER_TILE) {
-        let tn = MIXER_TILE.min(n - t0);
+    let tile = mixer_tile(m, d);
+    let mut s = take_uninit(m * tile);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
         let vt = &vh[t0 * d..(t0 + tn) * d];
-        let st = &mut s[..m * tn];
-        st.fill(0.0);
-        gemm_bt_acc(st, qh, kt, m, d, tn); // S[m, tn] = Q · Ktᵀ
-        for mi in 0..m {
-            online_softmax_row(
-                &mut st[mi * tn..(mi + 1) * tn],
-                scale,
-                &mut mrun[mi],
-                &mut den[mi],
-                &mut z[mi * d..(mi + 1) * d],
-            );
-        }
-        gemm_acc(z, st, vt, m, tn, d); // Z += E · Vt
+        encode_tile(qh, kt, vt, m, tn, d, scale, &mut s[..m * tn], mrun, den, z);
     }
-    for mi in 0..m {
-        let inv = 1.0 / den[mi];
-        for zv in z[mi * d..(mi + 1) * d].iter_mut() {
-            *zv *= inv;
-        }
-    }
+    normalize_latents(den, z, m, d);
 }
 
 /// Decode pass of one head: `y_t = softmax_M(K_t Q^T) Z` with the M latent
@@ -329,25 +410,76 @@ pub fn mixer_decode(
     scale: f32,
     yh: &mut [f32],
 ) {
-    let mut s = take_uninit(MIXER_TILE * m);
-    for t0 in (0..n).step_by(MIXER_TILE) {
-        let tn = MIXER_TILE.min(n - t0);
+    let tile = mixer_tile(m, d);
+    let mut s = take_uninit(tile * m);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
         let kt = &kh[t0 * d..(t0 + tn) * d];
-        let st = &mut s[..tn * m];
-        st.fill(0.0);
-        gemm_bt_acc(st, kt, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
-        scale_softmax_rows(st, tn, m, scale); // P[tn, m]
-        gemm_acc(&mut yh[t0 * d..(t0 + tn) * d], st, z, tn, m, d); // Y += P · Z
+        let yt = &mut yh[t0 * d..(t0 + tn) * d];
+        decode_tile(qh, kt, z, m, tn, d, scale, &mut s[..tn * m], yt, None);
+    }
+}
+
+/// Fused single-pass head: encode, normalize and decode in one call over
+/// **one** shared `[M, TILE]` score scratch, with the same tile ordering
+/// in both phases.  No per-head N-sized score intermediate ever exists —
+/// the only O(N) state is the caller's `yh` output (which must start
+/// zeroed) and the optional decode statistics.  When
+/// `decode_stats = Some((dmax, dden))` (each `[N]`), the per-token decode
+/// softmax scaled max and denominator are exported so the streaming
+/// backward replays `P` via [`crate::linalg::kernel::softmax_replay_rows`]
+/// instead of recomputing the reductions — bitwise identical by
+/// construction (same exp evaluations, one extra multiply that the
+/// forward normalization also performs).  Bitwise-equal to
+/// [`mixer_encode`] + [`mixer_decode`]: all three share [`encode_tile`] /
+/// [`decode_tile`] and the [`mixer_tile`] schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn mixer_head_fused(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    mrun: &mut [f32],
+    den: &mut [f32],
+    z: &mut [f32],
+    yh: &mut [f32],
+    mut decode_stats: Option<(&mut [f32], &mut [f32])>,
+) {
+    mrun.fill(f32::NEG_INFINITY);
+    den.fill(0.0);
+    z.fill(0.0);
+    let tile = mixer_tile(m, d);
+    let mut s = take_uninit(m * tile);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let vt = &vh[t0 * d..(t0 + tn) * d];
+        encode_tile(qh, kt, vt, m, tn, d, scale, &mut s[..m * tn], mrun, den, z);
+    }
+    normalize_latents(den, z, m, d);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
+        let kt = &kh[t0 * d..(t0 + tn) * d];
+        let yt = &mut yh[t0 * d..(t0 + tn) * d];
+        let stats = decode_stats
+            .as_mut()
+            .map(|(mx, dn)| (&mut mx[t0..t0 + tn], &mut dn[t0..t0 + tn]));
+        decode_tile(qh, kt, z, m, tn, d, scale, &mut s[..tn * m], yt, stats);
     }
 }
 
 /// Multi-head FLARE mixer: `q [H, M, D]`, `k`/`v` `[H, N, D]` -> `[H, N, D]`.
 ///
-/// Encode streams `K`/`V` once with an online softmax (running max `m`,
-/// denominator `den`, accumulator `z` resident per head); decode re-streams
-/// `K`, doing an ordinary row softmax over the fully resident M latent axis.
-/// Both passes run in [`MIXER_TILE`]-token tiles on the blocked GEMM.
-/// Memory: O(M·(D + TILE)) scratch per head; no `[M, N]` buffer exists.
+/// Each head runs the fused single-pass pipeline ([`mixer_head_fused`]):
+/// encode streams `K`/`V` once with an online softmax (running max `m`,
+/// denominator `den`, accumulator `z` resident), then decode re-streams
+/// `K` in the same [`mixer_tile`] tile order through the same score
+/// scratch, doing an ordinary row softmax over the fully resident M
+/// latent axis.  Memory: O(M·(D + TILE)) scratch per head on top of the
+/// output; no `[M, N]` buffer exists at any N.
 pub fn flare_mixer(
     q: &[f32],
     k: &[f32],
@@ -370,8 +502,7 @@ pub fn flare_mixer(
         let kh = &k[hh * n * d..(hh + 1) * n * d];
         let vh = &v[hh * n * d..(hh + 1) * n * d];
         let yh = &mut y[hh * n * d..(hh + 1) * n * d];
-        mixer_encode(qh, kh, vh, m, n, d, scale, &mut mrun, &mut den, &mut z);
-        mixer_decode(qh, kh, &z, m, n, d, scale, yh);
+        mixer_head_fused(qh, kh, vh, m, n, d, scale, &mut mrun, &mut den, &mut z, yh, None);
     }
     y
 }
@@ -406,6 +537,11 @@ pub fn flare_layer_with_keys(
     let v = resmlp(p, pname!("{prefix}.vproj").as_str(), x, n, c, c, c, cfg.kv_layers)?;
     let kh = split_heads(&k, n, h, d);
     let vh = split_heads(&v, n, h, d);
+    // the [N, C] projections are dead once split into heads; returning
+    // them to the pool now keeps two fewer N-sized activations resident
+    // through the mixer (visible at N=10^6)
+    drop(k);
+    drop(v);
     let lat = p.get(pname!("{prefix}.latents").as_str())?;
     let yh = if cfg.shared_latents {
         let mut q = take_uninit(h * m * d);
@@ -638,6 +774,70 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn mixer_tile_heuristic_is_sane() {
+        // no env override in the test process: the heuristic must hold
+        for (m, d) in [(4, 5), (64, 16), (1024, 64)] {
+            let t = mixer_tile(m, d);
+            assert!(t >= MIXER_TILE && t <= 16 * MIXER_TILE, "tile {t} out of range");
+            assert_eq!(t % MIXER_TILE, 0, "tile {t} not a multiple of {MIXER_TILE}");
+        }
+    }
+
+    #[test]
+    fn fused_head_matches_two_pass_bitwise() {
+        // the fused single-pass head and the separate encode/decode pair
+        // share the per-tile helpers, so they must agree to the bit — with
+        // and without decode-statistics export
+        let (m, n, d) = (4, 150, 6); // n deliberately not a tile multiple
+        let mut rng = Rng::new(11);
+        let q: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let scale = 0.37f32;
+        let (mut mrun, mut den, mut z) = (vec![0.0f32; m], vec![0.0f32; m], vec![0.0f32; m * d]);
+        let mut y_two = vec![0.0f32; n * d];
+        mixer_encode(&q, &k, &v, m, n, d, scale, &mut mrun, &mut den, &mut z);
+        mixer_decode(&q, &k, &z, m, n, d, scale, &mut y_two);
+        let (mut m2, mut d2, mut z2) = (vec![0.0f32; m], vec![0.0f32; m], vec![0.0f32; m * d]);
+        let mut y_fused = vec![0.0f32; n * d];
+        let (mut dmax, mut dden) = (vec![0.0f32; n], vec![0.0f32; n]);
+        mixer_head_fused(
+            &q,
+            &k,
+            &v,
+            m,
+            n,
+            d,
+            scale,
+            &mut m2,
+            &mut d2,
+            &mut z2,
+            &mut y_fused,
+            Some((&mut dmax, &mut dden)),
+        );
+        for i in 0..n * d {
+            assert_eq!(y_two[i].to_bits(), y_fused[i].to_bits(), "elem {i} diverged");
+        }
+        for i in 0..m * d {
+            assert_eq!(z[i].to_bits(), z2[i].to_bits(), "latent {i} diverged");
+        }
+        // exported decode stats must be finite and positive-denominator
+        for t in 0..n {
+            assert!(dmax[t].is_finite(), "dmax[{t}]");
+            assert!(dden[t] > 0.0, "dden[{t}]");
+        }
+        // stats export must not perturb the output
+        let mut y_plain = vec![0.0f32; n * d];
+        let (mut m3, mut d3, mut z3) = (vec![0.0f32; m], vec![0.0f32; m], vec![0.0f32; m * d]);
+        mixer_head_fused(
+            &q, &k, &v, m, n, d, scale, &mut m3, &mut d3, &mut z3, &mut y_plain, None,
+        );
+        for i in 0..n * d {
+            assert_eq!(y_plain[i].to_bits(), y_fused[i].to_bits(), "stats changed elem {i}");
         }
     }
 

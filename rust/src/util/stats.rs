@@ -139,6 +139,50 @@ pub fn current_rss_bytes() -> Option<u64> {
     Some(pages * 4096)
 }
 
+/// Scoped peak-RSS probe.
+///
+/// `VmHWM` is a process-lifetime high-water mark, so reading
+/// [`peak_rss_bytes`] after several workloads reports the *largest* of them
+/// — every fig5 case after the biggest used to inherit a stale value.  The
+/// scope fixes that by resetting the kernel's counter at construction
+/// (writing `5` to `/proc/self/clear_refs`, supported since Linux 4.0) so
+/// the high-water mark is local to the scope; [`Self::peak_delta_bytes`]
+/// then reports how far RSS climbed *inside* the scope above where it
+/// started.  When the reset is unavailable (non-Linux, locked-down procfs)
+/// the delta degrades to lifetime-peak minus scope-start RSS — still an
+/// upper bound, and monotone over a smallest-first sweep, which is why the
+/// fig5 sweep orders its cases ascending as a belt-and-suspenders.
+pub struct RssScope {
+    base: u64,
+    reset_ok: bool,
+}
+
+impl RssScope {
+    pub fn start() -> RssScope {
+        let reset_ok = std::fs::write("/proc/self/clear_refs", "5").is_ok();
+        RssScope {
+            base: current_rss_bytes().unwrap_or(0),
+            reset_ok,
+        }
+    }
+
+    /// Did the VmHWM reset take (i.e. is the peak genuinely scope-local)?
+    pub fn reset_worked(&self) -> bool {
+        self.reset_ok
+    }
+
+    /// High-water RSS observed since [`Self::start`] (absolute, bytes).
+    pub fn peak_bytes(&self) -> u64 {
+        peak_rss_bytes().unwrap_or(0)
+    }
+
+    /// Peak RSS growth within the scope, in bytes: in-scope high-water mark
+    /// minus RSS at scope start (never negative).
+    pub fn peak_delta_bytes(&self) -> u64 {
+        self.peak_bytes().saturating_sub(self.base)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +228,25 @@ mod tests {
     fn rss_readable_on_linux() {
         assert!(peak_rss_bytes().unwrap_or(0) > 0);
         assert!(current_rss_bytes().unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn rss_scope_sees_in_scope_growth() {
+        let scope = RssScope::start();
+        // touch 64 MiB so RSS demonstrably climbs inside the scope
+        let mut big = vec![0u8; 64 << 20];
+        for page in big.chunks_mut(4096) {
+            page[0] = 1;
+        }
+        let delta = scope.peak_delta_bytes();
+        std::hint::black_box(&big);
+        if scope.reset_worked() {
+            assert!(
+                delta >= 32 << 20,
+                "scoped peak delta {delta} missed a 64 MiB in-scope allocation"
+            );
+        }
+        // with or without the reset, the probe must be monotone and sane
+        assert!(scope.peak_bytes() >= delta);
     }
 }

@@ -26,6 +26,14 @@
 //!   path entirely.
 //! * **Test hook.**  [`pool_allocs`] counts buffers actually allocated from
 //!   the heap (pool misses).  A steady-state step must not move it.
+//! * **Loan accounting.**  [`live_bytes`]/[`high_water_bytes`] track the
+//!   bytes currently on loan and their high-water mark (two relaxed atomics
+//!   per take/drop) — the fig5 memory audit turns the per-case high-water
+//!   delta into a bytes-per-token column that gates in CI.
+//! * **NUMA first-touch.**  Zero-filled takes at fig5 scale (≥ 16 MiB) fan
+//!   the zero pass out over the executor so physical pages are
+//!   first-touched — and therefore NUMA-placed — on the workers that later
+//!   stream them in the tiled kernels; small takes are untouched.
 //!
 //! [`take`] returns buffers zero-filled: callers accumulate into them
 //! (`gemm_*_acc` semantics), and zeroing also guarantees that reuse cannot
@@ -41,7 +49,10 @@
 
 use std::cell::{Cell, RefCell};
 use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::util::threadpool::{default_threads, in_parallel_worker, parallel_chunks_mut};
 
 /// Smallest pooled capacity; anything shorter shares this class.
 const MIN_CLASS: usize = 64;
@@ -94,6 +105,61 @@ fn count_miss() {
     let _ = POOL_ALLOCS.try_with(|c| c.set(c.get() + 1));
 }
 
+// -- loan-byte accounting ---------------------------------------------------
+// Process-wide tally of bytes currently on loan from the pool plus the
+// high-water mark, kept with two relaxed atomics per take/drop (no
+// allocation, so the counting-allocator gates are unaffected).  The fig5
+// memory audit divides the high-water delta of a case by its token count to
+// get a bytes-per-token figure that gates in CI like a time regression.
+
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static HIGH_WATER_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Bytes currently on loan from the pool across all threads ([`take`] /
+/// [`take_uninit`] minus drops; [`WsBuf::into_vec`] ends a loan too).
+pub fn live_bytes() -> u64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`live_bytes`] since process start or the last
+/// [`reset_high_water`].
+pub fn high_water_bytes() -> u64 {
+    HIGH_WATER_BYTES.load(Ordering::Relaxed)
+}
+
+/// Reset the high-water mark to the current live-byte level (bench scoping:
+/// call between sweep cases so each case reports its own peak).
+pub fn reset_high_water() {
+    HIGH_WATER_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn charge_bytes(bytes: u64) {
+    let live = LIVE_BYTES.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    HIGH_WATER_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
+/// Fresh zero-filled buffers at or above this length (f32s — 16 MiB) get
+/// their zero pass fanned out over the executor so each worker's pages are
+/// first-touched (hence NUMA-placed) on the worker that will stream them in
+/// the tiled kernels; smaller buffers keep the plain `fill`, so the builtin
+/// train cases (and the alloc gates' steady-state byte patterns) see
+/// identical behavior.  The fan-out is skipped inside a parallel worker
+/// (the pool never nests) and under `FLARE_THREADS=1`.
+const FIRST_TOUCH_MIN: usize = 4 << 20;
+
+/// Chunk length of the first-touch zero fan-out: 1 MiB of f32s per chunk
+/// keeps the chunk→worker assignment aligned with the M-panel GEMM's
+/// row-panel partitioning at fig5 scales.
+const FIRST_TOUCH_CHUNK: usize = 256 << 10;
+
+fn zero_fill(buf: &mut [f32]) {
+    if buf.len() >= FIRST_TOUCH_MIN && default_threads() > 1 && !in_parallel_worker() {
+        parallel_chunks_mut(buf, FIRST_TOUCH_CHUNK, |_, chunk| chunk.fill(0.0));
+    } else {
+        buf.fill(0.0);
+    }
+}
+
 /// Size class for a requested length, or `None` when it is too large to
 /// pool (handed straight to the allocator, freed on drop).
 fn class_of(len: usize) -> Option<usize> {
@@ -115,7 +181,7 @@ pub fn pool_allocs() -> u64 {
 
 fn take_impl(len: usize, zero: bool) -> WsBuf {
     if len == 0 {
-        return WsBuf { buf: Vec::new() };
+        return WsBuf { buf: Vec::new(), charged: 0 };
     }
     let mut buf = match class_of(len) {
         Some(class) => POOL
@@ -140,9 +206,11 @@ fn take_impl(len: usize, zero: bool) -> WsBuf {
     // `len` elements are initialized (possibly stale) f32s.
     unsafe { buf.set_len(len) };
     if zero {
-        buf.fill(0.0);
+        zero_fill(&mut buf);
     }
-    WsBuf { buf }
+    let charged = (len * std::mem::size_of::<f32>()) as u64;
+    charge_bytes(charged);
+    WsBuf { buf, charged }
 }
 
 /// A zero-filled scratch buffer of the requested length.  Steady state this
@@ -166,6 +234,8 @@ pub fn take_uninit(len: usize) -> WsBuf {
 /// backing storage.  Derefs to `[f32]`, so it passes anywhere a slice does.
 pub struct WsBuf {
     buf: Vec<f32>,
+    /// bytes this loan contributed to [`live_bytes`] (settled on drop)
+    charged: u64,
 }
 
 impl WsBuf {
@@ -179,6 +249,12 @@ impl WsBuf {
 
 impl Drop for WsBuf {
     fn drop(&mut self) {
+        // settle the loan accounting first (runs for the into_vec escape
+        // too — the Vec leaves the pool, so its loan ends here)
+        if self.charged > 0 {
+            LIVE_BYTES.fetch_sub(self.charged, Ordering::Relaxed);
+            self.charged = 0;
+        }
         if self.buf.capacity() == 0 {
             return;
         }
@@ -329,6 +405,56 @@ mod tests {
         let b = take(32);
         let v = b.into_vec();
         assert_eq!(v.len(), 32);
+    }
+
+    /// Wait (bounded) for the shared live-byte tally to fall below `bound`
+    /// — other tests mutate the global counters concurrently, so settle
+    /// checks poll instead of asserting an instantaneous read.
+    fn eventually_below(bound: u64) -> bool {
+        for _ in 0..200 {
+            if live_bytes() < bound {
+                return true;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        false
+    }
+
+    #[test]
+    fn loan_accounting_tracks_live_and_high_water() {
+        const LEN: usize = 500_000;
+        let b = take(LEN);
+        let held = live_bytes();
+        // my loan is on the books at this instant, whatever else is live
+        assert!(held >= (LEN * 4) as u64, "live {held} missed a {LEN}-float loan");
+        assert!(high_water_bytes() >= (LEN * 4) as u64);
+        drop(b);
+        assert!(eventually_below(held), "drop must settle the loan");
+        reset_high_water(); // must not panic; high water re-seeds from live
+        assert!(high_water_bytes() >= live_bytes().saturating_sub(1));
+    }
+
+    #[test]
+    fn into_vec_settles_loan() {
+        const LEN: usize = 520_000;
+        let b = take(LEN);
+        let held = live_bytes();
+        let v = b.into_vec(); // the loan must end even though the Vec lives on
+        assert!(eventually_below(held), "escaped buffers must not stay on the books");
+        drop(v);
+    }
+
+    #[test]
+    fn first_touch_zero_is_still_zero() {
+        // above the fan-out threshold the parallel zero must be
+        // indistinguishable from the serial fill
+        const LEN: usize = FIRST_TOUCH_MIN + 12_345;
+        let mut a = take(LEN);
+        a[FIRST_TOUCH_MIN] = 3.5;
+        a[7] = -1.0;
+        drop(a);
+        let b = take(LEN);
+        assert!(b.iter().all(|&v| v == 0.0), "first-touch zero left stale values");
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Parity gates for the fused single-pass mixer (`mixer_head_fused`):
+//! the fused encode–normalize–decode pipeline must be **bitwise** equal to
+//! the composed two-pass path (`mixer_encode` + `mixer_decode`) at every
+//! shape — including sizes that are not multiples of the tile — and the
+//! training forward (`flare_mixer_fwd`, which exports decode statistics
+//! for the backward replay) must be bitwise equal to the inference
+//! forward.  A directional finite-difference check then pins the backward
+//! at a size large enough to cross several tile boundaries, so the
+//! replayed decode weights are exercised where replay actually matters.
+//!
+//! Bitwise assertions compare f32 bit patterns, so this file also locks
+//! in `FLARE_THREADS=1` determinism: the single-thread CI leg reruns it
+//! pinned to one worker.
+
+#![allow(clippy::too_many_arguments)]
+
+use flare::model::backward::{flare_mixer_bwd, flare_mixer_fwd};
+use flare::model::forward::{flare_mixer, mixer_decode, mixer_encode, mixer_head_fused};
+use flare::util::rng::Rng;
+
+fn randn(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+/// Composed two-pass reference: encode into (mrun, den, z), then decode.
+fn two_pass(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; h * n * d];
+    let (mut mrun, mut den, mut z) = (vec![0.0f32; m], vec![0.0f32; m], vec![0.0f32; m * d]);
+    for hh in 0..h {
+        let qh = &q[hh * m * d..(hh + 1) * m * d];
+        let kh = &k[hh * n * d..(hh + 1) * n * d];
+        let vh = &v[hh * n * d..(hh + 1) * n * d];
+        mixer_encode(qh, kh, vh, m, n, d, scale, &mut mrun, &mut den, &mut z);
+        mixer_decode(qh, kh, &z, m, n, d, scale, &mut y[hh * n * d..(hh + 1) * n * d]);
+    }
+    y
+}
+
+#[test]
+fn fused_matches_two_pass_bitwise_over_edge_shapes() {
+    // (h, m, n, d): degenerate singletons, tiny odd shapes, one-over and
+    // one-under tile multiples, and a multi-tile span
+    let shapes = [
+        (1usize, 1usize, 1usize, 1usize),
+        (2, 4, 23, 5),
+        (1, 3, 63, 2),
+        (2, 2, 64, 3),
+        (1, 5, 65, 4),
+        (2, 3, 130, 7),
+        (1, 8, 192, 6),
+    ];
+    for &(h, m, n, d) in &shapes {
+        let mut rng = Rng::new((h * 1000 + m * 100 + n * 10 + d) as u64);
+        let q = randn(&mut rng, h * m * d);
+        let k = randn(&mut rng, h * n * d);
+        let v = randn(&mut rng, h * n * d);
+        let scale = 0.61f32;
+        let expect = two_pass(&q, &k, &v, h, m, n, d, scale);
+        let fused = flare_mixer(&q, &k, &v, h, m, n, d, scale);
+        for i in 0..h * n * d {
+            assert_eq!(
+                expect[i].to_bits(),
+                fused[i].to_bits(),
+                "(h={h}, m={m}, n={n}, d={d}) elem {i}: {} vs {}",
+                expect[i],
+                fused[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn training_forward_matches_inference_forward_bitwise() {
+    // flare_mixer_fwd exports decode stats for the backward replay; the
+    // export must not perturb the output by a single bit
+    for &(h, m, n, d) in &[(2usize, 4usize, 23usize, 5usize), (1, 3, 130, 6), (2, 2, 64, 4)] {
+        let mut rng = Rng::new((n * 7 + d) as u64);
+        let q = randn(&mut rng, h * m * d);
+        let k = randn(&mut rng, h * n * d);
+        let v = randn(&mut rng, h * n * d);
+        let plain = flare_mixer(&q, &k, &v, h, m, n, d, 0.8);
+        let (cached, _cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, 0.8);
+        for i in 0..h * n * d {
+            assert_eq!(
+                plain[i].to_bits(),
+                cached[i].to_bits(),
+                "(h={h}, m={m}, n={n}, d={d}) elem {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_head_stats_export_is_bit_neutral_across_tiles() {
+    // same head computed with and without stats export, at a size that
+    // spans three tiles with a ragged tail
+    let (m, n, d) = (6usize, 145usize, 4usize);
+    let mut rng = Rng::new(31);
+    let q = randn(&mut rng, m * d);
+    let k = randn(&mut rng, n * d);
+    let v = randn(&mut rng, n * d);
+    let run = |stats: bool| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (mut mrun, mut den, mut z) = (vec![0.0f32; m], vec![0.0f32; m], vec![0.0f32; m * d]);
+        let mut y = vec![0.0f32; n * d];
+        let (mut dmax, mut dden) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let s = if stats { Some((&mut dmax[..], &mut dden[..])) } else { None };
+        mixer_head_fused(&q, &k, &v, m, n, d, 0.44, &mut mrun, &mut den, &mut z, &mut y, s);
+        (y, dmax, dden)
+    };
+    let (y_plain, _, _) = run(false);
+    let (y_stats, dmax, dden) = run(true);
+    for i in 0..n * d {
+        assert_eq!(y_plain[i].to_bits(), y_stats[i].to_bits(), "elem {i}");
+    }
+    assert!(dmax.iter().all(|x| x.is_finite()));
+    assert!(dden.iter().all(|&x| x > 0.0));
+}
+
+/// f64 dense oracle for one head (same math as the unit-test oracle, with
+/// explicit scale) — used for the multi-tile backward FD check.
+fn dense_head_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f64,
+) -> Vec<f64> {
+    let mut s = vec![0.0f64; m * n];
+    for mi in 0..m {
+        for t in 0..n {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += q[mi * d + j] * k[t * d + j];
+            }
+            s[mi * n + t] = acc * scale;
+        }
+    }
+    let mut z = vec![0.0f64; m * d];
+    for mi in 0..m {
+        let row = &s[mi * n..(mi + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = row.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for t in 0..n {
+            let w = e[t] / den;
+            for j in 0..d {
+                z[mi * d + j] += w * v[t * d + j];
+            }
+        }
+    }
+    let mut y = vec![0.0f64; n * d];
+    for t in 0..n {
+        let col: Vec<f64> = (0..m).map(|mi| s[mi * n + t]).collect();
+        let mx = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = col.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for mi in 0..m {
+            let w = e[mi] / den;
+            for j in 0..d {
+                y[t * d + j] += w * z[mi * d + j];
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn backward_replay_matches_directional_differences_across_tiles() {
+    // n = 150 crosses tile boundaries with a ragged tail, so pass 1 of the
+    // backward replays the decode softmax from the cached per-token stats
+    // in every configuration the tiling can produce.  A directional
+    // derivative against the f64 oracle keeps the runtime bounded while
+    // still touching every input coordinate.
+    let (h, m, n, d) = (1usize, 4usize, 150usize, 3usize);
+    let scale = 0.5f64;
+    let mut rng = Rng::new(47);
+    let q = randn(&mut rng, h * m * d);
+    let k = randn(&mut rng, h * n * d);
+    let v = randn(&mut rng, h * n * d);
+    let w = randn(&mut rng, h * n * d); // linear functional L = <w, Y>
+    let uq = randn(&mut rng, h * m * d); // direction vectors
+    let uk = randn(&mut rng, h * n * d);
+    let uv = randn(&mut rng, h * n * d);
+
+    let (_, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, scale as f32);
+    let (dq, dk, dv) = flare_mixer_bwd(&q, &k, &v, h, m, n, d, scale as f32, &cache, &w);
+    let analytic: f64 = dq.iter().zip(&uq).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>()
+        + dk.iter().zip(&uk).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>()
+        + dv.iter().zip(&uv).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+
+    let loss = |eps: f64| -> f64 {
+        let perturb = |base: &[f32], dir: &[f32]| -> Vec<f64> {
+            base.iter().zip(dir).map(|(&b, &u)| b as f64 + eps * u as f64).collect()
+        };
+        let (q64, k64, v64) = (perturb(&q, &uq), perturb(&k, &uk), perturb(&v, &uv));
+        let y = dense_head_f64(&q64, &k64, &v64, m, n, d, scale);
+        y.iter().zip(&w).map(|(yv, &wv)| yv * wv as f64).sum()
+    };
+    let eps = 1e-5;
+    let fd = (loss(eps) - loss(-eps)) / (2.0 * eps);
+    let rel = (analytic - fd).abs() / analytic.abs().max(fd.abs()).max(1e-2);
+    assert!(rel < 1e-3, "directional derivative: analytic {analytic} vs fd {fd} (rel {rel:.2e})");
+}

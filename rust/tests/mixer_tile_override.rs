@@ -1,0 +1,136 @@
+//! `FLARE_MIXER_TILE` override invariance.
+//!
+//! The override is latched process-wide on first use (`OnceLock`), so this
+//! lives in its own test binary with a **single** test function: the env
+//! var is set before any mixer code runs, and everything that must observe
+//! the overridden tile happens inside that one test.
+//!
+//! Tile size changes the online-softmax update order, so outputs under a
+//! non-default tile are *not* bitwise equal to the default-tile path —
+//! they must instead agree with a dense f64 oracle to tolerance, and the
+//! backward must still pass a finite-difference check.  That is exactly
+//! the invariance the knob promises: any tile, same math.
+
+use flare::model::backward::{flare_mixer_bwd, flare_mixer_fwd};
+use flare::model::forward::{flare_mixer, mixer_tile};
+use flare::util::rng::Rng;
+
+fn randn(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+/// Dense f64 oracle for one head: z = softmax_N(s) v, y = softmax_M(s^T) z.
+fn dense_head_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f64,
+) -> Vec<f64> {
+    let mut s = vec![0.0f64; m * n];
+    for mi in 0..m {
+        for t in 0..n {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += q[mi * d + j] * k[t * d + j];
+            }
+            s[mi * n + t] = acc * scale;
+        }
+    }
+    let mut z = vec![0.0f64; m * d];
+    for mi in 0..m {
+        let row = &s[mi * n..(mi + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = row.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for t in 0..n {
+            let w = e[t] / den;
+            for j in 0..d {
+                z[mi * d + j] += w * v[t * d + j];
+            }
+        }
+    }
+    let mut y = vec![0.0f64; n * d];
+    for t in 0..n {
+        let col: Vec<f64> = (0..m).map(|mi| s[mi * n + t]).collect();
+        let mx = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = col.iter().map(|&x| (x - mx).exp()).collect();
+        let den: f64 = e.iter().sum();
+        for mi in 0..m {
+            let w = e[mi] / den;
+            for j in 0..d {
+                y[t * d + j] += w * z[mi * d + j];
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn tile_override_is_honored_and_results_are_invariant() {
+    // must happen before anything touches the mixer in this process
+    std::env::set_var("FLARE_MIXER_TILE", "48");
+
+    // 48 is deliberately NOT a multiple of the built-in 64-row floor:
+    // the override must win verbatim for any shape
+    assert_eq!(mixer_tile(4, 5), 48);
+    assert_eq!(mixer_tile(1024, 64), 48);
+
+    // forward vs dense oracle: n = 100 gives tiles 48 + 48 + 4
+    let (h, m, n, d) = (2usize, 4usize, 100usize, 5usize);
+    let scale = 0.7f64;
+    let mut rng = Rng::new(29);
+    let q = randn(&mut rng, h * m * d);
+    let k = randn(&mut rng, h * n * d);
+    let v = randn(&mut rng, h * n * d);
+    let y = flare_mixer(&q, &k, &v, h, m, n, d, scale as f32);
+    for hh in 0..h {
+        let to64 = |s: &[f32]| -> Vec<f64> { s.iter().map(|&x| x as f64).collect() };
+        let want = dense_head_f64(
+            &to64(&q[hh * m * d..(hh + 1) * m * d]),
+            &to64(&k[hh * n * d..(hh + 1) * n * d]),
+            &to64(&v[hh * n * d..(hh + 1) * n * d]),
+            m,
+            n,
+            d,
+            scale,
+        );
+        for i in 0..n * d {
+            let got = y[hh * n * d + i] as f64;
+            // f32 accumulation + 2-ulp vexp vs the f64 oracle: ~1e-6
+            // typical; a tiling bug is O(1), so 1e-4 is a sharp gate
+            let err = (got - want[i]).abs() / want[i].abs().max(1.0);
+            assert!(err < 1e-4, "head {hh} elem {i}: fused {got} vs dense {}", want[i]);
+        }
+    }
+
+    // backward under the overridden tile: directional finite difference
+    // against the oracle (loss L = <w, Y> over head 0)
+    let (h, m, n, d) = (1usize, 3usize, 100usize, 4usize);
+    let w = randn(&mut rng, h * n * d);
+    let q = randn(&mut rng, h * m * d);
+    let k = randn(&mut rng, h * n * d);
+    let v = randn(&mut rng, h * n * d);
+    let uq = randn(&mut rng, h * m * d);
+    let uk = randn(&mut rng, h * n * d);
+    let uv = randn(&mut rng, h * n * d);
+    let (_, cache) = flare_mixer_fwd(&q, &k, &v, h, m, n, d, scale as f32);
+    let (dq, dk, dv) = flare_mixer_bwd(&q, &k, &v, h, m, n, d, scale as f32, &cache, &w);
+    let analytic: f64 = dq.iter().zip(&uq).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>()
+        + dk.iter().zip(&uk).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>()
+        + dv.iter().zip(&uv).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+    let loss = |eps: f64| -> f64 {
+        let perturb = |base: &[f32], dir: &[f32]| -> Vec<f64> {
+            base.iter().zip(dir).map(|(&b, &u)| b as f64 + eps * u as f64).collect()
+        };
+        let (q64, k64, v64) = (perturb(&q, &uq), perturb(&k, &uk), perturb(&v, &uv));
+        let y = dense_head_f64(&q64, &k64, &v64, m, n, d, scale);
+        y.iter().zip(&w).map(|(yv, &wv)| yv * wv as f64).sum()
+    };
+    let eps = 1e-5;
+    let fd = (loss(eps) - loss(-eps)) / (2.0 * eps);
+    let rel = (analytic - fd).abs() / analytic.abs().max(fd.abs()).max(1e-2);
+    assert!(rel < 1e-3, "directional derivative: analytic {analytic} vs fd {fd} (rel {rel:.2e})");
+}

@@ -52,6 +52,7 @@ fn synthetic_case() -> anyhow::Result<CaseCfg> {
         param_count: total,
         artifacts: Default::default(),
         params: entries,
+        precision: None,
     })
 }
 

@@ -10,6 +10,11 @@
 //! linearly with the activations — the run prints the ratio of ns/token
 //! at the largest N to the N=64k point (target: within ~1.15x).
 //!
+//! A second sweep repeats the ladder on the bf16 storage tier
+//! (`fig5_bf16_n*`) and hard-fails unless its bytes/token is <= 0.6x the
+//! f32 column at the same N — the reduced-precision tier exists to cut
+//! activation traffic, so failing to do so is a bench failure, not a note.
+//!
 //! No manifest artifacts needed: inputs are synthetic (the claim under
 //! test is runtime scaling, not accuracy).  Peak RSS is measured per case
 //! with a scoped probe (`RssScope`) so each N reports its own footprint
@@ -108,6 +113,52 @@ fn main() -> anyhow::Result<()> {
             ns.last().unwrap(),
         );
     }
+
+    // bf16 storage tier over the same sweep.  The point of the tier is the
+    // activation footprint, so the bytes/token column must come in at
+    // <= 0.6x the f32 column at the same N (the CI acceptance gate): a
+    // bf16 run that fails to cut activation bytes aborts the bench loudly
+    // here instead of uploading a silently-regressed BENCH_fig5.json.
+    use flare::config::Precision;
+    let pb = ParamTable::with_precision(&params, &map, Precision::Bf16, None);
+    println!("\n=== Figure 5, bf16 storage tier (f32 accumulation) ===\n");
+    let mut btable = Table::new(&["N", "ms/fwd", "ns/token", "bytes/token", "vs f32"]);
+    for &n in ns {
+        eprintln!("running fig5_bf16_n{n}");
+        let x: Vec<f32> = (0..n * cfg.d_in).map(|_| rng.normal() as f32).collect();
+        let scope = RssScope::start();
+        reset_high_water();
+        let mut m = bench.run(&format!("fig5_bf16_n{n}"), || {
+            let y = forward_sample(&cfg, &pb, &x).expect("bf16 forward");
+            std::hint::black_box(&y[0]);
+        });
+        let ns_per_token = m.per_iter.p50 * 1e6 / n as f64;
+        m.extras.push(("n".into(), n as f64));
+        m.extras.push(("ns_per_token".into(), ns_per_token));
+        push_memory_extras(&mut m, &scope, n);
+        let bpt = m.extra("bytes_per_token").unwrap_or(f64::MAX);
+        let f32_bpt = all
+            .iter()
+            .find(|f| f.name == format!("fig5_n{n}"))
+            .and_then(|f| f.extra("bytes_per_token"))
+            .expect("f32 sweep runs first");
+        let ratio = bpt / f32_bpt;
+        anyhow::ensure!(
+            ratio <= 0.6,
+            "fig5_bf16_n{n}: bytes/token {bpt:.0} is {ratio:.2}x the f32 column \
+             {f32_bpt:.0} — the bf16 tier must cut activation bytes (gate: <= 0.6x)"
+        );
+        btable.row(vec![
+            n.to_string(),
+            format!("{:.1}", m.per_iter.p50),
+            format!("{ns_per_token:.1}"),
+            format!("{bpt:.0}"),
+            format!("{ratio:.2}x"),
+        ]);
+        all.push(m);
+    }
+    btable.print();
+
     let path = save_results("fig5_million", &all)?;
     println!("results written to {path:?}");
     Ok(())

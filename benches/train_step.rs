@@ -10,7 +10,10 @@
 
 use flare::bench::{quick_mode, save_results, Bench, Measurement, Table};
 use flare::config::{CaseCfg, ModelCfg};
-use flare::linalg::kernel::{matmul_f32, matmul_f32_reference, scale_softmax_rows};
+use flare::linalg::kernel::{
+    gemm_bf16_acc, gemm_i8_scaled, matmul_f32, matmul_f32_reference, pack_bf16,
+    quantize_rows_i8, scale_softmax_rows,
+};
 use flare::linalg::vexp::vexp;
 use flare::model::{build_spec, init_params};
 use flare::runtime::{make_backend, BatchInput, BatchTarget, NativeBackend, OptState};
@@ -52,6 +55,7 @@ fn make_case(name: &str, n: usize, c: usize, m: usize, blocks: usize) -> CaseCfg
         param_count: total,
         artifacts: Default::default(),
         params: entries,
+        precision: None,
     }
 }
 
@@ -150,6 +154,50 @@ fn main() -> anyhow::Result<()> {
         });
         ktable.row(vec![
             "gemm_naive".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.3}", meas.mean_ms()),
+            format!("{:.2}", flops / (meas.mean_ms() * 1e6)),
+        ]);
+        all.push(meas);
+
+        // reduced-precision tiers over the same shapes: bf16 storage with
+        // f32 accumulation (pack once, stream u16 panels), and the int8
+        // weight-quantized path (weights quantized once at "load", the
+        // per-call cost is activation quant + the i8 dot + scale fold)
+        let mut a16 = vec![0u16; m * k];
+        let mut b16 = vec![0u16; k * n];
+        pack_bf16(&a, &mut a16);
+        pack_bf16(&b, &mut b16);
+        let mut c16 = vec![0.0f32; m * n];
+        let meas = bench.run(&format!("gemm_bf16_m{m}_k{k}_n{n}"), || {
+            c16.fill(0.0);
+            gemm_bf16_acc(&mut c16, &a16, &b16, m, k, n);
+            assert!(c16[0].is_finite());
+        });
+        ktable.row(vec![
+            "gemm_bf16".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.3}", meas.mean_ms()),
+            format!("{:.2}", flops / (meas.mean_ms() * 1e6)),
+        ]);
+        all.push(meas);
+
+        // b laid out as the weight: [n rows, k cols], per-row absmax
+        let mut wq = vec![0i8; n * k];
+        let mut sw = vec![0.0f32; n];
+        let bt: Vec<f32> = (0..n * k).map(|i| b[(i % k) * n + i / k]).collect();
+        quantize_rows_i8(&bt, n, k, &mut wq, &mut sw);
+        let mut xq = vec![0i8; m * k];
+        let mut sx = vec![0.0f32; m];
+        let mut c8 = vec![0.0f32; m * n];
+        let meas = bench.run(&format!("gemm_int8_m{m}_k{k}_n{n}"), || {
+            quantize_rows_i8(&a, m, k, &mut xq, &mut sx);
+            c8.fill(0.0);
+            gemm_i8_scaled(&mut c8, &xq, &sx, &wq, &sw, m, k, n);
+            assert!(c8[0].is_finite());
+        });
+        ktable.row(vec![
+            "gemm_int8".into(),
             format!("{m}x{k}x{n}"),
             format!("{:.3}", meas.mean_ms()),
             format!("{:.2}", flops / (meas.mean_ms() * 1e6)),

@@ -96,6 +96,52 @@ impl ModelCfg {
     }
 }
 
+/// Numeric tier a case's *inference* runs at.  Training always uses the
+/// f32 master weights — pinning a reduced precision on a training call is a
+/// typed capability error, and the `FLARE_PRECISION` environment default is
+/// ignored by training so a bf16 CI leg can run the full suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage and compute (the default tier).
+    F32,
+    /// bf16 activation storage with f32 accumulation (mixer K/V, block
+    /// activations); weights stay f32.
+    Bf16,
+    /// int8 weight-quantized projections (per-row absmax scales computed at
+    /// model load); activations quantized per row on the fly.
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Precision::F32),
+            "bf16" | "bfloat16" => Ok(Precision::Bf16),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => anyhow::bail!("unknown precision {other:?} (expected f32, bf16 or int8)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Process-wide inference-precision default from `FLARE_PRECISION`
+/// (read once; unset, empty or unparsable means no default).  Cases that
+/// pin an explicit `precision` override it.
+pub fn env_precision() -> Option<Precision> {
+    use std::sync::OnceLock;
+    static ENV: OnceLock<Option<Precision>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("FLARE_PRECISION").ok().and_then(|s| Precision::parse(&s).ok())
+    })
+}
+
 /// One case: a model bound to a dataset shape with its artifact files.
 #[derive(Debug, Clone)]
 pub struct CaseCfg {
@@ -114,6 +160,19 @@ pub struct CaseCfg {
     pub param_count: usize,
     pub artifacts: BTreeMap<String, String>,
     pub params: Vec<ParamEntry>,
+    /// pinned inference precision; `None` inherits the `FLARE_PRECISION`
+    /// process default (see [`CaseCfg::inference_precision`])
+    pub precision: Option<Precision>,
+}
+
+impl CaseCfg {
+    /// Tier this case's forward/serving path runs at: an explicit pin wins,
+    /// else the `FLARE_PRECISION` env default, else f32.  Training paths do
+    /// NOT consult this — they reject explicit reduced-precision pins and
+    /// ignore the env default.
+    pub fn inference_precision(&self) -> Precision {
+        self.precision.or_else(env_precision).unwrap_or(Precision::F32)
+    }
 }
 
 /// A standalone mixer artifact (Figure 2).
@@ -190,6 +249,10 @@ impl Manifest {
                 param_count: c.req_usize("param_count")?,
                 artifacts,
                 params,
+                precision: match c.get("precision").as_str() {
+                    Some(s) => Some(Precision::parse(s)?),
+                    None => None,
+                },
             });
         }
 
@@ -306,6 +369,7 @@ impl Manifest {
                 param_count,
                 artifacts: BTreeMap::new(),
                 params,
+                precision: None,
             }
         };
         let pde = ModelCfg {
@@ -391,7 +455,7 @@ mod tests {
                       "latent_sa_blocks": 0, "shared_latents": false,
                       "scale": 1.0, "mixer_impl": "sdpa",
                       "task": "regression", "vocab": 0, "num_classes": 0},
-            "opt": {}, "param_count": 10,
+            "opt": {}, "param_count": 10, "precision": "bf16",
             "artifacts": {"fwd": "t_fwd.hlo.txt"},
             "params": [{"name": "a", "shape": [2, 5], "offset": 0,
                         "size": 10, "init": "zeros", "fan_in": 0}]
@@ -414,6 +478,8 @@ mod tests {
         assert_eq!(m.cases.len(), 1);
         let c = m.case("t").unwrap();
         assert_eq!(c.max_batch, 6, "serving max_batch parses from the manifest");
+        assert_eq!(c.precision, Some(Precision::Bf16), "precision parses from the manifest");
+        assert_eq!(c.inference_precision(), Precision::Bf16);
         assert_eq!(c.model.mixer, "flare");
         assert_eq!(c.model.head_dim(), 4);
         assert_eq!(c.model.io_layers, 1);
@@ -443,14 +509,30 @@ mod tests {
             assert_eq!(covered, c.param_count, "case {}", c.name);
             assert!(c.artifacts.is_empty());
             assert!(c.train_steps > 0 && c.batch > 0);
-            // absent from the builtin: serving limit defaults to batch
+            // absent from the builtin: serving limit defaults to batch,
+            // precision inherits the process default
             assert_eq!(c.max_batch, c.batch);
+            assert_eq!(c.precision, None);
         }
         // a directory with no manifest.json falls back to the builtin
         let dir = std::env::temp_dir().join("flare_no_artifacts_here");
         let _ = std::fs::remove_dir_all(&dir);
         let m2 = Manifest::load_or_builtin(&dir).unwrap();
         assert_eq!(m2.cases.len(), m.cases.len());
+    }
+
+    #[test]
+    fn precision_parses_aliases_and_rejects_junk() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse(" bfloat16 ").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("i8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp8").is_err());
+        for p in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            assert_eq!(Precision::parse(p.as_str()).unwrap(), p, "as_str round-trip");
+        }
     }
 
     #[test]

@@ -41,7 +41,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::{CaseCfg, Manifest};
+use crate::config::{CaseCfg, Manifest, Precision};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::router::{Bucket, RouteError, Router};
 use crate::metrics::Registry;
@@ -92,6 +92,11 @@ pub struct ServerConfig {
     /// continuous-batching fold-in policy (TGI-style `waiting_served_ratio`
     /// — see [`crate::coordinator::batcher::Batcher`]); 0.0 disables it
     pub waiting_served_ratio: f64,
+    /// serve-time precision tier override: pins every served case to this
+    /// tier (bf16 storage / int8 weight-quantized inference), taking
+    /// precedence over the manifest's per-case `precision` and the
+    /// `FLARE_PRECISION` environment knob; None keeps the case's own tier
+    pub precision: Option<Precision>,
 }
 
 impl Default for ServerConfig {
@@ -103,6 +108,7 @@ impl Default for ServerConfig {
             backend: None,
             max_concurrent: 0,
             waiting_served_ratio: 0.0,
+            precision: None,
         }
     }
 }
@@ -455,12 +461,16 @@ fn engine_main(
         };
         let mut states = Vec::new();
         for name in &cfg.cases {
-            let case = manifest.case(name)?;
+            let mut case = manifest.case(name)?.clone();
             anyhow::ensure!(
                 !case.model.is_classification(),
                 "serving supports field models"
             );
-            backend.prepare(&manifest, case)?;
+            if let Some(tier) = cfg.precision {
+                // serve-time override wins over the manifest pin and env
+                case.precision = Some(tier);
+            }
+            backend.prepare(&manifest, &case)?;
             let p = cfg
                 .params
                 .iter()
@@ -477,7 +487,7 @@ fn engine_main(
                     batch: case.batch,
                     max_batch: case.max_batch.max(case.batch).max(1),
                 },
-                case: case.clone(),
+                case,
                 params: p,
                 ws_x: Vec::new(),
                 ws_y: Vec::new(),

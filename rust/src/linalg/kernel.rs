@@ -156,14 +156,16 @@ fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
 /// per-panel buffers, no stitch copy.  Row ownership is disjoint and each
 /// row keeps its k-sequential accumulation, so results stay bitwise stable
 /// across thread counts (and across which pool worker runs which panel).
-fn matmul_panels(
+/// Generic over the A element type so the bf16 (`u16`) entry points share
+/// the same split.
+fn matmul_panels<T: Copy + Sync>(
     c: &mut [f32],
-    a: &[f32],
+    a: &[T],
     m: usize,
     k: usize,
     n: usize,
     threads: usize,
-    panel: impl Fn(&mut [f32], &[f32], usize) + Sync,
+    panel: impl Fn(&mut [f32], &[T], usize) + Sync,
 ) {
     let threads = threads.max(1).min(m.max(1));
     if threads == 1 {
@@ -545,6 +547,307 @@ pub fn adamw_fused(
 }
 
 // ---------------------------------------------------------------------------
+// Reduced precision: bf16 storage (f32 accumulate) + int8 weight quant
+// ---------------------------------------------------------------------------
+//
+// bf16 is the upper 16 bits of an f32 with round-to-nearest-even; values are
+// stored as raw `u16` (no dedicated type — the model layer views `u16` spans
+// over pooled f32 workspace buffers via [`as_u16`]).  Every compute path
+// decodes to f32 and accumulates in f32: only *storage* is narrowed, which
+// is the right trade for the memory-bound mixer GEMMs.  The int8 tier
+// quantizes **weights** per output row (absmax, symmetric, clamped to ±127
+// so the AVX2 `maddubs` pair-sums cannot saturate) and activations per
+// sample row on the fly; the i8×i8→i32 dot is exact integer arithmetic, so
+// scalar and AVX2 agree bitwise and the f32 scale fold happens once per
+// output element.
+//
+// Caveat shared by every bf16 kernel here: non-finite inputs are not
+// faithfully round-tripped (the integer rounding below wraps on the NaN bit
+// patterns ≥ 0xFFFF8000).  All model activations are finite by contract.
+
+/// Round one f32 to bf16 (round-to-nearest-even on the upper 16 bits).
+/// The same integer formula backs the scalar and AVX2 pack paths, so the
+/// two CI legs produce bitwise identical bf16 streams.
+#[inline(always)]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    (bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Widen one bf16 (raw `u16`) back to f32 — exact, by construction.
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Pack `src` into bf16 words, elementwise.  AVX2 fast path behind the
+/// shared [`simd_available`] gate (`FLARE_NO_SIMD=1` forces scalar); both
+/// paths use the same rounding formula and agree bitwise.
+pub fn pack_bf16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "pack_bf16: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime AVX2 detection in simd_available()
+        unsafe { pack_bf16_avx2(src, dst) };
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_from_f32(s);
+    }
+}
+
+/// Unpack bf16 words into f32, elementwise (AVX2 fast path, scalar
+/// fallback; both exact).
+pub fn unpack_bf16(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "unpack_bf16: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime AVX2 detection in simd_available()
+        unsafe { unpack_bf16_avx2(src, dst) };
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(s);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_bf16_avx2(src: &[f32], dst: &mut [u16]) {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi32, _mm256_and_si256, _mm256_loadu_si256, _mm256_packus_epi32,
+        _mm256_permute4x64_epi64, _mm256_set1_epi32, _mm256_srli_epi32, _mm256_storeu_si256,
+    };
+    let n = src.len();
+    let bias = _mm256_set1_epi32(0x7fff);
+    let one = _mm256_set1_epi32(1);
+    let round = |v: __m256i| {
+        let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(v), one);
+        _mm256_srli_epi32::<16>(_mm256_add_epi32(v, _mm256_add_epi32(bias, lsb)))
+    };
+    let mut i = 0;
+    while i + 16 <= n {
+        let lo = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+        let hi = _mm256_loadu_si256(src.as_ptr().add(i + 8) as *const __m256i);
+        // packus over two rounded u32 vectors interleaves 128-bit lanes:
+        // [lo0..3, hi0..3, lo4..7, hi4..7] — the permute restores order.
+        // Values are <= 0xFFFF so the unsigned saturation never fires.
+        let packed = _mm256_packus_epi32(round(lo), round(hi));
+        let fixed = _mm256_permute4x64_epi64::<0b1101_1000>(packed);
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, fixed);
+        i += 16;
+    }
+    for j in i..n {
+        dst[j] = bf16_from_f32(src[j]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_bf16_avx2(src: &[u16], dst: &mut [f32]) {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_cvtepu16_epi32, _mm256_slli_epi32, _mm256_storeu_si256,
+        _mm_loadu_si128,
+    };
+    let n = src.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(v));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, w);
+        i += 8;
+    }
+    for j in i..n {
+        dst[j] = bf16_to_f32(src[j]);
+    }
+}
+
+/// View the first `len` bf16 words stored in an f32-backed buffer.  The
+/// model layer keeps bf16 activations inside pooled [`crate::util::workspace`]
+/// buffers (two bf16 per f32 slot) so the counting-allocator gates hold at
+/// every precision; f32's 4-byte alignment always satisfies u16's.
+pub fn as_u16(buf: &[f32], len: usize) -> &[u16] {
+    assert!(len <= buf.len() * 2, "as_u16: {len} words exceed backing {}", buf.len() * 2);
+    // SAFETY: in-bounds (asserted), alignment 4 >= 2, u16 has no invalid
+    // bit patterns, and the borrow pins the backing slice.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u16, len) }
+}
+
+/// Mutable [`as_u16`].
+pub fn as_u16_mut(buf: &mut [f32], len: usize) -> &mut [u16] {
+    assert!(len <= buf.len() * 2, "as_u16_mut: {len} words exceed backing {}", buf.len() * 2);
+    // SAFETY: as as_u16, with exclusive access from the &mut borrow.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u16, len) }
+}
+
+/// View the first `len` i8 values stored in an f32-backed buffer (four per
+/// f32 slot) — pooled scratch for dynamic activation quantization.
+pub fn as_i8(buf: &[f32], len: usize) -> &[i8] {
+    assert!(len <= buf.len() * 4, "as_i8: {len} bytes exceed backing {}", buf.len() * 4);
+    // SAFETY: as as_u16 (alignment 4 >= 1).
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const i8, len) }
+}
+
+/// Mutable [`as_i8`].
+pub fn as_i8_mut(buf: &mut [f32], len: usize) -> &mut [i8] {
+    assert!(len <= buf.len() * 4, "as_i8_mut: {len} bytes exceed backing {}", buf.len() * 4);
+    // SAFETY: as as_u16_mut.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut i8, len) }
+}
+
+/// `C[m, n] += A16[m, k] @ B16[k, n]`, both operands bf16, f32 accumulate.
+/// Decoding happens in the O(m·k + k·n) pack phase of [`gemm_core`]; the
+/// O(m·k·n) micro-kernel is the unchanged f32 one.
+pub fn gemm_bf16_acc(c: &mut [f32], a16: &[u16], b16: &[u16], m: usize, k: usize, n: usize) {
+    debug_assert!(a16.len() >= m * k && b16.len() >= k * n);
+    gemm_core(c, m, n, k, |i, p| bf16_to_f32(a16[i * k + p]), |p, j| bf16_to_f32(b16[p * n + j]));
+}
+
+/// `C[m, n] += A16[m, k] @ B[k, n]` — bf16 left operand, f32 right.
+pub fn gemm_acc_a16(c: &mut [f32], a16: &[u16], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a16.len() >= m * k && b.len() >= k * n);
+    gemm_core(c, m, n, k, |i, p| bf16_to_f32(a16[i * k + p]), |p, j| b[p * n + j]);
+}
+
+/// `C[m, n] += A[m, k] @ B16[k, n]` — f32 left operand, bf16 right (the
+/// encode `Z += E · Vt` with V stored bf16).
+pub fn gemm_acc_b16(c: &mut [f32], a: &[f32], b16: &[u16], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b16.len() >= k * n);
+    gemm_core(c, m, n, k, |i, p| a[i * k + p], |p, j| bf16_to_f32(b16[p * n + j]));
+}
+
+/// `C[m, n] += A[m, k] @ B16ᵀ` with `bt16` row-major `[n, k]` bf16 (the
+/// encode score tile `S = Q · Ktᵀ` with K stored bf16).
+pub fn gemm_bt_acc_b16(c: &mut [f32], a: &[f32], bt16: &[u16], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && bt16.len() >= n * k);
+    gemm_core(c, m, n, k, |i, p| a[i * k + p], |p, j| bf16_to_f32(bt16[j * k + p]));
+}
+
+/// `C[m, n] += A16[m, k] @ Bᵀ` with `bt` row-major `[n, k]` f32 (the decode
+/// score tile `S = Kt · Qᵀ` with K stored bf16, latents f32).
+pub fn gemm_bt_acc_a16(c: &mut [f32], a16: &[u16], bt: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a16.len() >= m * k && bt.len() >= n * k);
+    gemm_core(c, m, n, k, |i, p| bf16_to_f32(a16[i * k + p]), |p, j| bt[j * k + p]);
+}
+
+/// `C[m, n] = A16[m, k] @ B[k, n]` with M-panel threading — the full-size
+/// bf16-activation projections (e.g. the mixer output linear) use this so
+/// the tier keeps the f32 path's parallel scaling.  Bitwise stable across
+/// thread counts, like [`matmul_f32_into`].
+pub fn matmul_a16_into(c: &mut [f32], a16: &[u16], b: &[f32], m: usize, k: usize, n: usize) {
+    assert!(a16.len() >= m * k, "matmul_a16_into: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_a16_into: rhs size");
+    assert_eq!(c.len(), m * n, "matmul_a16_into: dst size");
+    c.fill(0.0);
+    matmul_panels(c, &a16[..m * k], m, k, n, gemm_threads(m, k, n), |cp, ap, rows| {
+        gemm_acc_a16(cp, ap, b, rows, k, n)
+    });
+}
+
+/// Per-row symmetric absmax quantization to i8: row `r` of `src[rows, cols]`
+/// becomes `q[r·cols..]` with `scales[r] = absmax/127` (an all-zero row gets
+/// scale 0 and an all-zero code row).  Codes are clamped to ±127 — never
+/// -128 — so the AVX2 `maddubs` pair-sum in [`dot_i8`] (|pair| <= 2·127·127)
+/// cannot saturate its i16 lanes.
+pub fn quantize_rows_i8(src: &[f32], rows: usize, cols: usize, q: &mut [i8], scales: &mut [f32]) {
+    assert!(src.len() >= rows * cols && q.len() >= rows * cols && scales.len() >= rows);
+    for r in 0..rows {
+        let row = &src[r * cols..(r + 1) * cols];
+        let mut amax = 0.0f32;
+        for &v in row {
+            amax = amax.max(v.abs());
+        }
+        let (scale, inv) = if amax > 0.0 { (amax / 127.0, 127.0 / amax) } else { (0.0, 0.0) };
+        scales[r] = scale;
+        for (d, &v) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Exact i8×i8→i32 dot product.  Integer arithmetic end to end, so the
+/// scalar and AVX2 paths agree bitwise (the determinism contract for the
+/// int8 tier is exactness, not tolerance).
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime AVX2 detection in simd_available()
+        return unsafe { dot_i8_avx2(a, b) };
+    }
+    dot_i8_scalar(a, b)
+}
+
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_abs_epi8, _mm256_add_epi32, _mm256_castsi256_si128,
+        _mm256_extracti128_si256, _mm256_loadu_si256, _mm256_madd_epi16, _mm256_maddubs_epi16,
+        _mm256_set1_epi16, _mm256_setzero_si256, _mm256_sign_epi8, _mm_add_epi32, _mm_cvtsi128_si32,
+        _mm_shuffle_epi32,
+    };
+    let n = a.len();
+    let ones = _mm256_set1_epi16(1);
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 32 <= n {
+        let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let bv = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        // maddubs needs an unsigned operand: move a's sign onto b first.
+        // With codes clamped to ±127 the i16 pair sums stay <= 32258.
+        let p16 = _mm256_maddubs_epi16(_mm256_abs_epi8(av), _mm256_sign_epi8(bv, av));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+        i += 32;
+    }
+    let s = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0000_1110>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0000_0001>(s));
+    let mut sum = _mm_cvtsi128_si32(s);
+    for j in i..n {
+        sum += a[j] as i32 * b[j] as i32;
+    }
+    sum
+}
+
+/// `Y[rows, n] += (Xq · Wqᵀ) ⊙ (sx ⊗ sw)`: the weight-quantized projection.
+/// `xq [rows, k]` are dynamically quantized activation rows with per-row
+/// scales `sx`; `wq [n, k]` are the prequantized **transposed** weights with
+/// per-output-row scales `sw` (computed once at model load).  No dequantized
+/// weight matrix ever exists — each output element is one exact [`dot_i8`]
+/// and one f32 scale fold.
+pub fn gemm_i8_scaled(
+    y: &mut [f32],
+    xq: &[i8],
+    sx: &[f32],
+    wq: &[i8],
+    sw: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(xq.len() >= rows * k && wq.len() >= n * k);
+    debug_assert!(sx.len() >= rows && sw.len() >= n && y.len() >= rows * n);
+    for r in 0..rows {
+        let xr = &xq[r * k..(r + 1) * k];
+        let yr = &mut y[r * n..(r + 1) * n];
+        let sxr = sx[r];
+        for (j, yv) in yr.iter_mut().enumerate() {
+            let acc = dot_i8(xr, &wq[j * k..(j + 1) * k]);
+            *yv += sxr * sw[j] * acc as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Reference oracle
 // ---------------------------------------------------------------------------
 
@@ -661,6 +964,180 @@ mod tests {
         for (&m, &d) in mx.iter().zip(&den) {
             assert!(m.is_finite() && d > 0.0);
         }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // exactly representable values survive unchanged
+        for x in [0.0f32, 1.0, -2.5, 0.15625] {
+            assert_eq!(bf16_to_f32(bf16_from_f32(x)), x, "{x}");
+        }
+        // ties round to even: 1.0 + 2^-9 is halfway between bf16 codes
+        // 0x3F80 (even) and 0x3F81 — RNE picks the even one
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // ... while the next halfway point (above odd code 0x3F81) rounds up
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // anything past halfway rounds away
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // relative error bound: 2^-9 of magnitude for normal values
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.normal() as f32;
+            let r = bf16_to_f32(bf16_from_f32(x));
+            assert!((r - x).abs() <= x.abs() * (1.0 / 256.0) + 1e-30, "{x} -> {r}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_match_scalar_formula() {
+        // whatever path simd_available() picks must agree bitwise with the
+        // scalar formula, including the non-multiple-of-16 tail
+        let mut rng = Rng::new(4);
+        for len in [0usize, 1, 7, 15, 16, 17, 64, 100] {
+            let src = randv(&mut rng, len);
+            let mut packed = vec![0u16; len];
+            pack_bf16(&src, &mut packed);
+            for (i, (&p, &s)) in packed.iter().zip(&src).enumerate() {
+                assert_eq!(p, bf16_from_f32(s), "pack elem {i} len {len}");
+            }
+            let mut back = vec![0.0f32; len];
+            unpack_bf16(&packed, &mut back);
+            for (i, (&b, &p)) in back.iter().zip(&packed).enumerate() {
+                assert_eq!(b.to_bits(), bf16_to_f32(p).to_bits(), "unpack elem {i} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn u16_and_i8_views_roundtrip_through_f32_backing() {
+        let mut backing = vec![0.0f32; 8];
+        let w = as_u16_mut(&mut backing, 15);
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = (i * 1000) as u16;
+        }
+        let r = as_u16(&backing, 15);
+        for (i, &v) in r.iter().enumerate() {
+            assert_eq!(v, (i * 1000) as u16);
+        }
+        let q = as_i8_mut(&mut backing, 30);
+        for (i, v) in q.iter_mut().enumerate() {
+            *v = i as i8 - 15;
+        }
+        let r = as_i8(&backing, 30);
+        for (i, &v) in r.iter().enumerate() {
+            assert_eq!(v, i as i8 - 15);
+        }
+    }
+
+    #[test]
+    fn bf16_gemm_wrappers_match_reference_on_decoded_inputs() {
+        // each wrapper must equal the f32 GEMM run on the *decoded* bf16
+        // values — the storage narrows, the arithmetic does not
+        let mut rng = Rng::new(5);
+        for &(m, k, n) in &[(3usize, 4usize, 5usize), (16, 16, 16), (65, 7, 9)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut a16 = vec![0u16; m * k];
+            let mut b16 = vec![0u16; k * n];
+            pack_bf16(&a, &mut a16);
+            pack_bf16(&b, &mut b16);
+            let ad: Vec<f32> = a16.iter().map(|&v| bf16_to_f32(v)).collect();
+            let bd: Vec<f32> = b16.iter().map(|&v| bf16_to_f32(v)).collect();
+            let want = matmul_f32_reference(&ad, &bd, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_bf16_acc(&mut c, &a16, &b16, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "bf16_acc {m}x{k}x{n}: {x} vs {y}");
+            }
+            c.fill(0.0);
+            gemm_acc_a16(&mut c, &a16, &bd, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "acc_a16 {m}x{k}x{n}: {x} vs {y}");
+            }
+            c.fill(0.0);
+            gemm_acc_b16(&mut c, &ad, &b16, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "acc_b16 {m}x{k}x{n}: {x} vs {y}");
+            }
+            // transposed-B variants: bt is [n, k]
+            let mut bt = vec![0.0f32; n * k];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = bd[p * n + j];
+                }
+            }
+            let mut bt16 = vec![0u16; n * k];
+            pack_bf16(&bt, &mut bt16);
+            // repack bt from already-decoded values: bitwise stable
+            c.fill(0.0);
+            gemm_bt_acc_b16(&mut c, &ad, &bt16, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "bt_acc_b16 {m}x{k}x{n}: {x} vs {y}");
+            }
+            c.fill(0.0);
+            gemm_bt_acc_a16(&mut c, &a16, &bt, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "bt_acc_a16 {m}x{k}x{n}: {x} vs {y}");
+            }
+            let mut ct = vec![0.0f32; m * n];
+            matmul_a16_into(&mut ct, &a16, &bd, m, k, n);
+            for (x, y) in ct.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "matmul_a16 {m}x{k}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_dispatch_matches_scalar_exactly() {
+        let mut rng = Rng::new(6);
+        for len in [0usize, 1, 31, 32, 33, 100, 257] {
+            let code = |rng: &mut Rng| (rng.normal() * 50.0).clamp(-127.0, 127.0) as i8;
+            let a: Vec<i8> = (0..len).map(|_| code(&mut rng)).collect();
+            let b: Vec<i8> = (0..len).map(|_| code(&mut rng)).collect();
+            assert_eq!(dot_i8(&a, &b), dot_i8_scalar(&a, &b), "len {len}");
+        }
+        // worst case: all ±127, long enough to stress the pair sums
+        let a = vec![127i8; 1024];
+        let b = vec![-127i8; 1024];
+        assert_eq!(dot_i8(&a, &b), -127 * 127 * 1024);
+    }
+
+    #[test]
+    fn int8_quantized_gemm_tracks_f32() {
+        let mut rng = Rng::new(8);
+        let (rows, k, n) = (5usize, 32usize, 9usize);
+        let x = randv(&mut rng, rows * k);
+        let w = randv(&mut rng, k * n); // [k, n] like an affine weight
+        // transpose + per-output-row quantize, as the model does at load
+        let mut wt = vec![0.0f32; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                wt[j * k + p] = w[p * n + j];
+            }
+        }
+        let mut wq = vec![0i8; n * k];
+        let mut sw = vec![0.0f32; n];
+        quantize_rows_i8(&wt, n, k, &mut wq, &mut sw);
+        let mut xq = vec![0i8; rows * k];
+        let mut sx = vec![0.0f32; rows];
+        quantize_rows_i8(&x, rows, k, &mut xq, &mut sx);
+        let mut y = vec![0.0f32; rows * n];
+        gemm_i8_scaled(&mut y, &xq, &sx, &wq, &sw, rows, k, n);
+        let want = matmul_f32_reference(&x, &w, rows, k, n);
+        let num: f64 = y.iter().zip(&want).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = want.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(
+            num.sqrt() < 0.05 * den.sqrt().max(1e-12),
+            "int8 rel-L2 {} too large",
+            num.sqrt() / den.sqrt()
+        );
+        // zero rows quantize to scale 0 / all-zero codes without NaN
+        let z = vec![0.0f32; k];
+        let mut zq = vec![1i8; k];
+        let mut zs = vec![1.0f32; 1];
+        quantize_rows_i8(&z, 1, k, &mut zq, &mut zs);
+        assert_eq!(zs[0], 0.0);
+        assert!(zq.iter().all(|&v| v == 0));
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!                       native; $FLARE_BACKEND overrides)
 
 use flare::cli::Args;
-use flare::config::Manifest;
+use flare::config::{Manifest, Precision};
 use flare::coordinator::{Server, ServerConfig};
 use flare::data;
 use flare::model::{find_entry, init_params, param_slice};
@@ -54,6 +54,14 @@ fn manifest_dir(args: &Args) -> std::path::PathBuf {
     args.get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir)
+}
+
+/// `--precision f32|bf16|int8`: serve-time tier override (None = per-case).
+fn precision_from_args(args: &Args) -> anyhow::Result<Option<Precision>> {
+    match args.get("precision") {
+        Some(s) => Ok(Some(Precision::parse(s)?)),
+        None => Ok(None),
+    }
 }
 
 fn backend_from_args(args: &Args) -> anyhow::Result<Box<dyn Backend>> {
@@ -109,9 +117,12 @@ fn print_help() {
                     [--handlers H] [--max-wait-ms W]\n\
                     [--max-concurrent N]        admission bound (0 = off)\n\
                     [--waiting-served-ratio R]  eager-flush ratio (0 = off)\n\
+                    [--precision f32|bf16|int8] inference tier override\n\
            serve-bench                 closed-loop serving load generator:\n\
                     [--case <name>] [--requests K] [--concurrency C]\n\
                     [--max-wait-ms W] [--quiet] [--quick]\n\
+                    [--precision f32|bf16|int8] tier override; tags the\n\
+                                       measurement (serve_closed_loop_int8_*)\n\
                                        p50/p99 latency + req/s, dumped into\n\
                                        results/serve_bench.json for\n\
                                        bench-report ($FLARE_BENCH_QUICK=1\n\
@@ -337,6 +348,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         backend: args.get("backend").map(str::to_string),
         max_concurrent: args.get_usize("max-concurrent")?.unwrap_or(0),
         waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
+        precision: precision_from_args(args)?,
     };
 
     if let Some(addr) = args.get("addr") {
@@ -421,6 +433,13 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         .unwrap_or(if quick { 16 } else { 64 })
         .max(concurrency);
     let max_wait = args.get_usize("max-wait-ms")?.unwrap_or(5);
+    let precision = precision_from_args(args)?;
+    // tier-tagged measurement name so the baseline gate tracks each
+    // precision tier as its own op (serve_closed_loop_int8_c4 etc.)
+    let tier_tag = match precision {
+        Some(p) if p != Precision::F32 => format!("{}_", p.as_str()),
+        _ => String::new(),
+    };
     // spread the load exactly: the first `requests % concurrency` clients
     // issue one extra request, so nothing is silently dropped to rounding
     let base = requests / concurrency;
@@ -428,8 +447,13 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "serve-bench: {name} (n={}, batch={}), {concurrency} clients, {requests} requests, \
-         max_wait {max_wait}ms",
-        case.model.n, case.batch
+         max_wait {max_wait}ms{}",
+        case.model.n,
+        case.batch,
+        match precision {
+            Some(p) => format!(", precision {}", p.as_str()),
+            None => String::new(),
+        }
     );
     let server = Server::start(
         dir,
@@ -438,6 +462,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             max_wait: std::time::Duration::from_millis(max_wait as u64),
             params: vec![],
             backend: args.get("backend").map(str::to_string),
+            precision,
             ..ServerConfig::default()
         },
     )?;
@@ -486,7 +511,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     server.shutdown()?;
 
     let measurement = flare::bench::Measurement {
-        name: format!("serve_closed_loop_c{concurrency}"),
+        name: format!("serve_closed_loop_{tier_tag}c{concurrency}"),
         iters: served,
         total_s: wall_s,
         per_iter: summary.clone(),
@@ -497,7 +522,14 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             ("max_wait_ms".into(), max_wait as f64),
         ],
     };
-    let path = flare::bench::save_results("serve_bench", &[measurement])?;
+    // tier-tagged dump file so an int8 run folded in the same results dir
+    // does not clobber the f32 serve_bench.json (bench-report folds both)
+    let dump = if tier_tag.is_empty() {
+        "serve_bench".to_string()
+    } else {
+        format!("serve_bench_{}", tier_tag.trim_end_matches('_'))
+    };
+    let path = flare::bench::save_results(&dump, &[measurement])?;
     println!("results written to {path:?}");
     Ok(())
 }
@@ -562,6 +594,7 @@ fn cmd_serve_bench_open_loop(args: &Args) -> anyhow::Result<()> {
             backend: args.get("backend").map(str::to_string),
             max_concurrent,
             waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
+            precision: precision_from_args(args)?,
         },
     )?;
     let http = flare::coordinator::HttpServer::start(

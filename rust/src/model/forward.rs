@@ -25,24 +25,108 @@
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
 
-use crate::config::{ModelCfg, ParamEntry};
+use crate::config::{ModelCfg, ParamEntry, Precision};
 use crate::linalg::kernel::{
-    gemm_acc, gemm_bt_acc, l2_cache_bytes, matmul_f32_into, online_softmax_row,
-    scale_softmax_rows, scale_softmax_rows_stats,
+    as_i8_mut, as_u16, as_u16_mut, bf16_from_f32, bf16_to_f32, gemm_acc, gemm_acc_b16,
+    gemm_bt_acc, gemm_bt_acc_a16, gemm_bt_acc_b16, gemm_i8_scaled, l2_cache_bytes,
+    matmul_a16_into, matmul_f32_into, online_softmax_row, pack_bf16, quantize_rows_i8,
+    scale_softmax_rows, scale_softmax_rows_stats, unpack_bf16,
 };
 use crate::linalg::vexp::{gelu_f32, vgelu_add};
 use crate::pname;
 use crate::util::workspace::{take, take_uninit, WsBuf};
 
-/// Named views into a flat parameter vector.
+/// Prequantized int8 projection weights for one model: per entry the
+/// **transposed** `[c_out, c_in]` code matrix and the per-output-row absmax
+/// scales, computed once from the f32 master weights at model load (the
+/// masters themselves are untouched — training never sees this table).
+pub struct QuantTable {
+    entries: BTreeMap<String, QuantEntry>,
+}
+
+struct QuantEntry {
+    /// i8 codes, transposed to `[c_out, c_in]` so each output's weight row
+    /// is contiguous for the [`crate::linalg::kernel::dot_i8`] micro-kernel
+    wq: Vec<i8>,
+    /// per-output-row scale: `absmax / 127`
+    sw: Vec<f32>,
+    c_in: usize,
+    c_out: usize,
+}
+
+impl QuantTable {
+    /// Quantize every GEMM projection weight of the spec
+    /// ([`crate::model::spec::is_gemm_weight`] decides which).  O(P) once
+    /// per (case, params) pair; cached by the backend.
+    pub fn build(flat: &[f32], entries: &BTreeMap<String, ParamEntry>) -> QuantTable {
+        let mut out = BTreeMap::new();
+        for (name, e) in entries {
+            if !crate::model::spec::is_gemm_weight(name, &e.shape) {
+                continue;
+            }
+            if e.offset + e.size > flat.len() {
+                continue; // malformed entry: the f32 path will report it
+            }
+            let (c_in, c_out) = (e.shape[0], e.shape[1]);
+            let w = &flat[e.offset..e.offset + e.size];
+            let mut wt = vec![0.0f32; e.size];
+            for i in 0..c_in {
+                for j in 0..c_out {
+                    wt[j * c_in + i] = w[i * c_out + j];
+                }
+            }
+            let mut wq = vec![0i8; e.size];
+            let mut sw = vec![0.0f32; c_out];
+            quantize_rows_i8(&wt, c_out, c_in, &mut wq, &mut sw);
+            out.insert(name.clone(), QuantEntry { wq, sw, c_in, c_out });
+        }
+        QuantTable { entries: out }
+    }
+
+    fn get(&self, name: &str) -> Option<&QuantEntry> {
+        self.entries.get(name)
+    }
+
+    /// Number of quantized tensors (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Named views into a flat parameter vector, carrying the numeric tier the
+/// forward should run at.  [`ParamTable::new`] is the f32 tier (training,
+/// goldens, backward — unchanged call sites); [`ParamTable::with_precision`]
+/// selects bf16 activation storage or the int8 weight-quantized path.
 pub struct ParamTable<'a> {
     flat: &'a [f32],
     entries: &'a BTreeMap<String, ParamEntry>,
+    precision: Precision,
+    quant: Option<&'a QuantTable>,
 }
 
 impl<'a> ParamTable<'a> {
     pub fn new(flat: &'a [f32], entries: &'a BTreeMap<String, ParamEntry>) -> ParamTable<'a> {
-        ParamTable { flat, entries }
+        ParamTable { flat, entries, precision: Precision::F32, quant: None }
+    }
+
+    /// A table running at `precision`.  The int8 tier requires the
+    /// prequantized `quant` table; bf16 ignores it.
+    pub fn with_precision(
+        flat: &'a [f32],
+        entries: &'a BTreeMap<String, ParamEntry>,
+        precision: Precision,
+        quant: Option<&'a QuantTable>,
+    ) -> ParamTable<'a> {
+        ParamTable { flat, entries, precision, quant }
+    }
+
+    /// Tier this table's forward runs at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Slice of the flat vector holding parameter `name`.
@@ -71,6 +155,13 @@ pub fn gelu(x: f32) -> f32 {
 }
 
 /// `y[rows, c_out] = x[rows, c_in] @ W + b` into a caller buffer.
+///
+/// On an int8-tier table, projections with a prequantized weight run the
+/// dequant-free integer path ([`gemm_i8_scaled`]): activations are
+/// quantized per row into pooled scratch, the dot products are exact
+/// i8×i8→i32, and the two scales fold in f32 once per output element.
+/// Weights missing from the quant table (there are none for native specs)
+/// fall through to f32.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn affine_into(
     p: &ParamTable,
@@ -84,8 +175,30 @@ pub(crate) fn affine_into(
 ) -> anyhow::Result<()> {
     anyhow::ensure!(x.len() == rows * c_in, "affine {wname}: input shape");
     anyhow::ensure!(y.len() == rows * c_out, "affine {wname}: output shape");
-    let w = p.get(wname)?;
     let b = p.get(bname)?;
+    if p.precision == Precision::Int8 {
+        if let Some(q) = p.quant.and_then(|t| t.get(wname)) {
+            anyhow::ensure!(
+                q.c_in == c_in && q.c_out == c_out,
+                "affine {wname}: quantized shape [{}, {}] vs call [{c_in}, {c_out}]",
+                q.c_in,
+                q.c_out
+            );
+            let mut xq_buf = take_uninit((rows * c_in).div_ceil(4).max(1));
+            let mut sx = take_uninit(rows);
+            let xq = as_i8_mut(&mut xq_buf, rows * c_in);
+            quantize_rows_i8(x, rows, c_in, xq, &mut sx);
+            y.fill(0.0);
+            gemm_i8_scaled(y, xq, &sx, &q.wq, &q.sw, rows, c_in, c_out);
+            for row in y.chunks_mut(c_out) {
+                for (v, &bv) in row.iter_mut().zip(b) {
+                    *v += bv;
+                }
+            }
+            return Ok(());
+        }
+    }
+    let w = p.get(wname)?;
     matmul_f32_into(y, x, w, rows, c_in, c_out);
     for row in y.chunks_mut(c_out) {
         for (v, &bv) in row.iter_mut().zip(b) {
@@ -557,6 +670,336 @@ pub fn flare_layer_with_keys(
     Ok((out, kh))
 }
 
+// ---------------------------------------------------------------------------
+// bf16 storage tier (f32 accumulation)
+// ---------------------------------------------------------------------------
+//
+// The reduced-precision trunk keeps the residual stream `h [N, C]` and all
+// weights in f32 but stores every *transient* N-sized activation as bf16:
+// the normalized block input, the kproj/vproj/ffn ResMLP activations, the
+// per-head K/V the mixer streams, and the mixer output.  All arithmetic
+// stays f32 — GEMMs decode bf16 during packing and accumulate in f32
+// ([`gemm_acc_b16`] and friends), ResMLPs run per 64-row block through f32
+// staging, softmax runs on f32 score tiles.  Peak workspace drops from
+// ~28·C to ~12·C bytes/token on the fig5 model (the `fig5_bf16_*` CI gate
+// pins ≤ 0.6× the f32 column).  bf16 words live as `u16` views over pooled
+// f32 buffers, so the counting-allocator gates hold unchanged.
+
+/// Rows per f32 staging block of the bf16 ResMLP path: big enough for full
+/// GEMM panels, small enough that staging is cache-resident and O(1) memory.
+const B16_BLOCK: usize = 64;
+
+/// Pooled buffer sized to hold `len` bf16 words (two per f32 slot).
+fn take_b16(len: usize) -> WsBuf {
+    take_uninit(len.div_ceil(2).max(1))
+}
+
+/// LayerNorm over the last axis with bf16 output (f32 row statistics).
+fn layernorm_b16(
+    p: &ParamTable,
+    prefix: &str,
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    out: &mut [u16],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(x.len() == rows * c, "layernorm {prefix}: input shape");
+    anyhow::ensure!(out.len() == rows * c, "layernorm {prefix}: output shape");
+    let gamma = p.get(pname!("{prefix}.gamma").as_str())?;
+    let beta = p.get(pname!("{prefix}.beta").as_str())?;
+    for r in 0..rows {
+        let row = &x[r * c..(r + 1) * c];
+        let dst = &mut out[r * c..(r + 1) * c];
+        let mu = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..c {
+            dst[j] = bf16_from_f32((row[j] - mu) * inv * gamma[j] + beta[j]);
+        }
+    }
+    Ok(())
+}
+
+/// [`resmlp`] on bf16 activations: input and output are bf16 `[rows, *]`,
+/// weights f32.  Each [`B16_BLOCK`]-row block is widened into f32 staging,
+/// run through the exact f32 ResMLP arithmetic, and narrowed back — so no
+/// N-sized f32 intermediate ever exists and the math per block matches the
+/// f32 path on the rounded inputs bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn resmlp_b16(
+    p: &ParamTable,
+    prefix: &str,
+    x16: &[u16],
+    rows: usize,
+    c_in: usize,
+    c_hidden: usize,
+    c_out: usize,
+    layers: usize,
+) -> anyhow::Result<WsBuf> {
+    anyhow::ensure!(x16.len() == rows * c_in, "resmlp_b16 {prefix}: input shape");
+    let mut out = take_b16(rows * c_out);
+    let o16 = as_u16_mut(&mut out, rows * c_out);
+    let mut xs = take_uninit(B16_BLOCK * c_in.max(1));
+    let mut hs = take_uninit(B16_BLOCK * c_hidden.max(1));
+    let mut ts = take_uninit(B16_BLOCK * c_hidden.max(1));
+    let mut ys = take_uninit(B16_BLOCK * c_out.max(1));
+    for r0 in (0..rows).step_by(B16_BLOCK) {
+        let rb = B16_BLOCK.min(rows - r0);
+        let xs = &mut xs[..rb * c_in];
+        let hs = &mut hs[..rb * c_hidden];
+        let ys = &mut ys[..rb * c_out];
+        unpack_bf16(&x16[r0 * c_in..(r0 + rb) * c_in], xs);
+        affine_into(
+            p,
+            pname!("{prefix}.win").as_str(),
+            pname!("{prefix}.bin").as_str(),
+            xs,
+            rb,
+            c_in,
+            c_hidden,
+            hs,
+        )?;
+        if c_in == c_hidden {
+            for (hv, &xv) in hs.iter_mut().zip(xs.iter()) {
+                *hv += xv;
+            }
+        }
+        for l in 0..layers {
+            affine_into(
+                p,
+                pname!("{prefix}.w{l}").as_str(),
+                pname!("{prefix}.b{l}").as_str(),
+                hs,
+                rb,
+                c_hidden,
+                c_hidden,
+                &mut ts[..rb * c_hidden],
+            )?;
+            vgelu_add(hs, &ts[..rb * c_hidden]);
+        }
+        affine_into(
+            p,
+            pname!("{prefix}.wout").as_str(),
+            pname!("{prefix}.bout").as_str(),
+            hs,
+            rb,
+            c_hidden,
+            c_out,
+            ys,
+        )?;
+        if c_hidden == c_out {
+            for (yv, &hv) in ys.iter_mut().zip(hs.iter()) {
+                *yv += hv;
+            }
+        }
+        pack_bf16(ys, &mut o16[r0 * c_out..(r0 + rb) * c_out]);
+    }
+    drop(xs);
+    drop(hs);
+    drop(ts);
+    drop(ys);
+    Ok(out)
+}
+
+/// `[N, H*D] -> [H, N, D]` head split on bf16 words.
+fn split_heads_b16(x: &[u16], n: usize, h: usize, d: usize, out: &mut [u16]) {
+    debug_assert_eq!(x.len(), n * h * d);
+    debug_assert_eq!(out.len(), n * h * d);
+    for t in 0..n {
+        for hh in 0..h {
+            let src = &x[(t * h + hh) * d..(t * h + hh + 1) * d];
+            let dst = &mut out[(hh * n + t) * d..(hh * n + t + 1) * d];
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+/// `[H, N, D] -> [N, H*D]` head merge on bf16 words.
+fn merge_heads_b16(x: &[u16], n: usize, h: usize, d: usize, out: &mut [u16]) {
+    debug_assert_eq!(x.len(), n * h * d);
+    debug_assert_eq!(out.len(), n * h * d);
+    for hh in 0..h {
+        for t in 0..n {
+            let src = &x[(hh * n + t) * d..(hh * n + t + 1) * d];
+            let dst = &mut out[(t * h + hh) * d..(t * h + hh + 1) * d];
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+/// [`mixer_head_fused`] with K/V streamed from bf16 storage and the output
+/// written back as bf16: score tiles, softmax statistics and the latent
+/// accumulator stay f32, each decode tile stages its `[tn, D]` output in
+/// f32 (`yt`) before narrowing.  Same [`mixer_tile`] schedule as the f32
+/// head.
+#[allow(clippy::too_many_arguments)]
+fn mixer_head_fused_b16(
+    qh: &[f32],
+    kh16: &[u16],
+    vh16: &[u16],
+    m: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    mrun: &mut [f32],
+    den: &mut [f32],
+    z: &mut [f32],
+    st: &mut [f32],
+    yt: &mut [f32],
+    yh16: &mut [u16],
+    tile: usize,
+) {
+    mrun.fill(f32::NEG_INFINITY);
+    den.fill(0.0);
+    z.fill(0.0);
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
+        let kt16 = &kh16[t0 * d..(t0 + tn) * d];
+        let vt16 = &vh16[t0 * d..(t0 + tn) * d];
+        let st = &mut st[..m * tn];
+        st.fill(0.0);
+        gemm_bt_acc_b16(st, qh, kt16, m, d, tn); // S[m, tn] = Q · Ktᵀ
+        for mi in 0..m {
+            online_softmax_row(
+                &mut st[mi * tn..(mi + 1) * tn],
+                scale,
+                &mut mrun[mi],
+                &mut den[mi],
+                &mut z[mi * d..(mi + 1) * d],
+            );
+        }
+        gemm_acc_b16(z, st, vt16, m, tn, d); // Z += E · Vt
+    }
+    for mi in 0..m {
+        let inv = 1.0 / den[mi];
+        for zv in z[mi * d..(mi + 1) * d].iter_mut() {
+            *zv *= inv;
+        }
+    }
+    for t0 in (0..n).step_by(tile) {
+        let tn = tile.min(n - t0);
+        let kt16 = &kh16[t0 * d..(t0 + tn) * d];
+        let st = &mut st[..tn * m];
+        st.fill(0.0);
+        gemm_bt_acc_a16(st, kt16, qh, tn, d, m); // S[tn, m] = Kt · Qᵀ
+        scale_softmax_rows(st, tn, m, scale);
+        let yt = &mut yt[..tn * d];
+        yt.fill(0.0);
+        gemm_acc(yt, st, z, tn, m, d); // Y = P · Z
+        pack_bf16(yt, &mut yh16[t0 * d..(t0 + tn) * d]);
+    }
+}
+
+/// [`flare_layer`] on the bf16 tier: bf16 in (`x16 [N, C]`, the normalized
+/// block input), f32 out (`[N, C]`, ready to add into the residual stream).
+/// K/V live only as bf16; the per-layer f32 peak is the ResMLP staging plus
+/// the final output projection.
+fn flare_layer_b16(
+    p: &ParamTable,
+    prefix: &str,
+    x16: &[u16],
+    n: usize,
+    cfg: &ModelCfg,
+) -> anyhow::Result<WsBuf> {
+    anyhow::ensure!(
+        cfg.latent_sa_blocks == 0,
+        "native backend does not implement the Figure-11 hybrid (latent_sa_blocks > 0)"
+    );
+    let (c, h, m, d) = (cfg.c, cfg.heads, cfg.m, cfg.head_dim());
+    let scale = cfg.scale as f32;
+    let k16 = resmlp_b16(p, pname!("{prefix}.kproj").as_str(), x16, n, c, c, c, cfg.kv_layers)?;
+    let v16 = resmlp_b16(p, pname!("{prefix}.vproj").as_str(), x16, n, c, c, c, cfg.kv_layers)?;
+    let mut khbuf = take_b16(h * n * d);
+    split_heads_b16(as_u16(&k16, n * c), n, h, d, as_u16_mut(&mut khbuf, h * n * d));
+    drop(k16);
+    let mut vhbuf = take_b16(h * n * d);
+    split_heads_b16(as_u16(&v16, n * c), n, h, d, as_u16_mut(&mut vhbuf, h * n * d));
+    drop(v16);
+    let lat = p.get(pname!("{prefix}.latents").as_str())?;
+    let tile = mixer_tile(m, d);
+    let mut mrun = take_uninit(m);
+    let mut den = take_uninit(m);
+    let mut z = take_uninit(m * d);
+    let mut st = take_uninit(m * tile);
+    let mut yt = take_uninit(tile * d);
+    let mut y16buf = take_b16(h * n * d);
+    {
+        let kh16 = as_u16(&khbuf, h * n * d);
+        let vh16 = as_u16(&vhbuf, h * n * d);
+        let y16 = as_u16_mut(&mut y16buf, h * n * d);
+        for hh in 0..h {
+            // shared latents: every head reads the same [M, D] table (the
+            // f32 path materializes per-head copies; same values)
+            let qh = if cfg.shared_latents { lat } else { &lat[hh * m * d..(hh + 1) * m * d] };
+            mixer_head_fused_b16(
+                qh,
+                &kh16[hh * n * d..(hh + 1) * n * d],
+                &vh16[hh * n * d..(hh + 1) * n * d],
+                m,
+                n,
+                d,
+                scale,
+                &mut mrun,
+                &mut den,
+                &mut z,
+                &mut st,
+                &mut yt,
+                &mut y16[hh * n * d..(hh + 1) * n * d],
+                tile,
+            );
+        }
+    }
+    drop(khbuf);
+    drop(vhbuf);
+    drop(mrun);
+    drop(den);
+    drop(z);
+    drop(st);
+    drop(yt);
+    let mut y2buf = take_b16(h * n * d);
+    merge_heads_b16(as_u16(&y16buf, h * n * d), n, h, d, as_u16_mut(&mut y2buf, h * n * d));
+    drop(y16buf);
+    // output projection: bf16 activations × f32 weights, f32 accumulate
+    let w = p.get(pname!("{prefix}.out.w").as_str())?;
+    let b = p.get(pname!("{prefix}.out.b").as_str())?;
+    let mut out = take_uninit(n * c);
+    matmul_a16_into(&mut out, as_u16(&y2buf, n * c), w, n, c, c);
+    for row in out.chunks_mut(c) {
+        for (v, &bv) in row.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+    Ok(out)
+}
+
+/// [`apply_blocks`] on the bf16 tier: the residual stream stays f32, the
+/// normalized activations and both ResMLP paths run bf16.
+fn apply_blocks_b16(
+    cfg: &ModelCfg,
+    p: &ParamTable,
+    mut h: WsBuf,
+    n: usize,
+) -> anyhow::Result<WsBuf> {
+    let c = cfg.c;
+    let mut hnbuf = take_b16(n * c);
+    for b in 0..cfg.blocks {
+        layernorm_b16(p, pname!("blk{b}.ln1").as_str(), &h, n, c, as_u16_mut(&mut hnbuf, n * c))?;
+        let mix = flare_layer_b16(p, pname!("blk{b}.mix").as_str(), as_u16(&hnbuf, n * c), n, cfg)?;
+        for (hv, &mv) in h.iter_mut().zip(mix.iter()) {
+            *hv += mv;
+        }
+        drop(mix);
+        layernorm_b16(p, pname!("blk{b}.ln2").as_str(), &h, n, c, as_u16_mut(&mut hnbuf, n * c))?;
+        let ffn16 =
+            resmlp_b16(p, pname!("blk{b}.ffn").as_str(), as_u16(&hnbuf, n * c), n, c, c, c,
+                cfg.ffn_layers)?;
+        for (hv, &fv) in h.iter_mut().zip(as_u16(&ffn16, n * c).iter()) {
+            *hv += bf16_to_f32(fv);
+        }
+    }
+    Ok(h)
+}
+
 /// Can the native backend execute this model?  (Single source of truth for
 /// the capability guard; `NativeBackend` also consults it at plan build.)
 pub fn check_native_supported(cfg: &ModelCfg) -> anyhow::Result<()> {
@@ -601,6 +1044,11 @@ fn apply_blocks(
 ///
 /// `n` is taken from the input length — the native path has no static shape
 /// specialization, so any point count works with one set of weights.
+///
+/// The table's [`Precision`] picks the tier: bf16 routes the blocks through
+/// [`apply_blocks_b16`] (I/O projections and the residual stream stay f32
+/// — they are O(C), not the N-scaled cost); int8 rides the f32 structure
+/// with every projection dispatched in [`affine_into`].
 pub fn forward_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Result<WsBuf> {
     check_native_supported(cfg)?;
     anyhow::ensure!(!cfg.is_classification(), "use forward_tokens_sample for token tasks");
@@ -608,7 +1056,10 @@ pub fn forward_sample(cfg: &ModelCfg, p: &ParamTable, x: &[f32]) -> anyhow::Resu
     let n = x.len() / cfg.d_in;
     let c = cfg.c;
     let h = resmlp(p, "in_proj", x, n, cfg.d_in, c, c, cfg.io_layers)?;
-    let h = apply_blocks(cfg, p, h, n)?;
+    let h = match p.precision {
+        Precision::Bf16 => apply_blocks_b16(cfg, p, h, n)?,
+        _ => apply_blocks(cfg, p, h, n)?,
+    };
     let h = layernorm(p, "out_ln", &h, n, c)?;
     resmlp(p, "out_proj", &h, n, c, c, cfg.d_out, cfg.io_layers)
 }
@@ -634,7 +1085,10 @@ pub fn forward_tokens_sample(
         let row = &embed[tok as usize * c..(tok as usize + 1) * c];
         h[t * c..(t + 1) * c].copy_from_slice(row);
     }
-    let h = apply_blocks(cfg, p, h, n)?;
+    let h = match p.precision {
+        Precision::Bf16 => apply_blocks_b16(cfg, p, h, n)?,
+        _ => apply_blocks(cfg, p, h, n)?,
+    };
     let h = layernorm(p, "out_ln", &h, n, c)?;
     let mut pooled = take(c);
     let inv_n = 1.0 / n as f32;
@@ -890,6 +1344,93 @@ mod tests {
         let x = vec![1.0f32, -2.0, 0.5];
         let y = resmlp(&p, "mlp", &x, 1, 3, 3, 3, 1).unwrap();
         assert_eq!(y, x); // 0 + x residual, gelu(0)=0, then 0 + h residual
+    }
+
+    fn tiny_fig5_like_cfg() -> ModelCfg {
+        ModelCfg {
+            mixer: "flare".into(),
+            n: 16,
+            d_in: 3,
+            d_out: 1,
+            c: 8,
+            heads: 2,
+            m: 4,
+            blocks: 2,
+            kv_layers: 1,
+            ffn_layers: 1,
+            io_layers: 1,
+            latent_sa_blocks: 0,
+            shared_latents: false,
+            scale: 1.0,
+            task: "regression".into(),
+            vocab: 0,
+            num_classes: 0,
+        }
+    }
+
+    fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+        let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = b.iter().map(|&v| (v as f64).powi(2)).sum();
+        num.sqrt() / den.sqrt().max(1e-12)
+    }
+
+    #[test]
+    fn bf16_forward_tracks_f32_and_is_allocation_free() {
+        use crate::config::Precision;
+        use crate::model::spec::index_by_name;
+        use crate::util::workspace::pool_allocs;
+        let cfg = tiny_fig5_like_cfg();
+        let (entries, total) = crate::model::build_spec(&cfg).unwrap();
+        let map = index_by_name(&entries);
+        let params = crate::model::init_params(&entries, total, 3);
+        let mut rng = Rng::new(4);
+        // 150 tokens: not a tile multiple, exercises the ragged tail
+        let x: Vec<f32> = (0..150 * cfg.d_in).map(|_| rng.normal() as f32).collect();
+        let pf = ParamTable::new(&params, &map);
+        let y32 = forward_sample(&cfg, &pf, &x).unwrap();
+        let pb = ParamTable::with_precision(&params, &map, Precision::Bf16, None);
+        let y16 = forward_sample(&cfg, &pb, &x).unwrap();
+        assert_eq!(y16.len(), y32.len());
+        let err = rel_l2(&y16, &y32);
+        assert!(err < 1e-2, "bf16 rel-L2 {err} above tier bound");
+        assert!(err > 0.0, "bf16 path suspiciously identical to f32");
+        // deterministic and allocation-free after warmup
+        let again = forward_sample(&cfg, &pb, &x).unwrap();
+        for (a, b) in y16.iter().zip(again.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bf16 forward must be deterministic");
+        }
+        let misses = pool_allocs();
+        forward_sample(&cfg, &pb, &x).unwrap();
+        assert_eq!(pool_allocs(), misses, "steady-state bf16 forward hit the allocator");
+    }
+
+    #[test]
+    fn int8_forward_tracks_f32_and_is_allocation_free() {
+        use crate::config::Precision;
+        use crate::model::spec::index_by_name;
+        use crate::util::workspace::pool_allocs;
+        let cfg = tiny_fig5_like_cfg();
+        let (entries, total) = crate::model::build_spec(&cfg).unwrap();
+        let map = index_by_name(&entries);
+        let params = crate::model::init_params(&entries, total, 3);
+        let quant = QuantTable::build(&params, &map);
+        assert!(!quant.is_empty(), "native spec must expose quantizable projections");
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..150 * cfg.d_in).map(|_| rng.normal() as f32).collect();
+        let pf = ParamTable::new(&params, &map);
+        let y32 = forward_sample(&cfg, &pf, &x).unwrap();
+        let pq = ParamTable::with_precision(&params, &map, Precision::Int8, Some(&quant));
+        let y8 = forward_sample(&cfg, &pq, &x).unwrap();
+        let err = rel_l2(&y8, &y32);
+        assert!(err < 5e-2, "int8 rel-L2 {err} above tier bound");
+        assert!(err > 0.0, "int8 path suspiciously identical to f32");
+        let again = forward_sample(&cfg, &pq, &x).unwrap();
+        for (a, b) in y8.iter().zip(again.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "int8 forward must be deterministic");
+        }
+        let misses = pool_allocs();
+        forward_sample(&cfg, &pq, &x).unwrap();
+        assert_eq!(pool_allocs(), misses, "steady-state int8 forward hit the allocator");
     }
 
     #[test]

@@ -234,6 +234,25 @@ pub fn index_by_name(entries: &[ParamEntry]) -> BTreeMap<String, ParamEntry> {
     entries.iter().map(|e| (e.name.clone(), e.clone())).collect()
 }
 
+/// Is this entry a 2-D projection weight the int8 tier may quantize?
+///
+/// Every GEMM weight the declarations above emit (`.w`, `.win`, `.w0`…,
+/// `.wout`) has a 2-D shape and a final dot-segment starting with `w`; the
+/// non-GEMM 2-D tensors (`embed`, `latents`/`latent_array` — init
+/// "embedding"/"latent" — and the non-native mixers' `ek`/`ev`/`omega`/
+/// `wslice` operands) all fail one of the two checks.  Biases and norms are
+/// 1-D.  `wslice` *does* start with `w`, but the transolver mixer never runs
+/// on the native backend, and quantizing an extra table would only cost
+/// accuracy, never correctness — the forward only consults quantized entries
+/// it would have used as GEMM weights.
+pub fn is_gemm_weight(name: &str, shape: &[usize]) -> bool {
+    if shape.len() != 2 {
+        return false;
+    }
+    let seg = name.rsplit('.').next().unwrap_or(name);
+    seg.starts_with('w') && name.contains('.')
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,5 +374,26 @@ mod tests {
         let map = index_by_name(&entries);
         assert!(map.contains_key("blk0.mix.latents"));
         assert_eq!(map["blk1.ffn.bout"].size, 8);
+    }
+
+    #[test]
+    fn gemm_weight_predicate_selects_projections_only() {
+        let (entries, _) = build_spec(&tiny_flare_cfg()).unwrap();
+        for e in &entries {
+            let want = e.shape.len() == 2 && e.init == "uniform_fanin";
+            assert_eq!(
+                is_gemm_weight(&e.name, &e.shape),
+                want,
+                "entry {} shape {:?} init {}",
+                e.name,
+                e.shape,
+                e.init
+            );
+        }
+        // embeddings and latents are 2-D/3-D but never quantized
+        assert!(!is_gemm_weight("embed", &[11, 8]));
+        assert!(!is_gemm_weight("blk0.mix.latents", &[2, 4, 4]));
+        assert!(!is_gemm_weight("in_proj.bin", &[8]));
+        assert!(is_gemm_weight("cls_head.w", &[8, 5]));
     }
 }

@@ -31,9 +31,9 @@ use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 use std::sync::Mutex;
 
-use crate::config::{CaseCfg, Manifest, ModelCfg, ParamEntry};
+use crate::config::{CaseCfg, Manifest, ModelCfg, ParamEntry, Precision};
 use crate::model::backward::{loss_grad_fields, loss_grad_tokens, GradTable};
-use crate::model::forward::{self, ParamTable};
+use crate::model::forward::{self, ParamTable, QuantTable};
 use crate::model::{build_spec, index_by_name};
 use crate::runtime::backend::{Backend, BatchInput, BatchTarget, OptState};
 use crate::train::AdamW;
@@ -71,6 +71,33 @@ impl Plan {
     }
 }
 
+/// Lazily built int8 weight tables for one case, keyed by the exact f32
+/// master weights they were quantized from: serving calls hit the cached
+/// table (parameters are frozen between updates), and any parameter change
+/// is detected by slice comparison and triggers a requantize.  The masters
+/// themselves are never modified.
+struct QuantCache {
+    src: Vec<f32>,
+    table: QuantTable,
+}
+
+/// Reduced precision is an inference tier: training always runs against the
+/// f32 master weights (`FLARE_PRECISION` is deliberately ignored on the
+/// training path), and a case that *pins* bf16/int8 cannot train at all —
+/// fail with a typed capability error naming the field instead of silently
+/// widening to f32.
+fn check_trainable_precision(case: &CaseCfg) -> anyhow::Result<()> {
+    match case.precision {
+        Some(p) if p != Precision::F32 => anyhow::bail!(
+            "case {}: precision {} is inference-only — training updates the f32 \
+             master weights; remove the case's precision pin to train",
+            case.name,
+            p.as_str()
+        ),
+        _ => Ok(()),
+    }
+}
+
 /// One worker's gradient shard during the batch fan-out: per-sample
 /// gradients accumulate into `grad`, losses into `loss`; the first error
 /// aborts that worker's remaining samples.
@@ -90,6 +117,9 @@ pub struct NativeBackend {
     /// through the workspace reservoir.  Entry `w` backs extra shard `w`
     /// (shard 0 accumulates straight into the caller's buffer).
     grad_shards: RefCell<Vec<Vec<f32>>>,
+    /// Per-case int8 weight tables (see [`QuantCache`]); only populated
+    /// when a forward actually resolves to the int8 tier.
+    quants: RefCell<HashMap<String, Rc<QuantCache>>>,
 }
 
 impl NativeBackend {
@@ -113,7 +143,32 @@ impl NativeBackend {
             plans: RefCell::new(HashMap::new()),
             threads: threads.max(1),
             grad_shards: RefCell::new(Vec::new()),
+            quants: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// Which precision tiers this backend can execute (capability
+    /// reporting for the coordinator's serve-time override).
+    pub fn supports_precision(&self, _p: Precision) -> bool {
+        true // native runs every tier: f32, bf16 storage, int8 weights
+    }
+
+    /// Resolve the int8 weight tables for `case`, quantizing on first use
+    /// (or after a parameter update).  Per-output-row absmax scales over
+    /// the f32 masters; the warm path is a slice compare plus an `Rc`
+    /// clone, so steady-state serving never requantizes.
+    fn quant_for(&self, case: &CaseCfg, plan: &Plan, params: &[f32]) -> Rc<QuantCache> {
+        if let Some(q) = self.quants.borrow().get(&case.name) {
+            if q.src == params {
+                return Rc::clone(q);
+            }
+        }
+        let cache = Rc::new(QuantCache {
+            src: params.to_vec(),
+            table: QuantTable::build(params, &plan.entries),
+        });
+        self.quants.borrow_mut().insert(case.name.clone(), Rc::clone(&cache));
+        cache
     }
 
     /// Worker threads used per batched forward.
@@ -282,12 +337,18 @@ impl Backend for NativeBackend {
             plan.param_count
         );
         anyhow::ensure!(batch > 0, "empty batch");
+        let prec = case.inference_precision();
+        let quant = match prec {
+            Precision::Int8 => Some(self.quant_for(case, plan, params)),
+            _ => None,
+        };
+        let qt = quant.as_deref().map(|c| &c.table);
         let outs: Vec<anyhow::Result<WsBuf>> = match input {
             BatchInput::Fields(x) => {
                 anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
                 let per = x.len() / batch;
                 parallel_map(batch, self.threads, |i| {
-                    let table = ParamTable::new(params, &plan.entries);
+                    let table = ParamTable::with_precision(params, &plan.entries, prec, qt);
                     forward::forward_sample(&plan.model, &table, &x[i * per..(i + 1) * per])
                 })
             }
@@ -295,7 +356,7 @@ impl Backend for NativeBackend {
                 anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
                 let per = tokens.len() / batch;
                 parallel_map(batch, self.threads, |i| {
-                    let table = ParamTable::new(params, &plan.entries);
+                    let table = ParamTable::with_precision(params, &plan.entries, prec, qt);
                     forward::forward_tokens_sample(
                         &plan.model,
                         &table,
@@ -334,6 +395,12 @@ impl Backend for NativeBackend {
             plan.param_count
         );
         anyhow::ensure!(batch > 0, "empty batch");
+        let prec = case.inference_precision();
+        let quant = match prec {
+            Precision::Int8 => Some(self.quant_for(case, plan, params)),
+            _ => None,
+        };
+        let qt = quant.as_deref().map(|c| &c.table);
         match input {
             BatchInput::Fields(x) => {
                 anyhow::ensure!(x.len() % batch == 0, "input length not divisible by batch");
@@ -347,7 +414,7 @@ impl Backend for NativeBackend {
                 let n = per_in / plan.model.d_in;
                 let per_out = n * plan.model.d_out;
                 batched_samples_into(out, batch, per_out, self.threads, |i| {
-                    let table = ParamTable::new(params, &plan.entries);
+                    let table = ParamTable::with_precision(params, &plan.entries, prec, qt);
                     forward::forward_sample(&plan.model, &table, &x[i * per_in..(i + 1) * per_in])
                 })
             }
@@ -356,7 +423,7 @@ impl Backend for NativeBackend {
                 let per_in = tokens.len() / batch;
                 let per_out = plan.model.num_classes.max(1);
                 batched_samples_into(out, batch, per_out, self.threads, |i| {
-                    let table = ParamTable::new(params, &plan.entries);
+                    let table = ParamTable::with_precision(params, &plan.entries, prec, qt);
                     forward::forward_tokens_sample(
                         &plan.model,
                         &table,
@@ -386,6 +453,7 @@ impl Backend for NativeBackend {
         target: BatchTarget<'_>,
         grad_acc: &mut [f32],
     ) -> anyhow::Result<(f64, usize)> {
+        check_trainable_precision(case)?;
         let plan_rc = self.plan(case)?;
         let plan: &Plan = plan_rc.as_ref();
         anyhow::ensure!(

@@ -422,6 +422,7 @@ mod tests {
             param_count,
             artifacts: Default::default(),
             params: entries,
+            precision: None,
         };
         (manifest, case)
     }

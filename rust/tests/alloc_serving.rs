@@ -100,4 +100,31 @@ fn steady_state_forward_batch_is_allocation_free() {
         .forward(&case, &params, BatchInput::Fields(&x), batch)
         .unwrap();
     assert_eq!(out, reference, "forward_batch must match forward bitwise");
+
+    // the same zero-allocation gate must hold on the bf16 tier: its u16
+    // activation views are carved out of pooled f32 buffers, so a warm
+    // bf16 batch takes nothing from the heap either.  (The CI
+    // FLARE_PRECISION=bf16 leg exercises the inherited-default route; the
+    // explicit pin keeps this live on the default leg too.)
+    let mut case16 = case.clone();
+    case16.name = "alloc_serving_bf16".into();
+    case16.precision = Some(flare::config::Precision::Bf16);
+    for _ in 0..3 {
+        backend
+            .forward_batch(&case16, &params, BatchInput::Fields(&x), batch, &mut out)
+            .unwrap();
+    }
+    let expect16 = out.clone();
+    let before = allocs();
+    backend
+        .forward_batch(&case16, &params, BatchInput::Fields(&x), batch, &mut out)
+        .unwrap();
+    let after = allocs();
+    assert_eq!(out, expect16, "warmed bf16 forward_batch must stay deterministic");
+    assert!(out.iter().all(|v| v.is_finite()));
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state bf16 forward_batch performed heap allocations"
+    );
 }

@@ -58,6 +58,10 @@ pub fn tiny_flare_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
         param_count,
         artifacts: Default::default(),
         params: entries,
+        // inherit FLARE_PRECISION so the CI precision-matrix legs run the
+        // whole integration suite on the reduced tiers; tests that need a
+        // fixed tier pin `case.precision = Some(..)` explicitly
+        precision: None,
     }
 }
 
@@ -123,6 +127,13 @@ pub fn write_manifest_dir(tag: &str, cases: &[&CaseCfg]) -> std::path::PathBuf {
             ("param_count", Json::num(case.param_count as f64)),
             ("artifacts", Json::Obj(Default::default())),
             ("params", entries_json(case)),
+            (
+                "precision",
+                match case.precision {
+                    Some(p) => Json::str(p.as_str()),
+                    None => Json::Null,
+                },
+            ),
         ])
     };
     let manifest = Json::obj(vec![

@@ -563,6 +563,7 @@ fn darcy_training_loss_trends_monotonically_down_over_20_steps() {
         param_count,
         artifacts: Default::default(),
         params: entries,
+        precision: None,
     };
     let backend = make_backend("native").unwrap();
     let out = train_case(backend.as_ref(), &manifest, &case, &TrainOpts::default()).unwrap();

@@ -7,7 +7,7 @@
 //! mixing, disjoint per-head latent slices, batching/determinism, and the
 //! serving coordinator end-to-end on the native backend.
 
-use flare::config::{CaseCfg, ModelCfg};
+use flare::config::{CaseCfg, ModelCfg, Precision};
 use flare::coordinator::{Server, ServerConfig};
 use flare::data;
 use flare::linalg::eig::sym_eig_default;
@@ -60,6 +60,10 @@ fn make_case(name: &str, model: ModelCfg, batch: usize) -> CaseCfg {
         param_count: total,
         artifacts: Default::default(),
         params: entries,
+        // pinned: the goldens are f32 references with f32-tight tolerances,
+        // so they must not inherit a FLARE_PRECISION tier from the CI
+        // precision-matrix legs (precision_parity.rs covers the tiers)
+        precision: Some(Precision::F32),
     }
 }
 
@@ -346,6 +350,57 @@ fn capability_errors_name_the_unsupported_field() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("latent_sa_blocks"), "{err}");
+}
+
+#[test]
+fn reduced_precision_pin_rejects_training_with_typed_error() {
+    // bf16/int8 are inference tiers: a case that pins one cannot train
+    // (the f32 master weights are what the optimizer updates), and the
+    // error must name the precision, not hide behind a generic failure
+    let backend = make_backend("native").unwrap();
+    let dir = write_manifest_dir("flare_native_precision_capability_test", &[]);
+    let manifest = flare::config::Manifest::load(&dir).unwrap();
+    let mut case = make_case("bf16_train", tiny_model(), 1);
+    case.precision = Some(Precision::Bf16);
+    let x = vec![0.1f32; case.model.n * case.model.d_in];
+    let y = vec![0.1f32; case.model.n * case.model.d_out];
+    let mut st = OptState::new(init_params(&case.params, case.param_count, 7));
+    let err = backend
+        .train_step(
+            &manifest,
+            &case,
+            &mut st,
+            0,
+            1e-3,
+            BatchInput::Fields(&x),
+            BatchTarget::Fields(&y),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bf16") && err.contains("inference-only"), "{err}");
+
+    // the same pin must still serve forwards fine
+    let y = backend
+        .forward(&case, &st.params, BatchInput::Fields(&x), 1)
+        .unwrap();
+    assert_eq!(y.len(), case.model.n * case.model.d_out);
+    assert!(y.iter().all(|v| v.is_finite()));
+
+    // an explicit f32 pin trains normally
+    case.precision = Some(Precision::F32);
+    let mut grad = vec![0.0f32; case.param_count];
+    let x2 = vec![0.1f32; case.model.n * case.model.d_in];
+    let y2 = vec![0.1f32; case.model.n * case.model.d_out];
+    backend
+        .grad_batch(
+            &manifest,
+            &case,
+            &st.params,
+            BatchInput::Fields(&x2),
+            BatchTarget::Fields(&y2),
+            &mut grad,
+        )
+        .unwrap();
 }
 
 #[test]

@@ -58,6 +58,7 @@ fn case_with_batch(name: &str, batch: usize, train: usize) -> CaseCfg {
         param_count,
         artifacts: Default::default(),
         params: entries,
+        precision: None,
     }
 }
 

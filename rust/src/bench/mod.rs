@@ -163,7 +163,9 @@ pub fn save_results(file: &str, results: &[Measurement]) -> anyhow::Result<std::
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{file}.json"));
     let arr = Json::Arr(results.iter().map(|m| m.to_json()).collect());
-    std::fs::write(&path, arr.to_string())?;
+    // atomic: an interrupted run can't leave a torn dump that poisons the
+    // next bench-report fold/--compare
+    crate::util::fsio::atomic_write(&path, arr.to_string().as_bytes())?;
     Ok(path)
 }
 

@@ -134,7 +134,7 @@ pub fn fold(
         ("threads", Json::num(threads as f64)),
         ("ops", Json::Arr(ops)),
     ]);
-    std::fs::write(out_path, report.to_string())?;
+    crate::util::fsio::atomic_write(out_path, report.to_string().as_bytes())?;
     // self-check: the artifact must round-trip through the validator
     let n = check(out_path)?;
     anyhow::ensure!(n == count, "written {out_path:?} failed validation");
@@ -352,7 +352,7 @@ pub fn calibrate(native_path: &Path, baseline_path: &Path) -> anyhow::Result<usi
         ("note", Json::str(&note)),
         ("ops", Json::Arr(ops)),
     ]);
-    std::fs::write(baseline_path, report.to_string())?;
+    crate::util::fsio::atomic_write(baseline_path, report.to_string().as_bytes())?;
     // the freshly written baseline must itself validate
     check(baseline_path)?;
     Ok(count)

@@ -41,7 +41,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::server::{Server, SubmitError};
+use crate::coordinator::server::{HealthState, ReplyError, Server, SubmitError};
 use crate::util::json::{parse, Json};
 
 // ---------------------------------------------------------------------------
@@ -286,6 +286,7 @@ fn reason(status: u16) -> &'static str {
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -297,9 +298,24 @@ fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_ext(stream, status, content_type, body, keep_alive, None)
+}
+
+fn write_response_ext(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    retry_after: Option<u64>,
+) -> std::io::Result<()> {
+    let retry = match retry_after {
+        Some(secs) => format!("Retry-After: {secs}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
-         Connection: {}\r\n\r\n",
+         {retry}Connection: {}\r\n\r\n",
         reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
@@ -357,17 +373,24 @@ fn dispatch(server: &Server, req: &Request) -> (u16, String, &'static str) {
 }
 
 fn healthz(server: &Server) -> (u16, String) {
-    let draining = server.is_draining();
+    let h = server.health();
     let cases = server.router().case_names().into_iter().map(Json::Str).collect();
     let body = Json::obj(vec![
-        ("status", Json::str(if draining { "draining" } else { "ok" })),
-        ("draining", Json::Bool(draining)),
-        ("in_flight", Json::num(server.in_flight() as f64)),
+        ("status", Json::str(h.state.as_str())),
+        ("draining", Json::Bool(h.draining)),
+        ("in_flight", Json::num(h.in_flight as f64)),
+        ("consecutive_panics", Json::num(h.consecutive_panics as f64)),
+        ("total_panics", Json::num(h.total_panics as f64)),
         ("cases", Json::Arr(cases)),
     ])
     .to_string();
-    // a draining node reports unhealthy so load balancers stop routing to it
-    (if draining { 503 } else { 200 }, body)
+    // draining/dead nodes report unhealthy so load balancers stop routing
+    // to them; degraded still serves (the breaker has not tripped)
+    let status = match h.state {
+        HealthState::Ok | HealthState::Degraded => 200,
+        HealthState::Draining | HealthState::EngineDead => 503,
+    };
+    (status, body)
 }
 
 fn infer(server: &Server, body: &[u8]) -> (u16, String) {
@@ -393,8 +416,15 @@ fn infer(server: &Server, body: &[u8]) -> (u16, String) {
     let Some(n) = v.get("n").as_usize() else {
         return bad("missing numeric field \"n\" (number of points)");
     };
+    let timeout = match v.get("timeout_ms") {
+        Json::Null => None,
+        t => match t.as_usize() {
+            Some(ms) => Some(std::time::Duration::from_millis(ms as u64)),
+            None => return bad("\"timeout_ms\" must be a non-negative integer"),
+        },
+    };
     let case = v.get("case").as_str();
-    match server.try_submit(case, x, n) {
+    match server.try_submit(case, x, n, timeout) {
         Err(e) => submit_error_response(&e),
         Ok(rx) => match rx.recv() {
             Ok(Ok(resp)) => {
@@ -409,12 +439,34 @@ fn infer(server: &Server, body: &[u8]) -> (u16, String) {
                 .to_string();
                 (200, body)
             }
-            Ok(Err(e)) => (500, error_body("execute_failed", &e.to_string(), None)),
+            Ok(Err(e)) => reply_error_response(&e),
             Err(_) => (
                 500,
                 error_body("dropped", "the engine dropped this request", None),
             ),
         },
+    }
+}
+
+/// The typed-reply-error-to-status contract for admitted-but-failed
+/// requests (also exercised directly by tests): panics are retriable 503s,
+/// expired client deadlines are 504s.
+pub fn reply_error_response(e: &ReplyError) -> (u16, String) {
+    match e {
+        ReplyError::BackendPanic { consecutive } => {
+            let detail = Json::obj(vec![("consecutive_panics", Json::num(*consecutive as f64))]);
+            (503, error_body("backend_panic", &e.to_string(), Some(detail)))
+        }
+        ReplyError::DeadlineExceeded { waited_ms, timeout_ms } => {
+            let detail = Json::obj(vec![
+                ("waited_ms", Json::num(*waited_ms as f64)),
+                ("timeout_ms", Json::num(*timeout_ms as f64)),
+            ]);
+            (504, error_body("deadline_exceeded", &e.to_string(), Some(detail)))
+        }
+        ReplyError::ExecuteFailed(_) => (500, error_body("execute_failed", &e.to_string(), None)),
+        ReplyError::Terminated => (503, error_body("engine_dead", &e.to_string(), None)),
+        ReplyError::Rejected(_) => (500, error_body("rejected", &e.to_string(), None)),
     }
 }
 
@@ -633,7 +685,14 @@ fn handler_main(shared: Arc<HttpShared>) {
                 q = shared.conns_cv.wait(q).unwrap_or_else(|p| p.into_inner());
             }
         };
-        handle_conn(&shared.server, stream, shared.limits, &shared.stop);
+        // a handler panic (bug or injected fault) must not leak a pool
+        // slot: the connection drops, the slot returns to the loop
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_conn(&shared.server, stream, shared.limits, &shared.stop);
+        }));
+        if attempt.is_err() {
+            shared.server.metrics.record("http_handler_panics", 1.0);
+        }
         shared
             .active
             .lock()
@@ -643,6 +702,11 @@ fn handler_main(shared: Arc<HttpShared>) {
 }
 
 fn handle_conn(server: &Server, mut stream: TcpStream, limits: Limits, stop: &AtomicBool) {
+    // chaos hook: `err` drops the connection, `panic` exercises the pool's
+    // catch-unwind barrier in `handler_main`
+    if crate::failpoint!("http.conn").is_err() {
+        return;
+    }
     let _ = stream.set_read_timeout(Some(limits.read_timeout));
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else {
@@ -656,7 +720,13 @@ fn handle_conn(server: &Server, mut stream: TcpStream, limits: Limits, stop: &At
                 // the keep-alive connection
                 let keep = req.keep_alive() && !stop.load(Ordering::SeqCst);
                 let (status, body, ctype) = dispatch(server, &req);
-                if write_response(&mut stream, status, ctype, body.as_bytes(), keep).is_err() {
+                // retriable rejections advertise when to come back; clients
+                // (serve-bench) use it to pace their backoff
+                let retry_after = if matches!(status, 429 | 503) { Some(1) } else { None };
+                if write_response_ext(&mut stream, status, ctype, body.as_bytes(), keep,
+                                      retry_after)
+                    .is_err()
+                {
                     return;
                 }
                 if !keep {

@@ -26,4 +26,4 @@ pub mod server;
 pub use batcher::{Batch, Batcher, Pending};
 pub use http::{HttpConfig, HttpServer, Limits};
 pub use router::{Bucket, RouteError, Router};
-pub use server::{Response, Server, ServerConfig, SubmitError};
+pub use server::{Health, HealthState, ReplyError, Response, Server, ServerConfig, SubmitError};

@@ -71,8 +71,54 @@ struct Submit {
     n: usize,
     /// input padded to the bucket's static shape
     x: Vec<f32>,
-    reply: mpsc::Sender<anyhow::Result<Response>>,
+    /// optional client deadline, measured from enqueue: expired requests
+    /// are shed at dequeue with [`ReplyError::DeadlineExceeded`] instead of
+    /// burning a batch slot on an answer nobody is waiting for
+    timeout: Option<Duration>,
+    reply: mpsc::Sender<Result<Response, ReplyError>>,
 }
+
+/// A request that was admitted but could not be completed.  Typed (the
+/// vendored error shim flattens causes to strings) so the HTTP ingress can
+/// map each class to the contracted status code and retry semantics.
+#[derive(Debug, Clone)]
+pub enum ReplyError {
+    /// the backend panicked while executing this request's batch; the
+    /// engine recovered and keeps serving, so this is retriable — 503 +
+    /// `Retry-After`
+    BackendPanic { consecutive: usize },
+    /// the client's `timeout_ms` expired while the request was queued — 504
+    DeadlineExceeded { waited_ms: u64, timeout_ms: u64 },
+    /// the backend returned an error for this batch — 500
+    ExecuteFailed(String),
+    /// the engine terminated before executing this request — 503
+    Terminated,
+    /// submission rejected before reaching the queue (flattened
+    /// [`Server::submit`] path; [`Server::try_submit`] keeps the class)
+    Rejected(String),
+}
+
+impl std::fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyError::BackendPanic { consecutive } => write!(
+                f,
+                "backend panicked executing this batch ({consecutive} consecutive); retriable"
+            ),
+            ReplyError::DeadlineExceeded { waited_ms, timeout_ms } => write!(
+                f,
+                "request deadline exceeded: waited {waited_ms} ms (timeout_ms {timeout_ms})"
+            ),
+            ReplyError::ExecuteFailed(msg) => write!(f, "execute failed: {msg}"),
+            ReplyError::Terminated => {
+                f.write_str("serving engine terminated before executing this request")
+            }
+            ReplyError::Rejected(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ReplyError {}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -97,6 +143,11 @@ pub struct ServerConfig {
     /// precedence over the manifest's per-case `precision` and the
     /// `FLARE_PRECISION` environment knob; None keeps the case's own tier
     pub precision: Option<Precision>,
+    /// circuit breaker: after this many **consecutive** backend panics the
+    /// engine gives up and trips to the terminal `engine_dead` state (a
+    /// single flaky batch only fails its own requests — any successful
+    /// batch resets the streak); 0 disables the breaker
+    pub panic_trip_threshold: usize,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +160,7 @@ impl Default for ServerConfig {
             max_concurrent: 0,
             waiting_served_ratio: 0.0,
             precision: None,
+            panic_trip_threshold: 3,
         }
     }
 }
@@ -170,6 +222,14 @@ struct EngineState {
     /// admission controller compares this against
     /// `ServerConfig::max_concurrent` under the queue lock
     in_flight: usize,
+    /// current streak of backend panics (reset by any successful batch);
+    /// mirrored here by the engine so `/healthz` can report `degraded`
+    consecutive_panics: usize,
+    /// lifetime backend panic count
+    total_panics: u64,
+    /// the panic circuit breaker fired: `consecutive_panics` reached
+    /// `ServerConfig::panic_trip_threshold` and the engine shut itself down
+    breaker_tripped: bool,
 }
 
 struct Shared {
@@ -206,9 +266,7 @@ impl Drop for EngineGuard {
         drop(st);
         for batch in leftovers {
             for item in batch.items {
-                let _ = item.payload.reply.send(Err(anyhow::anyhow!(
-                    "serving engine terminated before executing this request"
-                )));
+                let _ = item.payload.reply.send(Err(ReplyError::Terminated));
             }
         }
         self.shared.work_cv.notify_all();
@@ -237,6 +295,9 @@ impl Server {
                 shutting_down: false,
                 engine_dead: false,
                 in_flight: 0,
+                consecutive_panics: 0,
+                total_panics: 0,
+                breaker_tripped: false,
             }),
             work_cv: Condvar::new(),
         });
@@ -279,12 +340,12 @@ impl Server {
     /// shape-complete batch items.  Rejections arrive through the channel
     /// as flattened messages; transport front ends use
     /// [`Server::try_submit`] to keep the rejection class.
-    pub fn submit(&self, x: Vec<f32>, n: usize) -> mpsc::Receiver<anyhow::Result<Response>> {
-        match self.try_submit(None, x, n) {
+    pub fn submit(&self, x: Vec<f32>, n: usize) -> mpsc::Receiver<Result<Response, ReplyError>> {
+        match self.try_submit(None, x, n, None) {
             Ok(rx) => rx,
             Err(e) => {
                 let (reply, rx) = mpsc::channel();
-                let _ = reply.send(Err(anyhow::anyhow!("{e}")));
+                let _ = reply.send(Err(ReplyError::Rejected(e.to_string())));
                 rx
             }
         }
@@ -295,12 +356,16 @@ impl Server {
     /// typed path — not downcasting — is how the rejection class survives
     /// to the edge (the HTTP ingress maps each variant to a status code).
     /// `case` pins the request to a named bucket; `None` routes by size.
+    /// `timeout` arms a client deadline measured from enqueue: if the
+    /// request is still queued when it expires, the engine sheds it with
+    /// [`ReplyError::DeadlineExceeded`] at dequeue.
     pub fn try_submit(
         &self,
         case: Option<&str>,
         x: Vec<f32>,
         n: usize,
-    ) -> Result<mpsc::Receiver<anyhow::Result<Response>>, SubmitError> {
+        timeout: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Response, ReplyError>>, SubmitError> {
         if n == 0 {
             return Err(SubmitError::Invalid("empty request: n must be at least 1".into()));
         }
@@ -346,7 +411,7 @@ impl Server {
                 });
             }
             st.in_flight += 1;
-            st.batcher.push(&bucket.case, Submit { n, x: padded, reply });
+            st.batcher.push(&bucket.case, Submit { n, x: padded, timeout, reply });
             // wake the (single) engine waiter only when this push changed
             // what it is waiting for: a full batch, a ratio-ready queue, or
             // a first entry whose deadline the engine has not scheduled yet
@@ -364,9 +429,10 @@ impl Server {
 
     /// Blocking inference convenience.
     pub fn infer(&self, x: Vec<f32>, n: usize) -> anyhow::Result<Response> {
-        self.submit(x, n)
+        Ok(self
+            .submit(x, n)
             .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            .map_err(|_| anyhow::anyhow!("server dropped request"))??)
     }
 
     /// Graceful shutdown: drains queues, joins the executor.
@@ -403,6 +469,27 @@ impl Server {
         self.shared.lock_state().in_flight
     }
 
+    /// One consistent snapshot of the engine's liveness for `/healthz`.
+    pub fn health(&self) -> Health {
+        let st = self.shared.lock_state();
+        let state = if st.engine_dead || st.breaker_tripped {
+            HealthState::EngineDead
+        } else if st.shutting_down {
+            HealthState::Draining
+        } else if st.consecutive_panics > 0 {
+            HealthState::Degraded
+        } else {
+            HealthState::Ok
+        };
+        Health {
+            state,
+            draining: st.shutting_down,
+            in_flight: st.in_flight,
+            consecutive_panics: st.consecutive_panics,
+            total_panics: st.total_panics,
+        }
+    }
+
     /// The bucket set this server routes over, for front-end introspection
     /// (the HTTP health endpoint reports served cases from here).
     pub fn router(&self) -> &Router {
@@ -419,6 +506,40 @@ impl Drop for Server {
     }
 }
 
+/// Engine liveness classes surfaced by `/healthz`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// serving normally
+    Ok,
+    /// serving, but the last batch(es) panicked — the breaker is counting
+    Degraded,
+    /// drain in progress: in-flight requests finish, new ones bounce
+    Draining,
+    /// terminal: the engine exited (startup failure, breaker trip, crash)
+    EngineDead,
+}
+
+impl HealthState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+            HealthState::EngineDead => "engine_dead",
+        }
+    }
+}
+
+/// Snapshot returned by [`Server::health`].
+#[derive(Debug, Clone, Copy)]
+pub struct Health {
+    pub state: HealthState,
+    pub draining: bool,
+    pub in_flight: usize,
+    pub consecutive_panics: usize,
+    pub total_panics: u64,
+}
+
 /// One served case on the executor: immutable plan inputs plus the cached
 /// gather/reply workspaces that make steady-state batches allocation-free.
 struct BucketState {
@@ -429,6 +550,19 @@ struct BucketState {
     ws_x: Vec<f32>,
     /// batch output `[batch * n * d_out]` (capacity persists)
     ws_y: Vec<f32>,
+}
+
+impl BucketState {
+    /// Restore full-batch workspace capacity after a panic unwound
+    /// mid-execution (the buffers may be left truncated or half-gathered),
+    /// so the next batch on this bucket is allocation-free again.
+    fn rewarm(&mut self) {
+        let b = &self.bucket;
+        self.ws_x.clear();
+        self.ws_y.clear();
+        self.ws_x.reserve(b.batch * b.n * b.d_in);
+        self.ws_y.reserve(b.batch * b.n * b.d_out);
+    }
 }
 
 /// What the executor pulled from the queue in one wait cycle.
@@ -509,6 +643,9 @@ fn engine_main(
     };
 
     let mut exec_seq: u64 = 0;
+    // panic streak for the circuit breaker; any successful batch resets it
+    let mut consecutive_panics: usize = 0;
+    let trip_at = cfg.panic_trip_threshold;
     loop {
         // 1. wait for a ready batch; the lock is held only while waiting,
         //    never while executing, so clients accumulate the next batch
@@ -538,24 +675,67 @@ fn engine_main(
                 };
             }
         };
-        // a panicking backend fails this batch (its un-replied senders
-        // drop during unwind, disconnecting exactly those clients) but
-        // must not kill the engine — later requests keep being served
+        // a panicking backend fails this batch with a typed retriable
+        // error but must not kill the engine — later requests keep being
+        // served, until `panic_trip_threshold` consecutive panics trip the
+        // breaker into the terminal engine_dead state
         match work {
             Work::One(batch) => {
-                let served = batch.items.len();
-                run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq);
-                // release the admission slots only after replies went out,
-                // so max_concurrent bounds queued + executing work
-                let mut st = shared.lock_state();
-                st.in_flight = st.in_flight.saturating_sub(served);
+                let admitted = batch.items.len();
+                let batch = shed_expired(batch, &metrics);
+                let executed = !batch.items.is_empty();
+                let panicked = executed
+                    && run_batch(
+                        backend.as_mut(),
+                        &mut states,
+                        &metrics,
+                        batch,
+                        &mut exec_seq,
+                        consecutive_panics,
+                    );
+                if panicked {
+                    consecutive_panics += 1;
+                } else if executed {
+                    consecutive_panics = 0;
+                }
+                let tripped = trip_at > 0 && consecutive_panics >= trip_at;
+                {
+                    // release the admission slots only after replies went
+                    // out, so max_concurrent bounds queued + executing work
+                    let mut st = shared.lock_state();
+                    st.in_flight = st.in_flight.saturating_sub(admitted);
+                    st.consecutive_panics = consecutive_panics;
+                    if panicked {
+                        st.total_panics += 1;
+                    }
+                    if tripped {
+                        st.breaker_tripped = true;
+                    }
+                }
+                if tripped {
+                    metrics.record("breaker_trips", 1.0);
+                    // EngineGuard marks engine_dead and fails parked work
+                    anyhow::bail!(
+                        "circuit breaker tripped: {consecutive_panics} consecutive backend panics"
+                    );
+                }
             }
             Work::Final(rest) => {
                 for batch in rest {
-                    let served = batch.items.len();
-                    run_batch(backend.as_mut(), &mut states, &metrics, batch, &mut exec_seq);
+                    let admitted = batch.items.len();
+                    let batch = shed_expired(batch, &metrics);
+                    if !batch.items.is_empty() {
+                        run_batch(
+                            backend.as_mut(),
+                            &mut states,
+                            &metrics,
+                            batch,
+                            &mut exec_seq,
+                            consecutive_panics,
+                        );
+                    }
                     let mut st = shared.lock_state();
-                    st.in_flight = st.in_flight.saturating_sub(served);
+                    st.in_flight = st.in_flight.saturating_sub(admitted);
                 }
                 return Ok(());
             }
@@ -563,21 +743,66 @@ fn engine_main(
     }
 }
 
+/// Reply `DeadlineExceeded` to (and drop) every item whose client deadline
+/// expired while it sat in the queue; the rest of the batch executes.  The
+/// common no-deadline batch passes through untouched.
+fn shed_expired(
+    mut batch: crate::coordinator::batcher::Batch<Submit>,
+    metrics: &Registry,
+) -> crate::coordinator::batcher::Batch<Submit> {
+    if batch.items.iter().all(|it| it.payload.timeout.is_none()) {
+        return batch;
+    }
+    let now = Instant::now();
+    batch.items.retain(|item| {
+        let Some(t) = item.payload.timeout else { return true };
+        let waited = now.saturating_duration_since(item.enqueued);
+        if waited <= t {
+            return true;
+        }
+        metrics.record("deadline_expired", 1.0);
+        let _ = item.payload.reply.send(Err(ReplyError::DeadlineExceeded {
+            waited_ms: waited.as_millis() as u64,
+            timeout_ms: t.as_millis() as u64,
+        }));
+        false
+    });
+    batch
+}
+
 /// [`execute_batch`] behind a panic barrier: a backend panic is recorded
-/// as an `exec_panics` metric tick instead of tearing the engine down.
+/// as an `exec_panics` metric tick, every request in the batch gets a
+/// typed retriable [`ReplyError::BackendPanic`] (senders are cloned before
+/// the unwind so the panicked batch can still be failed explicitly), and
+/// the bucket's workspaces are re-warmed.  Returns whether it panicked.
 fn run_batch(
     backend: &mut dyn Backend,
     states: &mut [BucketState],
     metrics: &Registry,
     batch: crate::coordinator::batcher::Batch<Submit>,
     exec_seq: &mut u64,
-) {
+    prior_consecutive: usize,
+) -> bool {
+    let bucket = batch.bucket.clone();
+    let replies: Vec<mpsc::Sender<Result<Response, ReplyError>>> =
+        batch.items.iter().map(|it| it.payload.reply.clone()).collect();
     let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         execute_batch(backend, states, metrics, batch, exec_seq);
     }));
     if attempt.is_err() {
         metrics.record("exec_panics", 1.0);
+        let consecutive = prior_consecutive + 1;
+        for tx in replies {
+            // requests already answered before the panic just ignore this
+            // second message; the rest get the typed retriable error
+            let _ = tx.send(Err(ReplyError::BackendPanic { consecutive }));
+        }
+        if let Some(st) = states.iter_mut().find(|s| s.bucket.case == bucket) {
+            st.rewarm();
+        }
+        return true;
     }
+    false
 }
 
 /// Execute one flushed batch on the bucket's cached workspaces and fan the
@@ -589,6 +814,14 @@ fn execute_batch(
     batch: crate::coordinator::batcher::Batch<Submit>,
     exec_seq: &mut u64,
 ) {
+    // chaos hook: `err` fails the whole batch like a backend error, `panic`
+    // exercises the catch-unwind + re-warm recovery path in `run_batch`
+    if let Err(e) = crate::failpoint!("server.execute_batch") {
+        for item in &batch.items {
+            let _ = item.payload.reply.send(Err(ReplyError::ExecuteFailed(e.to_string())));
+        }
+        return;
+    }
     let st = states
         .iter_mut()
         .find(|s| s.bucket.case == batch.bucket)
@@ -636,7 +869,7 @@ fn execute_batch(
                     let _ = item
                         .payload
                         .reply
-                        .send(Err(anyhow::anyhow!("execute failed: {e}")));
+                        .send(Err(ReplyError::ExecuteFailed(e.to_string())));
                 }
             }
         }

@@ -108,6 +108,10 @@ fn print_help() {
                     [--accum K]        sum gradients over K micro-batches\n\
                                        per optimizer step (native backend)\n\
                     [--ckpt-every K]   also write --ckpt every K steps\n\
+                                       (atomic + CRC32; previous file kept\n\
+                                       as FILE.bak — --resume falls back)\n\
+                    [--max-nonfinite K] abort after K consecutive NaN/inf\n\
+                                       steps (skipped, params kept; def 3)\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
                     [--addr HOST:PORT] HTTP/1.1 front end instead of demo\n\
@@ -118,6 +122,8 @@ fn print_help() {
                     [--max-concurrent N]        admission bound (0 = off)\n\
                     [--waiting-served-ratio R]  eager-flush ratio (0 = off)\n\
                     [--precision f32|bf16|int8] inference tier override\n\
+                    [--panic-trip K]   engine_dead after K consecutive\n\
+                                       backend panics (0 = off, default 3)\n\
            serve-bench                 closed-loop serving load generator:\n\
                     [--case <name>] [--requests K] [--concurrency C]\n\
                     [--max-wait-ms W] [--quiet] [--quick]\n\
@@ -148,7 +154,10 @@ fn print_help() {
          \n\
          GLOBAL: --artifacts <dir>     artifacts directory (missing manifest\n\
                                        falls back to builtin native cases)\n\
-                 --backend <name>      native | xla ($FLARE_BACKEND)\n"
+                 --backend <name>      native | xla ($FLARE_BACKEND)\n\
+                 $FLARE_FAILPOINTS     chaos fault injection, e.g.\n\
+                                       'native.forward_batch=1*panic'\n\
+                                       (see README Operations)\n"
     );
 }
 
@@ -238,7 +247,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let backend = backend_from_args(args)?;
     let resume = match args.get("resume") {
         Some(path) => {
-            let ck = flare::model::load_checkpoint(path)?;
+            // a torn/corrupted primary falls back to the `.bak` rotation
+            // the atomic saver keeps (warning printed when that happens)
+            let (ck, from_bak) = flare::model::load_checkpoint_or_backup(path)?;
+            if from_bak {
+                println!(
+                    "warning: checkpoint {path} failed verification; resuming from {}",
+                    flare::model::checkpoint::backup_path(path).display()
+                );
+            }
             anyhow::ensure!(
                 ck.case == name,
                 "checkpoint {path:?} was written for case {:?}, not {name:?}",
@@ -282,6 +299,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         accum,
         ckpt_every,
         ckpt_path: args.get("ckpt").map(std::path::PathBuf::from),
+        max_nonfinite: args.get_usize("max-nonfinite")?.unwrap_or(3),
     };
     println!(
         "training {name} on {} backend: {} params, dataset {}, batch {}{}",
@@ -306,6 +324,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         out.losses.last().copied().unwrap_or(f64::NAN),
         out.final_metric
     );
+    if out.skipped_steps > 0 {
+        println!(
+            "warning: {} optimizer step(s) skipped by the non-finite guard",
+            out.skipped_steps
+        );
+    }
     if let Some(path) = args.get("ckpt") {
         flare::model::save_checkpoint(
             path,
@@ -349,6 +373,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         max_concurrent: args.get_usize("max-concurrent")?.unwrap_or(0),
         waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
         precision: precision_from_args(args)?,
+        panic_trip_threshold: args.get_usize("panic-trip")?.unwrap_or(3),
     };
 
     if let Some(addr) = args.get("addr") {
@@ -475,28 +500,42 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     }
 
     let latencies_ms: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    // (total retry attempts, requests that needed at least one retry)
+    let retry_counts: Mutex<(u64, u64)> = Mutex::new((0, 0));
     let wall = Timer::start();
     std::thread::scope(|scope| {
         for cidx in 0..concurrency {
             let server = &server;
             let x = &x;
             let latencies_ms = &latencies_ms;
+            let retry_counts = &retry_counts;
             let n = case.model.n;
             let my_requests = base + usize::from(cidx < extra);
             scope.spawn(move || {
+                let mut rng = flare::util::rng::Rng::new(0xC11E47 ^ cidx as u64);
                 let mut local = Vec::with_capacity(my_requests);
+                let (mut my_retries, mut my_retried) = (0u64, 0u64);
                 for _ in 0..my_requests {
                     let t = Timer::start();
-                    let resp = server.infer(x.clone(), n).expect("infer");
+                    let (resp, tries) =
+                        infer_with_retry(server, x, n, &mut rng).expect("infer");
                     assert_eq!(resp.y.len(), n * case.model.d_out);
                     local.push(t.elapsed_ms());
+                    if tries > 0 {
+                        my_retried += 1;
+                        my_retries += tries as u64;
+                    }
                 }
                 latencies_ms.lock().unwrap().extend_from_slice(&local);
+                let mut rc = retry_counts.lock().unwrap();
+                rc.0 += my_retries;
+                rc.1 += my_retried;
             });
         }
     });
     let wall_s = wall.elapsed_s();
     let latencies = latencies_ms.into_inner().unwrap();
+    let (retries_total, retried_requests) = retry_counts.into_inner().unwrap();
     let served = latencies.len();
     let summary = flare::util::stats::Summary::of(&latencies);
     let req_per_s = served as f64 / wall_s;
@@ -520,6 +559,9 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             ("p99_ms".into(), summary.p99),
             ("clients".into(), concurrency as f64),
             ("max_wait_ms".into(), max_wait as f64),
+            // distinguish goodput from retried work in overload runs
+            ("retries".into(), retries_total as f64),
+            ("retried_requests".into(), retried_requests as f64),
         ],
     };
     // tier-tagged dump file so an int8 run folded in the same results dir
@@ -532,6 +574,41 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     let path = flare::bench::save_results(&dump, &[measurement])?;
     println!("results written to {path:?}");
     Ok(())
+}
+
+/// Closed-loop client with bounded retry: retriable rejections — admission
+/// 429s and recovered backend panics, the classes the HTTP edge tags with
+/// `Retry-After` — back off exponentially with deterministic jitter and go
+/// again (at most 5 times); everything else fails immediately.  Returns
+/// the response plus how many retries it took.  Backoff is ms-scale: the
+/// edge's `Retry-After: 1` is pacing for remote clients, while in-process
+/// queue turnover is milliseconds.
+fn infer_with_retry(
+    server: &Server,
+    x: &Vec<f32>,
+    n: usize,
+    rng: &mut flare::util::rng::Rng,
+) -> anyhow::Result<(flare::coordinator::Response, usize)> {
+    use flare::coordinator::{ReplyError, SubmitError};
+    const MAX_RETRIES: usize = 5;
+    let mut retries = 0usize;
+    loop {
+        let err: Box<dyn std::fmt::Display> = match server.try_submit(None, x.clone(), n, None) {
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(resp)) => return Ok((resp, retries)),
+                Ok(Err(e @ ReplyError::BackendPanic { .. })) => Box::new(e),
+                Ok(Err(e)) => anyhow::bail!("{e}"),
+                Err(_) => anyhow::bail!("server dropped request"),
+            },
+            Err(e @ SubmitError::Admission { .. }) => Box::new(e),
+            Err(e) => anyhow::bail!("{e}"),
+        };
+        anyhow::ensure!(retries < MAX_RETRIES, "{err} (gave up after {MAX_RETRIES} retries)");
+        retries += 1;
+        let base_ms = 1u64 << (retries - 1).min(6);
+        let jitter = rng.below(base_ms as usize + 1) as u64;
+        std::thread::sleep(std::time::Duration::from_millis(base_ms + jitter));
+    }
 }
 
 /// One blocking HTTP request against the serving front end; returns the
@@ -595,6 +672,7 @@ fn cmd_serve_bench_open_loop(args: &Args) -> anyhow::Result<()> {
             max_concurrent,
             waiting_served_ratio: args.get_f64("waiting-served-ratio")?.unwrap_or(0.0),
             precision: precision_from_args(args)?,
+            ..ServerConfig::default()
         },
     )?;
     let http = flare::coordinator::HttpServer::start(

@@ -3,10 +3,16 @@
 //! Format: `<header json>\n` followed by raw little-endian f32 payloads for
 //! params, m and v (lengths recorded in the header).  Self-describing and
 //! versioned; no external serialization crates needed.
+//!
+//! Crash safety: saves are atomic (tmp file + fsync + rename via
+//! [`crate::util::fsio`]) with a CRC32 of the payload in the header and a
+//! one-deep `.bak` rotation of the previous checkpoint; loads verify the
+//! checksum and report corruption as a typed [`CkptError`], letting
+//! `train --resume` fall back to the `.bak` copy.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::util::fsio;
 use crate::util::json::{parse, Json};
 
 /// In-memory checkpoint contents.
@@ -22,8 +28,55 @@ pub struct Checkpoint {
 
 const MAGIC: &str = "flare-ckpt-v1";
 
-/// Write a checkpoint to `path`.
+/// Typed checkpoint read failures, so callers can distinguish a missing
+/// file from a torn or bit-flipped one and react (e.g. `.bak` fallback).
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    MissingHeader,
+    BadMagic(String),
+    Header(String),
+    Truncated { got: usize, need: usize },
+    ChecksumMismatch { stored: u32, computed: u32 },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CkptError::MissingHeader => write!(f, "missing checkpoint header"),
+            CkptError::BadMagic(m) => write!(f, "bad checkpoint magic {m:?}"),
+            CkptError::Header(msg) => write!(f, "bad checkpoint header: {msg}"),
+            CkptError::Truncated { got, need } => {
+                write!(f, "payload size {got} != expected {need}")
+            }
+            CkptError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "payload checksum mismatch: header {stored:#010x}, computed {computed:#010x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// The `.bak` path the previous checkpoint rotates to on save.
+pub fn backup_path(path: impl AsRef<Path>) -> std::path::PathBuf {
+    fsio::backup_path(path)
+}
+
+/// Write a checkpoint to `path` atomically: serialize to a buffer,
+/// checksum the payload into the header, stage + fsync + rename, rotating
+/// any existing checkpoint to `.bak` first.
 pub fn save_checkpoint(path: impl AsRef<Path>, ckpt: &Checkpoint) -> anyhow::Result<()> {
+    crate::failpoint!("ckpt.save")?;
+    let mut payload =
+        Vec::with_capacity((ckpt.params.len() + ckpt.m.len() + ckpt.v.len()) * 4);
+    for arr in [&ckpt.params, &ckpt.m, &ckpt.v] {
+        for v in arr.iter() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
     let header = Json::obj(vec![
         ("magic", Json::str(MAGIC)),
         ("case", Json::str(&ckpt.case)),
@@ -32,37 +85,51 @@ pub fn save_checkpoint(path: impl AsRef<Path>, ckpt: &Checkpoint) -> anyhow::Res
         ("m_len", Json::num(ckpt.m.len() as f64)),
         ("v_len", Json::num(ckpt.v.len() as f64)),
         ("train_loss", Json::num(ckpt.train_loss)),
+        ("crc32", Json::num(fsio::crc32(&payload) as f64)),
     ]);
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "{header}")?;
-    for arr in [&ckpt.params, &ckpt.m, &ckpt.v] {
-        for v in arr.iter() {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
+    let mut bytes = header.to_string().into_bytes();
+    bytes.push(b'\n');
+    bytes.extend_from_slice(&payload);
+    fsio::atomic_write_with_backup(path, &bytes)?;
     Ok(())
 }
 
-/// Read a checkpoint from `path`.
-pub fn load_checkpoint(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut all = Vec::new();
-    f.read_to_end(&mut all)?;
-    let nl = all
-        .iter()
-        .position(|&b| b == b'\n')
-        .ok_or_else(|| anyhow::anyhow!("missing checkpoint header"))?;
-    let header = parse(std::str::from_utf8(&all[..nl])?)?;
-    if header.get("magic").as_str() != Some(MAGIC) {
-        anyhow::bail!("bad checkpoint magic");
+/// Read a checkpoint from `path`, verifying the payload checksum when the
+/// header carries one (pre-PR-9 checkpoints without a `crc32` field still
+/// load).  Returns typed errors; see [`load_checkpoint`] for the `anyhow`
+/// wrapper.
+pub fn load_checkpoint_typed(path: impl AsRef<Path>) -> Result<Checkpoint, CkptError> {
+    if crate::failpoint!("ckpt.load").is_err() {
+        return Err(CkptError::Header("failpoint ckpt.load: injected error".into()));
     }
-    let p_len = header.req_usize("params_len")?;
-    let m_len = header.req_usize("m_len")?;
-    let v_len = header.req_usize("v_len")?;
+    let all = std::fs::read(path).map_err(CkptError::Io)?;
+    let nl = all.iter().position(|&b| b == b'\n').ok_or(CkptError::MissingHeader)?;
+    let text = std::str::from_utf8(&all[..nl])
+        .map_err(|e| CkptError::Header(format!("header not utf-8: {e}")))?;
+    let header = parse(text).map_err(|e| CkptError::Header(e.to_string()))?;
+    match header.get("magic").as_str() {
+        Some(MAGIC) => {}
+        other => return Err(CkptError::BadMagic(other.unwrap_or("<missing>").to_string())),
+    }
+    let req_usize = |k: &str| {
+        header
+            .req_usize(k)
+            .map_err(|e| CkptError::Header(e.to_string()))
+    };
+    let p_len = req_usize("params_len")?;
+    let m_len = req_usize("m_len")?;
+    let v_len = req_usize("v_len")?;
     let payload = &all[nl + 1..];
     let need = (p_len + m_len + v_len) * 4;
     if payload.len() != need {
-        anyhow::bail!("payload size {} != expected {need}", payload.len());
+        return Err(CkptError::Truncated { got: payload.len(), need });
+    }
+    if let Some(stored) = header.get("crc32").as_f64() {
+        let stored = stored as u32;
+        let computed = fsio::crc32(payload);
+        if stored != computed {
+            return Err(CkptError::ChecksumMismatch { stored, computed });
+        }
     }
     let read_f32s = |bytes: &[u8]| -> Vec<f32> {
         bytes
@@ -74,8 +141,11 @@ pub fn load_checkpoint(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
     let m = read_f32s(&payload[p_len * 4..(p_len + m_len) * 4]);
     let v = read_f32s(&payload[(p_len + m_len) * 4..]);
     Ok(Checkpoint {
-        case: header.req_str("case")?.to_string(),
-        step: header.req_usize("step")?,
+        case: header
+            .req_str("case")
+            .map_err(|e| CkptError::Header(e.to_string()))?
+            .to_string(),
+        step: req_usize("step")?,
         params,
         m,
         v,
@@ -83,25 +153,57 @@ pub fn load_checkpoint(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
     })
 }
 
+/// Read a checkpoint from `path` (see [`load_checkpoint_typed`]).
+pub fn load_checkpoint(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+    Ok(load_checkpoint_typed(path)?)
+}
+
+/// Read `path`, falling back to its `.bak` rotation when the primary is
+/// missing or corrupt.  Returns the checkpoint and whether the backup was
+/// used; fails with the *primary* error when neither copy loads.
+pub fn load_checkpoint_or_backup(
+    path: impl AsRef<Path>,
+) -> anyhow::Result<(Checkpoint, bool)> {
+    let path = path.as_ref();
+    match load_checkpoint_typed(path) {
+        Ok(ck) => Ok((ck, false)),
+        Err(primary) => match load_checkpoint_typed(backup_path(path)) {
+            Ok(ck) => {
+                crate::info!(
+                    "checkpoint {path:?} unreadable ({primary}); resuming from backup"
+                );
+                Ok((ck, true))
+            }
+            Err(_) => Err(primary.into()),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
-        let ckpt = Checkpoint {
+    fn tiny(step: usize) -> Checkpoint {
+        Checkpoint {
             case: "core_darcy_flare".into(),
-            step: 123,
+            step,
             params: vec![1.0, -2.5, 3.25],
             m: vec![0.5, 0.5, 0.5],
             v: vec![0.1, 0.2, 0.3],
             train_loss: 0.042,
-        };
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ckpt = tiny(123);
         let path = std::env::temp_dir().join("flare_ckpt_test.bin");
         save_checkpoint(&path, &ckpt).unwrap();
         let loaded = load_checkpoint(&path).unwrap();
         assert_eq!(loaded, ckpt);
+        assert!(!crate::util::fsio::tmp_path(&path).exists());
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
     }
 
     #[test]
@@ -119,15 +221,83 @@ mod tests {
         // truncate
         let data = std::fs::read(&path).unwrap();
         std::fs::write(&path, &data[..data.len() - 4]).unwrap();
-        assert!(load_checkpoint(&path).is_err());
+        assert!(matches!(
+            load_checkpoint_typed(&path),
+            Err(CkptError::Truncated { .. })
+        ));
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
     }
 
     #[test]
     fn bad_magic_rejected() {
         let path = std::env::temp_dir().join("flare_ckpt_magic.bin");
         std::fs::write(&path, b"{\"magic\":\"nope\"}\n").unwrap();
-        assert!(load_checkpoint(&path).is_err());
+        assert!(matches!(load_checkpoint_typed(&path), Err(CkptError::BadMagic(_))));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bitflip_fails_checksum() {
+        let ckpt = tiny(7);
+        let path = std::env::temp_dir().join("flare_ckpt_bitflip.bin");
+        save_checkpoint(&path, &ckpt).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0x01; // same length, different bits
+        std::fs::write(&path, &data).unwrap();
+        assert!(matches!(
+            load_checkpoint_typed(&path),
+            Err(CkptError::ChecksumMismatch { .. })
+        ));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
+    }
+
+    #[test]
+    fn legacy_header_without_crc_loads() {
+        // pre-PR-9 writer: header has no crc32 field
+        let ckpt = tiny(3);
+        let header = Json::obj(vec![
+            ("magic", Json::str(MAGIC)),
+            ("case", Json::str(&ckpt.case)),
+            ("step", Json::num(ckpt.step as f64)),
+            ("params_len", Json::num(ckpt.params.len() as f64)),
+            ("m_len", Json::num(ckpt.m.len() as f64)),
+            ("v_len", Json::num(ckpt.v.len() as f64)),
+            ("train_loss", Json::num(ckpt.train_loss)),
+        ]);
+        let mut bytes = header.to_string().into_bytes();
+        bytes.push(b'\n');
+        for arr in [&ckpt.params, &ckpt.m, &ckpt.v] {
+            for v in arr.iter() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let path = std::env::temp_dir().join("flare_ckpt_legacy.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_rotates_backup_and_fallback_loads_it() {
+        let path = std::env::temp_dir().join("flare_ckpt_rotate.bin");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
+        save_checkpoint(&path, &tiny(1)).unwrap();
+        save_checkpoint(&path, &tiny(2)).unwrap();
+        assert_eq!(load_checkpoint(backup_path(&path)).unwrap().step, 1);
+        // corrupt the primary: or_backup falls back to the step-1 rotation
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 2]).unwrap();
+        let (ck, from_bak) = load_checkpoint_or_backup(&path).unwrap();
+        assert!(from_bak);
+        assert_eq!(ck.step, 1);
+        // with no backup either, the primary's typed error surfaces
+        std::fs::remove_file(backup_path(&path)).unwrap();
+        let err = load_checkpoint_or_backup(&path).unwrap_err().to_string();
+        assert!(err.contains("payload size"), "primary error surfaces: {err}");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -9,7 +9,10 @@ pub mod forward;
 pub mod init;
 pub mod spec;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_checkpoint_or_backup, load_checkpoint_typed, save_checkpoint,
+    Checkpoint, CkptError,
+};
 pub use init::init_params;
 pub use spec::{build_layer_spec, build_spec, index_by_name};
 

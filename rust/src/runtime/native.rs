@@ -386,6 +386,9 @@ impl Backend for NativeBackend {
         batch: usize,
         out: &mut Vec<f32>,
     ) -> anyhow::Result<()> {
+        // chaos hook (disarmed: one relaxed atomic load, no allocation —
+        // the serving alloc gate runs through here)
+        crate::failpoint!("native.forward_batch")?;
         let plan_rc = self.plan(case)?;
         let plan: &Plan = plan_rc.as_ref();
         anyhow::ensure!(

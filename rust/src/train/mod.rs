@@ -64,6 +64,11 @@ pub struct TrainOpts {
     pub ckpt_every: usize,
     /// mid-run checkpoint destination (required when `ckpt_every > 0`)
     pub ckpt_path: Option<std::path::PathBuf>,
+    /// non-finite guard: a NaN/inf loss or gradient skips the optimizer
+    /// step (params untouched) and the run aborts with a typed error after
+    /// this many **consecutive** skips (a finite step resets the streak);
+    /// 0 disables the guard
+    pub max_nonfinite: usize,
 }
 
 impl Default for TrainOpts {
@@ -77,6 +82,7 @@ impl Default for TrainOpts {
             accum: 1,
             ckpt_every: 0,
             ckpt_path: None,
+            max_nonfinite: 3,
         }
     }
 }
@@ -101,6 +107,9 @@ pub struct TrainOutcome {
     pub opt_m: Vec<f32>,
     /// final AdamW second moment
     pub opt_v: Vec<f32>,
+    /// optimizer steps skipped by the non-finite guard (loss or gradient
+    /// was NaN/inf; the parameters were left untouched for those steps)
+    pub skipped_steps: usize,
 }
 
 /// Cyclic shuffled batch sampler over `count` items.
@@ -252,26 +261,23 @@ pub fn train_case(
     let mut evals = Vec::new();
     let mut step_times = Vec::with_capacity(steps);
     let wall = Timer::start();
-    // gradient-accumulation buffer, on loan from the workspace pool for the
-    // whole run (accum > 1 only; zero-length loans are free)
+    // The non-finite guard needs to see the gradient *before* the
+    // optimizer consumes it, so every backend with a split
+    // grad_batch/apply_update path routes through it (the native
+    // `train_step` is exactly grad_batch-into-zeroed-buffer +
+    // apply_update, so the reroute is bitwise-neutral); fused-only
+    // backends keep `train_step` and get a loss-only post-hoc guard.
+    let split = backend.supports_grad_accum();
+    // gradient-accumulation buffer, on loan from the workspace pool for
+    // the whole run (split path only; zero-length loans are free)
     let mut grad_acc =
-        crate::util::workspace::take(if accum > 1 { case.param_count } else { 0 });
+        crate::util::workspace::take(if split { case.param_count } else { 0 });
+    let mut skipped_steps = 0usize;
+    let mut nonfinite_streak = 0usize;
 
     for step in start..total {
         let t = Timer::start();
-        let loss = if accum == 1 {
-            let idx = sampler.next(case.batch);
-            let batch = gather_batch(case, &ds, &idx, true);
-            backend.train_step(
-                manifest,
-                case,
-                &mut st,
-                step,
-                sched.lr(step),
-                batch.input(),
-                batch.target(),
-            )?
-        } else {
+        let loss = if split {
             // sum gradients over `accum` micro-batches in place, then one
             // fused update over the combined sample count
             grad_acc.fill(0.0);
@@ -291,8 +297,64 @@ pub fn train_case(
                 loss_sum += ls;
                 samples += ns;
             }
-            backend.apply_update(case, &mut st, &grad_acc, samples, step, sched.lr(step))?;
-            loss_sum / samples as f64
+            let mut loss = loss_sum / samples as f64;
+            // chaos hook: poison this step's loss to exercise the guard
+            if crate::util::failpoint::armed()
+                && crate::util::failpoint::hit("train.nan_loss").is_err()
+            {
+                loss = f64::NAN;
+            }
+            let finite = loss.is_finite() && grad_acc.iter().all(|g| g.is_finite());
+            if finite || opts.max_nonfinite == 0 {
+                backend.apply_update(case, &mut st, &grad_acc, samples, step, sched.lr(step))?;
+                nonfinite_streak = 0;
+            } else {
+                // skip the update: the parameters stay at their last good
+                // values and the run keeps sampling fresh batches
+                skipped_steps += 1;
+                nonfinite_streak += 1;
+                crate::info!(
+                    "[{}] step {step}: non-finite loss/gradient (loss {loss}); optimizer step \
+                     skipped ({nonfinite_streak} consecutive)",
+                    case.name
+                );
+                if nonfinite_streak >= opts.max_nonfinite {
+                    anyhow::bail!(
+                        "training diverged: non-finite loss or gradient for \
+                         {nonfinite_streak} consecutive steps (case {}, step {step})",
+                        case.name
+                    );
+                }
+            }
+            loss
+        } else {
+            let idx = sampler.next(case.batch);
+            let batch = gather_batch(case, &ds, &idx, true);
+            let loss = backend.train_step(
+                manifest,
+                case,
+                &mut st,
+                step,
+                sched.lr(step),
+                batch.input(),
+                batch.target(),
+            )?;
+            // fused backends apply the update before the loss is visible:
+            // the guard can only count and abort, not skip
+            if loss.is_finite() || opts.max_nonfinite == 0 {
+                nonfinite_streak = 0;
+            } else {
+                skipped_steps += 1;
+                nonfinite_streak += 1;
+                if nonfinite_streak >= opts.max_nonfinite {
+                    anyhow::bail!(
+                        "training diverged: non-finite loss for {nonfinite_streak} \
+                         consecutive steps (case {}, step {step})",
+                        case.name
+                    );
+                }
+            }
+            loss
         };
         step_times.push(t.elapsed_ms());
         losses.push(loss);
@@ -341,6 +403,7 @@ pub fn train_case(
         params: st.params,
         opt_m: st.m,
         opt_v: st.v,
+        skipped_steps,
     })
 }
 

@@ -1,0 +1,308 @@
+//! Named-site fault injection for chaos testing recovery paths.
+//!
+//! Production code plants sites with the [`failpoint!`](crate::failpoint)
+//! macro; nothing fires unless `FLARE_FAILPOINTS` is set (or a test calls
+//! [`configure`]).  The unconfigured cost is a single relaxed atomic load
+//! per site visit — no lock, no allocation — so the counting-allocator
+//! gates and the `FLARE_THREADS=1` bitwise contracts are untouched.
+//!
+//! Spec grammar (`;`-separated entries):
+//!
+//! ```text
+//! FLARE_FAILPOINTS="site=[N*]action;site2=action2"
+//! action := panic | err | delay:MS | prob:P:terminal
+//! terminal := panic | err | delay:MS        (prob does not nest)
+//! ```
+//!
+//! An `N*` prefix limits the action to the first `N` hits of that site
+//! (later hits pass through), which keeps chaos tests deterministic:
+//! `native.forward_batch=1*panic` panics exactly once and then recovers.
+//! `prob:P:...` draws from a per-site counter LCG seeded from the site
+//! name — deterministic across runs, no OS entropy, so a probabilistic
+//! chaos run is replayable.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Terminal (non-probabilistic) action.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Term {
+    /// Panic at the site (exercises catch-unwind recovery paths).
+    Panic,
+    /// Return an injected `anyhow` error from the site.
+    Err,
+    /// Sleep for the given milliseconds, then pass through.
+    Delay(u64),
+}
+
+/// Parsed per-site action.  `Prob` fires its terminal with probability `p`
+/// per hit (deterministic LCG draw); kept non-recursive so resolving an
+/// action never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    Term(Term),
+    Prob(f64, Term),
+}
+
+struct Site {
+    action: Action,
+    /// `Some(n)`: only the first `n` hits fire; `None`: every hit fires.
+    remaining: Option<u64>,
+    hits: u64,
+    lcg: u64,
+}
+
+const UNPARSED: u8 = 0;
+const OFF: u8 = 1;
+const ARMED: u8 = 2;
+
+/// Global arming state: sites check this with one relaxed load.
+static STATE: AtomicU8 = AtomicU8::new(UNPARSED);
+static REGISTRY: Mutex<BTreeMap<String, Site>> = Mutex::new(BTreeMap::new());
+
+/// `true` if any failpoint is configured.  First call parses
+/// `FLARE_FAILPOINTS`; every later call is one relaxed atomic load.
+#[inline]
+pub fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        OFF => false,
+        ARMED => true,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    match std::env::var("FLARE_FAILPOINTS") {
+        Ok(spec) if !spec.trim().is_empty() => match configure(&spec) {
+            Ok(()) => true,
+            // a malformed spec is an operator error: fail loudly rather
+            // than silently running without the requested faults
+            Err(e) => panic!("invalid FLARE_FAILPOINTS: {e}"),
+        },
+        _ => {
+            STATE.store(OFF, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, BTreeMap<String, Site>> {
+    // a panic action fires outside the lock, but be poison-tolerant anyway
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// FNV-1a of the site name: a stable, distinct LCG seed per site.
+fn seed_of(site: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in site.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn parse_term(s: &str) -> anyhow::Result<Term> {
+    if s == "panic" {
+        Ok(Term::Panic)
+    } else if s == "err" {
+        Ok(Term::Err)
+    } else if let Some(ms) = s.strip_prefix("delay:") {
+        Ok(Term::Delay(ms.parse().map_err(|_| {
+            anyhow::anyhow!("bad delay millis {ms:?}")
+        })?))
+    } else {
+        anyhow::bail!("unknown action {s:?} (want panic|err|delay:MS|prob:P:ACTION)")
+    }
+}
+
+fn parse_action(s: &str) -> anyhow::Result<Action> {
+    if let Some(rest) = s.strip_prefix("prob:") {
+        let (p, term) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("prob needs prob:P:ACTION, got {s:?}"))?;
+        let p: f64 = p.parse().map_err(|_| anyhow::anyhow!("bad probability {p:?}"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+        Ok(Action::Prob(p, parse_term(term)?))
+    } else {
+        Ok(Action::Term(parse_term(s)?))
+    }
+}
+
+/// Parse a spec and arm the registry (replacing any previous config).
+/// Tests use this directly; production arms via the env on first hit.
+pub fn configure(spec: &str) -> anyhow::Result<()> {
+    let mut sites = Vec::new();
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, rhs) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("entry {entry:?} is not site=action"))?;
+        let site = site.trim();
+        anyhow::ensure!(!site.is_empty(), "empty site name in {entry:?}");
+        let rhs = rhs.trim();
+        let (remaining, action_str) = match rhs.split_once('*') {
+            Some((n, rest)) if n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+                (Some(n.parse::<u64>().unwrap()), rest)
+            }
+            _ => (None, rhs),
+        };
+        let action = parse_action(action_str)?;
+        sites.push((site.to_string(), Site {
+            action,
+            remaining,
+            hits: 0,
+            lcg: seed_of(site),
+        }));
+    }
+    let mut reg = lock_registry();
+    reg.clear();
+    let any = !sites.is_empty();
+    for (name, site) in sites {
+        reg.insert(name, site);
+    }
+    STATE.store(if any { ARMED } else { OFF }, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every failpoint (tests call this after each scenario).
+pub fn clear() {
+    lock_registry().clear();
+    STATE.store(OFF, Ordering::Relaxed);
+}
+
+/// How many times `site` has been visited while armed (0 if unknown).
+pub fn hits(site: &str) -> u64 {
+    if STATE.load(Ordering::Relaxed) != ARMED {
+        return 0;
+    }
+    lock_registry().get(site).map_or(0, |s| s.hits)
+}
+
+/// Visit a site: resolve the configured action (if any) and execute it.
+/// Cheap no-op for unconfigured sites even while armed (one map lookup,
+/// no allocation).  Use via the [`failpoint!`](crate::failpoint) macro so
+/// the disarmed fast path stays a single atomic load.
+pub fn hit(site: &str) -> anyhow::Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    let fired = {
+        let mut reg = lock_registry();
+        let Some(s) = reg.get_mut(site) else { return Ok(()) };
+        s.hits += 1;
+        match &mut s.remaining {
+            Some(0) => return Ok(()),
+            Some(n) => *n -= 1,
+            None => {}
+        }
+        match s.action {
+            Action::Term(t) => Some(t),
+            Action::Prob(p, t) => {
+                s.lcg = s
+                    .lcg
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                // top 53 bits -> uniform [0, 1) draw
+                if ((s.lcg >> 11) as f64 / (1u64 << 53) as f64) < p {
+                    Some(t)
+                } else {
+                    None
+                }
+            }
+        }
+    };
+    // act outside the registry lock so a panic can't poison it and a
+    // delay can't serialize unrelated sites
+    match fired {
+        None => Ok(()),
+        Some(Term::Delay(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(Term::Err) => anyhow::bail!("failpoint {site}: injected error"),
+        Some(Term::Panic) => panic!("failpoint {site}: injected panic"),
+    }
+}
+
+/// Plant a named fault-injection site.  Evaluates to `anyhow::Result<()>`:
+/// `Ok(())` unless the site is armed with an `err` action.  Disarmed cost
+/// is one relaxed atomic load.  Result-returning callers write
+/// `crate::failpoint!("site")?`; void callers branch on `.is_err()`.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr) => {
+        if $crate::util::failpoint::armed() {
+            $crate::util::failpoint::hit($site)
+        } else {
+            ::std::result::Result::Ok(())
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry and STATE are process-global; serialize the tests.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_sites_pass_through() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear();
+        assert!(crate::failpoint!("nope").is_ok());
+        assert_eq!(hits("nope"), 0);
+    }
+
+    #[test]
+    fn err_and_count_limit() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        configure("site.a=2*err").unwrap();
+        assert!(hit("site.a").is_err());
+        assert!(hit("site.a").is_err());
+        assert!(hit("site.a").is_ok(), "limit exhausted -> pass-through");
+        assert_eq!(hits("site.a"), 3);
+        assert!(hit("site.other").is_ok(), "unconfigured site is a no-op");
+        clear();
+    }
+
+    #[test]
+    fn prob_is_deterministic() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let run = || -> Vec<bool> {
+            configure("site.p=prob:0.5:err").unwrap();
+            (0..32).map(|_| hit("site.p").is_err()).collect()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "LCG draws replay identically");
+        assert!(a.iter().any(|&e| e) && a.iter().any(|&e| !e), "p=0.5 mixes");
+        clear();
+    }
+
+    #[test]
+    fn delay_passes_through() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        configure("site.d=delay:1").unwrap();
+        let t = std::time::Instant::now();
+        assert!(hit("site.d").is_ok());
+        assert!(t.elapsed() >= Duration::from_millis(1));
+        clear();
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(configure("noequals").is_err());
+        assert!(configure("s=explode").is_err());
+        assert!(configure("s=delay:abc").is_err());
+        assert!(configure("s=prob:2.0:err").is_err());
+        assert!(configure("s=prob:0.5:prob:0.5:err").is_err(), "prob does not nest");
+        clear();
+    }
+}

@@ -1,0 +1,116 @@
+//! Durable file I/O: CRC32 integrity checksums and atomic write-replace.
+//!
+//! Every result/baseline/checkpoint dump in the tree goes through
+//! [`atomic_write`] (tmp file + fsync + rename) so a crash or kill mid-write
+//! can never leave a torn file behind — readers see either the old complete
+//! file or the new complete file.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// CRC-32 (IEEE 802.3 polynomial, the zlib/PNG variant) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+fn with_suffix(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// The scratch path `atomic_write` stages into (`<path>.tmp`).
+pub fn tmp_path(path: impl AsRef<Path>) -> PathBuf {
+    with_suffix(path.as_ref(), ".tmp")
+}
+
+/// The rotation target used by [`atomic_write_with_backup`] (`<path>.bak`).
+pub fn backup_path(path: impl AsRef<Path>) -> PathBuf {
+    with_suffix(path.as_ref(), ".bak")
+}
+
+fn stage(path: &Path, bytes: &[u8]) -> std::io::Result<PathBuf> {
+    let tmp = tmp_path(path);
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    // flush to stable storage before the rename publishes the file, so a
+    // power cut can't surface a renamed-but-empty destination
+    f.sync_all()?;
+    Ok(tmp)
+}
+
+/// Write `bytes` to `path` atomically: stage into `<path>.tmp`, fsync,
+/// rename over the destination.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let tmp = stage(path, bytes)?;
+    fs::rename(&tmp, path)
+}
+
+/// [`atomic_write`] plus one-deep rotation: an existing destination is
+/// first renamed to `<path>.bak` (replacing any older backup).  Returns
+/// `true` if a previous file was rotated.
+pub fn atomic_write_with_backup(path: impl AsRef<Path>, bytes: &[u8]) -> std::io::Result<bool> {
+    let path = path.as_ref();
+    let tmp = stage(path, bytes)?;
+    let rotated = path.exists();
+    if rotated {
+        fs::rename(path, backup_path(path))?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(rotated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the standard check value for this polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let path = std::env::temp_dir().join("flare_fsio_atomic.txt");
+        atomic_write(&path, b"one").unwrap();
+        atomic_write(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        assert!(!tmp_path(&path).exists(), "tmp staging file cleaned up");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn backup_rotation_keeps_previous_version() {
+        let path = std::env::temp_dir().join("flare_fsio_rotate.txt");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
+        assert!(!atomic_write_with_backup(&path, b"v1").unwrap());
+        assert!(atomic_write_with_backup(&path, b"v2").unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), b"v2");
+        assert_eq!(std::fs::read(backup_path(&path)).unwrap(), b"v1");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(backup_path(&path)).ok();
+    }
+}

@@ -5,6 +5,8 @@
 //! serde / tokio / criterion / clap — these utilities are built from
 //! scratch; see DESIGN.md §3 for the substitution table.
 
+pub mod failpoint;
+pub mod fsio;
 pub mod json;
 pub mod log;
 pub mod name;

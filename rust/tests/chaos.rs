@@ -1,0 +1,395 @@
+//! Chaos suite: fault-injection tests for the self-healing serving engine
+//! and the crash-safe training loop, driven by the `util::failpoint`
+//! registry (armed programmatically via `configure`, never the env var, so
+//! the suite composes with the CI benign-delay leg).
+//!
+//! The failpoint registry is process-global, so every test serializes on
+//! [`CHAOS`] and disarms with `clear()` before releasing it — a panicking
+//! test poisons the mutex but the next test recovers the guard and still
+//! starts from a clean registry.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use flare::config::Manifest;
+use flare::coordinator::{HttpConfig, HttpServer, Server, ServerConfig};
+use flare::model::{load_checkpoint_or_backup, load_checkpoint_typed, CkptError};
+use flare::runtime::{make_backend, OptState};
+use flare::train::{train_case, TrainOpts};
+use flare::util::failpoint;
+use flare::util::json::parse;
+
+static CHAOS: Mutex<()> = Mutex::new(());
+
+/// Serialize + arm: returns the guard; `clear()` runs even if the caller
+/// panics (the next test's `chaos_guard` re-clears on entry).
+fn chaos_guard(spec: &str) -> std::sync::MutexGuard<'static, ()> {
+    let guard = CHAOS.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    if !spec.is_empty() {
+        failpoint::configure(spec).expect("valid failpoint spec");
+    }
+    guard
+}
+
+// ---------------------------------------------------------------------------
+// HTTP helpers (same idiom as http_serving.rs)
+// ---------------------------------------------------------------------------
+
+fn tiny_manifest(tag: &str, n: usize, batch: usize, max_batch: usize) -> PathBuf {
+    let mut case = common::tiny_flare_case(tag, common::tiny_flare_model(n), batch);
+    case.max_batch = max_batch;
+    common::write_manifest_dir(&format!("flare_chaos_{tag}"), &[&case])
+}
+
+fn start_http(dir: PathBuf, cfg: ServerConfig) -> HttpServer {
+    let server = Server::start(dir, cfg).expect("server start");
+    HttpServer::start(server, HttpConfig::default()).expect("http start")
+}
+
+fn server_cfg(cases: &[&str], trip: usize) -> ServerConfig {
+    ServerConfig {
+        cases: cases.iter().map(|s| s.to_string()).collect(),
+        max_wait: Duration::from_millis(5),
+        backend: Some("native".into()),
+        panic_trip_threshold: trip,
+        ..ServerConfig::default()
+    }
+}
+
+fn infer_body(n: usize) -> String {
+    format!("{{\"x\": [{}], \"n\": {n}}}", vec!["0.1"; n * 3].join(","))
+}
+
+fn infer_body_with_timeout(n: usize, timeout_ms: u64) -> String {
+    format!(
+        "{{\"x\": [{}], \"n\": {n}, \"timeout_ms\": {timeout_ms}}}",
+        vec!["0.1"; n * 3].join(",")
+    )
+}
+
+/// One request; returns the full raw response text (headers + body).
+fn raw_response(addr: SocketAddr, raw: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(raw.as_bytes()).expect("write");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    buf
+}
+
+fn post_infer_raw(addr: SocketAddr, body: &str) -> String {
+    let raw = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    raw_response(addr, &raw)
+}
+
+/// Parse the (single) response on the socket into `(status, body)`.
+fn parse_response(raw: &str) -> (u16, String) {
+    let head_end = raw.find("\r\n\r\n").expect("complete header block");
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|h| h.split(' ').next())
+        .and_then(|c| c.parse().ok())
+        .expect("status line");
+    (status, raw[head_end + 4..].to_string())
+}
+
+fn post_infer(addr: SocketAddr, body: &str) -> (u16, String) {
+    parse_response(&post_infer_raw(addr, body))
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    parse_response(&raw_response(addr, &raw))
+}
+
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+fn healthz_status(addr: SocketAddr) -> String {
+    let (_, body) = get(addr, "/healthz");
+    parse(&body)
+        .ok()
+        .and_then(|v| v.get("status").as_str().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------------
+// training helpers
+// ---------------------------------------------------------------------------
+
+/// Training-capable tiny case (the serving manifest helper leaves
+/// `dataset_meta` null; training needs a concrete Darcy split).
+fn train_fixture(tag: &str) -> (Manifest, flare::config::CaseCfg) {
+    let mut case = common::tiny_flare_case(tag, common::tiny_flare_model(16), 1);
+    case.dataset_meta =
+        parse(r#"{"kind":"darcy","n":16,"grid":4,"train":2,"test":1}"#).unwrap();
+    case.train_steps = 3;
+    let dir = common::write_manifest_dir(&format!("flare_chaos_{tag}"), &[&case]);
+    (Manifest::load(&dir).expect("manifest"), case)
+}
+
+// ---------------------------------------------------------------------------
+// serving: panic recovery, breaker, deadlines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_backend_panic_recovers_and_serves_next_request() {
+    let _guard = chaos_guard("native.forward_batch=1*panic");
+    let dir = tiny_manifest("panic_recover", 16, 1, 1);
+    let http = start_http(dir, server_cfg(&["panic_recover"], 3));
+    let addr = http.addr();
+
+    // first request rides the poisoned batch: typed retriable 503 with the
+    // pacing header, not a hung socket or a dead engine
+    let raw = post_infer_raw(addr, &infer_body(16));
+    let (status, body) = parse_response(&raw);
+    assert_eq!(status, 503, "body: {body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("error").get("code").as_str(), Some("backend_panic"));
+    assert_eq!(
+        v.get("error").get("detail").get("consecutive_panics").as_f64(),
+        Some(1.0)
+    );
+    let head = raw[..raw.find("\r\n\r\n").unwrap()].to_ascii_lowercase();
+    assert!(head.contains("retry-after: 1"), "503 must carry Retry-After: {head}");
+
+    // the streak is mirrored into /healthz as degraded-but-serving
+    assert!(
+        wait_until(Duration::from_secs(5), || healthz_status(addr) == "degraded"),
+        "healthz should report degraded after a panic"
+    );
+    let (hs, _) = get(addr, "/healthz");
+    assert_eq!(hs, 200, "degraded still serves");
+
+    // the failpoint is exhausted (1*panic): the engine re-warmed the bucket
+    // and the very next request succeeds
+    let (status, body) = post_infer(addr, &infer_body(16));
+    assert_eq!(status, 200, "recovery request failed: {body}");
+    assert!(
+        wait_until(Duration::from_secs(5), || healthz_status(addr) == "ok"),
+        "a success must reset the panic streak"
+    );
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metrics.contains("exec_panics"), "metrics: {metrics}");
+
+    failpoint::clear();
+    http.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn consecutive_panics_trip_breaker_to_engine_dead() {
+    let _guard = chaos_guard("server.execute_batch=panic");
+    let dir = tiny_manifest("breaker", 16, 1, 1);
+    let http = start_http(dir, server_cfg(&["breaker"], 2));
+    let addr = http.addr();
+
+    let (s1, b1) = post_infer(addr, &infer_body(16));
+    assert_eq!(s1, 503, "body: {b1}");
+    assert_eq!(parse(&b1).unwrap().get("error").get("code").as_str(), Some("backend_panic"));
+
+    let (s2, b2) = post_infer(addr, &infer_body(16));
+    assert_eq!(s2, 503, "body: {b2}");
+
+    // second consecutive panic reaches the threshold: the breaker trips and
+    // the engine moves to the terminal engine_dead state
+    assert!(
+        wait_until(Duration::from_secs(5), || healthz_status(addr) == "engine_dead"),
+        "breaker should trip to engine_dead, healthz says {:?}",
+        healthz_status(addr)
+    );
+    let (hs, hb) = get(addr, "/healthz");
+    assert_eq!(hs, 503, "dead nodes must fail the health probe: {hb}");
+    assert_eq!(parse(&hb).unwrap().get("total_panics").as_f64(), Some(2.0));
+
+    // new work bounces with the structured engine_dead error
+    let (s3, b3) = post_infer(addr, &infer_body(16));
+    assert_eq!(s3, 503, "body: {b3}");
+    assert_eq!(parse(&b3).unwrap().get("error").get("code").as_str(), Some("engine_dead"));
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metrics.contains("breaker_trips"), "metrics: {metrics}");
+
+    failpoint::clear();
+    // the engine thread exited with the breaker error; shutdown surfaces it
+    let _ = http.shutdown();
+}
+
+#[test]
+fn deadline_expired_request_gets_504_and_neighbors_are_served() {
+    // stall the first executed batch long enough for the deadline of a
+    // queued request to lapse; later hits pass clean
+    let _guard = chaos_guard("server.execute_batch=1*delay:200");
+    let dir = tiny_manifest("deadline", 16, 1, 1);
+    let http = start_http(dir, server_cfg(&["deadline"], 3));
+    let addr = http.addr();
+
+    let slow = std::thread::spawn(move || post_infer(addr, &infer_body(16)));
+    std::thread::sleep(Duration::from_millis(60)); // engine now inside the delay
+    let expired =
+        std::thread::spawn(move || post_infer(addr, &infer_body_with_timeout(16, 10)));
+    std::thread::sleep(Duration::from_millis(20)); // keep FIFO: expired before neighbor
+    let neighbor = std::thread::spawn(move || post_infer(addr, &infer_body(16)));
+
+    let (s_slow, b_slow) = slow.join().unwrap();
+    assert_eq!(s_slow, 200, "delayed batch must still be served: {b_slow}");
+
+    let (s_exp, b_exp) = expired.join().unwrap();
+    assert_eq!(s_exp, 504, "body: {b_exp}");
+    let v = parse(&b_exp).unwrap();
+    assert_eq!(v.get("error").get("code").as_str(), Some("deadline_exceeded"));
+    assert_eq!(v.get("error").get("detail").get("timeout_ms").as_f64(), Some(10.0));
+    assert!(v.get("error").get("detail").get("waited_ms").as_f64().unwrap() >= 10.0);
+
+    // shedding one expired request drops zero in-flight neighbors
+    let (s_nb, b_nb) = neighbor.join().unwrap();
+    assert_eq!(s_nb, 200, "neighbor of a shed request failed: {b_nb}");
+
+    // a shed is not a panic: the engine is healthy and fully drained (the
+    // in-flight gauge is decremented just after the replies go out)
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            let (_, hb) = get(addr, "/healthz");
+            let h = parse(&hb).unwrap();
+            h.get("status").as_str() == Some("ok")
+                && h.get("total_panics").as_f64() == Some(0.0)
+                && h.get("in_flight").as_f64() == Some(0.0)
+        }),
+        "engine must stay healthy and drain after a shed"
+    );
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metrics.contains("deadline_expired"), "metrics: {metrics}");
+
+    failpoint::clear();
+    http.shutdown().expect("clean shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// training: checkpoint corruption recovery, non-finite guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupted_checkpoint_resume_falls_back_to_bak() {
+    let _guard = chaos_guard("");
+    let (manifest, case) = train_fixture("ckpt_bak");
+    let backend = make_backend("native").unwrap();
+    let path = std::env::temp_dir().join("flare_chaos_ckpt_bak.ckpt");
+    std::fs::remove_file(flare::model::checkpoint::backup_path(&path)).ok();
+
+    // 4 steps with ckpt_every=2: primary holds step 4, `.bak` step 2
+    train_case(
+        backend.as_ref(),
+        &manifest,
+        &case,
+        &TrainOpts {
+            steps: Some(4),
+            ckpt_every: 2,
+            ckpt_path: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .expect("seed training run");
+
+    // bit-flip the primary's payload; the CRC catches it as a typed error
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    match load_checkpoint_typed(&path) {
+        Err(CkptError::ChecksumMismatch { .. }) => {}
+        other => panic!("corruption must be a typed checksum error, got {other:?}"),
+    }
+
+    // resume path: primary rejected, `.bak` (step 2) loads with the flag set
+    let (ck, from_bak) = load_checkpoint_or_backup(&path).expect("backup fallback");
+    assert!(from_bak, "fallback flag must be reported for the resume warning");
+    assert_eq!(ck.step, 2);
+    assert_eq!(ck.params.len(), case.param_count);
+
+    // and the rolled-back state actually trains forward
+    let resumed = train_case(
+        backend.as_ref(),
+        &manifest,
+        &case,
+        &TrainOpts {
+            steps: Some(2),
+            resume: Some((OptState { params: ck.params, m: ck.m, v: ck.v }, ck.step)),
+            ..Default::default()
+        },
+    )
+    .expect("resume from backup");
+    assert_eq!(resumed.steps, 4);
+    assert!(resumed.losses.iter().all(|l| l.is_finite()));
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(flare::model::checkpoint::backup_path(&path)).ok();
+}
+
+#[test]
+fn nan_loss_steps_are_skipped_and_counted() {
+    // poison the first two optimizer steps; the guard (threshold 3) skips
+    // them without aborting and the run recovers
+    let _guard = chaos_guard("train.nan_loss=2*err");
+    let (manifest, case) = train_fixture("nan_skip");
+    let backend = make_backend("native").unwrap();
+    let out = train_case(
+        backend.as_ref(),
+        &manifest,
+        &case,
+        &TrainOpts {
+            steps: Some(5),
+            max_nonfinite: 3,
+            ..Default::default()
+        },
+    )
+    .expect("guarded run must survive 2 poisoned steps");
+    assert_eq!(out.skipped_steps, 2);
+    assert_eq!(out.losses.len(), 5);
+    assert!(out.losses[0].is_nan() && out.losses[1].is_nan());
+    assert!(out.losses[2..].iter().all(|l| l.is_finite()));
+    assert!(out.final_metric.is_finite());
+    failpoint::clear();
+}
+
+#[test]
+fn nan_loss_streak_aborts_with_typed_divergence_error() {
+    // every step poisoned: the streak hits the threshold and aborts instead
+    // of silently training on garbage
+    let _guard = chaos_guard("train.nan_loss=err");
+    let (manifest, case) = train_fixture("nan_abort");
+    let backend = make_backend("native").unwrap();
+    let err = train_case(
+        backend.as_ref(),
+        &manifest,
+        &case,
+        &TrainOpts {
+            steps: Some(5),
+            max_nonfinite: 2,
+            ..Default::default()
+        },
+    )
+    .expect_err("unbroken NaN streak must abort");
+    assert!(
+        err.to_string().contains("training diverged"),
+        "unexpected error: {err}"
+    );
+    failpoint::clear();
+}

@@ -16,8 +16,9 @@ use flare::linalg::kernel::{
 };
 use flare::linalg::vexp::vexp;
 use flare::model::{build_spec, init_params};
-use flare::runtime::{make_backend, BatchInput, BatchTarget, NativeBackend, OptState};
+use flare::runtime::{make_backend, Backend, BatchInput, BatchTarget, NativeBackend, OptState};
 use flare::train::AdamW;
+use flare::util::comms::{CommsHub, GradExchange, Transport, WorkerExchange};
 use flare::util::json::Json;
 use flare::util::rng::Rng;
 
@@ -273,6 +274,158 @@ fn main() -> anyhow::Result<()> {
         all.push(meas);
     }
     ktable.print();
+
+    // data-parallel gradient exchange: raw allreduce round-trip cost per
+    // transport (worker root in, reduced total out — the per-micro-batch
+    // collective `train --ranks K` pays), then a full train step at
+    // ranks=1 vs ranks=2.  Worker ranks run on a thread with their own
+    // backend; every rank is pinned to one compute thread so the ranks2/
+    // ranks1 ratio isolates the data-parallel split itself (in the real
+    // launcher each rank gets cores/K threads on top of this).
+    println!("\n=== data-parallel exchange + ranks ===\n");
+    let mut dtable = Table::new(&["op", "payload", "ms/round", "MB/s"]);
+    let pc = if quick_mode() { 1usize << 18 } else { 1usize << 20 };
+    for transport in [Transport::Shm, Transport::Tcp] {
+        let sess = format!("bench-{}-{}", std::process::id(), transport.as_str());
+        let hub = CommsHub::bind(transport, 2, pc, &sess)?;
+        let addr = hub.addr();
+        let wsess = sess.clone();
+        let worker = std::thread::spawn(move || {
+            let mut ex = match WorkerExchange::connect(&addr, &wsess, 1, 2, pc) {
+                Ok(ex) => ex,
+                Err(_) => return,
+            };
+            let grad = vec![1.0f32; pc];
+            let mut total = vec![0.0f32; pc];
+            // serve rounds until the coordinator drops the exchange
+            loop {
+                if ex.send_root(true, 1.0, &grad).is_err() {
+                    break;
+                }
+                if ex.recv_total(&mut total).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut coord = hub.accept(|| Ok(()))?;
+        let mut acc = vec![0.0f32; pc];
+        let name = format!("allreduce_exchange_{}", transport.as_str());
+        let mut meas = bench.run(&name, || {
+            let roots = coord.gather().expect("gather");
+            // fold the root in, like the reduction tree would
+            for (a, &b) in acc.iter_mut().zip(roots[0].grad.iter()) {
+                *a += b;
+            }
+            coord.broadcast(1.0, &acc).expect("broadcast");
+        });
+        // one round moves the payload twice: root in, total out
+        let bytes_per_s = (pc * 4 * 2) as f64 / (meas.mean_ms() / 1e3);
+        meas.extras.push(("payload_bytes".into(), (pc * 4) as f64));
+        meas.extras.push(("bytes_per_s".into(), bytes_per_s));
+        dtable.row(vec![
+            name,
+            format!("{} MB", pc * 4 >> 20),
+            format!("{:.3}", meas.mean_ms()),
+            format!("{:.1}", bytes_per_s / 1e6),
+        ]);
+        all.push(meas);
+        drop(coord); // closes the doorbell; the worker loop exits
+        worker.join().expect("exchange worker");
+    }
+    {
+        let (n, c, m, blocks) = if quick_mode() { (256, 16, 16, 2) } else { (1024, 32, 32, 2) };
+        let case = make_case("train_dp", n, c, m, blocks);
+        let batch = case.batch;
+        let x: Vec<f32> = (0..batch * n * 3).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..batch * n).map(|_| rng.normal() as f32).collect();
+        // S=2 logical shards: rank 0 owns sample 0, rank 1 owns sample 1 —
+        // the same layout single-process, so ranks1 is the exact arithmetic
+        // ranks2 distributes
+        let b1 = NativeBackend::with_threads(1).with_logical_shards(2);
+        let mut st1 = OptState::new(init_params(&case.params, case.param_count, 1));
+        let mut step1 = 0usize;
+        let meas = bench.run("train_step_ranks1", || {
+            b1.train_step(
+                &manifest,
+                &case,
+                &mut st1,
+                step1,
+                1e-3,
+                BatchInput::Fields(&x),
+                BatchTarget::Fields(&y),
+            )
+            .expect("ranks1 step");
+            step1 += 1;
+        });
+        dtable.row(vec![
+            "train_step_ranks1".into(),
+            format!("{} params", case.param_count),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+
+        let sess = format!("bench-{}-ranks2", std::process::id());
+        let hub = CommsHub::bind(Transport::Shm, 2, case.param_count, &sess)?;
+        let addr = hub.addr();
+        let (wcase, wx, wy, wsess) = (case.clone(), x.clone(), y.clone(), sess.clone());
+        let worker = std::thread::spawn(move || {
+            let ex = match WorkerExchange::connect(&addr, &wsess, 1, 2, wcase.param_count) {
+                Ok(ex) => ex,
+                Err(_) => return,
+            };
+            let backend = NativeBackend::with_threads(1)
+                .with_logical_shards(2)
+                .with_dp(1, 2, Box::new(ex));
+            let manifest = flare::config::Manifest::builtin("nowhere");
+            let mut st = OptState::new(init_params(&wcase.params, wcase.param_count, 1));
+            let mut step = 0usize;
+            // lockstep with rank 0 until the coordinator drops the exchange
+            while backend
+                .train_step(
+                    &manifest,
+                    &wcase,
+                    &mut st,
+                    step,
+                    1e-3,
+                    BatchInput::Fields(&wx),
+                    BatchTarget::Fields(&wy),
+                )
+                .is_ok()
+            {
+                step += 1;
+            }
+        });
+        let ex = hub.accept(|| Ok(()))?;
+        let b2 = NativeBackend::with_threads(1)
+            .with_logical_shards(2)
+            .with_dp(0, 2, Box::new(ex));
+        let mut st2 = OptState::new(init_params(&case.params, case.param_count, 1));
+        let mut step2 = 0usize;
+        let meas = bench.run("train_step_ranks2", || {
+            b2.train_step(
+                &manifest,
+                &case,
+                &mut st2,
+                step2,
+                1e-3,
+                BatchInput::Fields(&x),
+                BatchTarget::Fields(&y),
+            )
+            .expect("ranks2 step");
+            step2 += 1;
+        });
+        dtable.row(vec![
+            "train_step_ranks2".into(),
+            format!("{} params", case.param_count),
+            format!("{:.3}", meas.mean_ms()),
+            "-".into(),
+        ]);
+        all.push(meas);
+        drop(b2); // closes the exchange; the worker's next round errors out
+        worker.join().expect("ranks2 worker");
+    }
+    dtable.print();
 
     let path = save_results("train_step", &all)?;
     println!("results written to {path:?}");

@@ -142,6 +142,57 @@ pub fn env_precision() -> Option<Precision> {
     })
 }
 
+/// Default fixed logical-shard count for the gradient reduction tree.
+/// Chosen independently of thread and rank counts so the tree's merge
+/// order — and therefore the summed gradient — is bitwise identical at any
+/// parallelism (see `runtime::native` and README "Distributed training").
+pub const DEFAULT_LOGICAL_SHARDS: usize = 64;
+
+/// Validate a logical-shard count: must be a power of two ≥ 1 so every
+/// power-of-two rank count owns an aligned subtree of the reduction.
+pub fn validate_logical_shards(s: usize) -> anyhow::Result<usize> {
+    if s == 0 || !s.is_power_of_two() {
+        anyhow::bail!("logical shard count must be a power of two >= 1, got {s}");
+    }
+    Ok(s)
+}
+
+/// Logical-shard override from `FLARE_LOGICAL_SHARDS` (unset or empty means
+/// no override; a malformed value is an error, not a silent default —
+/// changing the shard count silently would change training numerics).
+/// Read per call: backend construction is cold path.
+pub fn env_logical_shards() -> anyhow::Result<Option<usize>> {
+    match std::env::var("FLARE_LOGICAL_SHARDS") {
+        Ok(v) if !v.trim().is_empty() => {
+            let n = v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("FLARE_LOGICAL_SHARDS={v:?} is not a number"))?;
+            Ok(Some(validate_logical_shards(n)?))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Resolve the logical-shard count with the standard precedence:
+/// CLI `--logical-shards` > `FLARE_LOGICAL_SHARDS` env > manifest root
+/// `logical_shards` > [`DEFAULT_LOGICAL_SHARDS`].
+pub fn resolve_logical_shards(
+    cli: Option<usize>,
+    manifest: Option<usize>,
+) -> anyhow::Result<usize> {
+    if let Some(s) = cli {
+        return validate_logical_shards(s);
+    }
+    if let Some(s) = env_logical_shards()? {
+        return Ok(s);
+    }
+    if let Some(s) = manifest {
+        return validate_logical_shards(s);
+    }
+    Ok(DEFAULT_LOGICAL_SHARDS)
+}
+
 /// One case: a model bound to a dataset shape with its artifact files.
 #[derive(Debug, Clone)]
 pub struct CaseCfg {
@@ -204,6 +255,10 @@ pub struct LayerCfg {
 pub struct Manifest {
     pub seed: u64,
     pub dir: PathBuf,
+    /// root `logical_shards` knob: fixed gradient-reduction shard count for
+    /// every trained case (`None` inherits env/default; see
+    /// [`resolve_logical_shards`])
+    pub logical_shards: Option<usize>,
     pub cases: Vec<CaseCfg>,
     pub mixers: Vec<MixerCfg>,
     pub layers: Vec<LayerCfg>,
@@ -217,6 +272,10 @@ impl Manifest {
             .map_err(|e| anyhow::anyhow!("reading manifest in {dir:?}: {e}"))?;
         let j = parse(&text)?;
         let seed = j.get("seed").as_usize().unwrap_or(42) as u64;
+        let logical_shards = match j.get("logical_shards").as_usize() {
+            Some(s) => Some(validate_logical_shards(s)?),
+            None => None,
+        };
 
         let mut cases = Vec::new();
         for c in j.get("cases").as_arr().unwrap_or(&[]) {
@@ -291,6 +350,7 @@ impl Manifest {
         Ok(Manifest {
             seed,
             dir,
+            logical_shards,
             cases,
             mixers,
             layers,
@@ -429,6 +489,7 @@ impl Manifest {
         Manifest {
             seed: 42,
             dir: dir.as_ref().to_path_buf(),
+            logical_shards: None,
             cases,
             mixers: vec![],
             layers: vec![],
@@ -533,6 +594,40 @@ mod tests {
         for p in [Precision::F32, Precision::Bf16, Precision::Int8] {
             assert_eq!(Precision::parse(p.as_str()).unwrap(), p, "as_str round-trip");
         }
+    }
+
+    #[test]
+    fn logical_shards_knob_validates_and_resolves() {
+        for ok in [1usize, 2, 16, 64, 1024] {
+            assert_eq!(validate_logical_shards(ok).unwrap(), ok);
+        }
+        for bad in [0usize, 3, 6, 48, 100] {
+            assert!(validate_logical_shards(bad).is_err(), "{bad} must be rejected");
+        }
+        // precedence: CLI > manifest > default (env is covered by dp tests
+        // to keep this process env-clean)
+        assert_eq!(resolve_logical_shards(Some(16), Some(32)).unwrap(), 16);
+        assert_eq!(resolve_logical_shards(None, Some(32)).unwrap(), 32);
+        assert_eq!(resolve_logical_shards(None, None).unwrap(), DEFAULT_LOGICAL_SHARDS);
+        assert!(resolve_logical_shards(Some(12), None).is_err());
+        assert!(resolve_logical_shards(None, Some(12)).is_err());
+
+        // manifest root knob parses and validates
+        let dir = std::env::temp_dir().join("flare_cfg_shards_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 1, "logical_shards": 16, "cases": [], "mixers": [], "layers": []}"#,
+        )
+        .unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().logical_shards, Some(16));
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 1, "logical_shards": 7, "cases": [], "mixers": [], "layers": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err(), "non-power-of-two manifest knob must fail");
+        assert_eq!(Manifest::builtin("nowhere").logical_shards, None);
     }
 
     #[test]

@@ -112,6 +112,15 @@ fn print_help() {
                                        as FILE.bak — --resume falls back)\n\
                     [--max-nonfinite K] abort after K consecutive NaN/inf\n\
                                        steps (skipped, params kept; def 3)\n\
+                    [--ranks K]        K-process data-parallel training\n\
+                                       (power of two; native backend; the\n\
+                                       summed gradient — and checkpoint —\n\
+                                       is bitwise identical at any K;\n\
+                                       $FLARE_COMMS shm|tcp transport)\n\
+                    [--logical-shards S] fixed gradient-reduction shard\n\
+                                       count (power of two, default 64;\n\
+                                       $FLARE_LOGICAL_SHARDS / manifest\n\
+                                       'logical_shards' also set it)\n\
            serve    --case <name>      serving engine + demo load\n\
                     [--requests K] [--concurrency C]\n\
                     [--addr HOST:PORT] HTTP/1.1 front end instead of demo\n\
@@ -244,13 +253,71 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let m = Manifest::load_or_builtin(manifest_dir(args))?;
     let name = args.get_or("case", "core_darcy_flare").to_string();
     let case = m.case(&name)?;
+    let ranks = args.get_usize("ranks")?.unwrap_or(1).max(1);
+    let logical_shards =
+        flare::config::resolve_logical_shards(args.get_usize("logical-shards")?, m.logical_shards)?;
+    // publish the resolved count so backends built below (and worker ranks,
+    // which inherit the environment) all cut the same reduction tree
+    std::env::set_var("FLARE_LOGICAL_SHARDS", logical_shards.to_string());
+
+    // worker re-entry: this process is rank >= 1 of a `train --ranks K` job
+    if let Some(w) = flare::train::dp::worker_env()? {
+        let ex = flare::util::comms::WorkerExchange::connect(
+            &w.addr,
+            &w.session,
+            w.rank,
+            w.ranks,
+            case.param_count,
+        )
+        .map_err(|e| anyhow::anyhow!("rank {} rendezvous: {e}", w.rank))?;
+        let backend = flare::runtime::NativeBackend::new()
+            .with_logical_shards(logical_shards)
+            .with_dp(w.rank, w.ranks, Box::new(ex));
+        return run_train(args, &m, &name, &backend, Some((w.rank, w.ranks)));
+    }
+
+    if ranks > 1 {
+        anyhow::ensure!(
+            args.get("backend").map_or(true, |b| b == "native"),
+            "--ranks needs the native backend (got --backend {:?})",
+            args.get("backend").unwrap_or_default()
+        );
+        // must run before the first thread-pool touch so rank 0's
+        // per-rank thread budget can still be pinned
+        let (layout, exchange, mut set) =
+            flare::train::dp::launch(ranks, logical_shards, case.param_count)?;
+        let backend = flare::runtime::NativeBackend::new()
+            .with_logical_shards(layout.logical_shards)
+            .with_dp(0, ranks, Box::new(exchange));
+        return match run_train(args, &m, &name, &backend, Some((0, ranks))) {
+            Ok(()) => set.wait_all(),
+            Err(e) => Err(set.fail(e)),
+        };
+    }
+
     let backend = backend_from_args(args)?;
+    run_train(args, &m, &name, backend.as_ref(), None)
+}
+
+/// The body of `train`: parse the training options, run
+/// [`train_case`], print the report and write the final checkpoint.
+/// Under `--ranks K` this runs on every rank with `dp = Some((rank, K))`;
+/// worker ranks stay silent and never write the checkpoint.
+fn run_train(
+    args: &Args,
+    m: &Manifest,
+    name: &str,
+    backend: &dyn Backend,
+    dp: Option<(usize, usize)>,
+) -> anyhow::Result<()> {
+    let case = m.case(name)?;
+    let is_worker = dp.is_some_and(|(rank, _)| rank > 0);
     let resume = match args.get("resume") {
         Some(path) => {
             // a torn/corrupted primary falls back to the `.bak` rotation
             // the atomic saver keeps (warning printed when that happens)
             let (ck, from_bak) = flare::model::load_checkpoint_or_backup(path)?;
-            if from_bak {
+            if from_bak && !is_worker {
                 println!(
                     "warning: checkpoint {path} failed verification; resuming from {}",
                     flare::model::checkpoint::backup_path(path).display()
@@ -272,7 +339,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             );
             let mom = if ck.m.is_empty() { vec![0.0; len] } else { ck.m };
             let vel = if ck.v.is_empty() { vec![0.0; len] } else { ck.v };
-            println!("resuming from {path} at step {}", ck.step);
+            if !is_worker {
+                println!("resuming from {path} at step {}", ck.step);
+            }
             Some((
                 flare::runtime::OptState {
                     params: ck.params,
@@ -300,20 +369,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ckpt_every,
         ckpt_path: args.get("ckpt").map(std::path::PathBuf::from),
         max_nonfinite: args.get_usize("max-nonfinite")?.unwrap_or(3),
+        dp,
     };
-    println!(
-        "training {name} on {} backend: {} params, dataset {}, batch {}{}",
-        backend.name(),
-        case.param_count,
-        case.dataset,
-        case.batch,
-        if accum > 1 {
-            format!(" (x{accum} accumulated = {} effective)", accum * case.batch)
-        } else {
-            String::new()
-        }
-    );
-    let out = train_case(backend.as_ref(), &m, case, &opts)?;
+    if !is_worker {
+        println!(
+            "training {name} on {} backend: {} params, dataset {}, batch {}{}",
+            backend.name(),
+            case.param_count,
+            case.dataset,
+            case.batch,
+            if accum > 1 {
+                format!(" (x{accum} accumulated = {} effective)", accum * case.batch)
+            } else {
+                String::new()
+            }
+        );
+    }
+    let out = train_case(backend, m, case, &opts)?;
+    if is_worker {
+        return Ok(()); // artifacts and reporting are rank 0's job
+    }
     println!(
         "done: {} steps in {:.1}s ({:.1} ms/step p50 {:.1})",
         out.steps, out.wall_s, out.step_ms.mean, out.step_ms.p50

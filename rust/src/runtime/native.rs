@@ -11,16 +11,18 @@
 //! with zero transient heap allocations once warm.
 //!
 //! Training is native too, and allocation-conscious: per-sample reverse
-//! passes ([`crate::model::backward`]) accumulate **in place** into
-//! gradient shards that persist inside the backend across steps
-//! ([`parallel_sharded`] gives each worker exclusive ownership of one
-//! shard), the shards are reduced tree-wise, and the fused
-//! [`AdamW`] update folds the `1/batch` average into its scale factor — no
-//! per-sample gradient buffers, no averaging pass.  The split
-//! [`Backend::grad_batch`] / [`Backend::apply_update`] entry points expose
-//! the same machinery to the trainer's gradient-accumulation loop
-//! (`--accum K`).  Under `FLARE_THREADS=1` everything runs inline in
-//! sample order, keeping the bitwise determinism contract.
+//! passes ([`crate::model::backward`]) accumulate **in place** into a
+//! fixed set of **logical** gradient shards that persist inside the
+//! backend across steps, and the shards are reduced by a gap-doubling tree
+//! whose merge order depends only on the logical-shard index — never on
+//! the thread count, pool scheduling, or (under `train --ranks K`) the
+//! rank count — so the summed gradient is bitwise identical at any
+//! parallelism.  The fused [`AdamW`] update folds the `1/batch` average
+//! into its scale factor — no per-sample gradient buffers, no averaging
+//! pass.  The split [`Backend::grad_batch`] / [`Backend::apply_update`]
+//! entry points expose the same machinery to the trainer's
+//! gradient-accumulation loop (`--accum K`); data-parallel ranks complete
+//! the same tree across processes through [`crate::util::comms`].
 //!
 //! Capability errors route through `forward::check_native_supported`, so an
 //! unsupported configuration names the offending field (mixer kind,
@@ -37,7 +39,8 @@ use crate::model::forward::{self, ParamTable, QuantTable};
 use crate::model::{build_spec, index_by_name};
 use crate::runtime::backend::{Backend, BatchInput, BatchTarget, OptState};
 use crate::train::AdamW;
-use crate::util::threadpool::{parallel_chunks_mut_threads, parallel_map, parallel_sharded};
+use crate::util::comms::GradExchange;
+use crate::util::threadpool::{parallel_chunks_mut_threads, parallel_map, parallel_sharded_threads};
 use crate::util::workspace::{take, WsBuf};
 
 /// Resolved execution plan for one case.
@@ -98,9 +101,9 @@ fn check_trainable_precision(case: &CaseCfg) -> anyhow::Result<()> {
     }
 }
 
-/// One worker's gradient shard during the batch fan-out: per-sample
-/// gradients accumulate into `grad`, losses into `loss`; the first error
-/// aborts that worker's remaining samples.
+/// One logical gradient shard during the batch fan-out: per-sample
+/// gradients accumulate into `grad` in sample order, losses into `loss`;
+/// the first error aborts that shard's remaining samples.
 struct GradShard<'a> {
     grad: &'a mut [f32],
     loss: f64,
@@ -111,11 +114,26 @@ struct GradShard<'a> {
 pub struct NativeBackend {
     plans: RefCell<HashMap<String, Rc<Plan>>>,
     threads: usize,
-    /// Persistent per-worker gradient shards for the batch fan-out: with
-    /// the long-lived executor pool these survive across train steps
+    /// Fixed logical-shard count of the gradient reduction tree.  Chosen
+    /// independently of thread and rank counts (power of two; default 64
+    /// via `FLARE_LOGICAL_SHARDS`/manifest), so the tree's merge order —
+    /// and therefore the summed gradient — is bitwise identical at any
+    /// `FLARE_THREADS` and any `--ranks`.
+    logical_shards: usize,
+    /// Data-parallel slice `(rank, ranks)`: this process owns the
+    /// contiguous logical-shard block
+    /// `[rank·S/ranks, (rank+1)·S/ranks)`.  `(0, 1)` is single-process.
+    dp: (usize, usize),
+    /// Gradient-exchange transport when `dp.1 > 1` (see
+    /// [`crate::util::comms`]): workers send their block root to rank 0,
+    /// rank 0 finishes the tree and broadcasts the total.
+    exchange: RefCell<Option<Box<dyn GradExchange>>>,
+    /// Persistent gradient-shard buffers for the batch fan-out: with the
+    /// long-lived executor pool these survive across train steps
     /// (re-zeroed per step), so the fan-out never round-trips shard storage
-    /// through the workspace reservoir.  Entry `w` backs extra shard `w`
-    /// (shard 0 accumulates straight into the caller's buffer).
+    /// through the workspace reservoir.  On rank 0 the first local shard
+    /// accumulates straight into the caller's buffer; every other local
+    /// shard is backed here.
     grad_shards: RefCell<Vec<Vec<f32>>>,
     /// Per-case int8 weight tables (see [`QuantCache`]); only populated
     /// when a forward actually resolves to the int8 tier.
@@ -128,23 +146,65 @@ impl NativeBackend {
     }
 
     /// A backend pinned to an explicit worker budget.  `with_threads(1)`
-    /// forces the inline sample-order path on any machine — the same
+    /// forces the inline shard-order path on any machine — the same
     /// arithmetic as the `FLARE_THREADS=1` determinism leg, which tests use
     /// to compare the pooled fan-out against the sequential reference
     /// without re-launching the process.  The budget is a **cap**: effective
     /// workers never exceed the process-wide pool size
-    /// (`default_threads()`), so `with_threads(N > default)` runs with the
-    /// pool's worker count — on a single-worker environment the fan-out
-    /// legs run inline, but a multi-shard gradient budget still exercises
-    /// the multi-shard arithmetic (shard count follows the budget, worker
-    /// count follows the pool).
+    /// (`default_threads()`).  The gradient **shard layout** never follows
+    /// the budget: shard count and merge order are fixed by
+    /// [`NativeBackend::with_logical_shards`], so gradients are bitwise
+    /// identical at every budget.
     pub fn with_threads(threads: usize) -> NativeBackend {
+        let logical_shards = crate::config::env_logical_shards()
+            .ok()
+            .flatten()
+            .unwrap_or(crate::config::DEFAULT_LOGICAL_SHARDS);
         NativeBackend {
             plans: RefCell::new(HashMap::new()),
             threads: threads.max(1),
+            logical_shards,
+            dp: (0, 1),
+            exchange: RefCell::new(None),
             grad_shards: RefCell::new(Vec::new()),
             quants: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// Pin the logical-shard count of the gradient reduction tree (power of
+    /// two; callers validate via `config::validate_logical_shards`).
+    pub fn with_logical_shards(mut self, shards: usize) -> NativeBackend {
+        assert!(
+            shards.is_power_of_two(),
+            "logical shard count must be a power of two, got {shards}"
+        );
+        self.logical_shards = shards;
+        self
+    }
+
+    /// Bind this backend to data-parallel rank `rank` of `ranks`, with
+    /// `exchange` carrying block roots to rank 0 and totals back.  `ranks`
+    /// must be a power of two ≤ the logical-shard count so every rank owns
+    /// an aligned subtree of the reduction.
+    pub fn with_dp(
+        mut self,
+        rank: usize,
+        ranks: usize,
+        exchange: Box<dyn GradExchange>,
+    ) -> NativeBackend {
+        assert!(
+            ranks.is_power_of_two() && rank < ranks && ranks <= self.logical_shards,
+            "invalid dp layout: rank {rank} of {ranks}, {} logical shards",
+            self.logical_shards
+        );
+        self.dp = (rank, ranks);
+        self.exchange = RefCell::new(Some(exchange));
+        self
+    }
+
+    /// Fixed logical-shard count of the gradient reduction tree.
+    pub fn logical_shards(&self) -> usize {
+        self.logical_shards
     }
 
     /// Which precision tiers this backend can execute (capability
@@ -188,11 +248,24 @@ impl NativeBackend {
         Ok(plan)
     }
 
-    /// Fan `batch` per-sample reverse passes across gradient shards and
-    /// tree-reduce them into `grad_acc` (which receives the **sum** on top
-    /// of whatever it already holds — the accumulation contract).  Returns
-    /// the summed loss.  `sample(i, grads)` runs one sample's forward +
-    /// backward, accumulating into its worker's shard.
+    /// Fan `batch` per-sample reverse passes across this rank's logical
+    /// gradient shards, tree-reduce them, and (under `--ranks K`) complete
+    /// the reduction across ranks over the exchange — into `grad_acc`,
+    /// which receives the **global sum** on top of whatever it already
+    /// holds (the accumulation contract).  Returns the globally summed
+    /// loss.  `sample(i, grads)` runs one sample's forward + backward,
+    /// accumulating into its shard.
+    ///
+    /// Determinism: the batch is cut into `chunk = ⌈batch/S⌉`-sample
+    /// logical shards (`S = logical_shards`, fixed), so the non-empty
+    /// shards are the prefix `0..⌈batch/chunk⌉`.  Each shard's samples
+    /// accumulate in index order, and the gap-doubling merge order is a
+    /// function of logical-shard index only.  Because `S` and the rank
+    /// count are powers of two, each rank's block is an aligned subtree:
+    /// local-reduce-then-root-tree performs the exact same f32 additions
+    /// in the exact same order as one process reducing all `S` shards —
+    /// the summed gradient is bitwise identical at any `FLARE_THREADS`
+    /// and any `--ranks`.
     fn sharded_grads(
         &self,
         plan: &Plan,
@@ -200,30 +273,36 @@ impl NativeBackend {
         grad_acc: &mut [f32],
         sample: impl Fn(usize, &mut GradTable) -> anyhow::Result<f64> + Sync,
     ) -> anyhow::Result<f64> {
-        let threads = self.threads.clamp(1, batch.max(1));
-        if threads == 1 {
-            // inline in sample order: the FLARE_THREADS=1 bitwise path
-            let mut grads = GradTable::new(grad_acc, &plan.entries);
-            let mut loss_sum = 0.0f64;
-            for i in 0..batch {
-                loss_sum += sample(i, &mut grads)?;
-            }
-            return Ok(loss_sum);
-        }
-        // shard 0 accumulates straight into grad_acc; extra shards are the
-        // backend's persistent per-worker buffers, re-zeroed here (they
-        // outlive the step, so no pool traffic and no reservoir locking)
+        let s_total = self.logical_shards;
+        let (rank, ranks) = self.dp;
+        let block = s_total / ranks;
+        let (lo, hi) = (rank * block, (rank + 1) * block);
+        // fixed partition: shard s owns samples [s·chunk, (s+1)·chunk);
+        // non-empty shards are the contiguous prefix 0..ne
+        let chunk = batch.div_ceil(s_total);
+        let ne = batch.div_ceil(chunk);
+        let (local_lo, local_hi) = (lo.min(ne), hi.min(ne));
+        let local_ne = local_hi - local_lo;
+
+        // shard buffers: on rank 0 the first local shard (= global shard 0)
+        // accumulates straight into grad_acc so the pre-existing
+        // accumulation lands exactly once; every other local shard is a
+        // persistent zeroed backend buffer (pure shard sums)
+        let into_acc = rank == 0 && local_ne > 0;
+        let extra_needed = local_ne.saturating_sub(into_acc as usize);
         let mut extra = self.grad_shards.borrow_mut();
-        if extra.len() < threads - 1 {
-            extra.resize(threads - 1, Vec::new());
+        if extra.len() < extra_needed {
+            extra.resize(extra_needed, Vec::new());
         }
-        let mut shards: Vec<GradShard> = Vec::with_capacity(threads);
-        shards.push(GradShard {
-            grad: grad_acc,
-            loss: 0.0,
-            err: None,
-        });
-        for buf in extra.iter_mut().take(threads - 1) {
+        let mut shards: Vec<GradShard> = Vec::with_capacity(local_ne);
+        if into_acc {
+            shards.push(GradShard {
+                grad: grad_acc,
+                loss: 0.0,
+                err: None,
+            });
+        }
+        for buf in extra.iter_mut().take(extra_needed) {
             if buf.len() != plan.param_count {
                 buf.clear();
                 buf.resize(plan.param_count, 0.0);
@@ -236,17 +315,25 @@ impl NativeBackend {
                 err: None,
             });
         }
-        parallel_sharded(batch, &mut shards, |shard, i| {
-            if shard.err.is_some() {
-                return;
-            }
+        // one fan-out item per local shard (each shard visited exactly
+        // once); samples iterate in index order inside their shard, so
+        // worker scheduling can never reorder arithmetic
+        parallel_sharded_threads(local_ne, &mut shards, self.threads, |shard, li| {
+            let s = local_lo + li;
             let mut grads = GradTable::new(shard.grad, &plan.entries);
-            match sample(i, &mut grads) {
-                Ok(loss) => shard.loss += loss,
-                Err(e) => shard.err = Some(e),
+            for i in s * chunk..batch.min((s + 1) * chunk) {
+                match sample(i, &mut grads) {
+                    Ok(loss) => shard.loss += loss,
+                    Err(e) => {
+                        shard.err = Some(e);
+                        return;
+                    }
+                }
             }
         });
-        // tree-wise in-place reduction: gap-doubling pairwise merges
+        // local tree reduction: gap-doubling pairwise merges over this
+        // rank's aligned block (identical to the global tree's intra-block
+        // merges because the block base is a multiple of every sub-gap)
         let mut gap = 1;
         while gap < shards.len() {
             let mut i = 0;
@@ -264,11 +351,102 @@ impl NativeBackend {
             }
             gap *= 2;
         }
-        let root = &mut shards[0];
-        if let Some(e) = root.err.take() {
+        let (local_loss, local_err) = match shards.first_mut() {
+            Some(root) => (root.loss, root.err.take()),
+            None => (0.0, None),
+        };
+        drop(shards);
+        if ranks == 1 {
+            return match local_err {
+                Some(e) => Err(e),
+                None => Ok(local_loss),
+            };
+        }
+        self.dp_exchange(grad_acc, &mut extra, local_ne, local_loss, local_err, ne)
+    }
+
+    /// Cross-rank completion of the reduction (see [`Self::sharded_grads`]):
+    /// workers ship their block root to rank 0, rank 0 runs the root
+    /// gap-doubling tree in the same merge order the single-process tree
+    /// would use for those shard indices, then broadcasts the total.  Every
+    /// rank leaves with `grad_acc` holding the identical global sum, so the
+    /// subsequent (local) optimizer update keeps all ranks in lockstep
+    /// without a parameter broadcast.
+    #[allow(clippy::too_many_arguments)]
+    fn dp_exchange(
+        &self,
+        grad_acc: &mut [f32],
+        extra: &mut [Vec<f32>],
+        local_ne: usize,
+        local_loss: f64,
+        local_err: Option<anyhow::Error>,
+        ne: usize,
+    ) -> anyhow::Result<f64> {
+        let (rank, ranks) = self.dp;
+        let block = self.logical_shards / ranks;
+        let mut ex = self.exchange.borrow_mut();
+        let ex = ex
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("dp backend (rank {rank}/{ranks}) has no exchange"))?;
+        // chaos site: arm on a worker (panic/err) to exercise the
+        // rank-crash path — rank 0 must surface a typed CommsError
+        crate::failpoint!("comms.exchange")?;
+        if rank > 0 {
+            // a local per-sample error aborts this rank, but only after
+            // telling rank 0 why — the coordinator surfaces the message
+            // instead of a bare disconnect
+            if let Some(e) = local_err {
+                let _ = ex.abort(&format!("{e:#}"));
+                return Err(e);
+            }
+            let root_grad = if local_ne > 0 { &extra[0][..] } else { &[][..] };
+            ex.send_root(local_ne > 0, local_loss, root_grad)?;
+            let total = ex.recv_total(grad_acc)?;
+            return Ok(total);
+        }
+        // rank 0: gather worker block roots, then finish the tree.  Block
+        // roots of empty blocks (rank·block ≥ ne) are skip merges — the
+        // non-empty blocks are a prefix of the rank order, so a populated
+        // source never merges into an empty destination.
+        let roots = ex.gather()?;
+        debug_assert_eq!(roots.len(), ranks - 1);
+        if let Some(e) = local_err {
+            let _ = ex.abort(&format!("{e:#}"));
             return Err(e);
         }
-        Ok(root.loss)
+        if let Some(r) = roots.iter().position(|m| m.aborted) {
+            let msg = std::mem::take(&mut roots[r].abort_msg);
+            let _ = ex.abort("peer rank aborted");
+            anyhow::bail!("rank {} aborted during gradient exchange: {msg}", r + 1);
+        }
+        let mut loss0 = local_loss;
+        let mut h = 1;
+        while h < ranks {
+            let mut r = 0;
+            while r + h < ranks {
+                let src_occupied = (r + h) * block < ne;
+                if src_occupied {
+                    if r == 0 {
+                        let src = &roots[h - 1];
+                        for (a, &b) in grad_acc.iter_mut().zip(src.grad.iter()) {
+                            *a += b;
+                        }
+                        loss0 += src.loss;
+                    } else {
+                        let (head, tail) = roots.split_at_mut(r + h - 1);
+                        let (dst, src) = (&mut head[r - 1], &tail[0]);
+                        for (a, &b) in dst.grad.iter_mut().zip(src.grad.iter()) {
+                            *a += b;
+                        }
+                        dst.loss += src.loss;
+                    }
+                }
+                r += 2 * h;
+            }
+            h *= 2;
+        }
+        ex.broadcast(loss0, grad_acc)?;
+        Ok(loss0)
     }
 }
 

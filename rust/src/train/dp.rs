@@ -1,0 +1,275 @@
+//! Rank-per-process data-parallel launcher.
+//!
+//! `train --ranks K` turns the training binary into a K-process data
+//! parallel job: the invoking process becomes **rank 0** (coordinator — it
+//! trains *and* owns every artifact), and `K - 1` child ranks are
+//! re-executions of the same binary with the same CLI, distinguished only
+//! by the `FLARE_DP_*` environment handshake:
+//!
+//! | var                | meaning                                    |
+//! |--------------------|--------------------------------------------|
+//! | `FLARE_DP_RANK`    | this process's rank (1..K)                 |
+//! | `FLARE_DP_RANKS`   | total rank count K                         |
+//! | `FLARE_DP_ADDR`    | coordinator endpoint (`unix:…` / `tcp:…`)  |
+//! | `FLARE_DP_SESSION` | run-unique tag naming the shm ring files   |
+//!
+//! A worker detects the handshake early in `cmd_train` (via
+//! [`worker_env`]), connects a [`WorkerExchange`], and runs the identical
+//! step loop in lockstep — the deterministic gradient exchange
+//! (`runtime::native::sharded_grads`) makes every rank's summed gradient
+//! bitwise identical, so ranks never need a parameter broadcast.
+//!
+//! CPU division: each rank defaults to `available_parallelism / K` worker
+//! threads (min 1).  An explicit `FLARE_THREADS` wins **per rank** —
+//! `FLARE_THREADS=1 train --ranks 2` runs every rank single-threaded
+//! (the bitwise-determinism leg).  Rank 0 pins its own budget by setting
+//! `FLARE_THREADS` *before* the first thread-pool touch
+//! ([`default_threads`] caches on first use).
+//!
+//! Failpoint scoping: `FLARE_FAILPOINTS` on the launcher arms rank 0 only
+//! — it is stripped from the children's environment and replaced with the
+//! value of `FLARE_DP_WORKER_FAILPOINTS` (if set), so chaos tests can
+//! crash a *worker* (`comms.exchange` site) and assert rank 0's typed
+//! error without the launcher tripping the same site first.
+
+use std::process::{Child, Command, Stdio};
+
+use crate::util::comms::{CommsError, CommsHub, CoordinatorExchange, Transport};
+use crate::util::threadpool::default_threads;
+
+/// Environment handshake keys (see module docs).
+pub const ENV_RANK: &str = "FLARE_DP_RANK";
+pub const ENV_RANKS: &str = "FLARE_DP_RANKS";
+pub const ENV_ADDR: &str = "FLARE_DP_ADDR";
+pub const ENV_SESSION: &str = "FLARE_DP_SESSION";
+/// Failpoint spec forwarded to workers as their `FLARE_FAILPOINTS`.
+pub const ENV_WORKER_FAILPOINTS: &str = "FLARE_DP_WORKER_FAILPOINTS";
+
+/// A worker rank's identity, decoded from the environment handshake.
+pub struct WorkerEnv {
+    pub rank: usize,
+    pub ranks: usize,
+    pub addr: String,
+    pub session: String,
+}
+
+/// Detect worker re-entry: `Some` when the full `FLARE_DP_*` handshake is
+/// present, `None` for a plain (or coordinator) invocation.  A partial
+/// handshake is an error — half-set variables mean a broken launcher.
+pub fn worker_env() -> anyhow::Result<Option<WorkerEnv>> {
+    let get = |k: &str| std::env::var(k).ok().filter(|v| !v.is_empty());
+    let (rank, ranks, addr, session) =
+        (get(ENV_RANK), get(ENV_RANKS), get(ENV_ADDR), get(ENV_SESSION));
+    let n_set = [&rank, &ranks, &addr, &session].iter().filter(|v| v.is_some()).count();
+    if n_set == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(
+        n_set == 4,
+        "partial FLARE_DP_* handshake ({n_set}/4 variables set); \
+         all of {ENV_RANK}, {ENV_RANKS}, {ENV_ADDR}, {ENV_SESSION} are required"
+    );
+    let rank: usize = rank.unwrap().parse().map_err(|e| anyhow::anyhow!("{ENV_RANK}: {e}"))?;
+    let ranks: usize = ranks.unwrap().parse().map_err(|e| anyhow::anyhow!("{ENV_RANKS}: {e}"))?;
+    anyhow::ensure!(
+        rank >= 1 && rank < ranks,
+        "{ENV_RANK} {rank} out of range for {ENV_RANKS} {ranks} (workers are 1..ranks)"
+    );
+    Ok(Some(WorkerEnv {
+        rank,
+        ranks,
+        addr: addr.unwrap(),
+        session: session.unwrap(),
+    }))
+}
+
+/// Per-rank worker-thread budget when the user did not pin one:
+/// the machine's parallelism divided evenly across ranks, min 1.
+pub fn per_rank_threads(ranks: usize) -> usize {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (avail / ranks.max(1)).max(1)
+}
+
+/// The spawned worker ranks (index `i` ↔ rank `i + 1`).  Dropping the set
+/// kills any rank still running — an early error on rank 0 never leaks
+/// child processes.
+pub struct RankSet {
+    children: Vec<Child>,
+}
+
+impl RankSet {
+    /// `try_wait` every child; the first one found dead yields its typed
+    /// error.  Polled by [`CommsHub::accept`] while waiting for HELLOs.
+    fn poll_alive(&mut self) -> Result<(), CommsError> {
+        for (i, child) in self.children.iter_mut().enumerate() {
+            if let Ok(Some(status)) = child.try_wait() {
+                return Err(CommsError::RankExited { rank: i + 1, code: status.code() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Reap every rank after rank 0 finished training; a non-zero exit is
+    /// an error even when rank 0 succeeded (lockstep was broken somewhere).
+    pub fn wait_all(&mut self) -> anyhow::Result<()> {
+        for (i, child) in self.children.iter_mut().enumerate() {
+            let status = child.wait()?;
+            anyhow::ensure!(
+                status.success(),
+                "{}",
+                CommsError::RankExited { rank: i + 1, code: status.code() }
+            );
+        }
+        Ok(())
+    }
+
+    /// After a training error on rank 0: kill survivors, reap everyone,
+    /// and — when the error names a disconnected rank — append the richer
+    /// [`CommsError::RankExited`] with the reaped exit code.  (The vendored
+    /// `anyhow` shim flattens sources to a string, so the dead rank is
+    /// recovered from the [`CommsError::Disconnected`] display text.)
+    pub fn fail(&mut self, err: anyhow::Error) -> anyhow::Error {
+        let msg = err.to_string();
+        let dead_rank = (1..=self.children.len())
+            .find(|r| msg.contains(&format!("rank {r} disconnected")));
+        // give the culprit a beat to finish dying before we reap it
+        if dead_rank.is_some() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        let mut enriched = None;
+        for (i, child) in self.children.iter_mut().enumerate() {
+            let reaped = match child.try_wait() {
+                Ok(Some(status)) => Some(status),
+                _ => {
+                    let _ = child.kill();
+                    child.wait().ok()
+                }
+            };
+            if dead_rank == Some(i + 1) {
+                enriched = Some(CommsError::RankExited {
+                    rank: i + 1,
+                    code: reaped.and_then(|s| s.code()),
+                });
+            }
+        }
+        match enriched {
+            Some(e) => anyhow::anyhow!("{msg} ({e})"),
+            None => err,
+        }
+    }
+}
+
+impl Drop for RankSet {
+    fn drop(&mut self) {
+        for child in self.children.iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Resolved data-parallel layout, logged at startup and used to build the
+/// coordinator's backend.
+pub struct DpLayout {
+    pub ranks: usize,
+    pub threads_per_rank: usize,
+    pub transport: Transport,
+    pub logical_shards: usize,
+}
+
+/// Launch `ranks - 1` worker processes and complete the rendezvous:
+/// returns rank 0's exchange plus the child set.  Must run **before** the
+/// first thread-pool touch so rank 0's thread budget can still be pinned.
+pub fn launch(
+    ranks: usize,
+    logical_shards: usize,
+    param_count: usize,
+) -> anyhow::Result<(DpLayout, CoordinatorExchange, RankSet)> {
+    anyhow::ensure!(
+        ranks >= 2 && ranks.is_power_of_two(),
+        "--ranks must be a power of two >= 2, got {ranks}"
+    );
+    anyhow::ensure!(
+        ranks <= logical_shards,
+        "--ranks {ranks} exceeds the logical shard count {logical_shards}; \
+         every rank needs at least one shard (raise --logical-shards)"
+    );
+    let transport = Transport::from_env()?;
+    // an explicit user budget wins per rank and is inherited by children;
+    // otherwise divide the machine evenly and pin rank 0's share now,
+    // before default_threads() caches
+    let user_threads = ["FLARE_THREADS", "FLARE_NATIVE_THREADS"]
+        .iter()
+        .any(|v| std::env::var(v).is_ok_and(|s| !s.trim().is_empty()));
+    let threads_per_rank = if user_threads {
+        default_threads()
+    } else {
+        let per = per_rank_threads(ranks);
+        std::env::set_var("FLARE_THREADS", per.to_string());
+        per
+    };
+    let session = format!("{}", std::process::id());
+    let hub = CommsHub::bind(transport, ranks, param_count, &session)?;
+    let addr = hub.addr();
+    let exe = std::env::current_exe()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let worker_failpoints = std::env::var(ENV_WORKER_FAILPOINTS).ok();
+    let mut children = Vec::with_capacity(ranks - 1);
+    for rank in 1..ranks {
+        let mut cmd = Command::new(&exe);
+        cmd.args(&args)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_RANKS, ranks.to_string())
+            .env(ENV_ADDR, &addr)
+            .env(ENV_SESSION, &session)
+            .env("FLARE_THREADS", threads_per_rank.to_string())
+            .env("FLARE_LOGICAL_SHARDS", logical_shards.to_string())
+            // failpoints arm rank 0 only unless explicitly forwarded
+            .env_remove("FLARE_FAILPOINTS")
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if let Some(fp) = &worker_failpoints {
+            cmd.env("FLARE_FAILPOINTS", fp);
+        }
+        children.push(cmd.spawn().map_err(|e| anyhow::anyhow!("spawning rank {rank}: {e}"))?);
+    }
+    let mut set = RankSet { children };
+    let exchange = hub
+        .accept(|| set.poll_alive())
+        .map_err(|e| anyhow::anyhow!("data-parallel rendezvous failed: {e}"))?;
+    let layout = DpLayout {
+        ranks,
+        threads_per_rank,
+        transport,
+        logical_shards,
+    };
+    crate::info!(
+        "dp: ranks={} threads/rank={} transport={} shards={} addr={}",
+        layout.ranks,
+        layout.threads_per_rank,
+        layout.transport.as_str(),
+        layout.logical_shards,
+        addr
+    );
+    Ok((layout, exchange, set))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_rank_threads_divides_and_floors_at_one() {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(per_rank_threads(1), avail.max(1));
+        assert_eq!(per_rank_threads(2), (avail / 2).max(1));
+        // more ranks than cores still gives every rank one thread
+        assert_eq!(per_rank_threads(avail * 16), 1);
+    }
+
+    #[test]
+    fn worker_env_requires_a_complete_handshake() {
+        // no vars set in the test process → not a worker
+        assert!(worker_env().unwrap().is_none());
+    }
+}

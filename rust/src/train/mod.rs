@@ -17,6 +17,7 @@
 //! warm workspace free lists and gradient shards) survive across steps, so
 //! a long run pays thread spawn and buffer warm-up exactly once.
 
+pub mod dp;
 pub mod optim;
 pub mod schedule;
 
@@ -69,6 +70,12 @@ pub struct TrainOpts {
     /// this many **consecutive** skips (a finite step resets the streak);
     /// 0 disables the guard
     pub max_nonfinite: usize,
+    /// data-parallel identity `(rank, ranks)` when this process is one of
+    /// `train --ranks K`'s ranks.  Worker ranks (`rank > 0`) run the same
+    /// step loop in lockstep (the backend's gradient exchange makes every
+    /// rank's summed gradient bitwise identical) but skip logging,
+    /// evaluation and checkpoint writes — rank 0 owns all artifacts
+    pub dp: Option<(usize, usize)>,
 }
 
 impl Default for TrainOpts {
@@ -83,6 +90,7 @@ impl Default for TrainOpts {
             ckpt_every: 0,
             ckpt_path: None,
             max_nonfinite: 3,
+            dp: None,
         }
     }
 }
@@ -274,6 +282,9 @@ pub fn train_case(
         crate::util::workspace::take(if split { case.param_count } else { 0 });
     let mut skipped_steps = 0usize;
     let mut nonfinite_streak = 0usize;
+    // worker ranks run the loop for its gradient contributions only; rank 0
+    // owns every artifact (logs, evals, checkpoints)
+    let is_worker = opts.dp.is_some_and(|(rank, _)| rank > 0);
 
     for step in start..total {
         let t = Timer::start();
@@ -313,11 +324,13 @@ pub fn train_case(
                 // values and the run keeps sampling fresh batches
                 skipped_steps += 1;
                 nonfinite_streak += 1;
-                crate::info!(
-                    "[{}] step {step}: non-finite loss/gradient (loss {loss}); optimizer step \
-                     skipped ({nonfinite_streak} consecutive)",
-                    case.name
-                );
+                if !is_worker {
+                    crate::info!(
+                        "[{}] step {step}: non-finite loss/gradient (loss {loss}); optimizer \
+                         step skipped ({nonfinite_streak} consecutive)",
+                        case.name
+                    );
+                }
                 if nonfinite_streak >= opts.max_nonfinite {
                     anyhow::bail!(
                         "training diverged: non-finite loss or gradient for \
@@ -358,18 +371,18 @@ pub fn train_case(
         };
         step_times.push(t.elapsed_ms());
         losses.push(loss);
-        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == total) {
+        if !is_worker && opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == total) {
             crate::info!(
                 "[{}] step {step}/{total} loss {loss:.4} lr {:.2e}",
                 case.name,
                 sched.lr(step)
             );
         }
-        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+        if !is_worker && opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             let metric = evaluate(backend, manifest, case, &ds, &st.params)?;
             evals.push((step + 1, metric));
         }
-        if opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0 {
+        if !is_worker && opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0 {
             if let Some(path) = &opts.ckpt_path {
                 crate::model::save_checkpoint(
                     path,
@@ -388,8 +401,13 @@ pub fn train_case(
             }
         }
     }
-    let final_metric = evaluate(backend, manifest, case, &ds, &st.params)?;
-    evals.push((total, final_metric));
+    let final_metric = if is_worker {
+        f64::NAN // evaluation is rank 0's job; workers only contribute gradients
+    } else {
+        let metric = evaluate(backend, manifest, case, &ds, &st.params)?;
+        evals.push((total, metric));
+        metric
+    };
 
     Ok(TrainOutcome {
         case: case.name.clone(),

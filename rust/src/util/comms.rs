@@ -1,0 +1,874 @@
+//! Gradient-exchange transport for multi-process data-parallel training.
+//!
+//! Topology: rank 0 (the coordinator) binds an endpoint before spawning
+//! worker ranks; every worker connects and identifies itself with a HELLO
+//! frame.  Each optimizer micro-batch then performs one collective round:
+//! workers send their logical-shard block root (`ROOT`), the coordinator
+//! finishes the deterministic tree reduction (`runtime::native`) and ships
+//! the global sum back (`TOTAL`).  Either side can declare failure with an
+//! `ABORT` frame carrying the reason.
+//!
+//! Two transports, selected by `FLARE_COMMS` (default `shm`):
+//!
+//! * **shm** — control frames ride a Unix-domain socket acting as the
+//!   doorbell, while gradient payloads move through double-buffered tmpfs
+//!   ring segments ([`crate::util::shmem::ShmRing`]): one `root` ring per
+//!   worker plus one shared `total` ring the coordinator writes **once**
+//!   per round regardless of rank count.
+//! * **tcp** — loopback-TCP fallback with payloads inline in the frames;
+//!   works where tmpfs or Unix sockets are unavailable.
+//!
+//! Failure semantics: every receive carries a deadline
+//! (`FLARE_COMMS_TIMEOUT_MS`, default 120 s), a closed stream surfaces as
+//! [`CommsError::Disconnected`] (enriched to [`CommsError::RankExited`] by
+//! the launcher once it has reaped the child), and a peer's `ABORT`
+//! surfaces as [`CommsError::Aborted`] — rank 0 always ends a broken run
+//! with a typed error, never a hang.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::util::shmem::{shm_dir, ShmRing};
+
+/// Typed failure of the gradient exchange.
+#[derive(Debug)]
+pub enum CommsError {
+    /// The peer's stream closed mid-protocol (rank process death).
+    Disconnected { rank: usize },
+    /// A spawned rank exited; the launcher enriches [`Self::Disconnected`]
+    /// with the reaped exit code.
+    RankExited { rank: usize, code: Option<i32> },
+    /// No frame from the peer within the configured deadline.
+    Timeout { rank: usize, ms: u64 },
+    /// The peer declared failure and said why.
+    Aborted { rank: usize, msg: String },
+    /// Malformed or out-of-sequence frame.
+    Protocol { rank: usize, detail: String },
+    Io(io::Error),
+}
+
+impl std::fmt::Display for CommsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommsError::Disconnected { rank } => {
+                write!(f, "rank {rank} disconnected during gradient exchange")
+            }
+            CommsError::RankExited { rank, code: Some(c) } => {
+                write!(f, "rank {rank} exited with status {c} during gradient exchange")
+            }
+            CommsError::RankExited { rank, code: None } => {
+                write!(f, "rank {rank} was killed by a signal during gradient exchange")
+            }
+            CommsError::Timeout { rank, ms } => {
+                write!(f, "no message from rank {rank} within {ms} ms")
+            }
+            CommsError::Aborted { rank, msg } => write!(f, "rank {rank} aborted: {msg}"),
+            CommsError::Protocol { rank, detail } => {
+                write!(f, "protocol error from rank {rank}: {detail}")
+            }
+            CommsError::Io(e) => write!(f, "gradient exchange I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CommsError {}
+
+impl From<io::Error> for CommsError {
+    fn from(e: io::Error) -> CommsError {
+        CommsError::Io(e)
+    }
+}
+
+/// Map a stream error to a typed peer failure.
+fn stream_err(rank: usize, e: io::Error) -> CommsError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => CommsError::Timeout {
+            rank,
+            ms: comms_timeout().as_millis() as u64,
+        },
+        io::ErrorKind::UnexpectedEof
+        | io::ErrorKind::BrokenPipe
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted => CommsError::Disconnected { rank },
+        _ => CommsError::Io(e),
+    }
+}
+
+/// Payload transport (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    Shm,
+    Tcp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> anyhow::Result<Transport> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "shm" | "shmem" => Ok(Transport::Shm),
+            "tcp" | "loopback" => Ok(Transport::Tcp),
+            other => anyhow::bail!("unknown FLARE_COMMS transport {other:?} (expected shm or tcp)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Transport::Shm => "shm",
+            Transport::Tcp => "tcp",
+        }
+    }
+
+    /// `FLARE_COMMS` (default shm); malformed values are an error so a
+    /// typo'd transport never silently changes the exchange path.
+    pub fn from_env() -> anyhow::Result<Transport> {
+        match std::env::var("FLARE_COMMS") {
+            Ok(v) if !v.trim().is_empty() => Transport::parse(&v),
+            _ => Ok(Transport::Shm),
+        }
+    }
+}
+
+/// Per-receive deadline: `FLARE_COMMS_TIMEOUT_MS`, default 120 000 ms
+/// (a round blocks behind the slowest rank's backward pass).
+pub fn comms_timeout() -> Duration {
+    let ms = std::env::var("FLARE_COMMS_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(120_000);
+    Duration::from_millis(ms)
+}
+
+/// Abort reasons are capped so both sides agree on frame length.
+const ABORT_MSG_MAX: usize = 64 * 1024;
+
+// frame tags
+const TAG_HELLO: u8 = 1;
+const TAG_ROOT: u8 = 2;
+const TAG_TOTAL: u8 = 3;
+const TAG_ABORT: u8 = 4;
+
+/// One control/payload stream: Unix domain (shm mode) or loopback TCP.
+enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn set_timeouts(&self, t: Duration) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => {
+                s.set_read_timeout(Some(t))?;
+                s.set_write_timeout(Some(t))
+            }
+            Conn::Tcp(s) => {
+                s.set_read_timeout(Some(t))?;
+                s.set_write_timeout(Some(t))
+            }
+        }
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.write_all(buf),
+            Conn::Tcp(s) => s.write_all(buf),
+        }
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.read_exact(buf),
+            Conn::Tcp(s) => s.read_exact(buf),
+        }
+    }
+}
+
+fn encode_f32(grad: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(grad.len() * 4);
+    for &v in grad {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn decode_f32_into(rank: usize, bytes: &[u8], out: &mut [f32]) -> Result<(), CommsError> {
+    if bytes.len() != out.len() * 4 {
+        return Err(CommsError::Protocol {
+            rank,
+            detail: format!("gradient payload {} bytes, expected {}", bytes.len(), out.len() * 4),
+        });
+    }
+    for (dst, chunk) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// One worker's block root as received by the coordinator (buffers persist
+/// across rounds — the steady-state exchange allocates nothing).
+pub struct RootMsg {
+    /// whether this rank owned any non-empty logical shard this round
+    /// (an empty block is a skip merge in the tree)
+    pub nonempty: bool,
+    pub loss: f64,
+    pub grad: Vec<f32>,
+    /// the worker sent ABORT instead of a root
+    pub aborted: bool,
+    pub abort_msg: String,
+}
+
+/// Role-split collective used by `runtime::native`'s gradient reduction.
+/// `gather`/`broadcast` are coordinator-only, `send_root`/`recv_total`
+/// worker-only; `abort` works from either side.
+pub trait GradExchange {
+    fn rank(&self) -> usize;
+    fn ranks(&self) -> usize;
+    fn transport(&self) -> Transport;
+    /// Coordinator: receive one root per worker; slot `i` holds rank
+    /// `i + 1`.  Stops early when a worker aborts (flagged in its slot).
+    fn gather(&mut self) -> Result<&mut [RootMsg], CommsError>;
+    /// Coordinator: ship the reduced total to every worker.
+    fn broadcast(&mut self, loss: f64, grad: &[f32]) -> Result<(), CommsError>;
+    /// Worker: ship this rank's block root (`grad` empty when `!nonempty`).
+    fn send_root(&mut self, nonempty: bool, loss: f64, grad: &[f32]) -> Result<(), CommsError>;
+    /// Worker: receive the global total into `grad_out`; returns the
+    /// globally summed loss.
+    fn recv_total(&mut self, grad_out: &mut [f32]) -> Result<f64, CommsError>;
+    /// Declare failure to the peer(s) with a reason.
+    fn abort(&mut self, msg: &str) -> Result<(), CommsError>;
+}
+
+fn ring_prefix(session: &str) -> PathBuf {
+    shm_dir().join(format!("flare-dp-{session}"))
+}
+
+fn root_ring_path(session: &str, rank: usize) -> PathBuf {
+    let mut p = ring_prefix(session).into_os_string();
+    p.push(format!("-root{rank}.ring"));
+    PathBuf::from(p)
+}
+
+fn total_ring_path(session: &str) -> PathBuf {
+    let mut p = ring_prefix(session).into_os_string();
+    p.push("-total.ring");
+    PathBuf::from(p)
+}
+
+enum ListenerKind {
+    Unix(UnixListener, PathBuf),
+    Tcp(TcpListener),
+}
+
+/// Coordinator-side endpoint: bound (and its shm rings created) **before**
+/// the worker ranks are spawned, so workers can connect and open rings
+/// unconditionally.
+pub struct CommsHub {
+    listener: ListenerKind,
+    transport: Transport,
+    session: String,
+    ranks: usize,
+    param_count: usize,
+    /// created eagerly in `bind` (creator unlinks on drop)
+    root_rings: Vec<ShmRing>,
+    total_ring: Option<ShmRing>,
+}
+
+impl CommsHub {
+    /// Bind the coordinator endpoint for `ranks` total ranks exchanging
+    /// `param_count`-element gradients.  `session` must be unique per run
+    /// (the launcher uses the coordinator PID).
+    pub fn bind(
+        transport: Transport,
+        ranks: usize,
+        param_count: usize,
+        session: &str,
+    ) -> anyhow::Result<CommsHub> {
+        anyhow::ensure!(ranks >= 2, "comms hub needs at least 2 ranks, got {ranks}");
+        let listener = match transport {
+            Transport::Shm => {
+                let path = std::env::temp_dir().join(format!("flare-dp-{session}.sock"));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .map_err(|e| anyhow::anyhow!("binding {path:?}: {e}"))?;
+                ListenerKind::Unix(l, path)
+            }
+            Transport::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0")
+                    .map_err(|e| anyhow::anyhow!("binding loopback: {e}"))?;
+                ListenerKind::Tcp(l)
+            }
+        };
+        let (mut root_rings, mut total_ring) = (Vec::new(), None);
+        if transport == Transport::Shm {
+            for r in 1..ranks {
+                root_rings.push(ShmRing::create(root_ring_path(session, r), param_count * 4)?);
+            }
+            total_ring = Some(ShmRing::create(total_ring_path(session), param_count * 4)?);
+        }
+        Ok(CommsHub {
+            listener,
+            transport,
+            session: session.to_string(),
+            ranks,
+            param_count,
+            root_rings,
+            total_ring,
+        })
+    }
+
+    /// Worker-facing address, passed to children via `FLARE_DP_ADDR`
+    /// (`unix:<path>` or `tcp:<host:port>`).
+    pub fn addr(&self) -> String {
+        match &self.listener {
+            ListenerKind::Unix(_, path) => format!("unix:{}", path.display()),
+            ListenerKind::Tcp(l) => {
+                format!("tcp:{}", l.local_addr().map(|a| a.to_string()).unwrap_or_default())
+            }
+        }
+    }
+
+    /// Accept every worker rank (HELLO-validated) and become the
+    /// coordinator's exchange.  `alive` is polled while waiting so a child
+    /// that died before connecting fails the accept instead of hanging;
+    /// return the dead rank's typed error.
+    pub fn accept(
+        self,
+        mut alive: impl FnMut() -> Result<(), CommsError>,
+    ) -> Result<CoordinatorExchange, CommsError> {
+        let timeout = comms_timeout();
+        let deadline = Instant::now() + timeout;
+        match &self.listener {
+            ListenerKind::Unix(l, _) => l.set_nonblocking(true)?,
+            ListenerKind::Tcp(l) => l.set_nonblocking(true)?,
+        }
+        let mut conns: Vec<Option<Conn>> = (0..self.ranks).map(|_| None).collect();
+        let mut accepted = 0usize;
+        while accepted + 1 < self.ranks {
+            alive()?;
+            let conn = match &self.listener {
+                ListenerKind::Unix(l, _) => l.accept().map(|(s, _)| Conn::Unix(s)),
+                ListenerKind::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            };
+            let mut conn = match conn {
+                Ok(c) => c,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(CommsError::Timeout {
+                            rank: 0,
+                            ms: timeout.as_millis() as u64,
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) => return Err(CommsError::Io(e)),
+            };
+            match &conn {
+                Conn::Unix(s) => s.set_nonblocking(false)?,
+                Conn::Tcp(s) => s.set_nonblocking(false)?,
+            }
+            conn.set_timeouts(timeout)?;
+            // HELLO: tag, rank u32, ranks u32, param_count u64
+            let mut hello = [0u8; 17];
+            conn.read_exact(&mut hello).map_err(|e| stream_err(0, e))?;
+            let rank = u32::from_le_bytes(hello[1..5].try_into().unwrap()) as usize;
+            let ranks = u32::from_le_bytes(hello[5..9].try_into().unwrap()) as usize;
+            let pc = u64::from_le_bytes(hello[9..17].try_into().unwrap()) as usize;
+            if hello[0] != TAG_HELLO
+                || rank == 0
+                || rank >= self.ranks
+                || ranks != self.ranks
+                || pc != self.param_count
+            {
+                return Err(CommsError::Protocol {
+                    rank,
+                    detail: format!(
+                        "bad HELLO (tag {}, rank {rank}/{ranks}, param_count {pc}; \
+                         expected {} ranks, {} params)",
+                        hello[0], self.ranks, self.param_count
+                    ),
+                });
+            }
+            if conns[rank].is_some() {
+                return Err(CommsError::Protocol {
+                    rank,
+                    detail: "duplicate HELLO".into(),
+                });
+            }
+            conns[rank] = Some(conn);
+            accepted += 1;
+        }
+        let conns = conns.into_iter().skip(1).map(|c| c.expect("all ranks accepted")).collect();
+        let roots = (1..self.ranks)
+            .map(|_| RootMsg {
+                nonempty: false,
+                loss: 0.0,
+                grad: vec![0.0; self.param_count],
+                aborted: false,
+                abort_msg: String::new(),
+            })
+            .collect();
+        let sock_path = match self.listener {
+            ListenerKind::Unix(_, ref path) => Some(path.clone()),
+            ListenerKind::Tcp(_) => None,
+        };
+        Ok(CoordinatorExchange {
+            ranks: self.ranks,
+            transport: self.transport,
+            conns,
+            roots,
+            root_rings: self.root_rings,
+            total_ring: self.total_ring,
+            scratch: Vec::new(),
+            seq: 0,
+            param_count: self.param_count,
+            sock_path,
+            session: self.session,
+        })
+    }
+}
+
+/// Rank 0's side of the collective (see [`GradExchange`]).
+pub struct CoordinatorExchange {
+    ranks: usize,
+    transport: Transport,
+    /// index `i` ↔ rank `i + 1`
+    conns: Vec<Conn>,
+    roots: Vec<RootMsg>,
+    root_rings: Vec<ShmRing>,
+    total_ring: Option<ShmRing>,
+    scratch: Vec<u8>,
+    seq: u64,
+    param_count: usize,
+    sock_path: Option<PathBuf>,
+    #[allow(dead_code)]
+    session: String,
+}
+
+impl Drop for CoordinatorExchange {
+    fn drop(&mut self) {
+        if let Some(p) = &self.sock_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl GradExchange for CoordinatorExchange {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn transport(&self) -> Transport {
+        self.transport
+    }
+
+    fn gather(&mut self) -> Result<&mut [RootMsg], CommsError> {
+        for slot in self.roots.iter_mut() {
+            slot.nonempty = false;
+            slot.loss = 0.0;
+            slot.aborted = false;
+        }
+        for i in 0..self.ranks - 1 {
+            let rank = i + 1;
+            let conn = &mut self.conns[i];
+            let mut tag = [0u8; 1];
+            conn.read_exact(&mut tag).map_err(|e| stream_err(rank, e))?;
+            match tag[0] {
+                TAG_ROOT => {
+                    // seq u64, nonempty u8, loss f64, len u64
+                    let mut head = [0u8; 25];
+                    conn.read_exact(&mut head).map_err(|e| stream_err(rank, e))?;
+                    let seq = u64::from_le_bytes(head[..8].try_into().unwrap());
+                    let nonempty = head[8] != 0;
+                    let loss = f64::from_le_bytes(head[9..17].try_into().unwrap());
+                    let len = u64::from_le_bytes(head[17..25].try_into().unwrap()) as usize;
+                    if seq != self.seq {
+                        return Err(CommsError::Protocol {
+                            rank,
+                            detail: format!("ROOT seq {seq}, expected {}", self.seq),
+                        });
+                    }
+                    let slot = &mut self.roots[i];
+                    slot.nonempty = nonempty;
+                    slot.loss = loss;
+                    if nonempty {
+                        match self.transport {
+                            Transport::Shm => {
+                                self.root_rings[i].read(self.seq, &mut self.scratch)?;
+                            }
+                            Transport::Tcp => {
+                                self.scratch.clear();
+                                self.scratch.resize(len, 0);
+                                conn.read_exact(&mut self.scratch)
+                                    .map_err(|e| stream_err(rank, e))?;
+                            }
+                        }
+                        decode_f32_into(rank, &self.scratch, &mut slot.grad)?;
+                    }
+                }
+                TAG_ABORT => {
+                    let mut lenb = [0u8; 8];
+                    conn.read_exact(&mut lenb).map_err(|e| stream_err(rank, e))?;
+                    let len = (u64::from_le_bytes(lenb) as usize).min(ABORT_MSG_MAX);
+                    self.scratch.clear();
+                    self.scratch.resize(len, 0);
+                    conn.read_exact(&mut self.scratch).map_err(|e| stream_err(rank, e))?;
+                    let slot = &mut self.roots[i];
+                    slot.aborted = true;
+                    slot.abort_msg = String::from_utf8_lossy(&self.scratch).into_owned();
+                    break; // the run is over; don't block on the others
+                }
+                t => {
+                    return Err(CommsError::Protocol {
+                        rank,
+                        detail: format!("unexpected frame tag {t} (wanted ROOT)"),
+                    });
+                }
+            }
+        }
+        Ok(&mut self.roots)
+    }
+
+    fn broadcast(&mut self, loss: f64, grad: &[f32]) -> Result<(), CommsError> {
+        debug_assert_eq!(grad.len(), self.param_count);
+        let inline = self.transport == Transport::Tcp;
+        encode_f32(grad, &mut self.scratch);
+        if let (Transport::Shm, Some(ring)) = (self.transport, &self.total_ring) {
+            // written once; every worker reads the same slot
+            ring.write(self.seq, &self.scratch)?;
+        }
+        let mut head = [0u8; 25];
+        head[0] = TAG_TOTAL;
+        head[1..9].copy_from_slice(&self.seq.to_le_bytes());
+        head[9..17].copy_from_slice(&loss.to_le_bytes());
+        let len = if inline { self.scratch.len() as u64 } else { 0 };
+        head[17..25].copy_from_slice(&len.to_le_bytes());
+        for i in 0..self.ranks - 1 {
+            let conn = &mut self.conns[i];
+            conn.write_all(&head).map_err(|e| stream_err(i + 1, e))?;
+            if inline {
+                conn.write_all(&self.scratch).map_err(|e| stream_err(i + 1, e))?;
+            }
+        }
+        self.seq += 1;
+        Ok(())
+    }
+
+    fn send_root(&mut self, _nonempty: bool, _loss: f64, _grad: &[f32]) -> Result<(), CommsError> {
+        Err(CommsError::Protocol {
+            rank: 0,
+            detail: "send_root called on the coordinator".into(),
+        })
+    }
+
+    fn recv_total(&mut self, _grad_out: &mut [f32]) -> Result<f64, CommsError> {
+        Err(CommsError::Protocol {
+            rank: 0,
+            detail: "recv_total called on the coordinator".into(),
+        })
+    }
+
+    fn abort(&mut self, msg: &str) -> Result<(), CommsError> {
+        let bytes = &msg.as_bytes()[..msg.len().min(ABORT_MSG_MAX)];
+        let mut head = [0u8; 9];
+        head[0] = TAG_ABORT;
+        head[1..9].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+        for conn in self.conns.iter_mut() {
+            // best effort: some workers may already be gone
+            let _ = conn.write_all(&head);
+            let _ = conn.write_all(bytes);
+        }
+        Ok(())
+    }
+}
+
+/// A worker rank's side of the collective (see [`GradExchange`]).
+pub struct WorkerExchange {
+    rank: usize,
+    ranks: usize,
+    transport: Transport,
+    conn: Conn,
+    root_ring: Option<ShmRing>,
+    total_ring: Option<ShmRing>,
+    scratch: Vec<u8>,
+    seq: u64,
+    param_count: usize,
+}
+
+impl WorkerExchange {
+    /// Connect to the coordinator at `addr` (`unix:<path>` → shm payload
+    /// rings derived from `session`; `tcp:<host:port>` → inline payloads)
+    /// and introduce this rank with a HELLO frame.
+    pub fn connect(
+        addr: &str,
+        session: &str,
+        rank: usize,
+        ranks: usize,
+        param_count: usize,
+    ) -> Result<WorkerExchange, CommsError> {
+        let timeout = comms_timeout();
+        let (transport, mut conn) = if let Some(path) = addr.strip_prefix("unix:") {
+            (Transport::Shm, Conn::Unix(UnixStream::connect(path)?))
+        } else if let Some(sock) = addr.strip_prefix("tcp:") {
+            (Transport::Tcp, Conn::Tcp(TcpStream::connect(sock)?))
+        } else {
+            return Err(CommsError::Protocol {
+                rank,
+                detail: format!("bad FLARE_DP_ADDR {addr:?} (expected unix:… or tcp:…)"),
+            });
+        };
+        conn.set_timeouts(timeout)?;
+        let mut hello = [0u8; 17];
+        hello[0] = TAG_HELLO;
+        hello[1..5].copy_from_slice(&(rank as u32).to_le_bytes());
+        hello[5..9].copy_from_slice(&(ranks as u32).to_le_bytes());
+        hello[9..17].copy_from_slice(&(param_count as u64).to_le_bytes());
+        conn.write_all(&hello).map_err(|e| stream_err(0, e))?;
+        let (mut root_ring, mut total_ring) = (None, None);
+        if transport == Transport::Shm {
+            root_ring = Some(ShmRing::open(root_ring_path(session, rank), param_count * 4)?);
+            total_ring = Some(ShmRing::open(total_ring_path(session), param_count * 4)?);
+        }
+        Ok(WorkerExchange {
+            rank,
+            ranks,
+            transport,
+            conn,
+            root_ring,
+            total_ring,
+            scratch: Vec::new(),
+            seq: 0,
+            param_count,
+        })
+    }
+}
+
+impl GradExchange for WorkerExchange {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn transport(&self) -> Transport {
+        self.transport
+    }
+
+    fn gather(&mut self) -> Result<&mut [RootMsg], CommsError> {
+        Err(CommsError::Protocol {
+            rank: self.rank,
+            detail: "gather called on a worker rank".into(),
+        })
+    }
+
+    fn broadcast(&mut self, _loss: f64, _grad: &[f32]) -> Result<(), CommsError> {
+        Err(CommsError::Protocol {
+            rank: self.rank,
+            detail: "broadcast called on a worker rank".into(),
+        })
+    }
+
+    fn send_root(&mut self, nonempty: bool, loss: f64, grad: &[f32]) -> Result<(), CommsError> {
+        if nonempty {
+            debug_assert_eq!(grad.len(), self.param_count);
+            encode_f32(grad, &mut self.scratch);
+            if let Some(ring) = &self.root_ring {
+                ring.write(self.seq, &self.scratch)?;
+            }
+        } else {
+            self.scratch.clear();
+        }
+        let inline = self.transport == Transport::Tcp && nonempty;
+        let mut frame = [0u8; 26];
+        frame[0] = TAG_ROOT;
+        frame[1..9].copy_from_slice(&self.seq.to_le_bytes());
+        frame[9] = nonempty as u8;
+        frame[10..18].copy_from_slice(&loss.to_le_bytes());
+        let len = if inline { self.scratch.len() as u64 } else { 0 };
+        frame[18..26].copy_from_slice(&len.to_le_bytes());
+        self.conn.write_all(&frame).map_err(|e| stream_err(0, e))?;
+        if inline {
+            self.conn.write_all(&self.scratch).map_err(|e| stream_err(0, e))?;
+        }
+        Ok(())
+    }
+
+    fn recv_total(&mut self, grad_out: &mut [f32]) -> Result<f64, CommsError> {
+        let mut tag = [0u8; 1];
+        self.conn.read_exact(&mut tag).map_err(|e| stream_err(0, e))?;
+        match tag[0] {
+            TAG_TOTAL => {
+                let mut head = [0u8; 24];
+                self.conn.read_exact(&mut head).map_err(|e| stream_err(0, e))?;
+                let seq = u64::from_le_bytes(head[..8].try_into().unwrap());
+                let loss = f64::from_le_bytes(head[8..16].try_into().unwrap());
+                let len = u64::from_le_bytes(head[16..24].try_into().unwrap()) as usize;
+                if seq != self.seq {
+                    return Err(CommsError::Protocol {
+                        rank: 0,
+                        detail: format!("TOTAL seq {seq}, expected {}", self.seq),
+                    });
+                }
+                match self.transport {
+                    Transport::Shm => {
+                        let ring = self.total_ring.as_ref().expect("shm worker has total ring");
+                        ring.read(self.seq, &mut self.scratch)?;
+                    }
+                    Transport::Tcp => {
+                        self.scratch.clear();
+                        self.scratch.resize(len, 0);
+                        self.conn.read_exact(&mut self.scratch).map_err(|e| stream_err(0, e))?;
+                    }
+                }
+                decode_f32_into(0, &self.scratch, grad_out)?;
+                self.seq += 1;
+                Ok(loss)
+            }
+            TAG_ABORT => {
+                let mut lenb = [0u8; 8];
+                self.conn.read_exact(&mut lenb).map_err(|e| stream_err(0, e))?;
+                let len = (u64::from_le_bytes(lenb) as usize).min(ABORT_MSG_MAX);
+                self.scratch.clear();
+                self.scratch.resize(len, 0);
+                self.conn.read_exact(&mut self.scratch).map_err(|e| stream_err(0, e))?;
+                Err(CommsError::Aborted {
+                    rank: 0,
+                    msg: String::from_utf8_lossy(&self.scratch).into_owned(),
+                })
+            }
+            t => Err(CommsError::Protocol {
+                rank: 0,
+                detail: format!("unexpected frame tag {t} (wanted TOTAL)"),
+            }),
+        }
+    }
+
+    fn abort(&mut self, msg: &str) -> Result<(), CommsError> {
+        let bytes = &msg.as_bytes()[..msg.len().min(ABORT_MSG_MAX)];
+        let mut head = [0u8; 9];
+        head[0] = TAG_ABORT;
+        head[1..9].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+        let _ = self.conn.write_all(&head);
+        let _ = self.conn.write_all(bytes);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn session(tag: &str) -> String {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        format!("test{}-{}-{tag}", std::process::id(), N.fetch_add(1, Ordering::SeqCst))
+    }
+
+    fn round_trip(transport: Transport) {
+        let ranks = 2;
+        let pc = 6;
+        let sess = session(transport.as_str());
+        let hub = CommsHub::bind(transport, ranks, pc, &sess).unwrap();
+        let addr = hub.addr();
+        let sess2 = sess.clone();
+        let worker = std::thread::spawn(move || {
+            let mut ex = WorkerExchange::connect(&addr, &sess2, 1, ranks, pc).unwrap();
+            assert_eq!(ex.transport(), transport);
+            let grad: Vec<f32> = (0..pc).map(|i| i as f32 + 0.5).collect();
+            ex.send_root(true, 1.25, &grad).unwrap();
+            let mut total = vec![0.0f32; pc];
+            let loss = ex.recv_total(&mut total).unwrap();
+            // second round: an empty block (no payload)
+            ex.send_root(false, 0.0, &[]).unwrap();
+            let loss2 = ex.recv_total(&mut total).unwrap();
+            (loss, loss2, total)
+        });
+        let mut coord = hub.accept(|| Ok(())).unwrap();
+        let roots = coord.gather().unwrap();
+        assert_eq!(roots.len(), 1);
+        assert!(roots[0].nonempty && !roots[0].aborted);
+        assert_eq!(roots[0].loss, 1.25);
+        assert_eq!(roots[0].grad[5], 5.5);
+        let total: Vec<f32> = (0..pc).map(|i| i as f32 * 2.0).collect();
+        coord.broadcast(9.0, &total).unwrap();
+        let roots = coord.gather().unwrap();
+        assert!(!roots[0].nonempty);
+        coord.broadcast(3.0, &total).unwrap();
+        let (loss, loss2, got) = worker.join().unwrap();
+        assert_eq!(loss, 9.0);
+        assert_eq!(loss2, 3.0);
+        assert_eq!(got, total, "broadcast payload must round-trip bitwise");
+    }
+
+    #[test]
+    fn shm_round_trip() {
+        round_trip(Transport::Shm);
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        round_trip(Transport::Tcp);
+    }
+
+    #[test]
+    fn worker_abort_reaches_coordinator_and_back() {
+        let pc = 4;
+        let sess = session("abort");
+        let hub = CommsHub::bind(Transport::Tcp, 2, pc, &sess).unwrap();
+        let addr = hub.addr();
+        let worker = std::thread::spawn(move || {
+            let mut ex = WorkerExchange::connect(&addr, &sess, 1, 2, pc).unwrap();
+            ex.abort("nan loss on rank 1").unwrap();
+        });
+        let mut coord = hub.accept(|| Ok(())).unwrap();
+        let roots = coord.gather().unwrap();
+        assert!(roots[0].aborted);
+        assert_eq!(roots[0].abort_msg, "nan loss on rank 1");
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_is_a_typed_disconnect() {
+        let pc = 4;
+        let sess = session("dead");
+        let hub = CommsHub::bind(Transport::Tcp, 2, pc, &sess).unwrap();
+        let addr = hub.addr();
+        let worker = std::thread::spawn(move || {
+            // connect, say hello, then vanish without sending a root
+            let ex = WorkerExchange::connect(&addr, &sess, 1, 2, pc).unwrap();
+            drop(ex);
+        });
+        let mut coord = hub.accept(|| Ok(())).unwrap();
+        worker.join().unwrap();
+        match coord.gather() {
+            Err(CommsError::Disconnected { rank: 1 }) => {}
+            Err(other) => panic!("expected Disconnected {{ rank: 1 }}, got {other:?}"),
+            Ok(_) => panic!("expected Disconnected {{ rank: 1 }}, got a root"),
+        }
+    }
+
+    #[test]
+    fn hello_validation_rejects_mismatched_layout() {
+        let pc = 4;
+        let sess = session("hello");
+        let hub = CommsHub::bind(Transport::Tcp, 2, pc, &sess).unwrap();
+        let addr = hub.addr();
+        let worker = std::thread::spawn(move || {
+            // wrong param_count in HELLO
+            let _ = WorkerExchange::connect(&addr, &sess, 1, 2, pc + 1);
+        });
+        match hub.accept(|| Ok(())) {
+            Err(CommsError::Protocol { .. }) => {}
+            other => panic!("expected Protocol error, got {:?}", other.err()),
+        }
+        worker.join().unwrap();
+    }
+}

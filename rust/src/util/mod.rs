@@ -5,12 +5,14 @@
 //! serde / tokio / criterion / clap — these utilities are built from
 //! scratch; see DESIGN.md §3 for the substitution table.
 
+pub mod comms;
 pub mod failpoint;
 pub mod fsio;
 pub mod json;
 pub mod log;
 pub mod name;
 pub mod rng;
+pub mod shmem;
 pub mod stats;
 pub mod threadpool;
 pub mod workspace;

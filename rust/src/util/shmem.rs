@@ -1,0 +1,221 @@
+//! Shared-memory ring segments for the data-parallel gradient exchange.
+//!
+//! Pure-std "shared memory": a fixed-size file on tmpfs (`/dev/shm` when
+//! present, else the temp dir) accessed with positioned I/O
+//! (`std::os::unix::fs::FileExt`) — page-cache backed, so cross-process
+//! reads and writes move at memory speed without `mmap`/`libc`.  Each ring
+//! holds [`SLOTS`] fixed-stride slots; a message for sequence number `seq`
+//! lands in slot `seq % SLOTS`, so a writer may publish message `seq + 1`
+//! while the reader still holds `seq`.
+//!
+//! The ring itself carries **no synchronization** — publication order is
+//! enforced by the doorbell frames on the paired control socket (see
+//! [`crate::util::comms`]): a reader only touches a slot after the
+//! writer's frame for that `seq` arrived.  Each slot is framed with its
+//! payload length, sequence number and CRC32 so corruption, stride
+//! mismatch or a stale slot surfaces as a typed I/O error instead of
+//! silently wrong gradients.
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use crate::util::fsio::crc32;
+
+/// Slots per ring: double-buffered so seq `n+1` never overwrites an
+/// unread seq `n`.
+pub const SLOTS: u64 = 2;
+
+/// Slot header: payload len (u64) | seq (u64) | crc32 (u32) | pad (u32).
+const HEADER: u64 = 24;
+
+/// Directory for ring files: tmpfs when the platform has one.
+pub fn shm_dir() -> PathBuf {
+    let p = PathBuf::from("/dev/shm");
+    if p.is_dir() {
+        p
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// One single-writer single-reader ring file (see module docs).
+pub struct ShmRing {
+    file: File,
+    path: PathBuf,
+    /// payload capacity of one slot, bytes
+    slot_bytes: u64,
+    /// the creating side unlinks the file on drop
+    unlink_on_drop: bool,
+}
+
+impl ShmRing {
+    /// Create (or truncate) the ring at `path` with `slot_bytes` of payload
+    /// capacity per slot, sized up front so readers never race a grow.
+    /// The creator owns the file and unlinks it on drop.
+    pub fn create(path: impl AsRef<Path>, slot_bytes: usize) -> io::Result<ShmRing> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        let slot_bytes = slot_bytes as u64;
+        file.set_len(SLOTS * (HEADER + slot_bytes))?;
+        Ok(ShmRing {
+            file,
+            path,
+            slot_bytes,
+            unlink_on_drop: true,
+        })
+    }
+
+    /// Open a ring created by a peer process.  `slot_bytes` must match the
+    /// creator's — validated against the file size so a layout drift fails
+    /// loudly at startup rather than as a CRC error mid-run.
+    pub fn open(path: impl AsRef<Path>, slot_bytes: usize) -> io::Result<ShmRing> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new().read(true).write(true).open(&path)?;
+        let slot_bytes = slot_bytes as u64;
+        let expect = SLOTS * (HEADER + slot_bytes);
+        let got = file.metadata()?.len();
+        if got != expect {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("ring {path:?}: size {got} != expected {expect} (slot layout mismatch)"),
+            ));
+        }
+        Ok(ShmRing {
+            file,
+            path,
+            slot_bytes,
+            unlink_on_drop: false,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn slot_off(&self, seq: u64) -> u64 {
+        (seq % SLOTS) * (HEADER + self.slot_bytes)
+    }
+
+    /// Publish `payload` as message `seq` (payload first, header last; the
+    /// paired doorbell frame orders the reader behind both).
+    pub fn write(&self, seq: u64, payload: &[u8]) -> io::Result<()> {
+        if payload.len() as u64 > self.slot_bytes {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "message of {} bytes exceeds slot capacity {}",
+                    payload.len(),
+                    self.slot_bytes
+                ),
+            ));
+        }
+        let off = self.slot_off(seq);
+        self.file.write_all_at(payload, off + HEADER)?;
+        let mut header = [0u8; HEADER as usize];
+        header[..8].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        header[8..16].copy_from_slice(&seq.to_le_bytes());
+        header[16..20].copy_from_slice(&crc32(payload).to_le_bytes());
+        self.file.write_all_at(&header, off)
+    }
+
+    /// Read message `seq` into `buf` (resized to the payload length).
+    /// Sequence, length and CRC are all validated.
+    pub fn read(&self, seq: u64, buf: &mut Vec<u8>) -> io::Result<()> {
+        let off = self.slot_off(seq);
+        let mut header = [0u8; HEADER as usize];
+        self.file.read_exact_at(&mut header, off)?;
+        let len = u64::from_le_bytes(header[..8].try_into().unwrap());
+        let got_seq = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let crc = u32::from_le_bytes(header[16..20].try_into().unwrap());
+        if got_seq != seq {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("ring {:?}: slot holds seq {got_seq}, expected {seq}", self.path),
+            ));
+        }
+        if len > self.slot_bytes {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "ring {:?}: slot claims {len} bytes > capacity {}",
+                    self.path, self.slot_bytes
+                ),
+            ));
+        }
+        buf.clear();
+        buf.resize(len as usize, 0);
+        self.file.read_exact_at(buf, off + HEADER)?;
+        if crc32(buf) != crc {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("ring {:?}: CRC mismatch at seq {seq}", self.path),
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShmRing {
+    fn drop(&mut self) {
+        if self.unlink_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring_path(tag: &str) -> PathBuf {
+        shm_dir().join(format!("flare-shmem-test-{}-{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn ring_round_trips_across_handles() {
+        let path = ring_path("roundtrip");
+        let writer = ShmRing::create(&path, 64).unwrap();
+        let reader = ShmRing::open(&path, 64).unwrap();
+        let mut buf = Vec::new();
+        for seq in 0..5u64 {
+            let payload: Vec<u8> = (0..=seq as u8).map(|b| b.wrapping_mul(7)).collect();
+            writer.write(seq, &payload).unwrap();
+            reader.read(seq, &mut buf).unwrap();
+            assert_eq!(buf, payload, "seq {seq}");
+        }
+        // double buffering: seq n+1 must not clobber unread seq n
+        writer.write(10, b"ten").unwrap();
+        writer.write(11, b"eleven").unwrap();
+        reader.read(10, &mut buf).unwrap();
+        assert_eq!(buf, b"ten");
+        reader.read(11, &mut buf).unwrap();
+        assert_eq!(buf, b"eleven");
+        drop(reader);
+        drop(writer); // creator unlinks
+        assert!(!path.exists(), "creator must unlink the ring file");
+    }
+
+    #[test]
+    fn ring_rejects_stale_oversized_and_corrupt_slots() {
+        let path = ring_path("validate");
+        let ring = ShmRing::create(&path, 32).unwrap();
+        assert!(ring.write(0, &[0u8; 33]).is_err(), "payload beyond slot capacity");
+        ring.write(0, b"hello").unwrap();
+        let mut buf = Vec::new();
+        // slot 0 holds seq 0; asking for seq 2 (same slot) is stale
+        assert!(ring.read(2, &mut buf).is_err(), "stale slot must fail the seq check");
+        ring.read(0, &mut buf).unwrap();
+        // layout mismatch on open
+        assert!(ShmRing::open(&path, 16).is_err(), "slot-size mismatch must fail open");
+        // corrupt one payload byte → CRC failure
+        ring.file.write_all_at(b"x", HEADER + 1).unwrap();
+        assert!(ring.read(0, &mut buf).is_err(), "corruption must fail the CRC check");
+    }
+}

@@ -386,12 +386,25 @@ where
     S: Send,
     F: Fn(&mut S, usize) + Sync,
 {
+    parallel_sharded_threads(n, shards, usize::MAX, f)
+}
+
+/// [`parallel_sharded`] with an explicit worker-budget cap, further bounded
+/// by the shard count and the process-wide pool size.  The data-parallel
+/// rank loop uses this to keep each rank's shard fan-out inside its slice
+/// of the machine; `threads == 1` forces the inline in-order path
+/// regardless of the pool size.
+pub fn parallel_sharded_threads<S, F>(n: usize, shards: &mut [S], threads: usize, f: F)
+where
+    S: Send,
+    F: Fn(&mut S, usize) + Sync,
+{
     if n == 0 || shards.is_empty() {
         return;
     }
     let nshards = shards.len();
     let per = n.div_ceil(nshards);
-    let workers = nshards.min(default_threads());
+    let workers = threads.max(1).min(nshards).min(default_threads());
     if workers == 1 || in_parallel_worker() {
         for (s, shard) in shards.iter_mut().enumerate() {
             let i0 = s * per;
@@ -579,6 +592,23 @@ mod tests {
         }
         let mut empty_shards = [0usize; 2];
         parallel_sharded(0, &mut empty_shards, |_, _| panic!("n == 0 must not call f"));
+    }
+
+    #[test]
+    fn parallel_sharded_caps_at_thread_budget() {
+        // budget 1 runs every shard inline on the caller, in shard order
+        let me = std::thread::current().id();
+        let on_caller = AtomicUsize::new(0);
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        parallel_sharded_threads(8, &mut shards, 1, |shard, i| {
+            if std::thread::current().id() == me {
+                on_caller.fetch_add(1, Ordering::SeqCst);
+            }
+            shard.push(i);
+        });
+        assert_eq!(on_caller.load(Ordering::SeqCst), 8);
+        let all: Vec<usize> = shards.iter().flatten().copied().collect();
+        assert_eq!(all, (0..8).collect::<Vec<_>>(), "inline order is shard-major ascending");
     }
 
     #[test]

@@ -7,23 +7,21 @@
 //! * The pooled multi-shard gradient fan-out is deterministic: two
 //!   identical `grad_batch` calls are bitwise equal (persistent shards and
 //!   workspace reuse leak nothing between steps).
-//! * The `FLARE_THREADS=1`-equivalent inline path (`with_threads(1)`, the
-//!   same arithmetic as the pre-pool scoped-thread path) agrees with the
-//!   pooled fan-out to f32 round-off: the tree reduction over per-worker
-//!   shards reassociates sums, so cross-thread-count equality is close but
-//!   deliberately not bitwise — per-count determinism is.
+//! * The inline path (`with_threads(1)`, the `FLARE_THREADS=1` arithmetic)
+//!   is **bitwise equal** to the pooled fan-out: the batch is cut into a
+//!   fixed set of *logical* shards whose count and gap-doubling merge
+//!   order never follow the thread budget, so no reassociation exists to
+//!   drift.  (These were tolerance checks before the logical-shard
+//!   refactor; `--ranks` determinism rests on this exact property.)
 //! * Batched `forward` IS bitwise stable across thread counts (per-sample
-//!   work is independent; only the gradient reduction reassociates).
+//!   work is independent, no reduction at all).
 //!
 //! Environment note: `with_threads(N)` is capped by the process-wide pool
 //! (`default_threads()`).  On the `FLARE_THREADS=1` CI leg the
-//! `with_threads(2)` runs therefore execute inline — but still over TWO
-//! gradient shards with the tree reduction (shard count follows the
-//! budget), so the shard-arithmetic comparisons stay meaningful there; the
-//! cross-count *forward* test degenerates to a tautology on one worker and
-//! earns its keep on the multi-core default leg.  The pool-vs-inline
-//! bitwise test below builds its own two-worker `Executor`, so it runs a
-//! real pool worker on every leg.
+//! `with_threads(2)` runs therefore execute inline — over the same logical
+//! shards and merge order, which is exactly the invariant under test.  The
+//! pool-vs-inline bitwise test below builds its own two-worker `Executor`,
+//! so it runs a real pool worker on every leg.
 
 use flare::config::{CaseCfg, Manifest};
 use flare::model::backward::{loss_grad_fields, GradTable};
@@ -116,25 +114,24 @@ fn pooled_grad_batch_is_deterministic_and_matches_inline() {
     assert_eq!(loss_a, loss_b, "pooled grad_batch must be deterministic");
     assert_eq!(grad_a, grad_b, "pooled grad_batch must be deterministic");
 
-    // the inline path (the FLARE_THREADS=1 arithmetic) agrees to f32
-    // round-off; the shard tree reduction reassociates the sample sum, so
-    // this is deliberately a tolerance check, not a bitwise one
+    // the inline path (the FLARE_THREADS=1 arithmetic) is bitwise equal:
+    // shard count and merge order are fixed by the logical-shard layout,
+    // never by the thread budget, so the exact same f32 additions happen
+    // in the exact same order
     let inline = NativeBackend::with_threads(1);
     let (loss_i, grad_i) = run(&inline);
-    let loss_rel = ((loss_a - loss_i) / loss_i.abs().max(1e-12)).abs();
-    assert!(loss_rel < 1e-10, "loss drift {loss_rel} between pool and inline");
-    // scale-aware: reassociation error is bounded by eps * the gradient
-    // magnitude scale, not per-element relative error (near-zero entries
-    // would make that unbounded)
-    let scale = grad_i.iter().fold(0.0f32, |m, g| m.max(g.abs())).max(1e-3);
-    let mut max_abs = 0.0f32;
-    for (a, b) in grad_a.iter().zip(grad_i.iter()) {
-        max_abs = max_abs.max((a - b).abs());
-    }
-    assert!(
-        max_abs < 1e-4 * scale,
-        "gradient drift {max_abs} (scale {scale}) between pool and inline"
+    assert_eq!(
+        loss_a.to_bits(),
+        loss_i.to_bits(),
+        "pool and inline loss must be bitwise equal"
     );
+    for (j, (a, b)) in grad_a.iter().zip(grad_i.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "gradient[{j}] differs between pool ({a}) and inline ({b})"
+        );
+    }
 
     // loss must also be *sane*: positive and finite for a random batch
     assert!(loss_a.is_finite() && loss_a > 0.0);
@@ -183,20 +180,24 @@ fn train_step_agrees_between_pool_and_inline() {
     assert_eq!(loss_p, loss_p2, "pooled train_step must be deterministic");
     assert_eq!(params_p, params_p2, "pooled train_step must be deterministic");
 
-    // pool vs inline: compare the first moment (linear in the gradient) —
-    // first-step AdamW normalizes by |g|, so a near-zero gradient entry
-    // whose reassociated sum flips sign would move the *parameter* by a
-    // full ±lr even though the gradients agree to round-off (same caveat
-    // as tests/train_accum.rs)
-    let (loss_i, _, m_i) = run(&NativeBackend::with_threads(1));
-    assert!(((loss_p - loss_i) / loss_i.abs().max(1e-12)).abs() < 1e-10);
-    let scale = m_i.iter().fold(0.0f32, |mx, v| mx.max(v.abs())).max(1e-3);
-    let mut max_abs = 0.0f32;
-    for (a, b) in m_p.iter().zip(m_i.iter()) {
-        max_abs = max_abs.max((a - b).abs());
+    // pool vs inline is bitwise through the whole step: identical gradients
+    // (fixed logical-shard reduction) feed identical AdamW updates, so the
+    // first moment AND the parameters agree to the bit — no scale-aware
+    // tolerance needed anymore
+    let (loss_i, params_i, m_i) = run(&NativeBackend::with_threads(1));
+    assert_eq!(loss_p.to_bits(), loss_i.to_bits(), "loss must be bitwise equal");
+    for (j, (a, b)) in m_p.iter().zip(m_i.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "opt_m[{j}] differs between pool ({a}) and inline ({b})"
+        );
     }
-    assert!(
-        max_abs < 1e-4 * scale,
-        "first-moment drift {max_abs} (scale {scale}) between pool and inline"
-    );
+    for (j, (a, b)) in params_p.iter().zip(params_i.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "params[{j}] differ between pool ({a}) and inline ({b})"
+        );
+    }
 }
